@@ -1,0 +1,59 @@
+//! Quickstart: the paper's recipe in ~60 lines.
+//!
+//! 1. Pretrain a tiny dense T5-style LM on the synthetic corpus.
+//! 2. Upcycle the checkpoint into an 8-expert MoE (Figure 1 surgery).
+//! 3. Continue training both branches with the *same, continued* LR
+//!    schedule and compare.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use sparse_upcycle::experiments::{Ctx, ExpParams};
+use sparse_upcycle::upcycle::UpcycleOptions;
+
+fn main() -> Result<()> {
+    let mut p = ExpParams::tiny();
+    p.pretrain_steps = 200;
+    p.extra_steps = 120;
+    p.eval_every = 40;
+    let ctx = Ctx::new("artifacts", "results/quickstart", p, true)?;
+
+    println!("== 1. dense pretraining (the sunk cost) ==");
+    let parent = ctx.dense_parent("lm_tiny_dense", ctx.p.pretrain_steps)?;
+
+    println!("\n== 2. checkpoint surgery: dense -> 8-expert MoE ==");
+    let (moe_model, mut moe_state) =
+        ctx.branch_upcycle(&parent, "lm_tiny_moe_e8_c2", &UpcycleOptions::default(), false)?;
+    println!(
+        "  {} ({:.2}M params) -> {} ({:.2}M params)",
+        parent.0.model,
+        ctx.entry("lm_tiny_dense")?.param_count as f64 / 1e6,
+        moe_model.entry.name,
+        moe_model.entry.param_count as f64 / 1e6,
+    );
+
+    println!("\n== 3. continue both branches ==");
+    let (dense_model, mut dense_state) = ctx.branch_dense(&parent, "lm_tiny_dense")?;
+    let dense_series =
+        ctx.run_branch(&dense_model, &mut dense_state, 1, ctx.p.extra_steps, "dense")?;
+    let moe_series = ctx.run_branch(&moe_model, &mut moe_state, 2, ctx.p.extra_steps, "upcycled")?;
+
+    let get = |s: &sparse_upcycle::metrics::Series, k: &str| {
+        s.last().and_then(|pt| pt.values.get(k).copied()).unwrap_or(f64::NAN)
+    };
+    println!("\n== results after +{} steps ==", ctx.p.extra_steps);
+    println!(
+        "  dense continuation: loss {:.4}  token-acc {:.4}",
+        get(&dense_series, "loss"),
+        get(&dense_series, "accuracy")
+    );
+    println!(
+        "  upcycled MoE:       loss {:.4}  token-acc {:.4}",
+        get(&moe_series, "loss"),
+        get(&moe_series, "accuracy")
+    );
+    let win = get(&moe_series, "accuracy") - get(&dense_series, "accuracy");
+    println!("  upcycling advantage: {win:+.4} token accuracy");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Vision upcycling scenario (paper §4.1 vision setup): pretrain a tiny ViT
+//! on the procedural shapes dataset, upcycle it into a V-MoE-style model
+//! with Expert Choice routing + combine-weight renormalization + resumed
+//! optimizer state (the paper's vision-specific recipe), then report the
+//! 10-shot linear probe (§A.2.2) alongside validation accuracy.
+//!
+//! Run: cargo run --release --example vision_upcycle
+
+use anyhow::Result;
+
+use sparse_upcycle::coordinator::fewshot::{fewshot_accuracy, FewShotConfig};
+use sparse_upcycle::experiments::{Ctx, ExpParams};
+use sparse_upcycle::upcycle::UpcycleOptions;
+use sparse_upcycle::util::cli::Args;
+
+fn main() -> Result<()> {
+    let a = Args::parse(std::env::args().skip(1))?;
+    let mut p = ExpParams::tiny();
+    p.pretrain_steps = a.u64("pretrain-steps", 300)?;
+    p.extra_steps = a.u64("extra-steps", 180)?;
+    let ctx = Ctx::new("artifacts", "results/vision", p, true)?;
+
+    println!("== vision sparse upcycling (ViT -> V-MoE, Expert Choice) ==");
+    let parent = ctx.dense_parent("vit_tiny_dense", ctx.p.pretrain_steps)?;
+
+    // Vision recipe (§3.1): resume optimizer state + renormalized combine
+    // weights (the vit_tiny_moe_e8_c2 artifact has renormalize=true).
+    let (moe_model, mut moe_state) =
+        ctx.branch_upcycle(&parent, "vit_tiny_moe_e8_c2", &UpcycleOptions::default(), true)?;
+    let (dense_model, mut dense_state) = ctx.branch_dense(&parent, "vit_tiny_dense")?;
+
+    let dense_series =
+        ctx.run_branch(&dense_model, &mut dense_state, 1, ctx.p.extra_steps, "dense")?;
+    let moe_series = ctx.run_branch(&moe_model, &mut moe_state, 2, ctx.p.extra_steps, "upcycled")?;
+
+    // 10-shot linear probes on frozen features (5 support seeds).
+    let moe_feats = ctx.load("vit_tiny_moe_e8_c2", &["features"])?;
+    let dense_feats = ctx.load("vit_tiny_dense", &["features"])?;
+    let cfg = FewShotConfig::default();
+    let moe_10shot = fewshot_accuracy(&moe_feats, &moe_state.params, &cfg, ctx.p.seed)?;
+    let dense_10shot = fewshot_accuracy(&dense_feats, &dense_state.params, &cfg, ctx.p.seed)?;
+
+    let get = |s: &sparse_upcycle::metrics::Series, k: &str| {
+        s.last().and_then(|pt| pt.values.get(k).copied()).unwrap_or(f64::NAN)
+    };
+    println!("\n== results after +{} steps ==", ctx.p.extra_steps);
+    println!("  {:<20} {:>10} {:>10}", "branch", "val-acc", "10-shot");
+    println!("  {:<20} {:>10.4} {:>10.4}", "dense continuation",
+             get(&dense_series, "accuracy"), dense_10shot);
+    println!("  {:<20} {:>10.4} {:>10.4}", "upcycled V-MoE",
+             get(&moe_series, "accuracy"), moe_10shot);
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: JAX models + Pallas kernels -> HLO artifacts."""

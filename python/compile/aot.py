@@ -1,0 +1,148 @@
+"""AOT bridge: lower every configuration to HLO text + write the manifest.
+
+HLO **text** is the interchange format (not `lowered.compile()` /
+`.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids
+that xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate links)
+rejects with `proto.id() <= INT_MAX`; the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (normally via `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--only lm_tiny] [--force]
+
+Lowering is cached: an artifact is re-lowered only when missing or when the
+source hash stamp changed. The manifest is always rewritten (cheap, and it is
+the single source of truth for the Rust side).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import flops, model, train_step
+from .configs import CONFIGS, config_to_json
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def source_hash() -> str:
+    """Hash of every python source that affects lowering."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    files = []
+    for root, _, names in os.walk(here):
+        for n in sorted(names):
+            if n.endswith(".py"):
+                files.append(os.path.join(root, n))
+    for f in sorted(files):
+        with open(f, "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def lower_one(cfg, which: str, out_path: str):
+    if which == "train":
+        fn, _, _ = train_step.build_train_step(cfg)
+    elif which == "eval":
+        fn, _, _ = train_step.build_eval_step(cfg)
+    elif which == "features":
+        fn, _, _ = train_step.build_features(cfg)
+    else:
+        raise ValueError(which)
+    args = train_step.example_args(cfg, which)
+    t0 = time.time()
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"  {os.path.basename(out_path)}: {len(text)/1e6:.2f} MB "
+          f"({time.time()-t0:.1f}s)", flush=True)
+
+
+def model_entry(cfg, out_dir: str) -> dict:
+    arts = {"train": f"{cfg.name}_train.hlo.txt",
+            "eval": f"{cfg.name}_eval.hlo.txt"}
+    if cfg.family == "vit":
+        arts["features"] = f"{cfg.name}_features.hlo.txt"
+    p_specs = model.param_specs(cfg)
+    return dict(
+        name=cfg.name,
+        family=cfg.family,
+        config=config_to_json(cfg),
+        params=p_specs,
+        opt_state=train_step.opt_specs(cfg),
+        batch=model.batch_specs(cfg),
+        scalars=["lr", "wd", "step"],
+        metrics=train_step.METRIC_NAMES,
+        param_count=int(sum(
+            int(np_prod(s["shape"])) for s in p_specs)),
+        flops=dict(
+            train_step=flops.train_flops_per_step(cfg),
+            eval_step=flops.eval_flops_per_step(cfg),
+            fwd_per_example=flops.fwd_flops_per_example(cfg),
+        ),
+        artifacts=arts,
+    )
+
+
+def np_prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="substring filter on config names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    stamp_path = os.path.join(args.out_dir, ".stamp")
+    cur_hash = source_hash()
+    old_hash = None
+    if os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            old_hash = f.read().strip()
+    stale = args.force or (old_hash != cur_hash)
+
+    entries = []
+    for name, cfg in sorted(CONFIGS.items()):
+        entry = model_entry(cfg, args.out_dir)
+        entries.append(entry)
+        if args.only and args.only not in name:
+            continue
+        print(f"{name} (params={entry['param_count']:,})", flush=True)
+        for which, fname in entry["artifacts"].items():
+            path = os.path.join(args.out_dir, fname)
+            if os.path.exists(path) and not stale:
+                print(f"  {fname}: cached", flush=True)
+                continue
+            lower_one(cfg, which, path)
+
+    manifest = dict(version=1, source_hash=cur_hash, models=entries)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not args.only:
+        with open(stamp_path, "w") as f:
+            f.write(cur_hash)
+    print(f"manifest: {len(entries)} models", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

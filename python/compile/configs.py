@@ -1,0 +1,201 @@
+"""Model configurations and the named artifact set.
+
+Every entry in `ARTIFACT_SET` is lowered by `aot.py` to
+`artifacts/<name>_{train,eval[,features]}.hlo.txt` and described in
+`artifacts/manifest.json`. The set covers every experiment in DESIGN.md §4:
+the core comparisons (Fig. 2–5), the ablation sweeps (capacity factor, number
+of experts, number/placement of MoE layers, router type, group size,
+renormalization), and the e2e `small` scale used by `examples/e2e_language`.
+
+Scale philosophy (repro band 0 → simulate): geometry mirrors the paper —
+half of the MLP layers become MoE layers, interleaved every-other for the LM
+(paper §A.1.1: "every other layer was upcycled ... starting with the second
+layer") and last-k for ViT (paper §B.4) — while widths shrink so the whole
+figure suite trains on a CPU PJRT client in minutes.
+"""
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    """Sparse-layer configuration for one tower (encoder or decoder)."""
+
+    num_experts: int = 8
+    capacity_factor: float = 2.0
+    # "ec" = Expert Choice (paper default for encoders),
+    # "top1"/"top2" = token-choice Top-K (paper default for LM decoder).
+    router_type: str = "ec"
+    # Indices of transformer blocks whose MLP is replaced by a MoE layer.
+    moe_layers: Tuple[int, ...] = ()
+    # Routing group size in tokens (Fig. 16). 0 → one group per batch row set.
+    group_size: int = 0
+    # Renormalize combine weights to sum to 1 (Appendix B.7).
+    renormalize: bool = False
+    # Batch Prioritized Routing for Top-K (Appendix B.1).
+    bpr: bool = False
+    # Auxiliary load-balance loss scale for Top-K (paper §A.1.1: 0.01).
+    aux_loss_scale: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "lm" | "vit"
+    d_model: int = 64
+    d_ff: int = 256
+    num_heads: int = 4
+    num_layers: int = 4  # encoder blocks
+    num_decoder_layers: int = 4  # lm only
+    vocab_size: int = 256  # lm only
+    enc_len: int = 32  # lm only
+    dec_len: int = 16  # lm only
+    image_size: int = 32  # vit only
+    patch_size: int = 8  # vit only
+    channels: int = 3  # vit only
+    num_classes: int = 16  # vit only
+    batch_size: int = 8
+    enc_moe: Optional[MoeSpec] = None
+    dec_moe: Optional[MoeSpec] = None
+    use_pallas: bool = True
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.enc_moe is not None or self.dec_moe is not None
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def every_other(n_layers: int) -> Tuple[int, ...]:
+    """Paper §A.1.1: upcycle every other layer, starting with the second."""
+    return tuple(range(1, n_layers, 2))
+
+
+def last_k(n_layers: int, k: int) -> Tuple[int, ...]:
+    """Paper §B.4 vision default: MoE layers in the last k blocks."""
+    return tuple(range(n_layers - k, n_layers))
+
+
+def first_k(k: int) -> Tuple[int, ...]:
+    return tuple(range(k))
+
+
+# ---------------------------------------------------------------------------
+# Named configurations
+# ---------------------------------------------------------------------------
+
+_LM_TINY = dict(
+    family="lm", d_model=64, d_ff=256, num_heads=4, num_layers=4,
+    num_decoder_layers=4, vocab_size=256, enc_len=32, dec_len=16, batch_size=8,
+)
+_VIT_TINY = dict(
+    family="vit", d_model=64, d_ff=256, num_heads=4, num_layers=6,
+    image_size=32, patch_size=8, num_classes=16, batch_size=16,
+)
+_LM_SMALL = dict(
+    family="lm", d_model=256, d_ff=1024, num_heads=8, num_layers=6,
+    num_decoder_layers=6, vocab_size=8192, enc_len=128, dec_len=32,
+    batch_size=8,
+)
+
+
+def _lm_moe(name: str, *, experts=8, cap=2.0, enc_router="ec",
+            dec_router="top2", enc_layers=None, dec_layers=None,
+            group_size=0, renorm=False, bpr=False, base=None, **over):
+    base = dict(base or _LM_TINY)
+    base.update(over)
+    n_enc = base["num_layers"]
+    n_dec = base["num_decoder_layers"]
+    enc_layers = every_other(n_enc) if enc_layers is None else tuple(enc_layers)
+    dec_layers = every_other(n_dec) if dec_layers is None else tuple(dec_layers)
+    return ModelConfig(
+        name=name,
+        enc_moe=MoeSpec(num_experts=experts, capacity_factor=cap,
+                        router_type=enc_router, moe_layers=enc_layers,
+                        group_size=group_size, renormalize=renorm, bpr=bpr),
+        dec_moe=MoeSpec(num_experts=experts, capacity_factor=cap,
+                        router_type=dec_router, moe_layers=dec_layers,
+                        group_size=group_size, renormalize=renorm, bpr=bpr),
+        **base,
+    )
+
+
+def _vit_moe(name: str, *, experts=8, cap=2.0, router="ec", layers=None,
+             renorm=True, group_size=0, base=None, **over):
+    base = dict(base or _VIT_TINY)
+    base.update(over)
+    n = base["num_layers"]
+    layers = last_k(n, n // 2) if layers is None else tuple(layers)
+    return ModelConfig(
+        name=name,
+        enc_moe=MoeSpec(num_experts=experts, capacity_factor=cap,
+                        router_type=router, moe_layers=layers,
+                        renormalize=renorm, group_size=group_size),
+        **base,
+    )
+
+
+def build_artifact_set() -> List[ModelConfig]:
+    cfgs: List[ModelConfig] = [
+        # ---- core language family (Figs. 2–5, Table 5) ----
+        ModelConfig(name="lm_tiny_dense", **_LM_TINY),
+        _lm_moe("lm_tiny_moe_e8_c2"),  # default upcycle target
+        # dense upcycling baseline (Fig. 5): depth-tiled 1.5x deeper dense
+        ModelConfig(name="lm_tiny_dense_tiled", **{**_LM_TINY,
+                    "num_layers": 6, "num_decoder_layers": 6}),
+        # ---- capacity-factor ablation (Fig. 9) ----
+        _lm_moe("lm_tiny_moe_e8_c1", cap=1.0),
+        _lm_moe("lm_tiny_moe_e8_c3", cap=3.0),
+        # ---- number of experts (Figs. 10/11/18) ----
+        _lm_moe("lm_tiny_moe_e2_c2", experts=2),
+        _lm_moe("lm_tiny_moe_e4_c2", experts=4),
+        _lm_moe("lm_tiny_moe_e16_c2", experts=16),
+        # ---- router type (Table 2 / Fig. 8) ----
+        _lm_moe("lm_tiny_moe_e8_c2_top2", enc_router="top2"),
+        _lm_moe("lm_tiny_moe_e8_c2_top1", enc_router="top1", dec_router="top1"),
+        _lm_moe("lm_tiny_moe_e8_c2_top2bpr", enc_router="top2", bpr=True),
+        # ---- combine-weight renormalization, LM side (B.7) ----
+        _lm_moe("lm_tiny_moe_e8_c2_renorm", renorm=True),
+        # ---- MoE layer count / placement (Figs. 12, 17) ----
+        _lm_moe("lm_tiny_moe_last1", enc_layers=last_k(4, 1), dec_layers=last_k(4, 1)),
+        _lm_moe("lm_tiny_moe_last2", enc_layers=last_k(4, 2), dec_layers=last_k(4, 2)),
+        _lm_moe("lm_tiny_moe_last3", enc_layers=last_k(4, 3), dec_layers=last_k(4, 3)),
+        _lm_moe("lm_tiny_moe_first2", enc_layers=first_k(2), dec_layers=first_k(2)),
+        # ---- routing group size (Fig. 16) ----
+        _lm_moe("lm_tiny_moe_e8_c2_g16", group_size=16),
+        _lm_moe("lm_tiny_moe_e8_c2_g64", group_size=64),
+        # ---- core vision family (Figs. 2–4, 6, Table 4) ----
+        ModelConfig(name="vit_tiny_dense", **_VIT_TINY),
+        _vit_moe("vit_tiny_moe_e8_c2"),
+        _vit_moe("vit_tiny_moe_e8_c1", cap=1.0),  # Fig. 6 ablation uses C=1
+        # ---- renormalization from scratch (Table 3) ----
+        _vit_moe("vit_tiny_moe_e8_c2_norenorm", renorm=False),
+        _vit_moe("vit_tiny_moe_e8_c1_norenorm", cap=1.0, renorm=False),
+        # ---- vision router type (Table 2) ----
+        _vit_moe("vit_tiny_moe_e8_c2_top2", router="top2", renorm=False),
+        # ---- e2e `small` scale (examples/e2e_language) ----
+        ModelConfig(name="lm_small_dense", **_LM_SMALL),
+        _lm_moe("lm_small_moe_e8_c2", base=_LM_SMALL),
+    ]
+    names = [c.name for c in cfgs]
+    assert len(names) == len(set(names)), "duplicate config names"
+    return cfgs
+
+
+CONFIGS: Dict[str, ModelConfig] = {c.name: c for c in build_artifact_set()}
+
+
+def moe_spec_to_json(spec: Optional[MoeSpec]) -> Optional[dict]:
+    return None if spec is None else dataclasses.asdict(spec)
+
+
+def config_to_json(cfg: ModelConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    return d

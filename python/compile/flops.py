@@ -1,0 +1,69 @@
+"""Analytic FLOPs accounting for every model configuration.
+
+Used twice: (i) recorded in the manifest so the Rust cost model
+(`rust/src/costmodel/`) can translate training steps into the paper's
+x-axis units (TPU-core-days / ExaFLOPs, Figs. 2–5 and Tables 4–5), and
+(ii) as the L2 performance audit baseline (EXPERIMENTS.md §Perf).
+
+Counting conventions: one multiply-add = 2 FLOPs; backward pass = 2× forward
+(so train = 3× forward); router/softmax/norm costs included, elementwise
+negligibles ignored — the same conventions used for the paper's headline
+"MoE adds ~C× MLP FLOPs + router" arithmetic (§2.1 footnote 2).
+"""
+
+from .configs import ModelConfig, MoeSpec
+from typing import Optional
+
+
+def _attn_flops(n_q: int, n_kv: int, d: int) -> float:
+    """Per-example attention FLOPs: projections + logits + weighted values."""
+    proj = 2.0 * (n_q * d * d * 2 + n_kv * d * d * 2)  # q,o over n_q; k,v over n_kv
+    scores = 2.0 * n_q * n_kv * d * 2  # QK^T and PV
+    return proj + scores
+
+
+def _ffn_flops(n_tok: int, d: int, ff: int, spec: Optional[MoeSpec],
+               layer: int) -> float:
+    dense = 2.0 * n_tok * d * ff * 2
+    if spec is None or layer not in spec.moe_layers:
+        return dense
+    # MoE: every token is processed by C experts on average (Expert Choice)
+    # or K·(C-limited) experts (Top-K); both scale the MLP cost by ~C.
+    mult = spec.capacity_factor
+    if spec.router_type in ("top1", "top2"):
+        mult = min(1.0 if spec.router_type == "top1" else 2.0,
+                   spec.capacity_factor)
+    router = 2.0 * n_tok * d * spec.num_experts
+    return dense * mult + router
+
+
+def fwd_flops_per_example(cfg: ModelConfig) -> float:
+    d, ff = cfg.d_model, cfg.d_ff
+    total = 0.0
+    if cfg.family == "lm":
+        se, sd = cfg.enc_len, cfg.dec_len
+        for b in range(cfg.num_layers):
+            total += _attn_flops(se, se, d)
+            total += _ffn_flops(se, d, ff, cfg.enc_moe, b)
+        for b in range(cfg.num_decoder_layers):
+            total += _attn_flops(sd, sd, d)  # causal self-attention
+            total += _attn_flops(sd, se, d)  # cross-attention
+            total += _ffn_flops(sd, d, ff, cfg.dec_moe, b)
+        total += 2.0 * sd * d * cfg.vocab_size  # tied softmax logits
+    else:
+        n = cfg.num_patches
+        patch_dim = cfg.patch_size ** 2 * cfg.channels
+        total += 2.0 * n * patch_dim * d
+        for b in range(cfg.num_layers):
+            total += _attn_flops(n, n, d)
+            total += _ffn_flops(n, d, ff, cfg.enc_moe, b)
+        total += 2.0 * d * cfg.num_classes
+    return total
+
+
+def train_flops_per_step(cfg: ModelConfig) -> float:
+    return 3.0 * fwd_flops_per_example(cfg) * cfg.batch_size
+
+
+def eval_flops_per_step(cfg: ModelConfig) -> float:
+    return fwd_flops_per_example(cfg) * cfg.batch_size

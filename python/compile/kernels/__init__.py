@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for sparse-upcycled MoE models.
+
+`expert_mlp` and `router_probs` are the compute hot-spots of a MoE layer;
+`ref` holds the pure-jnp oracles used by the test suite.
+"""
+
+from . import ref  # noqa: F401
+from .expert_mlp import expert_mlp  # noqa: F401
+from .router import router_probs  # noqa: F401

@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernel: grouped per-expert MLP (the MoE FLOPs hot-spot).
+
+The forward pass computes, for every expert `e`,
+
+    y[e] = gelu(x[e] @ w1[e]) @ w2[e]
+
+over the tokens the router dispatched to that expert. This is the dominant
+compute of a sparse MoE layer (the paper's Section 2.1: each expert processes
+`c = n*C/E` tokens); everything else in the MoE block (router, dispatch
+gather, combine scatter) is bandwidth-shaped and stays in XLA.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over the
+expert axis, so each program instance holds one expert's `[d, f]` weight
+tiles in VMEM and streams `[block_c, d]` token tiles through the MXU. On this
+CPU image the kernels run with `interpret=True` (real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute), so block shapes are
+chosen for VMEM budget, not measured wall-clock.
+
+Autodiff: `pallas_call` has no AD rule, so the public entry point
+`expert_mlp` is a `jax.custom_vjp` whose backward is a second Pallas kernel
+(`_expert_mlp_bwd_kernel`) computing `dx, dw1, dw2` — both directions stay in
+Pallas and both are validated against `ref.py` by pytest/hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU image: Mosaic lowering unavailable; see module docstring.
+
+
+def _gelu(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _gelu_grad(x):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    u = c * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def _fwd_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One grid step == one expert: y = gelu(x @ w1) @ w2, f32 accumulation."""
+    x = x_ref[0]  # [c, d]; leading block axis of size 1 is the expert slot
+    w1 = w1_ref[0]  # [d, f]
+    w2 = w2_ref[0]  # [f, d]
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    a = _gelu(h).astype(x.dtype)
+    o_ref[0] = jnp.dot(a, w2, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _bwd_kernel(x_ref, w1_ref, w2_ref, g_ref, dx_ref, dw1_ref, dw2_ref):
+    """Backward for one expert; recomputes h (rematerialization keeps VMEM flat)."""
+    x = x_ref[0]  # [c, d]
+    w1 = w1_ref[0]  # [d, f]
+    w2 = w2_ref[0]  # [f, d]
+    g = g_ref[0]  # [c, d]
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    a = _gelu(h).astype(x.dtype)
+    dw2_ref[0] = jnp.dot(a.T, g, preferred_element_type=jnp.float32).astype(x.dtype)
+    da = jnp.dot(g, w2.T, preferred_element_type=jnp.float32)
+    dh = (da * _gelu_grad(h)).astype(x.dtype)
+    dw1_ref[0] = jnp.dot(x.T, dh, preferred_element_type=jnp.float32).astype(x.dtype)
+    dx_ref[0] = jnp.dot(dh, w1.T, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _fwd_call(x, w1, w2):
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, w2)
+
+
+def _bwd_call(x, w1, w2, g):
+    e, c, d = x.shape
+    f = w1.shape[-1]
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, c, d), x.dtype),
+            jax.ShapeDtypeStruct((e, d, f), x.dtype),
+            jax.ShapeDtypeStruct((e, f, d), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, w1, w2, g)
+
+
+@jax.custom_vjp
+def expert_mlp(x, w1, w2):
+    """Grouped per-expert MLP. Shapes: x [E,c,d], w1 [E,d,f], w2 [E,f,d] → [E,c,d]."""
+    return _fwd_call(x, w1, w2)
+
+
+def _vjp_fwd(x, w1, w2):
+    return _fwd_call(x, w1, w2), (x, w1, w2)
+
+
+def _vjp_bwd(res, g):
+    x, w1, w2 = res
+    return _bwd_call(x, w1, w2, g)
+
+
+expert_mlp.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package has an exact counterpart here. The pytest suite
+(`python/tests/test_kernels.py`) sweeps shapes and dtypes with hypothesis and
+asserts `assert_allclose(kernel(...), ref(...))`, including gradients of the
+`custom_vjp`-wrapped kernels against `jax.grad` of these references.
+"""
+
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximated GELU (identical formula to the kernel's)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def gelu_grad(x):
+    """d/dx of tanh-approximated GELU."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    u = c * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def expert_mlp(x, w1, w2):
+    """Grouped per-expert MLP: for each expert e, gelu(x[e] @ w1[e]) @ w2[e].
+
+    Args:
+      x:  [E, c, d]  tokens dispatched to each expert (c = expert capacity).
+      w1: [E, d, f]
+      w2: [E, f, d]
+    Returns: [E, c, d]
+    """
+    h = jnp.einsum("ecd,edf->ecf", x, w1)
+    return jnp.einsum("ecf,efd->ecd", gelu(h), w2)
+
+
+def expert_mlp_bwd(x, w1, w2, g):
+    """Backward of `expert_mlp` w.r.t. (x, w1, w2) given upstream grad g."""
+    h = jnp.einsum("ecd,edf->ecf", x, w1)
+    a = gelu(h)
+    dw2 = jnp.einsum("ecf,ecd->efd", a, g)
+    da = jnp.einsum("ecd,efd->ecf", g, w2)
+    dh = da * gelu_grad(h)
+    dw1 = jnp.einsum("ecd,ecf->edf", x, dh)
+    dx = jnp.einsum("ecf,edf->ecd", dh, w1)
+    return dx, dw1, dw2
+
+
+def router_probs(x, w):
+    """Router: token→expert probabilities, softmax over the expert axis.
+
+    Args:
+      x: [g, d]  token group.
+      w: [d, E]  router weights.
+    Returns: [g, E] rows summing to 1.
+    """
+    logits = x @ w
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

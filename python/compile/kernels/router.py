@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernel: fused router (logits + numerically stable softmax).
+
+The router is the only extra FLOPs a sparse layer adds over its dense parent
+(paper §2.1 footnote 2): `R = softmax(x @ W_r)` with `W_r ∈ R^{d×E}`. Fusing
+the matmul with the softmax keeps the `[g, E]` logits tile in VMEM instead of
+round-tripping through HBM; the grid iterates over token groups (paper
+Appendix B.8 / Fig. 16 routing groups).
+
+Runs with `interpret=True` on this CPU image; validated against
+`ref.router_probs` by pytest/hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _router_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[0]  # [g, d]
+    w = w_ref[...]  # [d, E]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    o_ref[0] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)
+
+
+def _router_bwd_kernel(x_ref, w_ref, p_ref, g_ref, dx_ref, dw_ref):
+    """Softmax-matmul backward for one token group.
+
+    dlogits = p * (g - sum(g * p, axis=-1)); dx = dlogits @ Wᵀ; dW = xᵀ @ dlogits.
+    The per-group dW partial is written to a [n_groups, d, E] scratch output and
+    reduced outside the kernel (the grid axis is parallel, not sequential, so
+    accumulating in-place across grid steps is not portable to TPU).
+    """
+    x = x_ref[0]  # [g, d]
+    w = w_ref[...]  # [d, E]
+    p = p_ref[0]  # [g, E]
+    g = g_ref[0]  # [g, E]
+    inner = jnp.sum(g * p, axis=-1, keepdims=True)
+    dlogits = (p * (g - inner)).astype(x.dtype)
+    dx_ref[0] = jnp.dot(dlogits, w.T, preferred_element_type=jnp.float32).astype(
+        x.dtype
+    )
+    dw_ref[0] = jnp.dot(x.T, dlogits, preferred_element_type=jnp.float32).astype(
+        x.dtype
+    )
+
+
+def _fwd_call(x, w):
+    n, g, d = x.shape
+    e = w.shape[-1]
+    return pl.pallas_call(
+        _router_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, e), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, g, e), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _bwd_call(x, w, p, g):
+    n, gsz, d = x.shape
+    e = w.shape[-1]
+    dx, dw_partials = pl.pallas_call(
+        _router_bwd_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, gsz, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, e), lambda i: (0, 0)),
+            pl.BlockSpec((1, gsz, e), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, gsz, e), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, gsz, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, e), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, gsz, d), x.dtype),
+            jax.ShapeDtypeStruct((n, d, e), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, w, p, g)
+    return dx, jnp.sum(dw_partials, axis=0)
+
+
+@jax.custom_vjp
+def router_probs(x, w):
+    """Routing probabilities for grouped tokens.
+
+    Args:
+      x: [n_groups, g, d] token groups.
+      w: [d, E] router weights.
+    Returns: [n_groups, g, E], rows softmax-normalized over E.
+    """
+    return _fwd_call(x, w)
+
+
+def _vjp_fwd(x, w):
+    p = _fwd_call(x, w)
+    return p, (x, w, p)
+
+
+def _vjp_bwd(res, g):
+    x, w, p = res
+    return _bwd_call(x, w, p, g)
+
+
+router_probs.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,483 @@
+"""Layer-2 JAX models: T5-style encoder–decoder LM and ViT-style classifier
+with sparse Mixture-of-Experts layers.
+
+This is the substrate the paper's upcycling recipe operates on (paper §2.2):
+
+* `lm`  — encoder–decoder span-corruption language model (≈ T5 1.1 geometry,
+  simplified: learned absolute positions instead of relative bias, plain GELU
+  MLP instead of GEGLU — both documented in DESIGN.md §2).
+* `vit` — encoder-only classifier with global average pooling (≈ ViT / V-MoE
+  with the paper's two modifications: GAP head + Expert Choice routing).
+
+MoE blocks support the paper's full design space (§3.1 + Appendix B):
+Expert Choice routing with capacity factor `C`, token-choice Top-K routing
+(K ∈ {1,2}) with capacity buffers, token dropping, auxiliary load-balancing
+loss and optional Batch Prioritized Routing, combine-weight renormalization,
+configurable routing group size, and arbitrary MoE layer placement.
+
+Everything is functional: `init_params(cfg, seed) -> {name: array}` and
+`forward(cfg, params, batch) -> (logits, aux)`. Parameter names are the
+interface contract with the Rust coordinator (the manifest lists them in
+sorted order); the upcycling surgery in `rust/src/upcycle/` rewrites
+`.../mlp/wi → .../moe/wi` etc. by name.
+"""
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, MoeSpec
+from .kernels import expert_mlp as pallas_expert_mlp
+from .kernels import router_probs as pallas_router_probs
+from .kernels import ref as kref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[dict]:
+    """Full parameter inventory: name, shape, dtype and init spec.
+
+    The init spec is consumed by the Rust coordinator (`rust/src/init.rs`) so
+    that from-scratch initialization never needs Python at runtime.
+    Kinds: "normal" (stddev), "fan_in" (truncated-normal-ish, stddev =
+    1/sqrt(fan_in)), "zeros", "ones".
+    """
+    d, ff = cfg.d_model, cfg.d_ff
+    specs: List[dict] = []
+
+    def add(name, shape, kind, stddev=0.0):
+        specs.append(dict(name=name, shape=list(shape), dtype="f32",
+                          init=dict(kind=kind, stddev=stddev)))
+
+    def attn(prefix):
+        add(f"{prefix}_norm/scale", (d,), "ones")
+        for w in ("wq", "wk", "wv", "wo"):
+            add(f"{prefix}/{w}", (d, d), "fan_in", 1.0 / math.sqrt(d))
+
+    def mlp_or_moe(prefix, spec: Optional[MoeSpec], layer: int):
+        add(f"{prefix}/mlp_norm/scale", (d,), "ones")
+        if spec is not None and layer in spec.moe_layers:
+            e = spec.num_experts
+            # Paper §3: router weights random N(0, 0.02); experts are
+            # per-expert copies of the MLP geometry.
+            add(f"{prefix}/moe/router", (d, e), "normal", 0.02)
+            add(f"{prefix}/moe/wi", (e, d, ff), "fan_in", 1.0 / math.sqrt(d))
+            add(f"{prefix}/moe/wo", (e, ff, d), "fan_in", 1.0 / math.sqrt(ff))
+        else:
+            add(f"{prefix}/mlp/wi", (d, ff), "fan_in", 1.0 / math.sqrt(d))
+            add(f"{prefix}/mlp/wo", (ff, d), "fan_in", 1.0 / math.sqrt(ff))
+
+    if cfg.family == "lm":
+        add("token_embed", (cfg.vocab_size, d), "normal", 1.0 / math.sqrt(d))
+        add("enc/pos_embed", (cfg.enc_len, d), "normal", 0.02)
+        add("dec/pos_embed", (cfg.dec_len, d), "normal", 0.02)
+        for b in range(cfg.num_layers):
+            p = f"enc/block_{b:02d}"
+            attn(f"{p}/attn")
+            mlp_or_moe(p, cfg.enc_moe, b)
+        for b in range(cfg.num_decoder_layers):
+            p = f"dec/block_{b:02d}"
+            attn(f"{p}/attn")
+            attn(f"{p}/cross")
+            mlp_or_moe(p, cfg.dec_moe, b)
+        add("enc/final_norm/scale", (d,), "ones")
+        add("dec/final_norm/scale", (d,), "ones")
+    elif cfg.family == "vit":
+        patch_dim = cfg.patch_size * cfg.patch_size * cfg.channels
+        add("patch_embed/kernel", (patch_dim, d), "fan_in",
+            1.0 / math.sqrt(patch_dim))
+        add("patch_embed/bias", (d,), "zeros")
+        add("pos_embed", (cfg.num_patches, d), "normal", 0.02)
+        for b in range(cfg.num_layers):
+            p = f"enc/block_{b:02d}"
+            attn(f"{p}/attn")
+            mlp_or_moe(p, cfg.enc_moe, b)
+        add("final_norm/scale", (d,), "ones")
+        add("head/kernel", (d, cfg.num_classes), "fan_in", 1.0 / math.sqrt(d))
+        add("head/bias", (cfg.num_classes,), "zeros")
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    specs.sort(key=lambda s: s["name"])
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Reference initializer (tests + aot example args); Rust mirrors it."""
+    params: Params = {}
+    key = jax.random.PRNGKey(seed)
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        shape = tuple(spec["shape"])
+        kind = spec["init"]["kind"]
+        if kind == "zeros":
+            v = jnp.zeros(shape, jnp.float32)
+        elif kind == "ones":
+            v = jnp.ones(shape, jnp.float32)
+        else:
+            v = jax.random.normal(sub, shape, jnp.float32) * spec["init"]["stddev"]
+        params[spec["name"]] = v
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Basic blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def attention(params, prefix, q_in, kv_in, cfg: ModelConfig, mask=None):
+    """Multi-head attention. mask: [B, 1, Tq, Tk] additive (0 / -inf)."""
+    b, tq, d = q_in.shape
+    tk = kv_in.shape[1]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (q_in @ params[f"{prefix}/wq"]).reshape(b, tq, h, hd)
+    k = (kv_in @ params[f"{prefix}/wk"]).reshape(b, tk, h, hd)
+    v = (kv_in @ params[f"{prefix}/wv"]).reshape(b, tk, h, hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    if mask is not None:
+        logits = logits + mask
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, tq, d)
+    return o @ params[f"{prefix}/wo"]
+
+
+def dense_mlp(params, prefix, x):
+    h = kref.gelu(x @ params[f"{prefix}/wi"])
+    return h @ params[f"{prefix}/wo"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts layer
+# ---------------------------------------------------------------------------
+
+def top_k(x, k: int):
+    """`lax.top_k` replacement that lowers to a plain HLO `sort`.
+
+    jax ≥ 0.4.30 lowers `lax.top_k` to a dedicated `topk(..., largest=true)`
+    HLO instruction that the xla_extension 0.5.1 text parser (the version the
+    Rust `xla` crate links) rejects. A descending argsort + slice produces
+    identical values/indices through parseable `sort`/`gather` ops.
+    """
+    # lax.sort_key_val directly (jnp.argsort on ≥3-D inputs builds a batched
+    # gather this jaxlib cannot lower); indices are integer plumbing, so
+    # stop_gradient keeps the sort out of the autodiff graph — gradients flow
+    # through take_along_axis exactly as through lax.top_k's value output.
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    neg = jax.lax.stop_gradient(-x)  # keys constant: sort's JVP would
+    # otherwise emit the unsupported batched gather during linearization
+    _, sorted_idx = jax.lax.sort_key_val(neg, iota, dimension=-1)
+    idx = sorted_idx[..., :k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def _run_experts(cfg: ModelConfig, x_e, wi, wo):
+    """x_e: [E, c, d] → [E, c, d] through the Pallas kernel (or jnp ref)."""
+    if cfg.use_pallas:
+        return pallas_expert_mlp(x_e, wi, wo)
+    return kref.expert_mlp(x_e, wi, wo)
+
+
+def _router(cfg: ModelConfig, xg, w):
+    """xg: [n_groups, g, d] → probs [n_groups, g, E]."""
+    if cfg.use_pallas:
+        return pallas_router_probs(xg, w)
+    return jax.vmap(lambda t: kref.router_probs(t, w))(xg)
+
+
+def _expert_choice(cfg, spec: MoeSpec, xg, probs, wi, wo):
+    """Expert Choice routing (paper §2.1, Zhou et al. 2022).
+
+    Every expert independently picks its top `c = g*C/E` tokens (top-c per
+    probability column). Experts are perfectly load balanced by construction;
+    tokens may be used by several experts or dropped entirely.
+
+    xg: [n, g, d]; probs: [n, g, E]. Returns ([n, g, d], aux_metrics).
+    """
+    n, g, d = xg.shape
+    e = spec.num_experts
+    c = max(1, int(g * spec.capacity_factor / e))
+
+    # Per-group top-c per expert column.
+    vals, idx = top_k(jnp.swapaxes(probs, 1, 2), c)  # [n, E, c]
+    # Gather dispatched tokens: [n, E, c, d].
+    x_disp = jnp.take_along_axis(xg[:, None, :, :], idx[..., None], axis=2)
+    # Merge groups into the expert-capacity axis for one kernel invocation:
+    # [E, n*c, d] — the Pallas grid stays (E,) regardless of group count.
+    x_e = jnp.swapaxes(x_disp, 0, 1).reshape(e, n * c, d)
+    y_e = _run_experts(cfg, x_e, wi, wo)
+    y_disp = jnp.swapaxes(y_e.reshape(e, n, c, d), 0, 1)  # [n, E, c, d]
+
+    # Combine: scatter-add weighted expert outputs back to token slots.
+    weighted = y_disp * vals[..., None]
+    flat_idx = idx + (jnp.arange(n)[:, None, None] * g)
+    out = jnp.zeros((n * g, d), xg.dtype).at[flat_idx.reshape(-1)].add(
+        weighted.reshape(-1, d))
+    if spec.renormalize:
+        # Appendix B.7: combine weights of each token renormalized to sum 1
+        # (tokens chosen by no expert keep weight 0).
+        denom = jnp.zeros((n * g,), xg.dtype).at[flat_idx.reshape(-1)].add(
+            vals.reshape(-1))
+        out = out / jnp.maximum(denom, 1e-9)[:, None]
+    out = out.reshape(n, g, d)
+
+    # Fraction of tokens processed by ≥1 expert (Fig. 15 diagnostics).
+    hit = jnp.zeros((n * g,), xg.dtype).at[flat_idx.reshape(-1)].add(1.0)
+    coverage = jnp.mean((hit > 0).astype(jnp.float32))
+    return out, dict(aux_loss=jnp.float32(0.0), coverage=coverage)
+
+
+def _top_k(cfg, spec: MoeSpec, xg, probs, wi, wo):
+    """Token-choice Top-K routing (Shazeer et al. 2017 / Switch) with capacity
+    buffers, token dropping, the 0.01-scaled auxiliary load-balancing loss
+    (paper §A.1.1) and optional Batch Prioritized Routing (Appendix B.1).
+
+    xg: [n, g, d]; probs: [n, g, E]. Returns ([n, g, d], aux_metrics).
+    """
+    n, g, d = xg.shape
+    e = spec.num_experts
+    k = 1 if spec.router_type == "top1" else 2
+    cap = max(1, int(g * spec.capacity_factor * k / e))
+
+    top_vals, top_idx = top_k(probs, k)  # [n, g, k]
+
+    if spec.bpr:
+        # Batch Prioritized Routing: fill expert buffers in order of router
+        # confidence instead of position order.
+        # stop_gradient: the priority permutation is integer-valued plumbing;
+        # keeping it out of the autodiff graph also avoids this jaxlib's
+        # missing batched-gather transpose rule.
+        order = jnp.argsort(
+            jax.lax.stop_gradient(-top_vals[..., 0]), axis=-1)  # [n, g]
+        inv_order = jnp.argsort(order, axis=-1)
+        top_vals = jnp.take_along_axis(top_vals, order[..., None], axis=1)
+        top_idx = jnp.take_along_axis(top_idx, order[..., None], axis=1)
+    else:
+        inv_order = None
+
+    # Buffer positions via cumulative counts in (priority) token order,
+    # vectorized over groups — no vmap: this jaxlib rejects batched gathers.
+    combine = jnp.zeros((n, g, e, cap), xg.dtype)
+    prev_counts = jnp.zeros((n, 1, e), jnp.int32)
+    for slot in range(k):
+        exp_idx = top_idx[..., slot]  # [n, g]
+        onehot_i = jax.nn.one_hot(exp_idx, e, dtype=jnp.int32)  # [n, g, e]
+        pos = jnp.cumsum(onehot_i, axis=1) - 1 + prev_counts
+        prev_counts = prev_counts + jnp.sum(onehot_i, axis=1, keepdims=True)
+        my_pos = jnp.sum(pos * onehot_i, axis=-1)  # [n, g]
+        kept = (my_pos < cap).astype(xg.dtype)
+        w = top_vals[..., slot] * kept
+        disp = (jax.nn.one_hot(exp_idx, e, dtype=xg.dtype)[..., None]
+                * jax.nn.one_hot(jnp.clip(my_pos, 0, cap - 1), cap,
+                                 dtype=xg.dtype)[..., None, :]
+                * kept[..., None, None])
+        combine = combine + disp * w[..., None, None]
+    if inv_order is not None:
+        combine = jnp.take_along_axis(
+            combine, inv_order[..., None, None], axis=1)
+    dispatch = (combine > 0).astype(xg.dtype)  # [n, g, e, cap]
+
+    x_e = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    x_e = jnp.swapaxes(x_e, 0, 1).reshape(e, n * cap, d)
+    y_e = _run_experts(cfg, x_e, wi, wo)
+    y_e = jnp.swapaxes(y_e.reshape(e, n, cap, d), 0, 1)  # [n, e, cap, d]
+
+    if spec.renormalize:
+        denom = jnp.sum(combine, axis=(2, 3), keepdims=True)
+        combine = combine / jnp.maximum(denom, 1e-9)
+    out = jnp.einsum("ngec,necd->ngd", combine, y_e)
+
+    # Switch-style load balancing loss: E * sum_e f_e * p_e.
+    assign_frac = jnp.mean(jnp.sum(dispatch, axis=3), axis=1)  # [n, e]
+    mean_prob = jnp.mean(probs, axis=1)  # [n, e]
+    aux = jnp.mean(jnp.sum(assign_frac * mean_prob, axis=-1)) * e / k
+    coverage = jnp.mean((jnp.sum(combine, axis=(2, 3)) > 0).astype(jnp.float32))
+    return out, dict(aux_loss=aux * spec.aux_loss_scale, coverage=coverage)
+
+
+def moe_layer(cfg: ModelConfig, spec: MoeSpec, params, prefix, x):
+    """Sparse MoE layer over tokens x: [B, S, d] → [B, S, d]."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    g = spec.group_size if spec.group_size > 0 else b * s
+    assert (b * s) % g == 0, f"group size {g} must divide token count {b*s}"
+    n = (b * s) // g
+    xg = tokens.reshape(n, g, d)
+
+    probs = _router(cfg, xg, params[f"{prefix}/moe/router"])
+    wi = params[f"{prefix}/moe/wi"]
+    wo = params[f"{prefix}/moe/wo"]
+    if spec.router_type == "ec":
+        out, aux = _expert_choice(cfg, spec, xg, probs, wi, wo)
+    elif spec.router_type in ("top1", "top2"):
+        out, aux = _top_k(cfg, spec, xg, probs, wi, wo)
+    else:
+        raise ValueError(f"unknown router type {spec.router_type}")
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Towers
+# ---------------------------------------------------------------------------
+
+def _block_ffn(cfg, spec, params, prefix, x, aux_acc):
+    y = rms_norm(x, params[f"{prefix}/mlp_norm/scale"])
+    layer = int(prefix.split("_")[-1])
+    if spec is not None and layer in spec.moe_layers:
+        y, aux = moe_layer(cfg, spec, params, prefix, y)
+        aux_acc["aux_loss"] = aux_acc["aux_loss"] + aux["aux_loss"]
+        aux_acc["coverage"].append(aux["coverage"])
+    else:
+        y = dense_mlp(params, f"{prefix}/mlp", y)
+    return x + y
+
+
+def encoder(cfg: ModelConfig, params, x, enc_mask, aux_acc):
+    for b in range(cfg.num_layers):
+        p = f"enc/block_{b:02d}"
+        y = rms_norm(x, params[f"{p}/attn_norm/scale"])
+        x = x + attention(params, f"{p}/attn", y, y, cfg, enc_mask)
+        x = _block_ffn(cfg, cfg.enc_moe, params, p, x, aux_acc)
+    return rms_norm(x, params["enc/final_norm/scale"])
+
+
+def decoder(cfg: ModelConfig, params, x, enc_out, causal_mask, cross_mask,
+            aux_acc):
+    for b in range(cfg.num_decoder_layers):
+        p = f"dec/block_{b:02d}"
+        y = rms_norm(x, params[f"{p}/attn_norm/scale"])
+        x = x + attention(params, f"{p}/attn", y, y, cfg, causal_mask)
+        y = rms_norm(x, params[f"{p}/cross_norm/scale"])
+        x = x + attention(params, f"{p}/cross", y, enc_out, cfg, cross_mask)
+        x = _block_ffn(cfg, cfg.dec_moe, params, p, x, aux_acc)
+    return rms_norm(x, params["dec/final_norm/scale"])
+
+
+def _pad_mask(tokens):
+    """[B, T] int32 → additive mask [B, 1, 1, T]; 0 is the pad id."""
+    m = (tokens != 0).astype(jnp.float32)
+    return (m - 1.0)[:, None, None, :] * 1e9
+
+
+def lm_forward(cfg: ModelConfig, params: Params, enc_tokens, dec_tokens):
+    """Span-corruption LM forward. Returns (logits [B,Sd,V], aux dict)."""
+    aux_acc = {"aux_loss": jnp.float32(0.0), "coverage": []}
+    emb = params["token_embed"]
+    enc_x = emb[enc_tokens] + params["enc/pos_embed"][None, :, :]
+    dec_x = emb[dec_tokens] + params["dec/pos_embed"][None, :, :]
+
+    enc_mask = _pad_mask(enc_tokens)
+    sd = dec_tokens.shape[1]
+    causal = jnp.tril(jnp.ones((sd, sd), jnp.float32))
+    causal_mask = (causal - 1.0)[None, None, :, :] * 1e9
+
+    enc_out = encoder(cfg, params, enc_x, enc_mask, aux_acc)
+    dec_out = decoder(cfg, params, dec_x, enc_out, causal_mask, enc_mask,
+                      aux_acc)
+    # Tied softmax, T5-style 1/sqrt(d) logits scaling.
+    logits = (dec_out / math.sqrt(cfg.d_model)) @ emb.T
+    return logits, _finalize_aux(aux_acc)
+
+
+def vit_patchify(cfg: ModelConfig, images):
+    """[B, H, W, C] → [B, N, P*P*C] patches (row-major patch order)."""
+    b = images.shape[0]
+    p = cfg.patch_size
+    hp = cfg.image_size // p
+    x = images.reshape(b, hp, p, hp, p, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, hp * hp, p * p * cfg.channels)
+
+
+def vit_features(cfg: ModelConfig, params: Params, images):
+    """ViT trunk → pooled features [B, d] (global average pooling, §2.2)."""
+    aux_acc = {"aux_loss": jnp.float32(0.0), "coverage": []}
+    patches = vit_patchify(cfg, images)
+    x = patches @ params["patch_embed/kernel"] + params["patch_embed/bias"]
+    x = x + params["pos_embed"][None, :, :]
+    for b in range(cfg.num_layers):
+        p = f"enc/block_{b:02d}"
+        y = rms_norm(x, params[f"{p}/attn_norm/scale"])
+        x = x + attention(params, f"{p}/attn", y, y, cfg, None)
+        x = _block_ffn(cfg, cfg.enc_moe, params, p, x, aux_acc)
+    x = rms_norm(x, params["final_norm/scale"])
+    return jnp.mean(x, axis=1), _finalize_aux(aux_acc)
+
+
+def vit_forward(cfg: ModelConfig, params: Params, images):
+    feats, aux = vit_features(cfg, params, images)
+    logits = feats @ params["head/kernel"] + params["head/bias"]
+    return logits, aux
+
+
+def _finalize_aux(aux_acc):
+    cov = aux_acc["coverage"]
+    coverage = (jnp.mean(jnp.stack(cov)) if cov else jnp.float32(1.0))
+    return {"aux_loss": aux_acc["aux_loss"], "coverage": coverage}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params: Params, batch):
+    """batch: enc_tokens [B,Se] i32, dec_tokens [B,Sd] i32 (shifted inputs),
+    targets [B,Sd] i32, loss_mask [B,Sd] f32."""
+    logits, aux = lm_forward(cfg, params, batch["enc_tokens"],
+                             batch["dec_tokens"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["targets"][..., None],
+                             axis=-1)[..., 0]
+    mask = batch["loss_mask"]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    xent = -jnp.sum(ll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == batch["targets"]) * mask) / denom
+    loss = xent + aux["aux_loss"]
+    return loss, dict(xent=xent, accuracy=acc, aux_loss=aux["aux_loss"],
+                      coverage=aux["coverage"])
+
+
+def vit_loss(cfg: ModelConfig, params: Params, batch):
+    """batch: images [B,H,W,C] f32, labels [B] i32."""
+    logits, aux = vit_forward(cfg, params, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    xent = -jnp.mean(jnp.take_along_axis(logp, batch["labels"][:, None],
+                                         axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(
+        jnp.float32))
+    loss = xent + aux["aux_loss"]
+    return loss, dict(xent=xent, accuracy=acc, aux_loss=aux["aux_loss"],
+                      coverage=aux["coverage"])
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch):
+    return lm_loss(cfg, params, batch) if cfg.family == "lm" else vit_loss(
+        cfg, params, batch)
+
+
+def batch_specs(cfg: ModelConfig) -> List[dict]:
+    """Ordered batch-tensor signature (name, shape, dtype) for the manifest."""
+    b = cfg.batch_size
+    if cfg.family == "lm":
+        return [
+            dict(name="enc_tokens", shape=[b, cfg.enc_len], dtype="i32"),
+            dict(name="dec_tokens", shape=[b, cfg.dec_len], dtype="i32"),
+            dict(name="targets", shape=[b, cfg.dec_len], dtype="i32"),
+            dict(name="loss_mask", shape=[b, cfg.dec_len], dtype="f32"),
+        ]
+    return [
+        dict(name="images",
+             shape=[b, cfg.image_size, cfg.image_size, cfg.channels],
+             dtype="f32"),
+        dict(name="labels", shape=[b], dtype="i32"),
+    ]

@@ -1,0 +1,185 @@
+"""Training / evaluation step functions lowered to HLO for the Rust runtime.
+
+The paper trains every model — dense baseline, dense continuation, upcycled
+MoE, MoE-from-scratch — with **Adafactor** (Shazeer & Stern 2018; paper
+§A.1), continuing the inverse-square-root schedule of the dense checkpoint
+without discontinuity. We implement Adafactor from scratch here (factored
+second moments for ≥2-D tensors, update RMS clipping, no first moment) and
+expose the learning rate / weight decay / step index as *scalar inputs*, so
+the Rust coordinator owns the schedule (`rust/src/coordinator/schedule.rs`)
+and one compiled artifact serves every point of every cost sweep.
+
+Flat signature contract (what the manifest records, in this order):
+
+    train_step(params..., opt..., batch..., lr, wd, step)
+      -> (new_params..., new_opt..., loss, xent, accuracy, aux_loss, coverage)
+
+    eval_step(params..., batch...) -> (loss, xent, accuracy, aux_loss, coverage)
+
+    features(params..., images) -> pooled [B, d]           (vit only)
+
+`params...` and `opt...` are sorted by tensor name; `batch...` follows
+`model.batch_specs`. All floats f32.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelConfig
+
+# Adafactor hyperparameters (Shazeer & Stern 2018 defaults).
+_EPS1 = 1e-30  # regularizer inside the second-moment accumulators
+_EPS2 = 1e-3   # lower bound on the RMS-scaled update (unused with fixed lr)
+_CLIP = 1.0    # update RMS clipping threshold d
+_DECAY_EXP = 0.8  # beta2_t = 1 - t^-0.8
+
+METRIC_NAMES = ["loss", "xent", "accuracy", "aux_loss", "coverage"]
+
+
+def factored(shape) -> bool:
+    """Factor the second moment over the last two axes for ≥2-D tensors."""
+    return len(shape) >= 2
+
+
+def opt_specs(cfg: ModelConfig) -> List[dict]:
+    """Optimizer-state inventory, sorted by name; mirrors `param_specs`."""
+    specs = []
+    for p in model.param_specs(cfg):
+        shape = p["shape"]
+        if factored(shape):
+            specs.append(dict(name=f"opt/{p['name']}/vr",
+                              shape=shape[:-1], dtype="f32",
+                              init=dict(kind="zeros", stddev=0.0)))
+            specs.append(dict(name=f"opt/{p['name']}/vc",
+                              shape=shape[:-2] + shape[-1:], dtype="f32",
+                              init=dict(kind="zeros", stddev=0.0)))
+        else:
+            specs.append(dict(name=f"opt/{p['name']}/v",
+                              shape=shape, dtype="f32",
+                              init=dict(kind="zeros", stddev=0.0)))
+    specs.sort(key=lambda s: s["name"])
+    return specs
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def adafactor_update(name: str, param, grad, opt: Dict[str, jnp.ndarray],
+                     lr, wd, step):
+    """One Adafactor update. Returns (new_param, {opt_name: new_value})."""
+    decay = 1.0 - (step + 1.0) ** (-_DECAY_EXP)
+    g2 = jnp.square(grad) + _EPS1
+    if factored(param.shape):
+        vr = opt[f"opt/{name}/vr"]
+        vc = opt[f"opt/{name}/vc"]
+        new_vr = decay * vr + (1.0 - decay) * jnp.mean(g2, axis=-1)
+        new_vc = decay * vc + (1.0 - decay) * jnp.mean(g2, axis=-2)
+        # Rank-1 reconstruction of the second moment (Shazeer & Stern eq. 4).
+        row_mean = jnp.mean(new_vr, axis=-1, keepdims=True)
+        v = (new_vr / jnp.maximum(row_mean, _EPS1))[..., None] * new_vc[
+            ..., None, :]
+        new_state = {f"opt/{name}/vr": new_vr, f"opt/{name}/vc": new_vc}
+    else:
+        v0 = opt[f"opt/{name}/v"]
+        v = decay * v0 + (1.0 - decay) * g2
+        new_state = {f"opt/{name}/v": v}
+    u = grad * jax.lax.rsqrt(v + _EPS1)
+    # Update clipping: divide by max(1, RMS(u)/d).
+    u = u / jnp.maximum(1.0, _rms(u) / _CLIP)
+    new_param = param - lr * u - wd * param
+    return new_param, new_state
+
+
+def build_train_step(cfg: ModelConfig):
+    """Returns (fn, in_names, out_names): the flat, lowering-ready step."""
+    p_specs = model.param_specs(cfg)
+    o_specs = opt_specs(cfg)
+    b_specs = model.batch_specs(cfg)
+    p_names = [s["name"] for s in p_specs]
+    o_names = [s["name"] for s in o_specs]
+    b_names = [s["name"] for s in b_specs]
+
+    def step_fn(*flat):
+        i = 0
+        params = {n: flat[i + j] for j, n in enumerate(p_names)}
+        i += len(p_names)
+        opt = {n: flat[i + j] for j, n in enumerate(o_names)}
+        i += len(o_names)
+        batch = {n: flat[i + j] for j, n in enumerate(b_names)}
+        i += len(b_names)
+        lr, wd, step = flat[i], flat[i + 1], flat[i + 2]
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch), has_aux=True)(params)
+
+        new_params = {}
+        new_opt = {}
+        for name in p_names:
+            np_, ns = adafactor_update(name, params[name], grads[name], opt,
+                                       lr, wd, step)
+            new_params[name] = np_
+            new_opt.update(ns)
+        outs = ([new_params[n] for n in p_names]
+                + [new_opt[n] for n in o_names]
+                + [loss, metrics["xent"], metrics["accuracy"],
+                   metrics["aux_loss"], metrics["coverage"]])
+        return tuple(outs)
+
+    in_names = p_names + o_names + b_names + ["lr", "wd", "step"]
+    out_names = p_names + o_names + METRIC_NAMES
+    return step_fn, in_names, out_names
+
+
+def build_eval_step(cfg: ModelConfig):
+    p_names = [s["name"] for s in model.param_specs(cfg)]
+    b_names = [s["name"] for s in model.batch_specs(cfg)]
+
+    def eval_fn(*flat):
+        params = {n: flat[j] for j, n in enumerate(p_names)}
+        batch = {n: flat[len(p_names) + j] for j, n in enumerate(b_names)}
+        loss, metrics = model.loss_fn(cfg, params, batch)
+        return (loss, metrics["xent"], metrics["accuracy"],
+                metrics["aux_loss"], metrics["coverage"])
+
+    return eval_fn, p_names + b_names, METRIC_NAMES
+
+
+def build_features(cfg: ModelConfig):
+    """ViT frozen-representation extractor for few-shot linear eval (§A.2.2)."""
+    assert cfg.family == "vit"
+    p_names = [s["name"] for s in model.param_specs(cfg)]
+
+    def feat_fn(*flat):
+        params = {n: flat[j] for j, n in enumerate(p_names)}
+        images = flat[len(p_names)]
+        feats, _ = model.vit_features(cfg, params, images)
+        return (feats,)
+
+    return feat_fn, p_names + ["images"], ["features"]
+
+
+def example_args(cfg: ModelConfig, which: str) -> Tuple:
+    """ShapeDtypeStructs for lowering (`which` ∈ train/eval/features)."""
+    def sds(spec):
+        dt = {"f32": jnp.float32, "i32": jnp.int32}[spec["dtype"]]
+        return jax.ShapeDtypeStruct(tuple(spec["shape"]), dt)
+
+    p = [sds(s) for s in model.param_specs(cfg)]
+    if which == "train":
+        o = [sds(s) for s in opt_specs(cfg)]
+        b = [sds(s) for s in model.batch_specs(cfg)]
+        scalars = [jax.ShapeDtypeStruct((), jnp.float32)] * 3
+        return tuple(p + o + b + scalars)
+    if which == "eval":
+        b = [sds(s) for s in model.batch_specs(cfg)]
+        return tuple(p + b)
+    if which == "features":
+        img = jax.ShapeDtypeStruct(
+            (cfg.batch_size, cfg.image_size, cfg.image_size, cfg.channels),
+            jnp.float32)
+        return tuple(p + [img])
+    raise ValueError(which)

@@ -1,0 +1,120 @@
+"""Reference implementation of the upcycling model surgery (paper Figure 1).
+
+The *production* surgery lives in the Rust coordinator
+(`rust/src/upcycle/`) and operates on checkpoints by tensor name; this module
+is its executable specification, used by the pytest suite for the
+function-preservation property (Appendix B.8 / Fig. 15): with combine-weight
+renormalization, every token selected by at least one expert gets exactly the
+dense model's output at initialization.
+
+Recipe (paper §3): the new model has the same blocks as the dense model; a
+subset of MLP layers become MoE layers whose E experts are *identical copies*
+of the original MLP; the router is freshly initialized (N(0, 0.02)); every
+other tensor is copied across.
+"""
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model, train_step
+from .configs import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def upcycle_params(dense: Params, sparse_cfg: ModelConfig, seed: int = 0,
+                   expert_noise: float = 0.0,
+                   load_experts: bool = True) -> Params:
+    """Dense parameters → sparse (MoE) parameters.
+
+    Args:
+      dense: parameter dict of the dense parent (same block geometry).
+      sparse_cfg: target MoE configuration.
+      seed: RNG seed for router init (and expert noise / random experts).
+      expert_noise: stddev of independent Gaussian noise added to each expert
+        copy (Appendix B.9; 0.0 = the paper's standard recipe).
+      load_experts: False = randomly initialize experts instead of copying
+        the dense MLP (Appendix B.5 ablation).
+    """
+    rng = np.random.default_rng(seed)
+    out: Params = {}
+    for spec in model.param_specs(sparse_cfg):
+        name, shape = spec["name"], tuple(spec["shape"])
+        if "/moe/router" in name:
+            out[name] = jnp.asarray(
+                rng.normal(0.0, 0.02, size=shape), jnp.float32)
+        elif "/moe/wi" in name or "/moe/wo" in name:
+            e = shape[0]
+            dense_name = name.replace("/moe/", "/mlp/")
+            if load_experts:
+                w = jnp.broadcast_to(dense[dense_name][None], shape)
+                if expert_noise > 0.0:
+                    w = w + jnp.asarray(
+                        rng.normal(0.0, expert_noise, size=shape), jnp.float32)
+                out[name] = jnp.array(w)
+            else:
+                std = spec["init"]["stddev"]
+                out[name] = jnp.asarray(
+                    rng.normal(0.0, std, size=shape), jnp.float32)
+        else:
+            out[name] = dense[name]
+    return out
+
+
+def upcycle_opt_state(dense_opt: Dict[str, jnp.ndarray],
+                      sparse_cfg: ModelConfig,
+                      load_optimizer: bool = True) -> Dict[str, jnp.ndarray]:
+    """Optimizer-state surgery (Appendix B.6, vision models only).
+
+    Factored Adafactor accumulators of each dense MLP are broadcast to every
+    expert; router state starts at zero (there is nothing to resume, paper
+    footnote 6). With load_optimizer=False all state is zeroed (the paper's
+    language setting).
+    """
+    out = {}
+    for spec in train_step.opt_specs(sparse_cfg):
+        name, shape = spec["name"], tuple(spec["shape"])
+        base = name[len("opt/"):].rsplit("/", 1)[0]  # the parameter name
+        slot = name.rsplit("/", 1)[1]
+        if not load_optimizer:
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif "/moe/router" in base:
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif "/moe/wi" in base or "/moe/wo" in base:
+            dense_name = f"opt/{base.replace('/moe/', '/mlp/')}/{slot}"
+            out[name] = jnp.broadcast_to(dense_opt[dense_name][None], shape)
+        else:
+            out[name] = dense_opt[name]
+    return out
+
+
+def depth_tile_params(dense: Params, dense_cfg: ModelConfig,
+                      tiled_cfg: ModelConfig) -> Params:
+    """Dense upcycling baseline (Fig. 5): warm-start a *deeper* dense model
+    by tiling blocks of the shallow parent (Rae et al. 2021 "depth tiling").
+
+    New block i takes the weights of parent block `i * n_old // n_new`
+    (order-preserving contiguous tiling); non-block tensors are copied.
+    """
+    def src_block(i: int, n_new: int, n_old: int) -> int:
+        return i * n_old // n_new
+
+    out: Params = {}
+    for spec in model.param_specs(tiled_cfg):
+        name = spec["name"]
+        if "/block_" in name:
+            tower = name.split("/")[0]
+            b = int(name.split("/block_")[1][:2])
+            n_new = (tiled_cfg.num_layers if tower == "enc"
+                     else tiled_cfg.num_decoder_layers)
+            n_old = (dense_cfg.num_layers if tower == "enc"
+                     else dense_cfg.num_decoder_layers)
+            src = src_block(b, n_new, n_old)
+            src_name = name.replace(f"block_{b:02d}", f"block_{src:02d}")
+            out[name] = dense[src_name]
+        else:
+            out[name] = dense[name]
+    return out

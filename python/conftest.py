@@ -1,0 +1,8 @@
+"""Make `compile.*` importable whether pytest runs from python/ or the repo
+root (the Makefile uses python/, the top-level capture command uses the
+root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,87 @@
+"""AOT/manifest contract tests: FLOPs model sanity, manifest completeness,
+and — when artifacts exist — HLO text parseability constraints."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, flops, model, train_step
+from compile.configs import CONFIGS, build_artifact_set
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_flops_monotone_in_capacity():
+    d = flops.train_flops_per_step(CONFIGS["lm_tiny_dense"])
+    c1 = flops.train_flops_per_step(CONFIGS["lm_tiny_moe_e8_c1"])
+    c2 = flops.train_flops_per_step(CONFIGS["lm_tiny_moe_e8_c2"])
+    c3 = flops.train_flops_per_step(CONFIGS["lm_tiny_moe_e8_c3"])
+    assert d < c1 < c2 < c3
+    # C=1 ≈ dense + router only (paper §2.1 footnote 2).
+    assert c1 / d < 1.3
+
+
+def test_flops_expert_count_is_nearly_neutral():
+    e2 = flops.train_flops_per_step(CONFIGS["lm_tiny_moe_e2_c2"])
+    e16 = flops.train_flops_per_step(CONFIGS["lm_tiny_moe_e16_c2"])
+    assert abs(e16 / e2 - 1.0) < 0.1
+
+
+def test_flops_train_is_3x_eval():
+    for name in ["lm_tiny_dense", "vit_tiny_moe_e8_c2"]:
+        cfg = CONFIGS[name]
+        assert flops.train_flops_per_step(cfg) == pytest.approx(
+            3 * flops.eval_flops_per_step(cfg))
+
+
+def test_artifact_set_is_consistent():
+    cfgs = build_artifact_set()
+    assert len(cfgs) >= 24, "full experiment coverage requires the whole set"
+    for cfg in cfgs:
+        entry = aot.model_entry(cfg, ".")
+        n_params = len(entry["params"])
+        assert entry["param_count"] > 0
+        assert n_params == len(model.param_specs(cfg))
+        assert len(entry["opt_state"]) == len(train_step.opt_specs(cfg))
+        # Sparse configs expose experts in the signature.
+        if cfg.is_sparse:
+            assert any("/moe/wi" in s["name"] for s in entry["params"])
+        # Every family ships train + eval; vit also features.
+        assert set(entry["artifacts"]) >= {"train", "eval"}
+        if cfg.family == "vit":
+            assert "features" in entry["artifacts"]
+
+
+def test_sparse_param_count_exceeds_dense():
+    dense = aot.model_entry(CONFIGS["lm_tiny_dense"], ".")["param_count"]
+    sparse = aot.model_entry(CONFIGS["lm_tiny_moe_e8_c2"], ".")["param_count"]
+    assert sparse > 2 * dense, "8 experts on half the layers ⇒ ≫2× params"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_configs():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = {m["name"] for m in manifest["models"]}
+    assert names == set(CONFIGS.keys())
+    for m in manifest["models"]:
+        for kind, fname in m["artifacts"].items():
+            path = os.path.join(ARTIFACTS, fname)
+            assert os.path.exists(path), f"missing artifact {fname}"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+def test_hlo_text_avoids_unparseable_ops():
+    """xla_extension 0.5.1's HLO text parser rejects the dedicated `topk`
+    instruction newer jax emits — model.top_k must keep it out (the Rust
+    integration test compiles these files for real; this is the fast guard)."""
+    for fname in os.listdir(ARTIFACTS):
+        if not fname.endswith(".hlo.txt"):
+            continue
+        with open(os.path.join(ARTIFACTS, fname)) as f:
+            text = f.read()
+        assert " topk(" not in text, f"{fname} contains an unparseable topk op"
+        assert "ENTRY" in text and "HloModule" in text

@@ -1,0 +1,155 @@
+"""Upcycling surgery tests — including the paper's function-preservation
+property (Appendix B.8 / Fig. 15): with renormalized combine weights, every
+token selected by ≥1 expert computes exactly the dense model's function at
+initialization."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train_step, upcycle
+from compile.configs import CONFIGS
+
+
+def test_surgery_copies_and_replicates():
+    dense_cfg = CONFIGS["lm_tiny_dense"]
+    sparse_cfg = CONFIGS["lm_tiny_moe_e8_c2"]
+    dense = model.init_params(dense_cfg, 0)
+    sparse = upcycle.upcycle_params(dense, sparse_cfg, seed=1)
+    for name, v in sparse.items():
+        if "/moe/wi" in name or "/moe/wo" in name:
+            src = dense[name.replace("/moe/", "/mlp/")]
+            for e in range(v.shape[0]):
+                np.testing.assert_array_equal(np.asarray(v[e]), np.asarray(src))
+        elif "/moe/router" in name:
+            std = float(jnp.std(v))
+            assert 0.005 < std < 0.05
+        else:
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(dense[name]))
+
+
+def test_surgery_random_experts_differ():
+    dense = model.init_params(CONFIGS["lm_tiny_dense"], 0)
+    sparse = upcycle.upcycle_params(dense, CONFIGS["lm_tiny_moe_e8_c2"],
+                                    seed=1, load_experts=False)
+    for name, v in sparse.items():
+        if "/moe/wi" in name:
+            src = dense[name.replace("/moe/", "/mlp/")]
+            assert not np.allclose(np.asarray(v[0]), np.asarray(src))
+            assert not np.allclose(np.asarray(v[0]), np.asarray(v[1]))
+
+
+def test_surgery_noise_magnitude():
+    dense = model.init_params(CONFIGS["lm_tiny_dense"], 0)
+    sparse = upcycle.upcycle_params(dense, CONFIGS["lm_tiny_moe_e8_c2"],
+                                    seed=1, expert_noise=0.01)
+    for name, v in sparse.items():
+        if "/moe/wi" in name:
+            src = np.asarray(dense[name.replace("/moe/", "/mlp/")])
+            dev = np.abs(np.asarray(v[0]) - src)
+            assert 0 < dev.max() < 0.06
+            assert not np.allclose(np.asarray(v[0]), np.asarray(v[1]))
+
+
+def test_opt_state_surgery():
+    dense_cfg = CONFIGS["lm_tiny_dense"]
+    sparse_cfg = CONFIGS["lm_tiny_moe_e8_c2"]
+    rng = np.random.default_rng(0)
+    dense_opt = {
+        s["name"]: jnp.asarray(rng.standard_normal(s["shape"]), jnp.float32)
+        for s in train_step.opt_specs(dense_cfg)
+    }
+    loaded = upcycle.upcycle_opt_state(dense_opt, sparse_cfg, load_optimizer=True)
+    zeroed = upcycle.upcycle_opt_state(dense_opt, sparse_cfg, load_optimizer=False)
+    for s in train_step.opt_specs(sparse_cfg):
+        name = s["name"]
+        assert loaded[name].shape == tuple(s["shape"])
+        assert float(jnp.sum(jnp.abs(zeroed[name]))) == 0.0
+        if "/moe/router/" in name:
+            assert float(jnp.sum(jnp.abs(loaded[name]))) == 0.0
+        elif "/moe/wi/" in name or "/moe/wo/" in name:
+            src = dense_opt[name.replace("/moe/", "/mlp/")]
+            for e in range(s["shape"][0]):
+                np.testing.assert_array_equal(
+                    np.asarray(loaded[name][e]), np.asarray(src))
+
+
+def test_depth_tiling_maps_blocks():
+    dense_cfg = CONFIGS["lm_tiny_dense"]
+    tiled_cfg = CONFIGS["lm_tiny_dense_tiled"]
+    dense = model.init_params(dense_cfg, 0)
+    tiled = upcycle.depth_tile_params(dense, dense_cfg, tiled_cfg)
+    assert set(tiled.keys()) == {s["name"] for s in model.param_specs(tiled_cfg)}
+    # 6-block tower from 4 blocks: block 5 ← source 5*4//6 = 3.
+    np.testing.assert_array_equal(
+        np.asarray(tiled["enc/block_05/attn/wq"]),
+        np.asarray(dense["enc/block_03/attn/wq"]))
+    np.testing.assert_array_equal(
+        np.asarray(tiled["token_embed"]), np.asarray(dense["token_embed"]))
+
+
+# ---------------------------------------------------------------------------
+# Function preservation (Appendix B.8 / Fig. 15)
+# ---------------------------------------------------------------------------
+
+def _renorm_full_capacity_cfg():
+    """LM config whose MoE layers renormalize and have capacity ≥ group size
+    so *every* token is selected by at least one expert."""
+    base = CONFIGS["lm_tiny_moe_e8_c2_renorm"]
+    # capacity factor = E ⇒ c = g·E/E = g: every expert can take every token.
+    enc = dataclasses.replace(base.enc_moe, capacity_factor=8.0)
+    dec = dataclasses.replace(base.dec_moe, capacity_factor=8.0,
+                              router_type="ec")
+    return dataclasses.replace(base, enc_moe=enc, dec_moe=dec)
+
+
+def test_function_preservation_with_renorm_and_full_capacity():
+    """At C=E with renormalization, the upcycled model's logits equal the
+    dense parent's logits exactly (up to float tolerance) — paper Fig. 15."""
+    dense_cfg = CONFIGS["lm_tiny_dense"]
+    sparse_cfg = _renorm_full_capacity_cfg()
+    dense = model.init_params(dense_cfg, 3)
+    sparse = upcycle.upcycle_params(dense, sparse_cfg, seed=9)
+
+    rng = np.random.default_rng(10)
+    enc = jnp.asarray(rng.integers(1, 200, (4, dense_cfg.enc_len)), jnp.int32)
+    dec = jnp.asarray(rng.integers(1, 200, (4, dense_cfg.dec_len)), jnp.int32)
+    logits_dense, _ = model.lm_forward(dense_cfg, dense, enc, dec)
+    logits_sparse, aux = model.lm_forward(sparse_cfg, sparse, enc, dec)
+    assert float(aux["coverage"]) == 1.0, "full capacity must cover all tokens"
+    np.testing.assert_allclose(
+        np.asarray(logits_sparse), np.asarray(logits_dense),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_partial_capacity_only_approximates_dense():
+    """At C=1 without renorm the initial model deviates from the parent —
+    the 'initial performance drop' the paper's recipe fights."""
+    dense_cfg = CONFIGS["lm_tiny_dense"]
+    sparse_cfg = CONFIGS["lm_tiny_moe_e8_c1"]
+    dense = model.init_params(dense_cfg, 3)
+    sparse = upcycle.upcycle_params(dense, sparse_cfg, seed=9)
+    rng = np.random.default_rng(10)
+    enc = jnp.asarray(rng.integers(1, 200, (4, dense_cfg.enc_len)), jnp.int32)
+    dec = jnp.asarray(rng.integers(1, 200, (4, dense_cfg.dec_len)), jnp.int32)
+    ld, _ = model.lm_forward(dense_cfg, dense, enc, dec)
+    ls, _ = model.lm_forward(sparse_cfg, sparse, enc, dec)
+    assert not np.allclose(np.asarray(ls), np.asarray(ld), rtol=1e-3, atol=1e-3)
+
+
+def test_vision_function_preservation():
+    dense_cfg = CONFIGS["vit_tiny_dense"]
+    base = CONFIGS["vit_tiny_moe_e8_c2"]
+    enc = dataclasses.replace(base.enc_moe, capacity_factor=8.0)
+    sparse_cfg = dataclasses.replace(base, enc_moe=enc)
+    assert sparse_cfg.enc_moe.renormalize
+    dense = model.init_params(dense_cfg, 3)
+    sparse = upcycle.upcycle_params(dense, sparse_cfg, seed=9)
+    rng = np.random.default_rng(11)
+    img = jnp.asarray(rng.random((4, 32, 32, 3)), jnp.float32)
+    ld, _ = model.vit_forward(dense_cfg, dense, img)
+    ls, aux = model.vit_forward(sparse_cfg, sparse, img)
+    assert float(aux["coverage"]) == 1.0
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(ld), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,51 @@
+//! Bench: synthetic data substrates. The data path runs on the host between
+//! device steps, so it must stay far cheaper than a train step (~40 ms at
+//! tiny scale); these benches keep it honest (EXPERIMENTS.md §Perf).
+//!
+//! Run: cargo bench --bench data_pipeline
+
+use sparse_upcycle::data::text::{span_corrupt, HmmCorpus, HmmSpec, TextPipeline};
+use sparse_upcycle::data::vision::{VisionPipeline, VisionSpec};
+use sparse_upcycle::util::bench::bench;
+use sparse_upcycle::util::rng::Rng;
+
+fn main() {
+    println!("== text pipeline ==");
+    let corpus = HmmCorpus::new(HmmSpec::default(), 1);
+    let mut rng = Rng::new(2);
+    let r = bench("hmm_corpus.sample(40 tokens)", 200, || {
+        std::hint::black_box(corpus.sample(40, &mut rng));
+    });
+    r.throughput(40.0, "tokens");
+
+    let raw = corpus.sample(40, &mut rng);
+    bench("span_corrupt(40 -> 32/16)", 200, || {
+        std::hint::black_box(span_corrupt(&raw, 256, 32, 16, &mut rng));
+    });
+
+    let mut pipe = TextPipeline::new(HmmCorpus::new(HmmSpec::default(), 1), 8, 32, 16, 3, 0);
+    let r = bench("text_pipeline.next_batch (b=8, 32/16)", 300, || {
+        std::hint::black_box(pipe.next_batch());
+    });
+    r.throughput(8.0 * 32.0, "enc-tokens");
+
+    // Larger scale (the e2e `small` geometry).
+    let big = HmmCorpus::new(HmmSpec { vocab_size: 8192, ..Default::default() }, 1);
+    let mut pipe = TextPipeline::new(big, 8, 128, 32, 3, 0);
+    let r = bench("text_pipeline.next_batch (b=8, 128/32, v=8192)", 300, || {
+        std::hint::black_box(pipe.next_batch());
+    });
+    r.throughput(8.0 * 128.0, "enc-tokens");
+
+    println!("\n== vision pipeline ==");
+    let mut pipe = VisionPipeline::new(VisionSpec::default(), 16, 3, 0);
+    let r = bench("vision_pipeline.next_batch (b=16, 32x32)", 300, || {
+        std::hint::black_box(pipe.next_batch());
+    });
+    r.throughput(16.0, "images");
+
+    let mut pipe = VisionPipeline::new(VisionSpec::default(), 1, 3, 0);
+    bench("vision class_balanced(10-shot x 16 classes)", 300, || {
+        std::hint::black_box(pipe.class_balanced(10));
+    });
+}

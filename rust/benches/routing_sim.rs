@@ -1,0 +1,75 @@
+//! Bench + report: expert-parallel routing simulation (paper §A.4).
+//!
+//! Sweeps the placement/traffic simulator over expert counts, capacity
+//! factors and mesh sizes, reporting the quantities behind the paper's
+//! parallelization discussion: load imbalance (Expert Choice is balanced by
+//! construction; token-choice is not), all-to-all volume, and per-device
+//! memory from `mesh` placement.
+//!
+//! Run: cargo bench --bench routing_sim
+
+use sparse_upcycle::manifest::{Manifest, MoeSpec};
+use sparse_upcycle::parallel::{place, simulate_routing, MeshSpec};
+use sparse_upcycle::util::bench::bench;
+use sparse_upcycle::util::rng::Rng;
+
+fn spec(e: usize, c: f64, router: &str) -> MoeSpec {
+    MoeSpec {
+        num_experts: e,
+        capacity_factor: c,
+        router_type: router.into(),
+        moe_layers: vec![1, 3],
+        group_size: 0,
+        renormalize: false,
+        bpr: false,
+    }
+}
+
+fn main() {
+    let mesh = MeshSpec { data_parallel: 2, expert_parallel: 4, model_parallel: 1 };
+    let mut rng = Rng::new(7);
+
+    println!("== routing traffic (4096 tokens, d_model=64, mesh dp=2 ep=4) ==");
+    println!("{:<26} {:>10} {:>12} {:>12}", "router", "imbalance", "a2a MB", "dispatched");
+    for (e, c, r) in [
+        (8, 1.0, "ec"), (8, 2.0, "ec"), (32, 2.0, "ec"),
+        (8, 1.0, "top2"), (8, 2.0, "top2"), (32, 2.0, "top2"), (8, 1.0, "top1"),
+    ] {
+        let s = spec(e, c, r);
+        let t = simulate_routing(&s, 4096, &mesh, &mut rng);
+        println!(
+            "{:<26} {:>10.3} {:>12.3} {:>12}",
+            format!("{r} E={e} C={c}"),
+            t.imbalance,
+            t.all_to_all_bytes(64) as f64 / 1e6,
+            t.dispatched_tokens
+        );
+    }
+
+    println!("\n== simulator throughput ==");
+    let s = spec(32, 2.0, "top2");
+    let r = bench("simulate_routing(top2, E=32, 4096 tok)", 300, || {
+        std::hint::black_box(simulate_routing(&s, 4096, &mesh, &mut rng));
+    });
+    r.throughput(4096.0, "tokens");
+    let s = spec(32, 2.0, "ec");
+    bench("simulate_routing(ec, E=32, 4096 tok)", 300, || {
+        std::hint::black_box(simulate_routing(&s, 4096, &mesh, &mut rng));
+    });
+
+    if let Ok(manifest) = Manifest::load("artifacts") {
+        println!("\n== placement (manifest models, mesh dp=2 ep=4 mp=1) ==");
+        for name in ["lm_tiny_moe_e8_c2", "lm_tiny_moe_e16_c2", "lm_small_moe_e8_c2"] {
+            if let Ok(entry) = manifest.model(name) {
+                let p = place(entry, &mesh);
+                println!(
+                    "{:<26} experts/dev {:?}  expert-bytes/dev {:.2} MB  dense {:.2} MB",
+                    name,
+                    p.experts_per_device,
+                    p.expert_param_bytes_per_device as f64 / 1e6,
+                    p.dense_param_bytes as f64 / 1e6
+                );
+            }
+        }
+    }
+}

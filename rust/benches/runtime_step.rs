@@ -1,0 +1,101 @@
+//! Bench: end-to-end training/eval step cost through the PJRT runtime —
+//! the L3 hot path. This regenerates the paper's per-step cost claims:
+//!
+//! * Fig. 9 / §2.1: a sparse step costs ≈ C× the dense MLP FLOPs + router,
+//!   so dense < C=1 < C=2 < C=3;
+//! * §3.1 "number of experts": E is ~FLOPs-neutral (E=2 vs E=16 ≈ same);
+//!
+//! and it is the measurement harness for the §Perf optimization loop
+//! (EXPERIMENTS.md): step latency, steps/s and achieved FLOP/s per variant.
+//!
+//! Run: make artifacts && cargo bench --bench runtime_step
+
+use sparse_upcycle::coordinator::TrainState;
+use sparse_upcycle::init::{init_opt_state, init_params};
+use sparse_upcycle::manifest::Manifest;
+use sparse_upcycle::runtime::Runtime;
+use sparse_upcycle::util::bench::bench;
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let runtime = Runtime::new().unwrap();
+    println!("platform: {}", runtime.platform());
+
+    // Keep the compile bill bounded: XLA compilation of each train module
+    // costs ~30-55 s on this 1-core CPU (the bench itself runs in seconds).
+    // Pass --full for the whole C/E sweep.
+    let full = std::env::args().any(|a| a == "--full");
+    let variants: &[&str] = if full {
+        &[
+            "lm_tiny_dense", "lm_tiny_moe_e8_c1", "lm_tiny_moe_e8_c2",
+            "lm_tiny_moe_e8_c3", "lm_tiny_moe_e2_c2", "lm_tiny_moe_e16_c2",
+            "vit_tiny_dense", "vit_tiny_moe_e8_c2",
+        ]
+    } else {
+        &["lm_tiny_dense", "lm_tiny_moe_e8_c1", "lm_tiny_moe_e8_c2", "vit_tiny_moe_e8_c2"]
+    };
+    println!("\n(compiling {} train modules — XLA compile is the dominant fixed cost,", variants.len());
+    println!(" see EXPERIMENTS.md §Perf; per-step numbers follow)\n");
+
+    for name in variants {
+        let entry = manifest.model(name).unwrap().clone();
+        let model = runtime.load_model(&manifest, name, &["train", "eval"]).unwrap();
+        let mut state = TrainState::from_checkpoints(
+            &entry,
+            &init_params(&entry, 0).unwrap(),
+            &init_opt_state(&entry).unwrap(),
+        )
+        .unwrap();
+        let mut pipeline: Box<dyn sparse_upcycle::coordinator::BatchSource> =
+            if entry.family == "lm" {
+                Box::new(sparse_upcycle::data::text::TextPipeline::new(
+                    sparse_upcycle::data::text::HmmCorpus::new(
+                        sparse_upcycle::data::text::HmmSpec {
+                            vocab_size: entry.config.vocab_size,
+                            ..Default::default()
+                        },
+                        1,
+                    ),
+                    entry.config.batch_size,
+                    entry.config.enc_len,
+                    entry.config.dec_len,
+                    1,
+                    0,
+                ))
+            } else {
+                Box::new(sparse_upcycle::data::vision::VisionPipeline::new(
+                    sparse_upcycle::data::vision::VisionSpec::default(),
+                    entry.config.batch_size,
+                    1,
+                    0,
+                ))
+            };
+        let batch = pipeline.next();
+        let mut step = 0u64;
+        let r = bench(&format!("train_step {name}"), 1500, || {
+            step += 1;
+            let params = std::mem::take(&mut state.params);
+            let opt = std::mem::take(&mut state.opt_state);
+            let out = model.train_step(params, opt, &batch, 1e-3, 0.0, step).unwrap();
+            state.params = out.params;
+            state.opt_state = out.opt_state;
+        });
+        let flops = entry.flops.train_step;
+        println!(
+            "  ↳ {:.1} steps/s, {:.2} GFLOP/s achieved (analytic {:.2} MFLOP/step)",
+            1e9 / r.mean_ns,
+            flops / r.mean_ns,
+            flops / 1e6
+        );
+        let r = bench(&format!("eval_step  {name}"), 800, || {
+            std::hint::black_box(model.eval_step(&state.params, &batch).unwrap());
+        });
+        println!("  ↳ {:.1} evals/s\n", 1e9 / r.mean_ns);
+    }
+}

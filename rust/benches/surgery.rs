@@ -1,0 +1,50 @@
+//! Bench: checkpoint surgery (the paper's algorithm) — upcycling, optimizer
+//! state carry-over and depth tiling on real manifest geometries. The
+//! surgery is a one-shot cost in practice; this bench guards against it
+//! becoming accidentally quadratic as the expert count grows.
+//!
+//! Run: cargo bench --bench surgery
+
+use sparse_upcycle::checkpoint::Checkpoint;
+use sparse_upcycle::init::{init_opt_state, init_params};
+use sparse_upcycle::manifest::Manifest;
+use sparse_upcycle::upcycle::{depth_tile_params, upcycle_opt_state, upcycle_params, UpcycleOptions};
+use sparse_upcycle::util::bench::bench;
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping surgery bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let dense_entry = manifest.model("lm_tiny_dense").unwrap().clone();
+    let dense: Checkpoint = init_params(&dense_entry, 0).unwrap();
+    let dense_opt: Checkpoint = init_opt_state(&dense_entry).unwrap();
+
+    println!("== surgery benches (dense parent: {:.2}M params) ==",
+             dense_entry.param_count as f64 / 1e6);
+    for target in ["lm_tiny_moe_e2_c2", "lm_tiny_moe_e8_c2", "lm_tiny_moe_e16_c2"] {
+        let sparse = manifest.model(target).unwrap().clone();
+        let r = bench(&format!("upcycle_params -> {target}"), 300, || {
+            let ck = upcycle_params(&dense, &sparse, &UpcycleOptions::default()).unwrap();
+            std::hint::black_box(ck.total_bytes());
+        });
+        r.throughput(sparse.param_count as f64, "params");
+    }
+
+    let sparse = manifest.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    bench("upcycle_params (noise σ=0.01)", 300, || {
+        let opts = UpcycleOptions { expert_noise: 0.01, ..Default::default() };
+        std::hint::black_box(upcycle_params(&dense, &sparse, &opts).unwrap());
+    });
+    bench("upcycle_opt_state (load_optimizer=true)", 300, || {
+        std::hint::black_box(upcycle_opt_state(&dense_opt, &sparse, true).unwrap());
+    });
+
+    let tiled = manifest.model("lm_tiny_dense_tiled").unwrap().clone();
+    bench("depth_tile_params (4 -> 6 blocks)", 300, || {
+        std::hint::black_box(depth_tile_params(&dense, &dense_entry, &tiled).unwrap());
+    });
+}

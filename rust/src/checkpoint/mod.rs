@@ -1,0 +1,224 @@
+//! Versioned binary checkpoint format.
+//!
+//! A checkpoint bundles named tensors (parameters and, optionally, the
+//! Adafactor accumulators — the paper's optimizer-state resumption knob,
+//! Appendix B.6) plus metadata: the model name it belongs to, the training
+//! step it was taken at, and free-form provenance (e.g. "upcycled from X").
+//!
+//! Layout (little-endian):
+//!   magic  b"SUPC"         4 bytes
+//!   version u32            (currently 1)
+//!   header_len u64         JSON header length in bytes
+//!   header JSON            { model, step, provenance, tensors: [ {name,
+//!                            shape, dtype, offset, len_bytes} ] }
+//!   raw tensor data        concatenated, offsets relative to data section
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{numel, Data, DType, Tensor};
+use crate::util::json::{arr, num, obj, s, Json};
+
+const MAGIC: &[u8; 4] = b"SUPC";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub provenance: String,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(model: &str, step: u64, provenance: &str) -> Checkpoint {
+        Checkpoint {
+            model: model.to_string(),
+            step,
+            provenance: provenance.to_string(),
+            tensors: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor `{name}`"))
+    }
+
+    /// Tensors in a fixed name order (the manifest's flat signature order).
+    pub fn ordered(&self, names: &[String]) -> Result<Vec<&Tensor>> {
+        names.iter().map(|n| self.get(n)).collect()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.numel() * t.dtype().size_bytes()).sum()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut entries = Vec::new();
+        let mut offset = 0u64;
+        for (name, t) in &self.tensors {
+            let len = (t.numel() * t.dtype().size_bytes()) as u64;
+            entries.push(obj(vec![
+                ("name", s(name)),
+                ("shape", arr(t.shape.iter().map(|&d| num(d as f64)).collect())),
+                ("dtype", s(t.dtype().as_str())),
+                ("offset", num(offset as f64)),
+                ("len_bytes", num(len as f64)),
+            ]));
+            offset += len;
+        }
+        let header = obj(vec![
+            ("model", s(&self.model)),
+            ("step", num(self.step as f64)),
+            ("provenance", s(&self.provenance)),
+            ("tensors", arr(entries)),
+        ])
+        .to_string();
+
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for t in self.tensors.values() {
+                match &t.data {
+                    Data::F32(v) => {
+                        for x in v {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                    Data::I32(v) => {
+                        for x in v {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                }
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?; // atomic publish
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a SUPC checkpoint");
+        }
+        let mut v4 = [0u8; 4];
+        f.read_exact(&mut v4)?;
+        let version = u32::from_le_bytes(v4);
+        if version != VERSION {
+            bail!("{path:?}: unsupported checkpoint version {version}");
+        }
+        let mut l8 = [0u8; 8];
+        f.read_exact(&mut l8)?;
+        let hlen = u64::from_le_bytes(l8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+
+        let mut ck = Checkpoint::new(
+            header.get("model")?.as_str()?,
+            header.get("step")?.as_f64()? as u64,
+            header.get("provenance")?.as_str()?,
+        );
+        for e in header.get("tensors")?.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let shape: Vec<usize> = e
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            let dtype = DType::from_str(e.get("dtype")?.as_str()?)?;
+            let n = numel(&shape);
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let t = match dtype {
+                DType::F32 => Tensor::from_f32(
+                    &shape,
+                    raw.chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                ),
+                DType::I32 => Tensor::from_i32(
+                    &shape,
+                    raw.chunks_exact(4)
+                        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect(),
+                ),
+            };
+            ck.tensors.insert(name, t);
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint::new("lm_tiny_dense", 1234, "unit-test");
+        ck.insert("a/w", Tensor::from_f32(&[2, 3], vec![1., -2., 3., 4.5, 0., -0.5]));
+        ck.insert("b/tokens", Tensor::from_i32(&[4], vec![9, 8, 7, -6]));
+        ck.insert("c/scalar", Tensor::scalar_f32(0.125));
+        let dir = std::env::temp_dir().join("supc_test");
+        let path = dir.join("ck.supc");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.model, "lm_tiny_dense");
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.provenance, "unit-test");
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.get("a/w").unwrap(), ck.get("a/w").unwrap());
+        assert_eq!(back.get("b/tokens").unwrap(), ck.get("b/tokens").unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("supc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.supc");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ordered_respects_order() {
+        let mut ck = Checkpoint::new("m", 0, "");
+        ck.insert("z", Tensor::scalar_f32(1.0));
+        ck.insert("a", Tensor::scalar_f32(2.0));
+        let names = vec!["z".to_string(), "a".to_string()];
+        let ts = ck.ordered(&names).unwrap();
+        assert_eq!(ts[0].f32s().unwrap()[0], 1.0);
+        assert_eq!(ts[1].f32s().unwrap()[0], 2.0);
+        assert!(ck.ordered(&["missing".to_string()]).is_err());
+    }
+}

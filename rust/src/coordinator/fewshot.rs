@@ -1,0 +1,110 @@
+//! Few-shot linear evaluation (paper §A.2.2): a ridge regressor from frozen
+//! image representations to one-hot labels, 10 examples per class, averaged
+//! over 5 random support seeds, with fixed L2 regularization.
+
+use anyhow::Result;
+
+use crate::data::vision::{VisionPipeline, VisionSpec, NUM_CLASSES};
+use crate::linalg::{argmax_rows, ridge, Mat};
+use crate::runtime::LoadedModel;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FewShotConfig {
+    pub shots: usize,
+    pub seeds: usize,
+    pub test_examples: usize,
+    /// Paper fixes λ = 1024 (on their feature scale); default matches.
+    pub l2: f64,
+}
+
+impl Default for FewShotConfig {
+    fn default() -> Self {
+        FewShotConfig { shots: 10, seeds: 5, test_examples: 256, l2: 1024.0 }
+    }
+}
+
+/// Extract features for a [N,H,W,C] image tensor by slicing into the
+/// artifact's fixed batch size (padding the tail batch by repetition).
+fn batched_features(
+    model: &LoadedModel,
+    params: &[xla::Literal],
+    images: &Tensor,
+) -> Result<Mat> {
+    let b = model.entry.config.batch_size;
+    let (n, h, w, c) = (
+        images.shape[0],
+        images.shape[1],
+        images.shape[2],
+        images.shape[3],
+    );
+    let px = h * w * c;
+    let data = images.f32s()?;
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        let take = (n - i).min(b);
+        let mut chunk = vec![0f32; b * px];
+        for j in 0..b {
+            let src = (i + j.min(take - 1)) * px; // repeat last row as padding
+            chunk[j * px..(j + 1) * px].copy_from_slice(&data[src..src + px]);
+        }
+        let feats = model.features(params, &Tensor::from_f32(&[b, h, w, c], chunk))?;
+        let d = feats.shape[1];
+        let fv = feats.f32s()?;
+        for j in 0..take {
+            rows.push(fv[j * d..(j + 1) * d].iter().map(|&x| x as f64).collect());
+        }
+        i += take;
+    }
+    Ok(Mat::from_rows(&rows))
+}
+
+fn one_hot_mat(labels: &[usize], classes: usize) -> Mat {
+    let mut m = Mat::zeros(labels.len(), classes);
+    for (i, &l) in labels.iter().enumerate() {
+        *m.at_mut(i, l) = 1.0;
+    }
+    m
+}
+
+/// 10-shot accuracy of frozen representations (mean over support seeds).
+pub fn fewshot_accuracy(
+    model: &LoadedModel,
+    params: &[xla::Literal],
+    cfg: &FewShotConfig,
+    base_seed: u64,
+) -> Result<f64> {
+    let image_size = model.entry.config.image_size;
+    // Held-out test set: one fixed shard shared by every seed.
+    let mut test_pipe = VisionPipeline::new(
+        VisionSpec { image_size, ..Default::default() },
+        cfg.test_examples,
+        0xeeee,
+        7,
+    );
+    let (test_tensors, test_labels) = test_pipe.next_batch();
+    let x_test = batched_features(model, params, &test_tensors[0])?;
+
+    let mut accs = Vec::with_capacity(cfg.seeds);
+    for s in 0..cfg.seeds {
+        let mut pipe = VisionPipeline::new(
+            VisionSpec { image_size, ..Default::default() },
+            1,
+            base_seed + s as u64,
+            11 + s as u64,
+        );
+        let (sup_tensors, sup_labels) = pipe.class_balanced(cfg.shots);
+        let x = batched_features(model, params, &sup_tensors[0])?;
+        let y = one_hot_mat(&sup_labels, NUM_CLASSES);
+        let w = ridge(&x, &y, cfg.l2)?;
+        let preds = argmax_rows(&x_test.mul(&w));
+        let correct = preds
+            .iter()
+            .zip(&test_labels)
+            .filter(|(p, l)| **p == **l)
+            .count();
+        accs.push(correct as f64 / test_labels.len() as f64);
+    }
+    Ok(accs.iter().sum::<f64>() / accs.len() as f64)
+}

@@ -1,0 +1,10 @@
+//! Layer-3 coordinator: schedules, the training orchestrator, and the
+//! few-shot linear probe. The experiment harness (`crate::experiments`)
+//! composes these into the paper's figures and tables.
+
+pub mod fewshot;
+pub mod schedule;
+pub mod trainer;
+
+pub use schedule::{Schedule, ScheduleKind};
+pub use trainer::{train, BatchSource, Evaluator, TrainConfig, TrainState};

@@ -1,0 +1,166 @@
+//! Training orchestrator: owns the step loop, the LR schedule, periodic
+//! evaluation and checkpointing. This is where "dense continuation",
+//! "upcycled" and "MoE from scratch" branches become concrete runs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::costmodel::Cost;
+use crate::manifest::ModelEntry;
+use crate::metrics::Series;
+use crate::runtime::{checkpoint_from_literals, literals_from_checkpoint, LoadedModel, Metrics};
+use crate::tensor::Tensor;
+
+use super::schedule::Schedule;
+
+/// Anything that yields training batches in manifest batch order.
+pub trait BatchSource {
+    fn next(&mut self) -> Vec<Tensor>;
+}
+
+impl BatchSource for crate::data::text::TextPipeline {
+    fn next(&mut self) -> Vec<Tensor> {
+        self.next_batch()
+    }
+}
+
+impl BatchSource for crate::data::text::ClassificationPipeline {
+    fn next(&mut self) -> Vec<Tensor> {
+        self.next_batch().0
+    }
+}
+
+impl BatchSource for crate::data::vision::VisionPipeline {
+    fn next(&mut self) -> Vec<Tensor> {
+        self.next_batch().0
+    }
+}
+
+/// Live training state: device-side literals in manifest order + the global
+/// step counter (which also drives Adafactor's decay and the LR schedule).
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub opt_state: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+impl TrainState {
+    pub fn from_checkpoints(
+        entry: &ModelEntry,
+        params: &Checkpoint,
+        opt: &Checkpoint,
+    ) -> Result<TrainState> {
+        Ok(TrainState {
+            params: literals_from_checkpoint(params, &entry.params)
+                .context("binding params to manifest signature")?,
+            opt_state: literals_from_checkpoint(opt, &entry.opt_state)
+                .context("binding optimizer state to manifest signature")?,
+            step: params.step,
+        })
+    }
+
+    pub fn to_checkpoints(
+        &self,
+        entry: &ModelEntry,
+        provenance: &str,
+    ) -> Result<(Checkpoint, Checkpoint)> {
+        let p = checkpoint_from_literals(
+            &entry.name, self.step, provenance, &entry.params, &self.params)?;
+        let o = checkpoint_from_literals(
+            &entry.name, self.step, provenance, &entry.opt_state, &self.opt_state)?;
+        Ok((p, o))
+    }
+}
+
+/// Fixed held-out evaluation set (deterministic shard, reused across all
+/// branches of an experiment so curves are comparable).
+pub struct Evaluator {
+    batches: Vec<Vec<Tensor>>,
+}
+
+impl Evaluator {
+    pub fn from_source(src: &mut dyn BatchSource, n_batches: usize) -> Evaluator {
+        Evaluator { batches: (0..n_batches).map(|_| src.next()).collect() }
+    }
+
+    pub fn eval(&self, model: &LoadedModel, state: &TrainState) -> Result<Metrics> {
+        let mut acc: BTreeMap<String, f64> = BTreeMap::new();
+        for b in &self.batches {
+            for (k, v) in model.eval_step(&state.params, b)? {
+                *acc.entry(k).or_insert(0.0) += v;
+            }
+        }
+        let n = self.batches.len().max(1) as f64;
+        Ok(acc.into_iter().map(|(k, v)| (k, v / n)).collect())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: u64,
+    pub schedule: Schedule,
+    pub weight_decay: f64,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: u64,
+    /// Print a progress line every `log_every` steps (0 = silent).
+    pub log_every: u64,
+}
+
+/// Run `cfg.steps` steps; returns the eval curve (extra-cost x-axis measured
+/// from the state's starting step, in this model's per-step FLOPs).
+pub fn train(
+    model: &LoadedModel,
+    state: &mut TrainState,
+    data: &mut dyn BatchSource,
+    evaluator: &Evaluator,
+    cfg: &TrainConfig,
+    series_name: &str,
+) -> Result<Series> {
+    let mut series = Series::new(series_name);
+    let start_step = state.step;
+    let flops_per_step = model.entry.flops.train_step;
+
+    // Point at the branch start (extra cost 0) — the paper's horizontal
+    // reference lines come from these.
+    let m0 = evaluator.eval(model, state)?;
+    series.push(state.step, 0.0, m0.into_iter().collect());
+
+    let mut last_train_loss = f64::NAN;
+    for i in 1..=cfg.steps {
+        let step = start_step + i;
+        let lr = cfg.schedule.lr(step);
+        let batch = data.next();
+        let params = std::mem::take(&mut state.params);
+        let opt = std::mem::take(&mut state.opt_state);
+        let out = model
+            .train_step(params, opt, &batch, lr, cfg.weight_decay, step)
+            .with_context(|| format!("train step {step}"))?;
+        state.params = out.params;
+        state.opt_state = out.opt_state;
+        state.step = step;
+        last_train_loss = *out.metrics.get("loss").unwrap_or(&f64::NAN);
+
+        if cfg.log_every > 0 && i % cfg.log_every == 0 {
+            println!(
+                "    [{series_name}] step {step} lr={lr:.5} train_loss={last_train_loss:.4}"
+            );
+        }
+        if cfg.eval_every > 0 && i % cfg.eval_every == 0 && i != cfg.steps {
+            let mut m = evaluator.eval(model, state)?;
+            m.insert("train_loss".into(), last_train_loss);
+            series.push(step, flops_per_step * i as f64, m.into_iter().collect());
+        }
+    }
+    let mut m = evaluator.eval(model, state)?;
+    m.insert("train_loss".into(), last_train_loss);
+    series.push(state.step, flops_per_step * cfg.steps as f64,
+                m.into_iter().collect());
+    Ok(series)
+}
+
+/// Total extra cost of a finished series' final point.
+pub fn final_cost(series: &Series) -> Cost {
+    Cost { flops: series.last().map(|p| p.extra_flops).unwrap_or(0.0) }
+}

@@ -1,0 +1,107 @@
+//! Cost model: translate training steps into the paper's x-axis units.
+//!
+//! The paper reports cost as **TPU-core-days** (Figs. 2–6) and **ExaFLOPs**
+//! (Tables 4–5), both *relative to the dense checkpoint's sunk cost*. Our
+//! testbed is a CPU PJRT client, so absolute wall-clock is meaningless for
+//! comparison; instead we account analytic FLOPs (recorded per-step in the
+//! manifest by `python/compile/flops.py`) and convert with a fixed effective
+//! throughput. Relative costs — the quantity every figure actually plots —
+//! are exact under this model because all branches share the constant.
+
+use crate::manifest::ModelEntry;
+
+/// Effective sustained FLOP/s per TPU core used for the core-day conversion:
+/// TPUv3 peak 61.5 TFLOP/s (bf16, per chip = 2 cores → 30.75e12/core) at the
+/// ~45% MFU large transformer training typically sustains.
+pub const EFFECTIVE_FLOPS_PER_CORE: f64 = 30.75e12 * 0.45;
+
+pub const SECONDS_PER_DAY: f64 = 86_400.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cost {
+    pub flops: f64,
+}
+
+impl Cost {
+    pub fn zero() -> Cost {
+        Cost { flops: 0.0 }
+    }
+
+    pub fn of_steps(entry: &ModelEntry, steps: u64) -> Cost {
+        Cost { flops: entry.flops.train_step * steps as f64 }
+    }
+
+    pub fn add(self, other: Cost) -> Cost {
+        Cost { flops: self.flops + other.flops }
+    }
+
+    pub fn core_days(&self) -> f64 {
+        self.flops / (EFFECTIVE_FLOPS_PER_CORE * SECONDS_PER_DAY)
+    }
+
+    pub fn exaflops(&self) -> f64 {
+        self.flops / 1e18
+    }
+
+    /// Cost relative to a reference (the dense checkpoint's sunk cost), in
+    /// percent — the paper's "Relative Extra" columns.
+    pub fn relative_pct(&self, reference: &Cost) -> f64 {
+        if reference.flops == 0.0 {
+            return 0.0;
+        }
+        100.0 * self.flops / reference.flops
+    }
+}
+
+/// Per-step cost ratio between two models (e.g. MoE C=2 vs dense ≈ how much
+/// slower each upcycled step is — the x-axis stretching in Figs. 2/9).
+pub fn step_cost_ratio(a: &ModelEntry, b: &ModelEntry) -> f64 {
+    a.flops.train_step / b.flops.train_step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then(|| Manifest::load(d).unwrap())
+    }
+
+    #[test]
+    fn cost_arithmetic() {
+        let a = Cost { flops: 2e18 };
+        let b = Cost { flops: 1e18 };
+        assert_eq!(a.add(b).flops, 3e18);
+        assert!((a.exaflops() - 2.0).abs() < 1e-12);
+        assert!((a.relative_pct(&b) - 200.0).abs() < 1e-9);
+        assert!(a.core_days() > 0.0);
+        assert_eq!(Cost::zero().relative_pct(&Cost::zero()), 0.0);
+    }
+
+    #[test]
+    fn moe_costs_more_per_step_than_dense() {
+        let Some(m) = manifest() else { return };
+        let dense = m.model("lm_tiny_dense").unwrap();
+        let c1 = m.model("lm_tiny_moe_e8_c1").unwrap();
+        let c2 = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let c3 = m.model("lm_tiny_moe_e8_c3").unwrap();
+        // Monotone in capacity factor; C=1 ≈ dense + router (paper §2.1).
+        assert!(step_cost_ratio(c1, dense) > 1.0);
+        assert!(step_cost_ratio(c1, dense) < 1.5);
+        assert!(step_cost_ratio(c2, c1) > 1.0);
+        assert!(step_cost_ratio(c3, c2) > 1.0);
+    }
+
+    #[test]
+    fn experts_do_not_change_flops_much() {
+        // Paper §3.1: adding experts does not significantly affect FLOPs.
+        let Some(m) = manifest() else { return };
+        let e2 = m.model("lm_tiny_moe_e2_c2").unwrap();
+        let e16 = m.model("lm_tiny_moe_e16_c2").unwrap();
+        let ratio = step_cost_ratio(e16, e2);
+        assert!(ratio < 1.1, "experts should be ~FLOPs-neutral, got {ratio}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Synthetic data substrates (DESIGN.md §2 substitution table): a learnable
+//! HMM/Zipf text corpus with T5 span corruption standing in for C4, and a
+//! procedural shapes dataset standing in for JFT-300M / ImageNet.
+
+pub mod text;
+pub mod vision;

@@ -1,0 +1,436 @@
+//! Synthetic text substrate: C4 stand-in + T5 span corruption.
+//!
+//! The paper pretrains on the span-corruption task over C4 (§4.1). We cannot
+//! ship C4, so we generate a corpus with genuinely learnable structure: a
+//! hidden-Markov chain over topic states, each emitting tokens from its own
+//! Zipf-skewed distribution over a state-specific vocabulary slice. Models
+//! reduce span-corruption loss by learning both the unigram skew and the
+//! topic transition structure — exactly the capacity-bound regime where the
+//! paper's dense-vs-MoE comparisons live (DESIGN.md §2 substitutions table).
+//!
+//! The downstream "SuperGLUE" analogue is topic classification: sequences
+//! drawn from one of `num_classes` distinct HMMs; the decoder must emit the
+//! label token. Pretraining never sees the downstream HMMs.
+
+use crate::tensor::Tensor;
+use crate::util::rng::{Rng, ZipfTable};
+
+/// Reserved token ids (mirrors the Python-side convention).
+pub const PAD: i32 = 0;
+pub const EOS: i32 = 1;
+/// First id usable by the corpus generator (2..first_sentinel).
+pub const FIRST_CONTENT: i32 = 2;
+/// Number of sentinel ids reserved at the top of the vocabulary.
+pub const NUM_SENTINELS: usize = 16;
+
+/// T5 span-corruption hyperparameters (Raffel et al. 2020 defaults).
+pub const NOISE_DENSITY: f64 = 0.15;
+pub const MEAN_SPAN_LEN: f64 = 3.0;
+
+#[derive(Debug, Clone)]
+pub struct HmmSpec {
+    pub num_states: usize,
+    pub vocab_size: usize,
+    /// Probability of staying in the current state.
+    pub self_loop: f64,
+    /// Zipf exponent of each state's emission distribution.
+    pub zipf_s: f64,
+}
+
+impl Default for HmmSpec {
+    fn default() -> Self {
+        HmmSpec { num_states: 12, vocab_size: 256, self_loop: 0.85, zipf_s: 1.05 }
+    }
+}
+
+/// Hidden-Markov corpus generator. Each state emits from a contiguous slice
+/// of the content vocabulary with Zipf skew, so both local (unigram) and
+/// longer-range (topic persistence) statistics are learnable.
+pub struct HmmCorpus {
+    spec: HmmSpec,
+    /// Per-state random permutation of its vocab slice (so states do not
+    /// trivially share ranks).
+    state_vocab: Vec<Vec<i32>>,
+    /// Per-state next-state transition weights.
+    transitions: Vec<Vec<f32>>,
+    /// Shared Zipf CDF over a state's vocab slice (all slices are the same
+    /// size) — precomputed: per-sample `Rng::zipf` was the data-path hot
+    /// spot at large vocabularies (EXPERIMENTS.md §Perf).
+    zipf: ZipfTable,
+}
+
+impl HmmCorpus {
+    pub fn new(spec: HmmSpec, seed: u64) -> HmmCorpus {
+        let mut rng = Rng::with_stream(seed, 0x7a31);
+        let content = spec.vocab_size - NUM_SENTINELS - FIRST_CONTENT as usize;
+        let per_state = (content / spec.num_states).max(4);
+        let mut state_vocab = Vec::new();
+        for s in 0..spec.num_states {
+            let lo = FIRST_CONTENT as usize + (s * per_state) % content;
+            let mut ids: Vec<i32> = (0..per_state)
+                .map(|k| (FIRST_CONTENT as usize + (lo - FIRST_CONTENT as usize + k) % content) as i32)
+                .collect();
+            rng.shuffle(&mut ids);
+            state_vocab.push(ids);
+        }
+        let mut transitions = Vec::new();
+        for s in 0..spec.num_states {
+            let mut w = vec![0f32; spec.num_states];
+            for (t, wt) in w.iter_mut().enumerate() {
+                *wt = if t == s {
+                    spec.self_loop as f32
+                } else {
+                    (1.0 - spec.self_loop as f32) * (0.2 + rng.f32())
+                };
+            }
+            transitions.push(w);
+        }
+        let zipf = ZipfTable::new(per_state, spec.zipf_s);
+        HmmCorpus { spec, state_vocab, transitions, zipf }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.spec.vocab_size
+    }
+
+    /// Sample a raw token sequence of length `len`.
+    pub fn sample(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut state = rng.below(self.spec.num_states);
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            let vocab = &self.state_vocab[state];
+            let rank = self.zipf.sample(rng);
+            out.push(vocab[rank]);
+            state = rng.categorical(&self.transitions[state]);
+        }
+        out
+    }
+}
+
+/// One span-corruption example with fixed encoder/decoder lengths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanExample {
+    pub enc_tokens: Vec<i32>,
+    pub dec_tokens: Vec<i32>, // decoder input (shifted right, starts with PAD)
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+}
+
+/// Sentinel id for span `k` (highest ids first, T5 convention).
+pub fn sentinel(vocab_size: usize, k: usize) -> i32 {
+    (vocab_size - 1 - k) as i32
+}
+
+/// T5 span corruption: mask ~15% of tokens in spans of mean length 3;
+/// encoder sees text with each span replaced by one sentinel; targets are
+/// `sentinel span sentinel span ... EOS`.
+pub fn span_corrupt(
+    raw: &[i32],
+    vocab_size: usize,
+    enc_len: usize,
+    dec_len: usize,
+    rng: &mut Rng,
+) -> SpanExample {
+    let n = raw.len();
+    let noise_tokens = ((n as f64 * NOISE_DENSITY).round() as usize).clamp(1, n / 2);
+    let num_spans = ((noise_tokens as f64 / MEAN_SPAN_LEN).round() as usize).max(1);
+
+    // Choose span start positions; greedy non-overlapping placement.
+    let base_len = (noise_tokens / num_spans).max(1);
+    let mut starts: Vec<usize> = Vec::new();
+    let mut occupied = vec![false; n];
+    let mut attempts = 0;
+    while starts.len() < num_spans && attempts < 20 * num_spans {
+        attempts += 1;
+        let s = rng.below(n.saturating_sub(base_len).max(1));
+        if occupied[s..(s + base_len).min(n)].iter().any(|&o| o) {
+            continue;
+        }
+        for o in occupied.iter_mut().skip(s).take(base_len) {
+            *o = true;
+        }
+        starts.push(s);
+    }
+    starts.sort_unstable();
+
+    let mut enc = Vec::with_capacity(enc_len);
+    let mut tgt = Vec::with_capacity(dec_len);
+    let mut i = 0;
+    let mut span_id = 0;
+    while i < n {
+        if span_id < starts.len() && i == starts[span_id] {
+            let sid = sentinel(vocab_size, span_id);
+            enc.push(sid);
+            tgt.push(sid);
+            for j in 0..base_len.min(n - i) {
+                tgt.push(raw[i + j]);
+            }
+            i += base_len;
+            span_id += 1;
+        } else {
+            enc.push(raw[i]);
+            i += 1;
+        }
+    }
+    tgt.push(EOS);
+
+    enc.truncate(enc_len);
+    while enc.len() < enc_len {
+        enc.push(PAD);
+    }
+    tgt.truncate(dec_len);
+    // Decoder input: shift right, PAD as BOS (T5 convention).
+    let mut dec = Vec::with_capacity(dec_len);
+    dec.push(PAD);
+    dec.extend_from_slice(&tgt[..tgt.len().saturating_sub(0).min(dec_len - 1)]);
+    dec.truncate(dec_len);
+    while dec.len() < dec_len {
+        dec.push(PAD);
+    }
+    let mut mask: Vec<f32> = tgt.iter().map(|_| 1.0).collect();
+    mask.resize(dec_len, 0.0);
+    let mut tgt_padded = tgt;
+    tgt_padded.resize(dec_len, PAD);
+
+    SpanExample { enc_tokens: enc, dec_tokens: dec, targets: tgt_padded, loss_mask: mask }
+}
+
+/// Batched pretraining stream with disjoint deterministic shards.
+pub struct TextPipeline {
+    corpus: HmmCorpus,
+    enc_len: usize,
+    dec_len: usize,
+    batch_size: usize,
+    rng: Rng,
+}
+
+impl TextPipeline {
+    pub fn new(
+        corpus: HmmCorpus,
+        batch_size: usize,
+        enc_len: usize,
+        dec_len: usize,
+        seed: u64,
+        shard: u64,
+    ) -> TextPipeline {
+        TextPipeline {
+            corpus,
+            enc_len,
+            dec_len,
+            batch_size,
+            rng: Rng::with_stream(seed, 2 * shard + 1),
+        }
+    }
+
+    /// Raw sequence length so that masking leaves ≈enc_len encoder tokens.
+    fn raw_len(&self) -> usize {
+        (self.enc_len as f64 / (1.0 - NOISE_DENSITY * (1.0 - 1.0 / MEAN_SPAN_LEN))) as usize
+    }
+
+    pub fn next_examples(&mut self) -> Vec<SpanExample> {
+        let raw_len = self.raw_len();
+        let vocab = self.corpus.vocab_size();
+        (0..self.batch_size)
+            .map(|_| {
+                let raw = self.corpus.sample(raw_len, &mut self.rng);
+                span_corrupt(&raw, vocab, self.enc_len, self.dec_len, &mut self.rng)
+            })
+            .collect()
+    }
+
+    /// Batch tensors in manifest order: enc_tokens, dec_tokens, targets, loss_mask.
+    pub fn next_batch(&mut self) -> Vec<Tensor> {
+        let ex = self.next_examples();
+        batch_tensors(&ex, self.batch_size, self.enc_len, self.dec_len)
+    }
+}
+
+pub fn batch_tensors(
+    ex: &[SpanExample],
+    batch: usize,
+    enc_len: usize,
+    dec_len: usize,
+) -> Vec<Tensor> {
+    let mut enc = Vec::with_capacity(batch * enc_len);
+    let mut dec = Vec::with_capacity(batch * dec_len);
+    let mut tgt = Vec::with_capacity(batch * dec_len);
+    let mut mask = Vec::with_capacity(batch * dec_len);
+    for e in ex {
+        enc.extend_from_slice(&e.enc_tokens);
+        dec.extend_from_slice(&e.dec_tokens);
+        tgt.extend_from_slice(&e.targets);
+        mask.extend_from_slice(&e.loss_mask);
+    }
+    vec![
+        Tensor::from_i32(&[batch, enc_len], enc),
+        Tensor::from_i32(&[batch, dec_len], dec),
+        Tensor::from_i32(&[batch, dec_len], tgt),
+        Tensor::from_f32(&[batch, dec_len], mask),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Downstream task: topic classification (SuperGLUE analogue, Fig. 3 / Tab. 5)
+// ---------------------------------------------------------------------------
+
+pub struct ClassificationPipeline {
+    corpora: Vec<HmmCorpus>,
+    enc_len: usize,
+    dec_len: usize,
+    batch_size: usize,
+    rng: Rng,
+}
+
+impl ClassificationPipeline {
+    /// `num_classes` distinct HMMs (disjoint seeds from pretraining).
+    pub fn new(
+        num_classes: usize,
+        vocab_size: usize,
+        batch_size: usize,
+        enc_len: usize,
+        dec_len: usize,
+        seed: u64,
+    ) -> ClassificationPipeline {
+        let corpora = (0..num_classes)
+            .map(|c| {
+                HmmCorpus::new(
+                    HmmSpec { vocab_size, num_states: 6, ..Default::default() },
+                    0xdead_0000 + c as u64,
+                )
+            })
+            .collect();
+        ClassificationPipeline {
+            corpora,
+            enc_len,
+            dec_len,
+            batch_size,
+            rng: Rng::with_stream(seed, 0x51),
+        }
+    }
+
+    pub fn label_token(label: usize) -> i32 {
+        FIRST_CONTENT + label as i32
+    }
+
+    pub fn next_batch(&mut self) -> (Vec<Tensor>, Vec<usize>) {
+        let b = self.batch_size;
+        let mut enc = Vec::with_capacity(b * self.enc_len);
+        let mut dec = Vec::with_capacity(b * self.dec_len);
+        let mut tgt = Vec::with_capacity(b * self.dec_len);
+        let mut mask = Vec::with_capacity(b * self.dec_len);
+        let mut labels = Vec::with_capacity(b);
+        for _ in 0..b {
+            let label = self.rng.below(self.corpora.len());
+            labels.push(label);
+            let mut seq = self.corpora[label].sample(self.enc_len, &mut self.rng);
+            seq.truncate(self.enc_len);
+            enc.extend_from_slice(&seq);
+            // Decoder: PAD → [label_token, EOS, PAD...]; loss on both tokens.
+            let mut d = vec![PAD; self.dec_len];
+            d[1] = Self::label_token(label);
+            let mut t = vec![PAD; self.dec_len];
+            t[0] = Self::label_token(label);
+            t[1] = EOS;
+            let mut m = vec![0.0; self.dec_len];
+            m[0] = 1.0;
+            m[1] = 1.0;
+            dec.extend_from_slice(&d);
+            tgt.extend_from_slice(&t);
+            mask.extend_from_slice(&m);
+        }
+        (
+            vec![
+                Tensor::from_i32(&[b, self.enc_len], enc),
+                Tensor::from_i32(&[b, self.dec_len], dec),
+                Tensor::from_i32(&[b, self.dec_len], tgt),
+                Tensor::from_f32(&[b, self.dec_len], mask),
+            ],
+            labels,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_tokens_in_content_range() {
+        let c = HmmCorpus::new(HmmSpec::default(), 1);
+        let mut rng = Rng::new(2);
+        let seq = c.sample(500, &mut rng);
+        let hi = sentinel(c.vocab_size(), NUM_SENTINELS - 1);
+        assert!(seq.iter().all(|&t| t >= FIRST_CONTENT && t < hi));
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let c = HmmCorpus::new(HmmSpec::default(), 7);
+        let a = c.sample(64, &mut Rng::new(3));
+        let b = c.sample(64, &mut Rng::new(3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn span_corruption_invariants() {
+        let c = HmmCorpus::new(HmmSpec::default(), 1);
+        let mut rng = Rng::new(4);
+        for trial in 0..50 {
+            let raw = c.sample(40, &mut rng);
+            let ex = span_corrupt(&raw, 256, 32, 16, &mut rng);
+            assert_eq!(ex.enc_tokens.len(), 32, "trial {trial}");
+            assert_eq!(ex.dec_tokens.len(), 16);
+            assert_eq!(ex.targets.len(), 16);
+            assert_eq!(ex.loss_mask.len(), 16);
+            // Decoder input is targets shifted right with PAD BOS.
+            assert_eq!(ex.dec_tokens[0], PAD);
+            for i in 1..16 {
+                assert_eq!(ex.dec_tokens[i], ex.targets[i - 1]);
+            }
+            // Targets start with the first sentinel.
+            assert_eq!(ex.targets[0], sentinel(256, 0));
+            // Mask covers exactly the non-pad prefix.
+            let n_mask = ex.loss_mask.iter().filter(|&&m| m > 0.0).count();
+            assert!(n_mask >= 2);
+            for (i, &m) in ex.loss_mask.iter().enumerate() {
+                if m == 0.0 {
+                    assert_eq!(ex.targets[i], PAD);
+                }
+            }
+            // Sentinels in encoder appear in increasing span order.
+            let sents: Vec<i32> = ex
+                .enc_tokens
+                .iter()
+                .copied()
+                .filter(|&t| t >= sentinel(256, NUM_SENTINELS - 1))
+                .collect();
+            for (k, &s) in sents.iter().enumerate() {
+                assert_eq!(s, sentinel(256, k));
+            }
+        }
+    }
+
+    #[test]
+    fn shards_are_disjoint() {
+        let mk = |shard| {
+            let c = HmmCorpus::new(HmmSpec::default(), 1);
+            let mut p = TextPipeline::new(c, 4, 32, 16, 9, shard);
+            p.next_batch()[0].i32s().unwrap().to_vec()
+        };
+        assert_ne!(mk(0), mk(1), "different shards must see different data");
+        assert_eq!(mk(2), mk(2), "same shard must be deterministic");
+    }
+
+    #[test]
+    fn classification_batches_are_wellformed() {
+        let mut p = ClassificationPipeline::new(8, 256, 4, 32, 16, 1);
+        let (tensors, labels) = p.next_batch();
+        assert_eq!(tensors.len(), 4);
+        assert_eq!(labels.len(), 4);
+        let tgt = tensors[2].i32s().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(tgt[i * 16], ClassificationPipeline::label_token(l));
+            assert_eq!(tgt[i * 16 + 1], EOS);
+        }
+    }
+}

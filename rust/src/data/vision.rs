@@ -1,0 +1,225 @@
+//! Procedural vision substrate: JFT/ImageNet stand-in (DESIGN.md §2).
+//!
+//! Renders small RGB images containing one dominant geometric shape
+//! (circle / square / triangle / cross) in one of four hues over a noisy
+//! background, plus distractor clutter. The label is `shape * 4 + hue`
+//! (16 classes). Classification is capacity-bound at tiny model sizes —
+//! the regime where the paper's dense-vs-upcycled comparisons live — and
+//! the same generator drives pretraining, full finetuning (fewer classes,
+//! different seed family) and the 10-shot linear probe (§A.2.2).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const NUM_SHAPES: usize = 4;
+pub const NUM_HUES: usize = 4;
+pub const NUM_CLASSES: usize = NUM_SHAPES * NUM_HUES;
+
+const HUES: [[f32; 3]; NUM_HUES] = [
+    [0.9, 0.2, 0.15], // red
+    [0.2, 0.75, 0.25], // green
+    [0.2, 0.35, 0.9], // blue
+    [0.9, 0.8, 0.2],  // yellow
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Circle,
+    Square,
+    Triangle,
+    Cross,
+}
+
+impl Shape {
+    fn from_id(id: usize) -> Shape {
+        match id % NUM_SHAPES {
+            0 => Shape::Circle,
+            1 => Shape::Square,
+            2 => Shape::Triangle,
+            _ => Shape::Cross,
+        }
+    }
+
+    /// Signed membership test for pixel (x, y) against a shape centred at
+    /// (cx, cy) with radius r.
+    fn contains(&self, x: f32, y: f32, cx: f32, cy: f32, r: f32) -> bool {
+        let (dx, dy) = (x - cx, y - cy);
+        match self {
+            Shape::Circle => dx * dx + dy * dy <= r * r,
+            Shape::Square => dx.abs() <= r && dy.abs() <= r,
+            Shape::Triangle => {
+                // Upward triangle: inside if below the two slanted edges.
+                dy >= -r && dy <= r && dx.abs() <= (r - dy) * 0.5 + 0.2
+            }
+            Shape::Cross => {
+                (dx.abs() <= r * 0.35 && dy.abs() <= r)
+                    || (dy.abs() <= r * 0.35 && dx.abs() <= r)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct VisionSpec {
+    pub image_size: usize,
+    pub noise: f32,
+    pub distractors: usize,
+}
+
+impl Default for VisionSpec {
+    fn default() -> Self {
+        VisionSpec { image_size: 32, noise: 0.08, distractors: 2 }
+    }
+}
+
+pub struct VisionPipeline {
+    pub spec: VisionSpec,
+    batch_size: usize,
+    rng: Rng,
+}
+
+impl VisionPipeline {
+    pub fn new(spec: VisionSpec, batch_size: usize, seed: u64, shard: u64) -> VisionPipeline {
+        VisionPipeline { spec, batch_size, rng: Rng::with_stream(seed, 2 * shard + 101) }
+    }
+
+    /// Render one image for `label`; writes into `out` ([H, W, 3] row-major).
+    pub fn render(&self, label: usize, rng: &mut Rng, out: &mut [f32]) {
+        let sz = self.spec.image_size;
+        debug_assert_eq!(out.len(), sz * sz * 3);
+        let shape = Shape::from_id(label / NUM_HUES);
+        let hue = HUES[label % NUM_HUES];
+
+        // Background: soft gray with per-pixel noise.
+        for px in out.iter_mut() {
+            *px = 0.45 + rng.normal() * self.spec.noise;
+        }
+        // Distractor clutter: small shapes in random dim colors (never the
+        // target hue at full saturation, so the task stays well-posed).
+        for _ in 0..self.spec.distractors {
+            let ds = Shape::from_id(rng.below(NUM_SHAPES));
+            let cx = rng.f32() * sz as f32;
+            let cy = rng.f32() * sz as f32;
+            let r = 1.5 + rng.f32() * 2.5;
+            let col = [rng.f32() * 0.4 + 0.3; 3];
+            draw(out, sz, ds, cx, cy, r, &col);
+        }
+        // Dominant shape: large, centered-ish, fully saturated hue.
+        let margin = sz as f32 * 0.3;
+        let cx = margin + rng.f32() * (sz as f32 - 2.0 * margin);
+        let cy = margin + rng.f32() * (sz as f32 - 2.0 * margin);
+        let r = sz as f32 * (0.18 + rng.f32() * 0.10);
+        draw(out, sz, shape, cx, cy, r, &hue);
+    }
+
+    /// (images [B,H,W,3], labels [B]) in manifest batch order.
+    pub fn next_batch(&mut self) -> (Vec<Tensor>, Vec<usize>) {
+        let sz = self.spec.image_size;
+        let b = self.batch_size;
+        let mut images = vec![0f32; b * sz * sz * 3];
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let label = self.rng.below(NUM_CLASSES);
+            labels.push(label);
+            let mut sub = self.rng.fork(i as u64);
+            self.render(label, &mut sub, &mut images[i * sz * sz * 3..(i + 1) * sz * sz * 3]);
+        }
+        let lab_i32: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        (
+            vec![
+                Tensor::from_f32(&[b, sz, sz, 3], images),
+                Tensor::from_i32(&[b], lab_i32),
+            ],
+            labels,
+        )
+    }
+
+    /// N examples per class in class order (few-shot probe support set).
+    pub fn class_balanced(&mut self, per_class: usize) -> (Vec<Tensor>, Vec<usize>) {
+        let sz = self.spec.image_size;
+        let total = per_class * NUM_CLASSES;
+        let mut images = vec![0f32; total * sz * sz * 3];
+        let mut labels = Vec::with_capacity(total);
+        for c in 0..NUM_CLASSES {
+            for j in 0..per_class {
+                let i = c * per_class + j;
+                labels.push(c);
+                let mut sub = self.rng.fork((c * 10_007 + j) as u64);
+                self.render(c, &mut sub, &mut images[i * sz * sz * 3..(i + 1) * sz * sz * 3]);
+            }
+        }
+        let lab_i32: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        (
+            vec![
+                Tensor::from_f32(&[total, sz, sz, 3], images),
+                Tensor::from_i32(&[total], lab_i32),
+            ],
+            labels,
+        )
+    }
+}
+
+fn draw(out: &mut [f32], sz: usize, shape: Shape, cx: f32, cy: f32, r: f32, color: &[f32; 3]) {
+    for y in 0..sz {
+        for x in 0..sz {
+            if shape.contains(x as f32 + 0.5, y as f32 + 0.5, cx, cy, r) {
+                let base = (y * sz + x) * 3;
+                out[base..base + 3].copy_from_slice(color);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_wellformed() {
+        let mut p = VisionPipeline::new(VisionSpec::default(), 8, 3, 0);
+        let (tensors, labels) = p.next_batch();
+        assert_eq!(tensors[0].shape, vec![8, 32, 32, 3]);
+        assert_eq!(tensors[1].shape, vec![8]);
+        assert!(labels.iter().all(|&l| l < NUM_CLASSES));
+        let px = tensors[0].f32s().unwrap();
+        assert!(px.iter().all(|v| v.is_finite()));
+        // Images are not constant.
+        let (mn, mx) = px.iter().fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        assert!(mx - mn > 0.3, "image has no contrast: {mn}..{mx}");
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_shard() {
+        let run = |seed, shard| {
+            let mut p = VisionPipeline::new(VisionSpec::default(), 4, seed, shard);
+            p.next_batch().0[0].f32s().unwrap().to_vec()
+        };
+        assert_eq!(run(1, 0), run(1, 0));
+        assert_ne!(run(1, 0), run(2, 0));
+        assert_ne!(run(1, 0), run(1, 1));
+    }
+
+    #[test]
+    fn class_balanced_is_balanced() {
+        let mut p = VisionPipeline::new(VisionSpec::default(), 4, 5, 0);
+        let (tensors, labels) = p.class_balanced(3);
+        assert_eq!(labels.len(), 3 * NUM_CLASSES);
+        assert_eq!(tensors[0].shape[0], 3 * NUM_CLASSES);
+        for c in 0..NUM_CLASSES {
+            assert_eq!(labels.iter().filter(|&&l| l == c).count(), 3);
+        }
+    }
+
+    #[test]
+    fn hue_dominates_target_pixels() {
+        // A red circle image must contain strongly red pixels.
+        let p = VisionPipeline::new(VisionSpec { noise: 0.0, distractors: 0, ..Default::default() }, 1, 0, 0);
+        let mut img = vec![0f32; 32 * 32 * 3];
+        p.render(0, &mut Rng::new(1), &mut img); // shape 0 (circle), hue 0 (red)
+        let red_px = img
+            .chunks_exact(3)
+            .filter(|c| c[0] > 0.8 && c[1] < 0.3 && c[2] < 0.3)
+            .count();
+        assert!(red_px > 20, "expected a red blob, found {red_px} px");
+    }
+}

@@ -1,0 +1,194 @@
+//! Ablation experiments (paper §4.2.2 + Appendix B.1–B.7).
+
+use anyhow::Result;
+
+use crate::metrics::{map, Report, Series};
+use crate::upcycle::UpcycleOptions;
+
+use super::Ctx;
+
+/// Shared ablation skeleton: upcycle the LM parent into several sparse
+/// variants and train each for the same extra budget.
+fn sweep_upcycled(
+    ctx: &Ctx,
+    rep: &mut Report,
+    dense_name: &str,
+    variants: &[(&str, &str)],
+    load_optimizer: bool,
+) -> Result<()> {
+    let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
+    for (label, sparse_name) in variants {
+        let (model, mut state) = ctx.branch_upcycle(
+            &parent, sparse_name, &UpcycleOptions::default(), load_optimizer)?;
+        rep.add(ctx.run_branch(&model, &mut state, 11, ctx.p.extra_steps, label)?);
+    }
+    Ok(())
+}
+
+/// Table 2 / Fig. 8: router type. Expert Choice vs Top-1 vs Top-2 (± BPR)
+/// on the LM, plus EC vs Top-2 on vision (all beating dense continuation).
+pub fn tab2(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("tab2", "Router type ablation (upcycled)");
+    sweep_upcycled(
+        ctx,
+        &mut rep,
+        "lm_tiny_dense",
+        &[
+            ("lm/expert_choice", "lm_tiny_moe_e8_c2"),
+            ("lm/top2", "lm_tiny_moe_e8_c2_top2"),
+            ("lm/top2_bpr", "lm_tiny_moe_e8_c2_top2bpr"),
+            ("lm/top1", "lm_tiny_moe_e8_c2_top1"),
+        ],
+        false,
+    )?;
+    // Dense continuation reference row.
+    let parent = ctx.dense_parent("lm_tiny_dense", ctx.p.pretrain_steps)?;
+    let (model, mut state) = ctx.branch_dense(&parent, "lm_tiny_dense")?;
+    rep.add(ctx.run_branch(&model, &mut state, 12, ctx.p.extra_steps, "lm/dense")?);
+    sweep_upcycled(
+        ctx,
+        &mut rep,
+        "vit_tiny_dense",
+        &[
+            ("vit/expert_choice", "vit_tiny_moe_e8_c2"),
+            ("vit/top2", "vit_tiny_moe_e8_c2_top2"),
+        ],
+        true,
+    )?;
+    rep.note("paper: EC ≥ Top-K per train-time; all routed variants beat dense");
+    Ok(rep)
+}
+
+/// Fig. 9: expert capacity factor C ∈ {1, 2, 3}.
+pub fn fig9(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig9", "Capacity factor ablation");
+    sweep_upcycled(
+        ctx,
+        &mut rep,
+        "lm_tiny_dense",
+        &[
+            ("C=1", "lm_tiny_moe_e8_c1"),
+            ("C=2", "lm_tiny_moe_e8_c2"),
+            ("C=3", "lm_tiny_moe_e8_c3"),
+        ],
+        false,
+    )?;
+    rep.note("x-axis (extra cost) stretches with C: higher C costs more per \
+              step; paper: C=2 wins on a per-cost basis");
+    Ok(rep)
+}
+
+/// Fig. 10: number of experts — training curves.
+pub fn fig10(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig10", "Number of experts: training curves");
+    sweep_upcycled(
+        ctx,
+        &mut rep,
+        "lm_tiny_dense",
+        &[
+            ("E=2", "lm_tiny_moe_e2_c2"),
+            ("E=4", "lm_tiny_moe_e4_c2"),
+            ("E=8", "lm_tiny_moe_e8_c2"),
+            ("E=16", "lm_tiny_moe_e16_c2"),
+        ],
+        false,
+    )?;
+    rep.note("experts are ~FLOPs-neutral (costmodel tests assert this); more \
+              experts → more capacity");
+    Ok(rep)
+}
+
+/// Fig. 11: number of experts — final up/downstream quality.
+pub fn fig11(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig11", "Number of experts: final quality");
+    let parent = ctx.dense_parent("lm_tiny_dense", ctx.p.pretrain_steps)?;
+    let mut upstream = Series::new("upstream_accuracy");
+    let mut downstream = Series::new("downstream_accuracy");
+    for (e, name) in [(2, "lm_tiny_moe_e2_c2"), (4, "lm_tiny_moe_e4_c2"),
+                      (8, "lm_tiny_moe_e8_c2"), (16, "lm_tiny_moe_e16_c2")] {
+        let (model, mut state) = ctx.branch_upcycle(
+            &parent, name, &UpcycleOptions::default(), false)?;
+        let s = ctx.run_branch(&model, &mut state, 13, ctx.p.extra_steps, "run")?;
+        let acc = s.last().and_then(|p| p.values.get("accuracy").copied()).unwrap_or(f64::NAN);
+        upstream.push(e, 0.0, map(&[("value", acc)]));
+        let ft = ctx.finetune_accuracy(&model, &mut state, 1e-3)?;
+        downstream.push(e, 0.0, map(&[("value", ft)]));
+    }
+    rep.add(upstream);
+    rep.add(downstream);
+    rep.note("step axis = number of experts; paper: steady upstream gains, \
+              diminishing downstream returns");
+    Ok(rep)
+}
+
+/// Fig. 12: number of MoE layers (last-k + interleaved).
+pub fn fig12(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig12", "Number of MoE layers");
+    sweep_upcycled(
+        ctx,
+        &mut rep,
+        "lm_tiny_dense",
+        &[
+            ("last-1", "lm_tiny_moe_last1"),
+            ("last-2", "lm_tiny_moe_last2"),
+            ("last-3", "lm_tiny_moe_last3"),
+            ("every-other (2/4)", "lm_tiny_moe_e8_c2"),
+        ],
+        false,
+    )?;
+    rep.note("paper: ~half the layers sparsified is the sweet spot; more \
+              layers cost more per step");
+    Ok(rep)
+}
+
+/// Fig. 13: expert initialization — copied vs random.
+pub fn fig13(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig13", "Expert init: copied (upcycled) vs random");
+    let parent = ctx.dense_parent("lm_tiny_dense", ctx.p.pretrain_steps)?;
+    for (label, load) in [("load_experts=true", true), ("load_experts=false", false)] {
+        let opts = UpcycleOptions { load_experts: load, ..Default::default() };
+        let (model, mut state) =
+            ctx.branch_upcycle(&parent, "lm_tiny_moe_e8_c2", &opts, false)?;
+        rep.add(ctx.run_branch(&model, &mut state, 14, ctx.p.extra_steps, label)?);
+    }
+    // Appendix B.9: small vs large expert noise.
+    for (label, noise) in [("noise=0.01", 0.01f32), ("noise=0.2", 0.2)] {
+        let opts = UpcycleOptions { expert_noise: noise, ..Default::default() };
+        let (model, mut state) =
+            ctx.branch_upcycle(&parent, "lm_tiny_moe_e8_c2", &opts, false)?;
+        rep.add(ctx.run_branch(&model, &mut state, 15, ctx.p.extra_steps, label)?);
+    }
+    rep.note("paper: random experts need far more compute to catch up; small \
+              noise ≈ no effect, large noise hurts (B.9)");
+    Ok(rep)
+}
+
+/// Fig. 14: resuming the optimizer state (vision).
+pub fn fig14(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig14", "Optimizer state resumption (vision)");
+    let parent = ctx.dense_parent("vit_tiny_dense", ctx.p.pretrain_steps)?;
+    for (label, load) in [("load_optimizer=true", true), ("load_optimizer=false", false)] {
+        let (model, mut state) = ctx.branch_upcycle(
+            &parent, "vit_tiny_moe_e8_c2", &UpcycleOptions::default(), load)?;
+        rep.add(ctx.run_branch(&model, &mut state, 16, ctx.p.extra_steps, label)?);
+    }
+    rep.note("paper B.6: resuming Adafactor accumulators helps vision upcycling");
+    Ok(rep)
+}
+
+/// Table 3: combine-weight renormalization, training V-MoE from scratch.
+pub fn tab3(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("tab3", "Renormalization after routing (from scratch)");
+    for (label, name) in [
+        ("C=1/renorm", "vit_tiny_moe_e8_c1"),
+        ("C=1/no_renorm", "vit_tiny_moe_e8_c1_norenorm"),
+        ("C=2/renorm", "vit_tiny_moe_e8_c2"),
+        ("C=2/no_renorm", "vit_tiny_moe_e8_c2_norenorm"),
+    ] {
+        let (model, mut state) = ctx.branch_scratch(name, ctx.p.seed + 5)?;
+        rep.add(ctx.run_branch(&model, &mut state, 17, ctx.p.pretrain_steps, label)?);
+    }
+    rep.note("paper Table 3: renorm does not hurt from-scratch vision training \
+              (and helps upcycling)");
+    Ok(rep)
+}

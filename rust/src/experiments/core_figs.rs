@@ -1,0 +1,223 @@
+//! Core result figures (paper §4.2.1): Figs. 2–7.
+
+use anyhow::Result;
+
+use crate::metrics::{map, Report, Series};
+use crate::upcycle::UpcycleOptions;
+
+use super::Ctx;
+
+/// Family pairs (dense parent, default sparse target) used by the core figs.
+fn families() -> Vec<(&'static str, &'static str, &'static str)> {
+    vec![
+        ("lm", "lm_tiny_dense", "lm_tiny_moe_e8_c2"),
+        ("vit", "vit_tiny_dense", "vit_tiny_moe_e8_c2"),
+    ]
+}
+
+/// Fig. 2: pretraining quality vs extra cost, dense continuation vs
+/// upcycling, for both families.
+pub fn fig2(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig2", "Pretrain quality vs extra pretraining cost");
+    for (fam, dense_name, sparse_name) in families() {
+        let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
+        // Dense continuation.
+        let (model, mut state) = ctx.branch_dense(&parent, dense_name)?;
+        let mut s = ctx.run_branch(&model, &mut state, 1, ctx.p.extra_steps,
+                                   &format!("{fam}/dense_continuation"))?;
+        rep.add(std::mem::take(&mut s));
+        // Upcycled (optimizer state resumed for vision only — §3.1).
+        let (model, mut state) = ctx.branch_upcycle(
+            &parent, sparse_name, &UpcycleOptions::default(), fam == "vit")?;
+        let s = ctx.run_branch(&model, &mut state, 2, ctx.p.extra_steps,
+                               &format!("{fam}/upcycled"))?;
+        rep.add(s);
+    }
+    rep.note(format!(
+        "dense parent pretrained {} steps; branches +{} steps; paper shape: \
+         upcycled ≥ dense continuation once extra budget is non-trivial",
+        ctx.p.pretrain_steps, ctx.p.extra_steps
+    ));
+    Ok(rep)
+}
+
+/// Fig. 2 at the paper's operating point: the paper upcycles *plateaued*
+/// dense checkpoints (T5 Base: 1M steps to "plateauing performance", §A.1.1)
+/// and applies +20..100% extra budget. `fig2` above uses the fast suite
+/// defaults where both branches are still on the steep early slope and the
+/// paper itself predicts near-parity; this variant trains the dense parent
+/// ~5× longer (to saturation under the decayed LR) before branching, which
+/// is where the capacity advantage of the upcycled MoE shows up.
+pub fn fig2long(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new(
+        "fig2long", "Fig. 2 with a saturated dense parent (paper operating point)");
+    let pretrain = ctx.p.pretrain_steps * 5;
+    let extra = ctx.p.extra_steps * 3;
+    let (dense_name, sparse_name) = ("lm_tiny_dense", "lm_tiny_moe_e8_c2");
+    let parent = ctx.dense_parent(dense_name, pretrain)?;
+    let (model, mut state) = ctx.branch_dense(&parent, dense_name)?;
+    rep.add(ctx.run_branch(&model, &mut state, 41, extra, "lm/dense_continuation")?);
+    let (model, mut state) = ctx.branch_upcycle(
+        &parent, sparse_name, &UpcycleOptions::default(), false)?;
+    rep.add(ctx.run_branch(&model, &mut state, 42, extra, "lm/upcycled")?);
+    rep.note(format!(
+        "parent pretrained {pretrain} steps (≈ plateau), branches +{extra} steps; \
+         paper shape: upcycled pulls ahead once the dense branch saturates"
+    ));
+    Ok(rep)
+}
+
+/// Fig. 3: downstream (finetuned) quality of snapshots along each branch.
+pub fn fig3(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig3", "Finetuned quality vs extra pretraining cost");
+    let segments = 3u64;
+    for (fam, dense_name, sparse_name) in families() {
+        let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
+        for (branch, sparse) in [("dense_continuation", false), ("upcycled", true)] {
+            let (model, mut state) = if sparse {
+                ctx.branch_upcycle(&parent, sparse_name, &UpcycleOptions::default(),
+                                   fam == "vit")?
+            } else {
+                ctx.branch_dense(&parent, dense_name)?
+            };
+            let mut series = Series::new(&format!("{fam}/{branch}"));
+            let seg_steps = ctx.p.extra_steps / segments;
+            let mut extra = 0.0;
+            for seg in 0..segments {
+                let s = ctx.run_branch(&model, &mut state, 1 + seg, seg_steps,
+                                       "segment")?;
+                extra += s.last().map(|p| p.extra_flops).unwrap_or(0.0);
+                // Finetune a *copy* of the snapshot (finetuning must not
+                // perturb the pretraining trajectory).
+                let (p_ck, o_ck) = state.to_checkpoints(&model.entry, "snapshot")?;
+                let mut ft_state = crate::coordinator::TrainState::from_checkpoints(
+                    &model.entry, &p_ck, &o_ck)?;
+                let lr = if fam == "lm" { 1e-3 } else { 3e-4 };
+                let acc = ctx.finetune_accuracy(&model, &mut ft_state, lr)?;
+                series.push(state.step, extra, map(&[("finetune_accuracy", acc)]));
+            }
+            rep.add(series);
+        }
+    }
+    rep.note("each point: snapshot finetuned on the downstream task \
+              (topic classification / held-out shapes family)");
+    Ok(rep)
+}
+
+/// Fig. 4: upcycling vs training the same MoE from scratch.
+pub fn fig4(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig4", "Upcycling vs MoE trained from scratch");
+    // From-scratch arms get a larger budget (the paper trains them past
+    // 100% of the dense parent's cost to find the crossover).
+    let scratch_steps = ctx.p.pretrain_steps + ctx.p.extra_steps;
+    for (fam, dense_name, sparse_name) in families() {
+        let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
+        let (model, mut state) = ctx.branch_upcycle(
+            &parent, sparse_name, &UpcycleOptions::default(), fam == "vit")?;
+        rep.add(ctx.run_branch(&model, &mut state, 2, ctx.p.extra_steps,
+                               &format!("{fam}/upcycled"))?);
+        let (model, mut state) = ctx.branch_scratch(sparse_name, ctx.p.seed + 99)?;
+        rep.add(ctx.run_branch(&model, &mut state, 3, scratch_steps,
+                               &format!("{fam}/moe_from_scratch"))?);
+    }
+    rep.note("x-axis is extra cost over the dense checkpoint; the scratch arm \
+              reuses no sunk cost, so it needs ≳100% of the parent budget to catch up");
+    Ok(rep)
+}
+
+/// Fig. 5: sparse upcycling vs dense upcycling (depth tiling).
+pub fn fig5(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig5", "Sparse vs dense (depth-tiled) upcycling");
+    let dense_name = "lm_tiny_dense";
+    let tiled_name = "lm_tiny_dense_tiled";
+    let sparse_name = "lm_tiny_moe_e8_c2";
+    let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
+
+    let (model, mut state) = ctx.branch_dense(&parent, dense_name)?;
+    rep.add(ctx.run_branch(&model, &mut state, 1, ctx.p.extra_steps, "dense_continuation")?);
+
+    let (model, mut state) = ctx.branch_upcycle(
+        &parent, sparse_name, &UpcycleOptions::default(), false)?;
+    rep.add(ctx.run_branch(&model, &mut state, 2, ctx.p.extra_steps, "sparse_upcycled")?);
+
+    // Dense upcycling: depth-tile the parent into the 1.5× deeper model.
+    let dense_entry = ctx.entry(dense_name)?.clone();
+    let tiled_entry = ctx.entry(tiled_name)?.clone();
+    let tiled_params = crate::upcycle::depth_tile_params(&parent.0, &dense_entry, &tiled_entry)?;
+    let tiled_opt = crate::init::init_opt_state(&tiled_entry)?;
+    let model = ctx.load(tiled_name, &["train", "eval"])?;
+    let mut state = crate::coordinator::TrainState::from_checkpoints(
+        &tiled_entry, &tiled_params, &tiled_opt)?;
+    state.step = parent.0.step;
+    rep.add(ctx.run_branch(&model, &mut state, 3, ctx.p.extra_steps, "dense_upcycled_tiled")?);
+
+    rep.note("depth tiling per Rae et al. 2021; paper finds it gains over the \
+              parent but underperforms sparse upcycling");
+    Ok(rep)
+}
+
+/// Fig. 6: upcycling gain vs how long the dense parent was pretrained.
+pub fn fig6(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig6", "Upcycling vs amount of dense pretraining");
+    // Vision, C=1 (paper: comparable per-step cost for dense and sparse).
+    let dense_name = "vit_tiny_dense";
+    let sparse_name = "vit_tiny_moe_e8_c1";
+    let fractions = [0.25, 0.5, 0.75, 1.0];
+    let extra = ctx.p.extra_steps / 2;
+    let mut dense_series = Series::new("dense_continuation");
+    let mut up_series = Series::new("upcycled");
+    for frac in fractions {
+        let steps = ((ctx.p.pretrain_steps as f64) * frac) as u64;
+        let parent = ctx.dense_parent(dense_name, steps)?;
+        let (model, mut state) = ctx.branch_dense(&parent, dense_name)?;
+        let s = ctx.run_branch(&model, &mut state, 1, extra, "d")?;
+        let acc = s.last().and_then(|p| p.values.get("accuracy").copied()).unwrap_or(f64::NAN);
+        dense_series.push(steps, 0.0, map(&[("accuracy_after_extra", acc)]));
+
+        let (model, mut state) = ctx.branch_upcycle(
+            &parent, sparse_name, &UpcycleOptions::default(), true)?;
+        let s = ctx.run_branch(&model, &mut state, 2, extra, "u")?;
+        let acc = s.last().and_then(|p| p.values.get("accuracy").copied()).unwrap_or(f64::NAN);
+        up_series.push(steps, 0.0, map(&[("accuracy_after_extra", acc)]));
+    }
+    rep.add(dense_series);
+    rep.add(up_series);
+    rep.note(format!(
+        "x = parent pretraining steps; y = quality after +{extra} further steps; \
+         paper shape: the upcycling gain is roughly constant in parent training"
+    ));
+    Ok(rep)
+}
+
+/// Fig. 7 (appendix): combined curves with LR cooldowns at several budgets.
+pub fn fig7(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("fig7", "Training curves with cooldown branches");
+    let dense_name = "vit_tiny_dense";
+    let sparse_name = "vit_tiny_moe_e8_c2";
+    let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
+    for (branch, sparse) in [("dense", false), ("upcycled", true)] {
+        for frac in [0.5f64, 1.0] {
+            let steps = (ctx.p.extra_steps as f64 * frac) as u64;
+            let cooldown = (steps / 4).max(10);
+            let (model, mut state) = if sparse {
+                ctx.branch_upcycle(&parent, sparse_name, &UpcycleOptions::default(), true)?
+            } else {
+                ctx.branch_dense(&parent, dense_name)?
+            };
+            let entry = model.entry.clone();
+            let mut data = ctx.pipeline(&entry, 7);
+            let evaluator = ctx.evaluator(&entry);
+            let mut cfg = ctx.train_cfg(steps);
+            cfg.schedule = ctx
+                .schedule(&entry)
+                .with_cooldown(state.step + steps - cooldown, cooldown);
+            cfg.weight_decay = ctx.weight_decay(&entry);
+            let name = format!("{branch}/budget_{:.0}%", 100.0 * frac);
+            rep.add(crate::coordinator::train(
+                &model, &mut state, data.as_mut(), &evaluator, &cfg, &name)?);
+        }
+    }
+    rep.note("each branch ends with a linear cooldown to 0 (paper Fig. 7); the \
+              upcycled slope exceeds the dense one");
+    Ok(rep)
+}

@@ -1,0 +1,403 @@
+//! Experiment harness: one runner per paper figure/table (DESIGN.md §4).
+//!
+//! Every runner follows the paper's protocol shape: pretrain (or load a
+//! cached) dense checkpoint, branch into dense-continuation / upcycled /
+//! from-scratch arms, continue training each arm under the *continued* LR
+//! schedule, evaluate on held-out shards, and report quality against extra
+//! cost (simulated TPU-core-days / ExaFLOPs via `costmodel`). Dense parents
+//! are cached under `checkpoints/` so the whole suite shares sunk cost —
+//! exactly like the paper reuses its dense checkpoints.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::{train, Evaluator, Schedule, TrainConfig, TrainState};
+use crate::data::text::{HmmCorpus, HmmSpec, TextPipeline};
+use crate::data::vision::{VisionPipeline, VisionSpec};
+use crate::manifest::{Manifest, ModelEntry};
+use crate::metrics::{Report, Series};
+use crate::runtime::{LoadedModel, Runtime};
+use crate::upcycle::{upcycle_opt_state, upcycle_params, UpcycleOptions};
+
+mod ablations;
+mod core_figs;
+mod initial;
+mod tables;
+
+/// Scale-dependent experiment knobs.
+#[derive(Debug, Clone)]
+pub struct ExpParams {
+    pub pretrain_steps: u64,
+    pub extra_steps: u64,
+    pub finetune_steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub lm_peak_lr: f64,
+    pub lm_warmup: u64,
+    pub vit_peak_lr: f64,
+    pub vit_warmup: u64,
+    pub vit_weight_decay: f64,
+    pub seed: u64,
+}
+
+impl ExpParams {
+    pub fn tiny() -> ExpParams {
+        ExpParams {
+            pretrain_steps: 400,
+            extra_steps: 240,
+            finetune_steps: 120,
+            eval_every: 60,
+            eval_batches: 4,
+            lm_peak_lr: 0.01,
+            lm_warmup: 60,
+            vit_peak_lr: 3e-3,
+            vit_warmup: 60,
+            vit_weight_decay: 1e-4,
+            seed: 17,
+        }
+    }
+}
+
+pub struct Ctx {
+    pub runtime: Runtime,
+    pub manifest: Manifest,
+    pub out_dir: PathBuf,
+    pub ck_dir: PathBuf,
+    pub p: ExpParams,
+    pub verbose: bool,
+    /// In-process executable cache: XLA compilation of one train-step module
+    /// takes ~30s on this CPU (see EXPERIMENTS.md §Perf), and the ablation
+    /// suite revisits the same models repeatedly.
+    cache: std::cell::RefCell<BTreeMap<String, std::rc::Rc<LoadedModel>>>,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &str, out_dir: &str, p: ExpParams, verbose: bool) -> Result<Ctx> {
+        Ok(Ctx {
+            runtime: Runtime::new()?,
+            manifest: Manifest::load(artifacts)?,
+            out_dir: PathBuf::from(out_dir),
+            ck_dir: PathBuf::from(out_dir).join("checkpoints"),
+            p,
+            verbose,
+            cache: std::cell::RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Compile-once model loading. On a cache hit that lacks a requested
+    /// executable kind, the model is recompiled with the union of kinds.
+    pub fn load(&self, name: &str, kinds: &[&str]) -> Result<std::rc::Rc<LoadedModel>> {
+        if let Some(m) = self.cache.borrow().get(name) {
+            if kinds.iter().all(|k| m.has(k) || !m.entry.artifacts.contains_key(*k)) {
+                return Ok(m.clone());
+            }
+        }
+        // Union with whatever an earlier caller compiled so nothing is lost.
+        let mut union: Vec<&str> = kinds.to_vec();
+        if let Some(m) = self.cache.borrow().get(name) {
+            for k in ["train", "eval", "features"] {
+                if m.has(k) && !union.contains(&k) {
+                    union.push(k);
+                }
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let model = std::rc::Rc::new(self.runtime.load_model(&self.manifest, name, &union)?);
+        if self.verbose {
+            println!("  compiled {name} {union:?} in {:.1}s", t0.elapsed().as_secs_f64());
+        }
+        self.cache.borrow_mut().insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ModelEntry> {
+        self.manifest.model(name)
+    }
+
+    // ---- data -------------------------------------------------------------
+
+    /// Pretraining corpus shared by every LM run (seed fixed per context).
+    pub fn lm_corpus(&self, entry: &ModelEntry) -> HmmCorpus {
+        HmmCorpus::new(
+            HmmSpec { vocab_size: entry.config.vocab_size, ..Default::default() },
+            self.p.seed ^ 0xc0ffee,
+        )
+    }
+
+    pub fn lm_pipeline(&self, entry: &ModelEntry, shard: u64) -> TextPipeline {
+        TextPipeline::new(
+            self.lm_corpus(entry),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            self.p.seed,
+            shard,
+        )
+    }
+
+    /// Held-out LM evaluator (shard 1000, never used for training).
+    pub fn lm_evaluator(&self, entry: &ModelEntry) -> Evaluator {
+        let mut held_out = self.lm_pipeline(entry, 1000);
+        Evaluator::from_source(&mut held_out, self.p.eval_batches)
+    }
+
+    pub fn vit_pipeline(&self, entry: &ModelEntry, shard: u64) -> VisionPipeline {
+        VisionPipeline::new(
+            VisionSpec { image_size: entry.config.image_size, ..Default::default() },
+            entry.config.batch_size,
+            self.p.seed,
+            shard,
+        )
+    }
+
+    pub fn vit_evaluator(&self, entry: &ModelEntry) -> Evaluator {
+        let mut held_out = self.vit_pipeline(entry, 1000);
+        Evaluator::from_source(&mut held_out, self.p.eval_batches)
+    }
+
+    pub fn pipeline(&self, entry: &ModelEntry, shard: u64) -> Box<dyn crate::coordinator::BatchSource> {
+        if entry.family == "lm" {
+            Box::new(self.lm_pipeline(entry, shard))
+        } else {
+            Box::new(self.vit_pipeline(entry, shard))
+        }
+    }
+
+    pub fn evaluator(&self, entry: &ModelEntry) -> Evaluator {
+        if entry.family == "lm" {
+            self.lm_evaluator(entry)
+        } else {
+            self.vit_evaluator(entry)
+        }
+    }
+
+    // ---- schedules ----------------------------------------------------------
+
+    /// Pretraining schedule for a family; shared by the dense parent and
+    /// every branch (the paper's continuity requirement, §4.1).
+    pub fn schedule(&self, entry: &ModelEntry) -> Schedule {
+        if entry.family == "lm" {
+            Schedule::t5_pretrain(self.p.lm_peak_lr, self.p.lm_warmup)
+        } else {
+            Schedule::vit_pretrain(self.p.vit_peak_lr, self.p.vit_warmup, 4 * self.p.vit_warmup)
+        }
+    }
+
+    pub fn weight_decay(&self, entry: &ModelEntry) -> f64 {
+        if entry.family == "lm" {
+            0.0
+        } else {
+            self.p.vit_weight_decay
+        }
+    }
+
+    pub fn train_cfg(&self, steps: u64) -> TrainConfig {
+        TrainConfig {
+            steps,
+            schedule: Schedule::constant(0.0), // overwritten by callers
+            weight_decay: 0.0,
+            eval_every: self.p.eval_every,
+            log_every: if self.verbose { 50 } else { 0 },
+        }
+    }
+
+    // ---- dense parents -------------------------------------------------------
+
+    /// Pretrain (or load the cached) dense parent checkpoint at
+    /// `steps`, returning (params, opt_state). Cached on disk so every
+    /// figure shares the same sunk cost.
+    pub fn dense_parent(&self, name: &str, steps: u64) -> Result<(Checkpoint, Checkpoint)> {
+        let tag = format!("{name}_s{steps}_seed{}", self.p.seed);
+        let p_path = self.ck_dir.join(format!("{tag}.params.supc"));
+        let o_path = self.ck_dir.join(format!("{tag}.opt.supc"));
+        if p_path.exists() && o_path.exists() {
+            return Ok((Checkpoint::load(&p_path)?, Checkpoint::load(&o_path)?));
+        }
+        let entry = self.entry(name)?.clone();
+        let model = self.load(name, &["train", "eval"])?;
+        let mut state = TrainState::from_checkpoints(
+            &entry,
+            &crate::init::init_params(&entry, self.p.seed)?,
+            &crate::init::init_opt_state(&entry)?,
+        )?;
+        let mut data = self.pipeline(&entry, 0);
+        let evaluator = self.evaluator(&entry);
+        let mut cfg = self.train_cfg(steps);
+        cfg.schedule = self.schedule(&entry);
+        cfg.weight_decay = self.weight_decay(&entry);
+        println!("  pretraining dense parent `{name}` for {steps} steps...");
+        let series = train(&model, &mut state, data.as_mut(), &evaluator, &cfg, "dense_pretrain")?;
+        if let Some(p) = series.last() {
+            println!(
+                "  parent ready: loss={:.4} acc={:.4}",
+                p.values.get("loss").unwrap_or(&f64::NAN),
+                p.values.get("accuracy").unwrap_or(&f64::NAN)
+            );
+        }
+        let (p, o) = state.to_checkpoints(&entry, "dense pretrain (parent)")?;
+        p.save(&p_path)?;
+        o.save(&o_path)?;
+        Ok((p, o))
+    }
+
+    // ---- branches -------------------------------------------------------------
+
+    /// Continue the dense parent as-is ("dense continuation" baseline).
+    pub fn branch_dense(
+        &self,
+        parent: &(Checkpoint, Checkpoint),
+        name: &str,
+    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+        let entry = self.entry(name)?.clone();
+        let model = self.load(name, &["train", "eval"])?;
+        let state = TrainState::from_checkpoints(&entry, &parent.0, &parent.1)?;
+        Ok((model, state))
+    }
+
+    /// Upcycle the dense parent into `sparse_name` (paper Figure 1 surgery).
+    pub fn branch_upcycle(
+        &self,
+        parent: &(Checkpoint, Checkpoint),
+        sparse_name: &str,
+        opts: &UpcycleOptions,
+        load_optimizer: bool,
+    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+        self.branch_upcycle_kinds(parent, sparse_name, opts, load_optimizer, &["train", "eval"])
+    }
+
+    /// Like `branch_upcycle` but compiling only the given artifact kinds
+    /// (the step-0 experiments of Appendix B.8 never train, and the XLA
+    /// compile of a train module dominates their runtime otherwise).
+    pub fn branch_upcycle_kinds(
+        &self,
+        parent: &(Checkpoint, Checkpoint),
+        sparse_name: &str,
+        opts: &UpcycleOptions,
+        load_optimizer: bool,
+        kinds: &[&str],
+    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+        let entry = self.entry(sparse_name)?.clone();
+        let model = self.load(sparse_name, kinds)?;
+        let params = upcycle_params(&parent.0, &entry, opts)
+            .with_context(|| format!("upcycling into {sparse_name}"))?;
+        let opt = upcycle_opt_state(&parent.1, &entry, load_optimizer)?;
+        let state = TrainState::from_checkpoints(&entry, &params, &opt)?;
+        Ok((model, state))
+    }
+
+    /// Fresh random init of `name` ("MoE from scratch" / dense-from-scratch).
+    pub fn branch_scratch(&self, name: &str, seed: u64) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+        let entry = self.entry(name)?.clone();
+        let model = self.load(name, &["train", "eval"])?;
+        let state = TrainState::from_checkpoints(
+            &entry,
+            &crate::init::init_params(&entry, seed)?,
+            &crate::init::init_opt_state(&entry)?,
+        )?;
+        Ok((model, state))
+    }
+
+    /// Run one branch for `steps` under the family schedule; names the series.
+    pub fn run_branch(
+        &self,
+        model: &LoadedModel,
+        state: &mut TrainState,
+        shard: u64,
+        steps: u64,
+        series_name: &str,
+    ) -> Result<Series> {
+        let entry = &model.entry;
+        let mut data = self.pipeline(entry, shard);
+        let evaluator = self.evaluator(entry);
+        let mut cfg = self.train_cfg(steps);
+        cfg.schedule = self.schedule(entry);
+        cfg.weight_decay = self.weight_decay(entry);
+        train(model, state, data.as_mut(), &evaluator, &cfg, series_name)
+    }
+
+    /// Finetune on the downstream task (topic classification for LM,
+    /// the same 16-class task for ViT — §A.2) and return final accuracy.
+    pub fn finetune_accuracy(
+        &self,
+        model: &LoadedModel,
+        state: &mut TrainState,
+        lr: f64,
+    ) -> Result<f64> {
+        let entry = model.entry.clone();
+        let (mut data, evaluator): (Box<dyn crate::coordinator::BatchSource>, Evaluator) =
+            if entry.family == "lm" {
+                let mk = |shard| {
+                    crate::data::text::ClassificationPipeline::new(
+                        8,
+                        entry.config.vocab_size,
+                        entry.config.batch_size,
+                        entry.config.enc_len,
+                        entry.config.dec_len,
+                        self.p.seed + shard,
+                    )
+                };
+                let mut held = mk(1000);
+                (Box::new(mk(0)), Evaluator::from_source(&mut held, self.p.eval_batches))
+            } else {
+                // Vision finetuning: a held-out seed family of the shapes task.
+                let mk = |shard: u64| self.vit_pipeline(&entry, 500 + shard);
+                let mut held = mk(1000);
+                (Box::new(mk(0)), Evaluator::from_source(&mut held, self.p.eval_batches))
+            };
+        let mut cfg = self.train_cfg(self.p.finetune_steps);
+        cfg.schedule = Schedule::constant(lr);
+        cfg.eval_every = 0;
+        let series = train(model, state, data.as_mut(), &evaluator, &cfg, "finetune")?;
+        Ok(series
+            .last()
+            .and_then(|p| p.values.get("accuracy").copied())
+            .unwrap_or(f64::NAN))
+    }
+}
+
+/// Metric map → BTreeMap for Series::push.
+pub fn vals(m: &crate::runtime::Metrics) -> BTreeMap<String, f64> {
+    m.clone()
+}
+
+type Runner = fn(&Ctx) -> Result<Report>;
+
+/// Registry of all experiments, in paper order.
+pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
+    vec![
+        ("fig2", "pretrain quality vs extra cost: dense continuation vs upcycling", core_figs::fig2 as Runner),
+        ("fig2long", "fig2 with a saturated dense parent (paper operating point)", core_figs::fig2long),
+        ("fig3", "finetuned quality vs extra pretrain cost", core_figs::fig3),
+        ("fig4", "upcycling vs MoE-from-scratch", core_figs::fig4),
+        ("fig5", "sparse upcycling vs dense (depth-tiled) upcycling", core_figs::fig5),
+        ("fig6", "upcycling gain vs amount of dense pretraining", core_figs::fig6),
+        ("fig7", "training curves with cooldown branches", core_figs::fig7),
+        ("tab1", "model parameter counts", tables::tab1),
+        ("tab2", "router type ablation (Expert Choice vs Top-K)", ablations::tab2),
+        ("fig9", "expert capacity factor ablation", ablations::fig9),
+        ("fig10", "number of experts: training curves", ablations::fig10),
+        ("fig11", "number of experts: final quality", ablations::fig11),
+        ("fig12", "number of MoE layers", ablations::fig12),
+        ("fig13", "expert init: copied vs random", ablations::fig13),
+        ("fig14", "optimizer state resumption", ablations::fig14),
+        ("tab3", "combine-weight renormalization (from scratch)", ablations::tab3),
+        ("fig15", "initial quality vs capacity factor (function preservation)", initial::fig15),
+        ("fig16", "routing group size", initial::fig16),
+        ("fig17", "MoE layer placement vs initial drop", initial::fig17),
+        ("fig18", "number of experts vs initial drop", initial::fig18),
+        ("tab4", "selected vision results with cost accounting", tables::tab4),
+        ("tab5", "selected language results with cost accounting", tables::tab5),
+    ]
+}
+
+pub fn run_by_id(ctx: &Ctx, id: &str) -> Result<Report> {
+    for (rid, _, f) in registry() {
+        if rid == id {
+            return f(ctx);
+        }
+    }
+    bail!("unknown experiment `{id}`; use `list` to see ids")
+}

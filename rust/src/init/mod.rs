@@ -1,0 +1,86 @@
+//! From-scratch parameter / optimizer-state initialization.
+//!
+//! Mirrors `python/compile/model.init_params` using the init specs recorded
+//! in the manifest, so starting a dense pretraining run (or a
+//! MoE-from-scratch baseline, Fig. 4) never touches Python at runtime.
+
+use anyhow::{bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::manifest::{ModelEntry, TensorSpec};
+use crate::tensor::{numel, Tensor};
+use crate::util::rng::Rng;
+
+pub fn init_tensor(spec: &TensorSpec, rng: &mut Rng) -> Result<Tensor> {
+    let n = numel(&spec.shape);
+    let init = spec
+        .init
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("tensor `{}` has no init spec", spec.name))?;
+    Ok(match init.kind.as_str() {
+        "zeros" => Tensor::zeros(&spec.shape),
+        "ones" => Tensor::ones(&spec.shape),
+        "normal" | "fan_in" => {
+            Tensor::from_f32(&spec.shape, rng.normal_vec(n, init.stddev))
+        }
+        k => bail!("unknown init kind `{k}` for `{}`", spec.name),
+    })
+}
+
+/// Fresh parameter checkpoint for a model (step 0).
+pub fn init_params(entry: &ModelEntry, seed: u64) -> Result<Checkpoint> {
+    let mut rng = Rng::new(seed);
+    let mut ck = Checkpoint::new(&entry.name, 0, "init: from scratch");
+    for (i, spec) in entry.params.iter().enumerate() {
+        // Independent stream per tensor: insertion order never changes values.
+        let mut sub = rng.fork(i as u64);
+        ck.insert(&spec.name, init_tensor(spec, &mut sub)?);
+    }
+    Ok(ck)
+}
+
+/// Zeroed Adafactor state for a model.
+pub fn init_opt_state(entry: &ModelEntry) -> Result<Checkpoint> {
+    let mut ck = Checkpoint::new(&entry.name, 0, "init: zero optimizer state");
+    for spec in &entry.opt_state {
+        ck.insert(&spec.name, Tensor::zeros(&spec.shape));
+    }
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::InitSpec;
+    use crate::tensor::DType;
+
+    fn spec(name: &str, shape: &[usize], kind: &str, stddev: f32) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+            init: Some(InitSpec { kind: kind.into(), stddev }),
+        }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut rng = Rng::new(0);
+        let z = init_tensor(&spec("z", &[4], "zeros", 0.0), &mut rng).unwrap();
+        assert_eq!(z.f32s().unwrap(), &[0.0; 4]);
+        let o = init_tensor(&spec("o", &[3], "ones", 0.0), &mut rng).unwrap();
+        assert_eq!(o.f32s().unwrap(), &[1.0; 3]);
+        let n = init_tensor(&spec("n", &[4096], "normal", 0.02), &mut rng).unwrap();
+        let std = (n.f32s().unwrap().iter().map(|x| x * x).sum::<f32>() / 4096.0).sqrt();
+        assert!((std - 0.02).abs() < 0.002, "std {std}");
+        assert!(init_tensor(&spec("b", &[1], "bogus", 0.0), &mut rng).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let s = spec("w", &[64], "normal", 1.0);
+        let a = init_tensor(&s, &mut Rng::new(5)).unwrap();
+        let b = init_tensor(&s, &mut Rng::new(5)).unwrap();
+        assert_eq!(a, b);
+    }
+}

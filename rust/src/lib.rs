@@ -1,0 +1,39 @@
+//! # sparse-upcycle
+//!
+//! Rust + JAX + Pallas reproduction of **"Sparse Upcycling: Training
+//! Mixture-of-Experts from Dense Checkpoints"** (ICLR 2023).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): grouped expert MLP
+//!   and fused router, AOT-lowered into the model HLO.
+//! * **L2** — JAX models (`python/compile/`): T5-style LM and ViT with
+//!   Expert Choice / Top-K MoE layers, Adafactor train step; lowered once to
+//!   `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the training coordinator. Loads the artifacts via
+//!   PJRT (`runtime`), owns data (`data`), schedules (`coordinator`),
+//!   checkpoints (`checkpoint`), and — the paper's contribution — the
+//!   **upcycling checkpoint surgery** (`upcycle`). The experiment harness
+//!   (`experiments`) regenerates every figure and table of the paper.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod init;
+pub mod linalg;
+pub mod manifest;
+pub mod metrics;
+pub mod parallel;
+pub mod runtime;
+pub mod tensor;
+pub mod upcycle;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+/// Default experiment-output directory.
+pub const RESULTS_DIR: &str = "results";

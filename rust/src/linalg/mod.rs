@@ -1,0 +1,240 @@
+//! Small dense linear algebra: Cholesky solve + ridge regression.
+//!
+//! Backs the paper's few-shot linear evaluation (§A.2.2): a least-squares
+//! regressor from frozen image representations to one-hot labels with fixed
+//! L2 regularization (the paper fixes λ = 1024 on normalized features; we
+//! keep λ configurable and default to their choice).
+
+use anyhow::{bail, Result};
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// AᵀA (Gram matrix), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let mut s = 0.0;
+                for r in 0..self.rows {
+                    s += self.at(r, i) * self.at(r, j);
+                }
+                *g.at_mut(i, j) = s;
+                *g.at_mut(j, i) = s;
+            }
+        }
+        g
+    }
+
+    /// AᵀB.
+    pub fn t_mul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let mut out = Mat::zeros(self.cols, b.cols);
+        for r in 0..self.rows {
+            for i in 0..self.cols {
+                let a = self.at(r, i);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    *out.at_mut(i, j) += a * b.at(r, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// AB.
+    pub fn mul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut out = Mat::zeros(self.rows, b.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(r, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    *out.at_mut(r, j) += a * b.at(k, j);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// In-place Cholesky factorization A = LLᵀ (lower triangle). Fails on
+/// non-SPD input.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    if a.rows != a.cols {
+        bail!("cholesky needs a square matrix");
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite (pivot {i}: {s})");
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A X = B for SPD A via Cholesky (forward + back substitution).
+pub fn solve_spd(a: &Mat, b: &Mat) -> Result<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let m = b.cols;
+    // Forward: L Y = B.
+    let mut y = Mat::zeros(n, m);
+    for c in 0..m {
+        for i in 0..n {
+            let mut s = b.at(i, c);
+            for k in 0..i {
+                s -= l.at(i, k) * y.at(k, c);
+            }
+            *y.at_mut(i, c) = s / l.at(i, i);
+        }
+    }
+    // Back: Lᵀ X = Y.
+    let mut x = Mat::zeros(n, m);
+    for c in 0..m {
+        for i in (0..n).rev() {
+            let mut s = y.at(i, c);
+            for k in i + 1..n {
+                s -= l.at(k, i) * x.at(k, c);
+            }
+            *x.at_mut(i, c) = s / l.at(i, i);
+        }
+    }
+    Ok(x)
+}
+
+/// Ridge regression: W = (XᵀX + λI)⁻¹ XᵀY.
+pub fn ridge(x: &Mat, y: &Mat, lambda: f64) -> Result<Mat> {
+    let mut g = x.gram();
+    for i in 0..g.rows {
+        *g.at_mut(i, i) += lambda;
+    }
+    let xty = x.t_mul(y);
+    solve_spd(&g, &xty)
+}
+
+/// Per-row argmax (class prediction).
+pub fn argmax_rows(m: &Mat) -> Vec<usize> {
+    (0..m.rows)
+        .map(|r| {
+            (0..m.cols)
+                .max_by(|&a, &b| m.at(r, a).partial_cmp(&m.at(r, b)).unwrap())
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_recomposes() {
+        let a = Mat::from_rows(&[
+            vec![4.0, 2.0, 0.6],
+            vec![2.0, 5.0, 1.0],
+            vec![0.6, 1.0, 3.0],
+        ]);
+        let l = cholesky(&a).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - a.at(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = Mat::from_rows(&[vec![3.0, 1.0], vec![1.0, 2.0]]);
+        let b = Mat::from_rows(&[vec![9.0], vec![8.0]]);
+        let x = solve_spd(&a, &b).unwrap();
+        // 3x + y = 9, x + 2y = 8 → x = 2, y = 3.
+        assert!((x.at(0, 0) - 2.0).abs() < 1e-10);
+        assert!((x.at(1, 0) - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ridge_interpolates_exactly_at_zero_lambda() {
+        // Overdetermined but consistent system.
+        let x = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]]);
+        let w_true = Mat::from_rows(&[vec![2.0], vec![-1.0]]);
+        let y = x.mul(&w_true);
+        let w = ridge(&x, &y, 1e-12).unwrap();
+        assert!((w.at(0, 0) - 2.0).abs() < 1e-6);
+        assert!((w.at(1, 0) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ridge_shrinks_with_lambda() {
+        let x = Mat::from_rows(&[vec![1.0], vec![1.0]]);
+        let y = Mat::from_rows(&[vec![1.0], vec![1.0]]);
+        let w0 = ridge(&x, &y, 1e-9).unwrap().at(0, 0);
+        let w1 = ridge(&x, &y, 10.0).unwrap().at(0, 0);
+        assert!(w0 > w1 && w1 > 0.0);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let m = Mat::from_rows(&[vec![0.1, 0.9], vec![2.0, -1.0]]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+}

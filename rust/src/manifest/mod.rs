@@ -1,0 +1,300 @@
+//! Artifact manifest: the signature contract between the Python compile path
+//! and the Rust runtime.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing, for
+//! every model configuration: the ordered flat parameter / optimizer-state /
+//! batch tensor signatures (names, shapes, dtypes, init specs), the model
+//! hyperparameters, an analytic FLOPs estimate, and the HLO artifact file
+//! names. Everything the coordinator does — initialization, checkpointing,
+//! surgery, cost accounting, step execution — is keyed off this file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct InitSpec {
+    pub kind: String, // "normal" | "fan_in" | "zeros" | "ones"
+    pub stddev: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub init: Option<InitSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MoeSpec {
+    pub num_experts: usize,
+    pub capacity_factor: f64,
+    pub router_type: String,
+    pub moe_layers: Vec<usize>,
+    pub group_size: usize,
+    pub renormalize: bool,
+    pub bpr: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub family: String,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub num_heads: usize,
+    pub num_layers: usize,
+    pub num_decoder_layers: usize,
+    pub vocab_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub enc_moe: Option<MoeSpec>,
+    pub dec_moe: Option<MoeSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FlopsInfo {
+    pub train_step: f64,
+    pub eval_step: f64,
+    pub fwd_per_example: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub family: String,
+    pub config: ModelConfig,
+    pub params: Vec<TensorSpec>,
+    pub opt_state: Vec<TensorSpec>,
+    pub batch: Vec<TensorSpec>,
+    pub scalars: Vec<String>,
+    pub metrics: Vec<String>,
+    pub param_count: usize,
+    pub flops: FlopsInfo,
+    /// artifact kind ("train" | "eval" | "features") → file name
+    pub artifacts: BTreeMap<String, String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub source_hash: String,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for m in v.get("models")?.as_arr()? {
+            let e = parse_entry(m)?;
+            models.insert(e.name.clone(), e);
+        }
+        Ok(Manifest {
+            dir,
+            source_hash: v.get("source_hash")?.as_str()?.to_string(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model `{name}` not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, entry: &ModelEntry, which: &str) -> Result<PathBuf> {
+        let f = entry
+            .artifacts
+            .get(which)
+            .ok_or_else(|| anyhow!("model `{}` has no `{which}` artifact", entry.name))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+impl ModelEntry {
+    /// Number of flat inputs to the train step.
+    pub fn train_arity(&self) -> usize {
+        self.params.len() + self.opt_state.len() + self.batch.len() + self.scalars.len()
+    }
+
+    /// Names of train-step outputs in order.
+    pub fn train_output_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .chain(self.opt_state.iter())
+            .map(|s| s.name.clone())
+            .chain(self.metrics.iter().cloned())
+            .collect()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.config.enc_moe.is_some() || self.config.dec_moe.is_some()
+    }
+
+    /// Total parameters held by MoE experts (sparse capacity).
+    pub fn expert_param_count(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|s| s.name.contains("/moe/w"))
+            .map(|s| s.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    let init = match v.opt("init") {
+        Some(i) if !i.is_null() => Some(InitSpec {
+            kind: i.get("kind")?.as_str()?.to_string(),
+            stddev: i.get("stddev")?.as_f64()? as f32,
+        }),
+        _ => None,
+    };
+    Ok(TensorSpec {
+        name: v.get("name")?.as_str()?.to_string(),
+        shape,
+        dtype: DType::from_str(v.get("dtype")?.as_str()?)?,
+        init,
+    })
+}
+
+fn parse_moe(v: &Json) -> Result<Option<MoeSpec>> {
+    if v.is_null() {
+        return Ok(None);
+    }
+    Ok(Some(MoeSpec {
+        num_experts: v.get("num_experts")?.as_usize()?,
+        capacity_factor: v.get("capacity_factor")?.as_f64()?,
+        router_type: v.get("router_type")?.as_str()?.to_string(),
+        moe_layers: v
+            .get("moe_layers")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        group_size: v.get("group_size")?.as_usize()?,
+        renormalize: v.get("renormalize")?.as_bool()?,
+        bpr: v.get("bpr")?.as_bool()?,
+    }))
+}
+
+fn parse_config(v: &Json) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        family: v.get("family")?.as_str()?.to_string(),
+        d_model: v.get("d_model")?.as_usize()?,
+        d_ff: v.get("d_ff")?.as_usize()?,
+        num_heads: v.get("num_heads")?.as_usize()?,
+        num_layers: v.get("num_layers")?.as_usize()?,
+        num_decoder_layers: v.get("num_decoder_layers")?.as_usize()?,
+        vocab_size: v.get("vocab_size")?.as_usize()?,
+        enc_len: v.get("enc_len")?.as_usize()?,
+        dec_len: v.get("dec_len")?.as_usize()?,
+        image_size: v.get("image_size")?.as_usize()?,
+        patch_size: v.get("patch_size")?.as_usize()?,
+        channels: v.get("channels")?.as_usize()?,
+        num_classes: v.get("num_classes")?.as_usize()?,
+        batch_size: v.get("batch_size")?.as_usize()?,
+        enc_moe: parse_moe(v.get("enc_moe")?)?,
+        dec_moe: parse_moe(v.get("dec_moe")?)?,
+    })
+}
+
+fn parse_entry(v: &Json) -> Result<ModelEntry> {
+    let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        v.get(key)?.as_arr()?.iter().map(parse_tensor_spec).collect()
+    };
+    let strs = |key: &str| -> Result<Vec<String>> {
+        v.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect()
+    };
+    let flops = v.get("flops")?;
+    let mut artifacts = BTreeMap::new();
+    match v.get("artifacts")? {
+        Json::Obj(m) => {
+            for (k, f) in m {
+                artifacts.insert(k.clone(), f.as_str()?.to_string());
+            }
+        }
+        _ => bail!("artifacts must be an object"),
+    }
+    Ok(ModelEntry {
+        name: v.get("name")?.as_str()?.to_string(),
+        family: v.get("family")?.as_str()?.to_string(),
+        config: parse_config(v.get("config")?)?,
+        params: specs("params")?,
+        opt_state: specs("opt_state")?,
+        batch: specs("batch")?,
+        scalars: strs("scalars")?,
+        metrics: strs("metrics")?,
+        param_count: v.get("param_count")?.as_usize()?,
+        flops: FlopsInfo {
+            train_step: flops.get("train_step")?.as_f64()?,
+            eval_step: flops.get("eval_step")?.as_f64()?,
+            fwd_per_example: flops.get("fwd_per_example")?.as_f64()?,
+        },
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.models.len() >= 20, "expected full artifact set");
+        let e = m.model("lm_tiny_moe_e8_c2").unwrap();
+        assert!(e.is_sparse());
+        assert_eq!(e.scalars, vec!["lr", "wd", "step"]);
+        assert!(e.param_count > 1_000_000);
+        assert!(e.flops.train_step > e.flops.eval_step);
+        // Signature bookkeeping: sorted and unique names.
+        let names: Vec<&str> = e.params.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(names, sorted, "param specs must be sorted and unique");
+    }
+
+    #[test]
+    fn dense_vs_sparse_bookkeeping() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        let dense = m.model("lm_tiny_dense").unwrap();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        assert!(!dense.is_sparse());
+        assert_eq!(dense.expert_param_count(), 0);
+        assert!(sparse.expert_param_count() > 0);
+        assert!(sparse.param_count > dense.param_count);
+    }
+}

@@ -1,0 +1,198 @@
+//! Metrics logging: in-memory series + CSV/JSON writers for the experiment
+//! harness (every figure in DESIGN.md §4 is regenerated from these files).
+
+pub mod report_summary;
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One evaluation point on a training curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point {
+    pub step: u64,
+    /// Cumulative extra cost at this point (FLOPs since the branch point).
+    pub extra_flops: f64,
+    pub values: BTreeMap<String, f64>,
+}
+
+/// A named training/eval curve (one line in one figure panel).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<Point>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, step: u64, extra_flops: f64, values: BTreeMap<String, f64>) {
+        self.points.push(Point { step, extra_flops, values });
+    }
+
+    pub fn last(&self) -> Option<&Point> {
+        self.points.last()
+    }
+}
+
+/// A figure/table result: several series + metadata, serializable to CSV
+/// (for plotting) and JSON (for EXPERIMENTS.md extraction).
+#[derive(Debug, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub series: Vec<Series>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report { id: id.into(), title: title.into(), series: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn add(&mut self, series: Series) {
+        self.series.push(series);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+
+    fn metric_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for srs in &self.series {
+            for p in &srs.points {
+                for k in p.values.keys() {
+                    if !names.contains(k) {
+                        names.push(k.clone());
+                    }
+                }
+            }
+        }
+        names
+    }
+
+    pub fn write_csv(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id));
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&path).with_context(|| format!("creating {path:?}"))?,
+        );
+        let metrics = self.metric_names();
+        write!(f, "series,step,extra_flops,extra_core_days")?;
+        for m in &metrics {
+            write!(f, ",{m}")?;
+        }
+        writeln!(f)?;
+        for srs in &self.series {
+            for p in &srs.points {
+                let cd = crate::costmodel::Cost { flops: p.extra_flops }.core_days();
+                write!(f, "{},{},{:.6e},{:.6}", srs.name, p.step, p.extra_flops, cd)?;
+                for m in &metrics {
+                    match p.values.get(m) {
+                        Some(v) => write!(f, ",{v:.6}")?,
+                        None => write!(f, ",")?,
+                    }
+                }
+                writeln!(f)?;
+            }
+        }
+        Ok(path)
+    }
+
+    pub fn write_json(&self, dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.id));
+        let series = self
+            .series
+            .iter()
+            .map(|srs| {
+                let pts = srs
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut fields = vec![
+                            ("step".to_string(), num(p.step as f64)),
+                            ("extra_flops".to_string(), num(p.extra_flops)),
+                        ];
+                        for (k, v) in &p.values {
+                            fields.push((k.clone(), num(*v)));
+                        }
+                        Json::Obj(fields.into_iter().collect())
+                    })
+                    .collect();
+                obj(vec![("name", s(&srs.name)), ("points", arr(pts))])
+            })
+            .collect();
+        let root = obj(vec![
+            ("id", s(&self.id)),
+            ("title", s(&self.title)),
+            ("notes", arr(self.notes.iter().map(|n| s(n)).collect())),
+            ("series", arr(series)),
+        ]);
+        std::fs::write(&path, root.to_string())?;
+        Ok(path)
+    }
+
+    /// Pretty console rendering (the "same rows the paper reports").
+    pub fn print(&self) {
+        println!("\n== {} — {} ==", self.id, self.title);
+        for n in &self.notes {
+            println!("   {n}");
+        }
+        let metrics = self.metric_names();
+        for srs in &self.series {
+            println!("  [{}]", srs.name);
+            for p in &srs.points {
+                let cd = crate::costmodel::Cost { flops: p.extra_flops }.core_days();
+                let vals: Vec<String> = metrics
+                    .iter()
+                    .filter_map(|m| p.values.get(m).map(|v| format!("{m}={v:.4}")))
+                    .collect();
+                println!(
+                    "    step {:>6}  +{:>8.4} core-days  {}",
+                    p.step,
+                    cd,
+                    vals.join("  ")
+                );
+            }
+        }
+    }
+}
+
+pub fn map(kv: &[(&str, f64)]) -> BTreeMap<String, f64> {
+    kv.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let mut r = Report::new("test_fig", "unit test");
+        let mut srs = Series::new("dense");
+        srs.push(10, 1e12, map(&[("loss", 2.5), ("accuracy", 0.1)]));
+        srs.push(20, 2e12, map(&[("loss", 2.0), ("accuracy", 0.2)]));
+        r.add(srs);
+        r.note("a note");
+        let dir = std::env::temp_dir().join("supc_metrics_test");
+        let csv = r.write_csv(&dir).unwrap();
+        let json = r.write_json(&dir).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.contains("dense,10"));
+        assert!(csv_text.lines().count() == 3);
+        let v = Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "test_fig");
+        assert_eq!(v.get("series").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,174 @@
+//! Collective-communication cost model (paper §A.4).
+//!
+//! The paper composes data / expert / model parallelism; the communication
+//! patterns behind them are all-to-all (MoE dispatch + combine),
+//! all-reduce (data-parallel gradients) and all-gather (model-parallel
+//! activations). This module prices them on an abstract interconnect
+//! (per-link bandwidth + latency, ring or full-mesh topology), so the
+//! placement simulator can answer the §A.4 question the paper settles by
+//! construction on TPU pods: which parallelism axis saturates first as E,
+//! C and the mesh grow. Exercised by `cargo bench --bench routing_sim`
+//! extensions and unit tests.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Interconnect {
+    /// Per-link bandwidth, bytes/second.
+    pub link_bandwidth: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+    /// Number of devices participating.
+    pub devices: usize,
+}
+
+impl Interconnect {
+    /// TPUv3-ish ICI defaults: ~70 GB/s links, ~1 µs latency.
+    pub fn tpu_like(devices: usize) -> Interconnect {
+        Interconnect { link_bandwidth: 70e9, latency: 1e-6, devices }
+    }
+
+    /// Ring all-reduce of `bytes` per device: 2(n-1)/n · bytes over the
+    /// slowest link + 2(n-1) latency hops (bandwidth-optimal ring).
+    pub fn allreduce_time(&self, bytes: usize) -> f64 {
+        let n = self.devices.max(1) as f64;
+        if self.devices <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1.0) / n * bytes as f64 / self.link_bandwidth
+            + 2.0 * (n - 1.0) * self.latency
+    }
+
+    /// All-gather of `bytes` per device (each device ends with n·bytes).
+    pub fn allgather_time(&self, bytes: usize) -> f64 {
+        let n = self.devices.max(1) as f64;
+        if self.devices <= 1 {
+            return 0.0;
+        }
+        (n - 1.0) / n * (n * bytes as f64) / self.link_bandwidth
+            + (n - 1.0) * self.latency
+    }
+
+    /// Balanced all-to-all where every device sends `bytes_per_peer` to each
+    /// of the other n-1 devices (the MoE dispatch/combine pattern with
+    /// Expert Choice routing — balanced by construction, paper §2.1).
+    pub fn alltoall_time(&self, bytes_per_peer: usize) -> f64 {
+        let n = self.devices.max(1) as f64;
+        if self.devices <= 1 {
+            return 0.0;
+        }
+        (n - 1.0) * bytes_per_peer as f64 / self.link_bandwidth
+            + (n - 1.0) * self.latency
+    }
+
+    /// Skewed all-to-all: the hot device receives `max_bytes` while others
+    /// receive `mean_bytes` — token-choice routing's imbalance stretches the
+    /// collective to the hottest receiver.
+    pub fn alltoall_time_skewed(&self, mean_bytes: usize, max_bytes: usize) -> f64 {
+        self.alltoall_time(mean_bytes.max(1))
+            * (max_bytes as f64 / mean_bytes.max(1) as f64)
+    }
+}
+
+/// One training step's communication bill for a sparse model under the
+/// three-axis mesh (paper §A.4): expert all-to-all (dispatch+combine, per
+/// MoE layer, fwd+bwd), data-parallel gradient all-reduce, model-parallel
+/// activation all-gathers.
+#[derive(Debug, Clone)]
+pub struct StepCommsReport {
+    pub expert_alltoall_s: f64,
+    pub grad_allreduce_s: f64,
+    pub mp_allgather_s: f64,
+}
+
+impl StepCommsReport {
+    pub fn total(&self) -> f64 {
+        self.expert_alltoall_s + self.grad_allreduce_s + self.mp_allgather_s
+    }
+}
+
+pub fn step_comms(
+    entry: &crate::manifest::ModelEntry,
+    mesh: &crate::parallel::MeshSpec,
+    net: &Interconnect,
+    tokens_per_device: usize,
+    imbalance: f64,
+) -> StepCommsReport {
+    let d = entry.config.d_model;
+    let n_moe_layers = entry
+        .config
+        .enc_moe
+        .as_ref()
+        .map(|m| m.moe_layers.len())
+        .unwrap_or(0)
+        + entry
+            .config
+            .dec_moe
+            .as_ref()
+            .map(|m| m.moe_layers.len())
+            .unwrap_or(0);
+    let cap = entry
+        .config
+        .enc_moe
+        .as_ref()
+        .map(|m| m.capacity_factor)
+        .unwrap_or(1.0);
+
+    let ep_net = Interconnect { devices: mesh.expert_parallel, ..*net };
+    // dispatch + combine, forward + backward = 4 all-to-alls per MoE layer.
+    let bytes_per_peer =
+        (tokens_per_device as f64 * cap * d as f64 * 4.0 / mesh.expert_parallel.max(1) as f64)
+            as usize;
+    let mean = bytes_per_peer.max(1);
+    let max = (mean as f64 * imbalance) as usize;
+    let expert_alltoall_s =
+        4.0 * n_moe_layers as f64 * ep_net.alltoall_time_skewed(mean, max);
+
+    let dp_net = Interconnect { devices: mesh.data_parallel, ..*net };
+    let grad_allreduce_s = dp_net.allreduce_time(entry.param_count * 4);
+
+    let mp_net = Interconnect { devices: mesh.model_parallel, ..*net };
+    // One activation all-gather per block, fwd+bwd.
+    let blocks = entry.config.num_layers + entry.config.num_decoder_layers;
+    let mp_allgather_s =
+        2.0 * blocks as f64 * mp_net.allgather_time(tokens_per_device * d * 4);
+
+    StepCommsReport { expert_alltoall_s, grad_allreduce_s, mp_allgather_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_is_free() {
+        let net = Interconnect::tpu_like(1);
+        assert_eq!(net.allreduce_time(1 << 20), 0.0);
+        assert_eq!(net.allgather_time(1 << 20), 0.0);
+        assert_eq!(net.alltoall_time(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes_and_latency_with_devices() {
+        let a = Interconnect::tpu_like(8);
+        assert!(a.allreduce_time(2 << 20) > a.allreduce_time(1 << 20));
+        let b = Interconnect::tpu_like(64);
+        // For tiny payloads, latency term dominates and grows with n.
+        assert!(b.allreduce_time(64) > a.allreduce_time(64));
+    }
+
+    #[test]
+    fn skew_stretches_alltoall() {
+        let net = Interconnect::tpu_like(8);
+        let balanced = net.alltoall_time_skewed(1 << 20, 1 << 20);
+        let skewed = net.alltoall_time_skewed(1 << 20, 3 << 20);
+        assert!((skewed / balanced - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_optimal_ring_bound() {
+        // 2(n-1)/n·bytes / BW is the textbook lower bound; check we match it
+        // (plus latency) rather than the naive n·bytes.
+        let net = Interconnect { link_bandwidth: 1e9, latency: 0.0, devices: 4 };
+        let t = net.allreduce_time(1_000_000_000);
+        assert!((t - 1.5).abs() < 1e-9, "got {t}");
+    }
+}

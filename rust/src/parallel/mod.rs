@@ -1,0 +1,206 @@
+//! Expert/data/model-parallel placement simulator (paper §A.4).
+//!
+//! The paper trains with three composed parallelism axes: data (batch
+//! shards), expert (experts partitioned across devices) and model (weight
+//! matrices sharded). The actual training here runs on one CPU PJRT device,
+//! so this module *simulates* the distributed execution to account the
+//! quantities that drive the paper's cost discussion: per-device token load
+//! (balance), all-to-all dispatch volume, and per-device parameter memory.
+//! The `routing_sim` bench sweeps these against E / C / device count.
+
+pub mod collectives;
+
+use crate::manifest::{ModelEntry, MoeSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MeshSpec {
+    pub data_parallel: usize,
+    pub expert_parallel: usize,
+    pub model_parallel: usize,
+}
+
+impl MeshSpec {
+    pub fn devices(&self) -> usize {
+        self.data_parallel * self.expert_parallel * self.model_parallel
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PlacementReport {
+    pub devices: usize,
+    pub experts_per_device: Vec<usize>,
+    /// Bytes of expert parameters held per expert-parallel device.
+    pub expert_param_bytes_per_device: usize,
+    /// Bytes of non-expert (replicated) parameters per device.
+    pub dense_param_bytes: usize,
+}
+
+/// Static placement: experts round-robined over the expert-parallel axis,
+/// dense weights replicated (data parallel) and split over model-parallel.
+pub fn place(entry: &ModelEntry, mesh: &MeshSpec) -> PlacementReport {
+    let num_experts = entry
+        .config
+        .enc_moe
+        .as_ref()
+        .or(entry.config.dec_moe.as_ref())
+        .map(|m| m.num_experts)
+        .unwrap_or(0);
+    let mut experts_per_device = vec![0usize; mesh.expert_parallel.max(1)];
+    for e in 0..num_experts {
+        experts_per_device[e % mesh.expert_parallel.max(1)] += 1;
+    }
+    let expert_bytes = entry.expert_param_count() * 4;
+    let dense_bytes = (entry.param_count - entry.expert_param_count()) * 4;
+    PlacementReport {
+        devices: mesh.devices(),
+        experts_per_device,
+        expert_param_bytes_per_device: if num_experts == 0 {
+            0
+        } else {
+            expert_bytes / mesh.expert_parallel.max(1)
+        },
+        dense_param_bytes: dense_bytes / mesh.model_parallel.max(1),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RoutingTraffic {
+    /// Tokens each expert received (length E).
+    pub tokens_per_expert: Vec<usize>,
+    /// Tokens that crossed a device boundary (all-to-all payload).
+    pub offdevice_tokens: usize,
+    /// Total dispatched tokens (== n·C for Expert Choice).
+    pub dispatched_tokens: usize,
+    /// max/mean load over experts (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    /// Fraction of tokens dropped (token-choice overflows only).
+    pub drop_fraction: f64,
+}
+
+impl RoutingTraffic {
+    pub fn all_to_all_bytes(&self, d_model: usize) -> usize {
+        // dispatch + combine both move the token vector.
+        2 * self.offdevice_tokens * d_model * 4
+    }
+}
+
+/// Simulate one routing round for `n_tokens` under the given MoE spec, with
+/// router logits drawn from a skewed popularity prior (experts are not
+/// equally attractive to a trained token-choice router — that is exactly
+/// what produces imbalance and drops).
+pub fn simulate_routing(
+    spec: &MoeSpec,
+    n_tokens: usize,
+    mesh: &MeshSpec,
+    rng: &mut Rng,
+) -> RoutingTraffic {
+    let e = spec.num_experts;
+    let ep = mesh.expert_parallel.max(1);
+    // Skewed expert popularity (Zipf over experts).
+    let popularity: Vec<f32> = (0..e).map(|i| 1.0 / (1.0 + i as f32).powf(0.7)).collect();
+
+    let mut tokens_per_expert = vec![0usize; e];
+    let mut offdevice = 0usize;
+    let mut dropped = 0usize;
+    let mut dispatched = 0usize;
+
+    // Device of token t (data-parallel shard) and of expert x.
+    let token_device = |t: usize| (t * ep) / n_tokens.max(1);
+    let expert_device = |x: usize| x % ep;
+
+    if spec.router_type == "ec" {
+        // Expert Choice: each expert takes exactly c = n·C/E tokens.
+        let c = ((n_tokens as f64 * spec.capacity_factor) / e as f64).max(1.0) as usize;
+        for x in 0..e {
+            for slot in 0..c {
+                let t = rng.below(n_tokens);
+                tokens_per_expert[x] += 1;
+                dispatched += 1;
+                if token_device(t) != expert_device(x) {
+                    offdevice += 1;
+                }
+                let _ = slot;
+            }
+        }
+    } else {
+        let k = if spec.router_type == "top1" { 1 } else { 2 };
+        let cap =
+            (((n_tokens as f64) * spec.capacity_factor * k as f64) / e as f64).max(1.0) as usize;
+        for t in 0..n_tokens {
+            for _ in 0..k {
+                let x = rng.categorical(&popularity);
+                if tokens_per_expert[x] < cap {
+                    tokens_per_expert[x] += 1;
+                    dispatched += 1;
+                    if token_device(t) != expert_device(x) {
+                        offdevice += 1;
+                    }
+                } else {
+                    dropped += 1;
+                }
+            }
+        }
+    }
+
+    let max = *tokens_per_expert.iter().max().unwrap_or(&0) as f64;
+    let mean = tokens_per_expert.iter().sum::<usize>() as f64 / e as f64;
+    RoutingTraffic {
+        tokens_per_expert,
+        offdevice_tokens: offdevice,
+        dispatched_tokens: dispatched,
+        imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+        drop_fraction: dropped as f64 / (n_tokens * (dispatched + dropped).max(1) / n_tokens.max(1)).max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ec_spec(e: usize, c: f64) -> MoeSpec {
+        MoeSpec {
+            num_experts: e,
+            capacity_factor: c,
+            router_type: "ec".into(),
+            moe_layers: vec![1],
+            group_size: 0,
+            renormalize: false,
+            bpr: false,
+        }
+    }
+
+    #[test]
+    fn expert_choice_is_perfectly_balanced() {
+        let mesh = MeshSpec { data_parallel: 1, expert_parallel: 4, model_parallel: 1 };
+        let t = simulate_routing(&ec_spec(8, 2.0), 256, &mesh, &mut Rng::new(0));
+        assert!((t.imbalance - 1.0).abs() < 1e-9, "EC must be balanced by construction");
+        assert_eq!(t.dispatched_tokens, 8 * (256 * 2 / 8));
+        assert_eq!(t.drop_fraction, 0.0);
+    }
+
+    #[test]
+    fn token_choice_skews_and_drops() {
+        let mut spec = ec_spec(8, 1.0);
+        spec.router_type = "top2".into();
+        let mesh = MeshSpec { data_parallel: 1, expert_parallel: 4, model_parallel: 1 };
+        let t = simulate_routing(&spec, 512, &mesh, &mut Rng::new(1));
+        assert!(t.imbalance > 1.0, "skewed router must imbalance token choice");
+        // Conservation: dispatched ≤ capacity bound.
+        let cap = (512.0 * 1.0 * 2.0 / 8.0) as usize;
+        assert!(t.tokens_per_expert.iter().all(|&n| n <= cap));
+    }
+
+    #[test]
+    fn all_to_all_volume_scales_with_d_model() {
+        let mesh = MeshSpec { data_parallel: 1, expert_parallel: 2, model_parallel: 1 };
+        let t = simulate_routing(&ec_spec(4, 1.0), 128, &mesh, &mut Rng::new(2));
+        assert_eq!(t.all_to_all_bytes(64) * 2, t.all_to_all_bytes(128));
+    }
+
+    #[test]
+    fn mesh_accounting() {
+        let mesh = MeshSpec { data_parallel: 2, expert_parallel: 4, model_parallel: 2 };
+        assert_eq!(mesh.devices(), 16);
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py` for
+//! why). Python never runs on this path: artifacts are compiled once at
+//! `Runtime::load_model` and then executed step after step by the trainer.
+//!
+//! Output convention (probed at bring-up, DESIGN.md): the artifacts are
+//! lowered with `return_tuple=True`, and this PJRT build returns the whole
+//! result as a *single tuple buffer* regardless of arity. Each step we sync
+//! the tuple to a host literal and decompose it; on the CPU client this is a
+//! memcpy, and the decomposed parameter literals are fed straight back into
+//! the next step without re-staging (see `rust/benches/runtime_step.rs`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{Manifest, ModelEntry};
+use crate::tensor::Tensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+pub struct LoadedModel {
+    pub entry: ModelEntry,
+    train: Option<xla::PjRtLoadedExecutable>,
+    eval: Option<xla::PjRtLoadedExecutable>,
+    features: Option<xla::PjRtLoadedExecutable>,
+}
+
+/// Scalar training metrics of one step/eval, keyed by manifest metric names.
+pub type Metrics = BTreeMap<String, f64>;
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?)
+    }
+
+    /// Load and compile the artifacts of one model. `kinds` selects which
+    /// executables to build ("train", "eval", "features") — compiling only
+    /// what an experiment needs keeps sweep startup fast (XLA compilation of
+    /// a train-step module dominates experiment startup; see EXPERIMENTS.md
+    /// §Perf).
+    pub fn load_model(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+        kinds: &[&str],
+    ) -> Result<LoadedModel> {
+        let entry = manifest.model(name)?.clone();
+        let get = |k: &str| -> Result<Option<xla::PjRtLoadedExecutable>> {
+            if !kinds.contains(&k) || !entry.artifacts.contains_key(k) {
+                return Ok(None);
+            }
+            Ok(Some(self.compile(&manifest.artifact_path(&entry, k)?)?))
+        };
+        let train = get("train")?;
+        let eval = get("eval")?;
+        let features = get("features")?;
+        Ok(LoadedModel { entry, train, eval, features })
+    }
+}
+
+impl LoadedModel {
+    /// Which artifact kinds have compiled executables.
+    pub fn has(&self, kind: &str) -> bool {
+        match kind {
+            "train" => self.train.is_some(),
+            "eval" => self.eval.is_some(),
+            "features" => self.features.is_some(),
+            _ => false,
+        }
+    }
+}
+
+/// Result of one executed train step: updated state literals + metrics.
+pub struct StepOutput {
+    pub params: Vec<xla::Literal>,
+    pub opt_state: Vec<xla::Literal>,
+    pub metrics: Metrics,
+}
+
+impl LoadedModel {
+    /// Execute one training step.
+    ///
+    /// `params` / `opt_state` are consumed in manifest order and returned
+    /// updated (so callers thread them through a loop); `batch` follows the
+    /// manifest batch signature; scalars are (lr, wd, step).
+    pub fn train_step(
+        &self,
+        params: Vec<xla::Literal>,
+        opt_state: Vec<xla::Literal>,
+        batch: &[Tensor],
+        lr: f64,
+        wd: f64,
+        step: u64,
+    ) -> Result<StepOutput> {
+        let exe = self.train.as_ref().context("train executable not loaded")?;
+        let e = &self.entry;
+        if params.len() != e.params.len()
+            || opt_state.len() != e.opt_state.len()
+            || batch.len() != e.batch.len()
+        {
+            bail!(
+                "signature mismatch: got {}/{}/{} params/opt/batch, want {}/{}/{}",
+                params.len(), opt_state.len(), batch.len(),
+                e.params.len(), e.opt_state.len(), e.batch.len()
+            );
+        }
+        let mut inputs: Vec<xla::Literal> = params;
+        inputs.extend(opt_state);
+        for t in batch {
+            inputs.push(t.to_literal()?);
+        }
+        inputs.push(Tensor::scalar_f32(lr as f32).to_literal()?);
+        inputs.push(Tensor::scalar_f32(wd as f32).to_literal()?);
+        inputs.push(Tensor::scalar_f32(step as f32).to_literal()?);
+
+        let out = exe.execute::<xla::Literal>(&inputs)?;
+        let mut flat = out[0][0].to_literal_sync()?.to_tuple()?;
+        let expected = e.params.len() + e.opt_state.len() + e.metrics.len();
+        if flat.len() != expected {
+            bail!("train step returned {} outputs, expected {expected}", flat.len());
+        }
+        let metrics_lits = flat.split_off(e.params.len() + e.opt_state.len());
+        let opt_lits = flat.split_off(e.params.len());
+        let metrics = extract_metrics(&e.metrics, &metrics_lits)?;
+        Ok(StepOutput { params: flat, opt_state: opt_lits, metrics })
+    }
+
+    /// Evaluate one batch (no state update).
+    pub fn eval_step(&self, params: &[xla::Literal], batch: &[Tensor]) -> Result<Metrics> {
+        let exe = self.eval.as_ref().context("eval executable not loaded")?;
+        let e = &self.entry;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + batch.len());
+        for p in params {
+            // Literal has no cheap clone; round-trip through host tensor.
+            inputs.push(Tensor::from_literal(p)?.to_literal()?);
+        }
+        for t in batch {
+            inputs.push(t.to_literal()?);
+        }
+        let out = exe.execute::<xla::Literal>(&inputs)?;
+        let flat = out[0][0].to_literal_sync()?.to_tuple()?;
+        extract_metrics(&e.metrics, &flat)
+    }
+
+    /// Frozen-feature extraction (vit only): images [B,H,W,C] → [B, d].
+    pub fn features(&self, params: &[xla::Literal], images: &Tensor) -> Result<Tensor> {
+        let exe = self.features.as_ref().context("features executable not loaded")?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 1);
+        for p in params {
+            inputs.push(Tensor::from_literal(p)?.to_literal()?);
+        }
+        inputs.push(images.to_literal()?);
+        let out = exe.execute::<xla::Literal>(&inputs)?;
+        let flat = out[0][0].to_literal_sync()?.to_tuple()?;
+        Tensor::from_literal(&flat[0])
+    }
+}
+
+fn extract_metrics(names: &[String], lits: &[xla::Literal]) -> Result<Metrics> {
+    let mut m = Metrics::new();
+    for (name, lit) in names.iter().zip(lits) {
+        let t = Tensor::from_literal(lit)?;
+        m.insert(name.clone(), t.f32s()?[0] as f64);
+    }
+    Ok(m)
+}
+
+/// Convert a checkpoint's tensors (in manifest order) to input literals.
+pub fn literals_from_checkpoint(
+    ck: &crate::checkpoint::Checkpoint,
+    specs: &[crate::manifest::TensorSpec],
+) -> Result<Vec<xla::Literal>> {
+    specs
+        .iter()
+        .map(|s| {
+            let t = ck.get(&s.name)?;
+            if t.shape != s.shape {
+                bail!("tensor `{}` shape {:?} != manifest {:?}", s.name, t.shape, s.shape);
+            }
+            t.to_literal()
+        })
+        .collect()
+}
+
+/// Convert state literals back into a named checkpoint.
+pub fn checkpoint_from_literals(
+    model: &str,
+    step: u64,
+    provenance: &str,
+    specs: &[crate::manifest::TensorSpec],
+    lits: &[xla::Literal],
+) -> Result<crate::checkpoint::Checkpoint> {
+    let mut ck = crate::checkpoint::Checkpoint::new(model, step, provenance);
+    for (s, l) in specs.iter().zip(lits) {
+        ck.insert(&s.name, Tensor::from_literal(l)?);
+    }
+    Ok(ck)
+}

@@ -1,0 +1,184 @@
+//! Host tensor type: the common currency between checkpoints, the upcycling
+//! surgery, the data pipelines and the PJRT runtime.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype `{s}`"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Dense host tensor. Data lives in one of two typed vecs; the two-variant
+/// enum keeps conversions explicit (no bit-punning surprises in checkpoints).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; numel(shape)]) }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![1.0; numel(shape)]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Mean of f32 elements (metrics convenience).
+    pub fn mean(&self) -> f32 {
+        match &self.data {
+            Data::F32(v) if !v.is_empty() => v.iter().sum::<f32>() / v.len() as f32,
+            _ => 0.0,
+        }
+    }
+
+    /// L2 norm of f32 elements.
+    pub fn l2(&self) -> f32 {
+        match &self.data {
+            Data::F32(v) => v.iter().map(|x| x * x).sum::<f32>().sqrt(),
+            _ => 0.0,
+        }
+    }
+
+    // ---- PJRT literal bridge ------------------------------------------------
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v.as_slice()),
+            Data::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::from_f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::from_i32(&dims, lit.to_vec::<i32>()?)),
+            t => bail!("unsupported literal element type {t:?}"),
+        }
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!((t.mean() - 3.5).abs() < 1e-6);
+        assert!(t.i32s().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 2], vec![1., -2., 3.5, 0.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[3], vec![5, -7, 11]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_f32(0.25);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,244 @@
+//! **The paper's algorithm: sparse upcycling checkpoint surgery** (Figure 1).
+//!
+//! Takes a dense checkpoint and a target sparse (MoE) model entry with the
+//! same block geometry, and produces the warm-started sparse checkpoint:
+//!
+//! * every non-MoE tensor is copied across unchanged;
+//! * each MoE layer's experts `.../moe/wi [E,d,f]`, `.../moe/wo [E,f,d]` are
+//!   `E` identical copies of the dense layer's `.../mlp/wi`, `.../mlp/wo`
+//!   (optionally perturbed with independent Gaussian noise — Appendix B.9,
+//!   or randomly re-initialized — the Appendix B.5 ablation);
+//! * routers `.../moe/router [d,E]` are freshly initialized N(0, 0.02);
+//! * optimizer state is either carried over (vision, Appendix B.6) with the
+//!   dense accumulators broadcast across experts, or zeroed (language).
+//!
+//! Also implements the **dense upcycling** baseline of Fig. 5: depth-tiling
+//! a shallow dense checkpoint into a deeper dense model (Rae et al. 2021).
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::manifest::ModelEntry;
+use crate::tensor::{numel, Tensor};
+use crate::util::rng::Rng;
+
+/// Options for the surgery; defaults reproduce the paper's standard recipe.
+#[derive(Debug, Clone)]
+pub struct UpcycleOptions {
+    /// Copy dense MLP weights into experts (false = Appendix B.5 ablation).
+    pub load_experts: bool,
+    /// Stddev of independent Gaussian noise added per expert (Appendix B.9).
+    pub expert_noise: f32,
+    /// Router init stddev (paper §A.1.1: 0.02).
+    pub router_stddev: f32,
+    /// Seed for router init / noise / random experts.
+    pub seed: u64,
+}
+
+impl Default for UpcycleOptions {
+    fn default() -> Self {
+        UpcycleOptions { load_experts: true, expert_noise: 0.0, router_stddev: 0.02, seed: 0 }
+    }
+}
+
+/// Dense params → sparse params.
+pub fn upcycle_params(
+    dense: &Checkpoint,
+    sparse: &ModelEntry,
+    opts: &UpcycleOptions,
+) -> Result<Checkpoint> {
+    let mut rng = Rng::new(opts.seed);
+    let mut out = Checkpoint::new(
+        &sparse.name,
+        dense.step,
+        &format!("upcycled from {} @ step {}", dense.model, dense.step),
+    );
+    for (i, spec) in sparse.params.iter().enumerate() {
+        let name = &spec.name;
+        let mut sub = rng.fork(i as u64);
+        let t = if name.contains("/moe/router") {
+            Tensor::from_f32(&spec.shape, sub.normal_vec(numel(&spec.shape), opts.router_stddev))
+        } else if name.contains("/moe/wi") || name.contains("/moe/wo") {
+            if opts.load_experts {
+                let dense_name = name.replace("/moe/", "/mlp/");
+                let src = dense
+                    .get(&dense_name)
+                    .with_context(|| format!("dense parent lacks `{dense_name}`"))?;
+                replicate_experts(src, spec.shape[0], opts.expert_noise, &mut sub)?
+            } else {
+                // Appendix B.5: random expert init, same fan-in scaling the
+                // from-scratch model would use.
+                let stddev = spec.init.as_ref().map(|i| i.stddev).unwrap_or(0.02);
+                Tensor::from_f32(&spec.shape, sub.normal_vec(numel(&spec.shape), stddev))
+            }
+        } else {
+            dense
+                .get(name)
+                .with_context(|| format!("dense parent lacks `{name}`"))?
+                .clone()
+        };
+        if t.shape != spec.shape {
+            bail!("surgery shape mismatch for `{name}`: {:?} vs {:?}", t.shape, spec.shape);
+        }
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Dense optimizer state → sparse optimizer state (Appendix B.6).
+///
+/// `load_optimizer=false` (the paper's language setting) zeroes everything;
+/// `true` (vision) broadcasts each dense MLP accumulator across experts and
+/// zeroes router state (footnote 6: routers have nothing to resume).
+pub fn upcycle_opt_state(
+    dense_opt: &Checkpoint,
+    sparse: &ModelEntry,
+    load_optimizer: bool,
+) -> Result<Checkpoint> {
+    let mut out = Checkpoint::new(
+        &sparse.name,
+        dense_opt.step,
+        &format!("opt state upcycled from {} (load={load_optimizer})", dense_opt.model),
+    );
+    for spec in &sparse.opt_state {
+        let name = &spec.name; // e.g. "opt/enc/block_01/moe/wi/vr"
+        let t = if !load_optimizer || name.contains("/moe/router/") {
+            Tensor::zeros(&spec.shape)
+        } else if name.contains("/moe/wi/") || name.contains("/moe/wo/") {
+            let dense_name = name.replace("/moe/", "/mlp/");
+            let src = dense_opt
+                .get(&dense_name)
+                .with_context(|| format!("dense opt state lacks `{dense_name}`"))?;
+            replicate_experts(src, spec.shape[0], 0.0, &mut Rng::new(0))?
+        } else {
+            dense_opt
+                .get(name)
+                .with_context(|| format!("dense opt state lacks `{name}`"))?
+                .clone()
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Tile a tensor E times along a new leading axis, optionally adding
+/// independent Gaussian noise to every copy.
+fn replicate_experts(src: &Tensor, e: usize, noise: f32, rng: &mut Rng) -> Result<Tensor> {
+    let data = src.f32s()?;
+    let mut out = Vec::with_capacity(e * data.len());
+    for _ in 0..e {
+        out.extend_from_slice(data);
+    }
+    if noise > 0.0 {
+        for x in &mut out {
+            *x += rng.normal() * noise;
+        }
+    }
+    let mut shape = vec![e];
+    shape.extend_from_slice(&src.shape);
+    Ok(Tensor::from_f32(&shape, out))
+}
+
+// ---------------------------------------------------------------------------
+// Dense upcycling baseline (Fig. 5): depth tiling.
+// ---------------------------------------------------------------------------
+
+/// Map new block index → source block index (order-preserving contiguous
+/// tiling, the Gopher pattern).
+pub fn tile_source_block(new_idx: usize, n_new: usize, n_old: usize) -> usize {
+    new_idx * n_old / n_new
+}
+
+/// Warm-start a deeper dense model from a shallower dense checkpoint.
+pub fn depth_tile_params(
+    dense: &Checkpoint,
+    dense_entry: &ModelEntry,
+    tiled_entry: &ModelEntry,
+) -> Result<Checkpoint> {
+    let mut out = Checkpoint::new(
+        &tiled_entry.name,
+        dense.step,
+        &format!("depth-tiled from {} @ step {}", dense.model, dense.step),
+    );
+    for spec in &tiled_entry.params {
+        let name = &spec.name;
+        let t = if let Some((tower, block, rest)) = split_block_name(name) {
+            let (n_new, n_old) = if tower == "enc" {
+                (tiled_entry.config.num_layers, dense_entry.config.num_layers)
+            } else {
+                (tiled_entry.config.num_decoder_layers, dense_entry.config.num_decoder_layers)
+            };
+            let src = tile_source_block(block, n_new, n_old);
+            let src_name = format!("{tower}/block_{src:02}/{rest}");
+            dense
+                .get(&src_name)
+                .with_context(|| format!("tiling source `{src_name}` missing"))?
+                .clone()
+        } else {
+            dense.get(name)?.clone()
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// "enc/block_03/attn/wq" → ("enc", 3, "attn/wq")
+fn split_block_name(name: &str) -> Option<(&str, usize, &str)> {
+    let (tower, rest) = name.split_once("/block_")?;
+    let (num, tail) = rest.split_once('/')?;
+    Some((tower, num.parse().ok()?, tail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicate_is_exact_copies() {
+        let src = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = replicate_experts(&src, 4, 0.0, &mut Rng::new(0)).unwrap();
+        assert_eq!(t.shape, vec![4, 2, 3]);
+        let d = t.f32s().unwrap();
+        for e in 0..4 {
+            assert_eq!(&d[e * 6..(e + 1) * 6], src.f32s().unwrap());
+        }
+    }
+
+    #[test]
+    fn replicate_noise_diversifies() {
+        let src = Tensor::from_f32(&[8], vec![0.0; 8]);
+        let t = replicate_experts(&src, 2, 0.1, &mut Rng::new(1)).unwrap();
+        let d = t.f32s().unwrap();
+        assert_ne!(&d[0..8], &d[8..16], "noise must differ per expert");
+        assert!(d.iter().all(|x| x.abs() < 1.0));
+    }
+
+    #[test]
+    fn tiling_pattern_is_order_preserving() {
+        // 4 → 6 blocks: [0,0,1,2,2,3] with i*4/6.
+        let got: Vec<usize> = (0..6).map(|i| tile_source_block(i, 6, 4)).collect();
+        assert_eq!(got, vec![0, 0, 1, 2, 2, 3]);
+        // Identity when sizes match.
+        for i in 0..5 {
+            assert_eq!(tile_source_block(i, 5, 5), i);
+        }
+        // Monotone non-decreasing, covers all source blocks.
+        let got: Vec<usize> = (0..12).map(|i| tile_source_block(i, 12, 4)).collect();
+        assert!(got.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(got.iter().copied().max(), Some(3));
+        assert_eq!(got[0], 0);
+    }
+
+    #[test]
+    fn split_block_name_works() {
+        assert_eq!(
+            split_block_name("enc/block_03/attn/wq"),
+            Some(("enc", 3, "attn/wq"))
+        );
+        assert_eq!(
+            split_block_name("dec/block_11/moe/wi"),
+            Some(("dec", 11, "moe/wi"))
+        );
+        assert_eq!(split_block_name("token_embed"), None);
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean/σ/min reporting, used by `rust/benches/*`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10}  mean {:>12}  σ {:>10}  min {:>12}",
+            self.name,
+            format!("x{}", self.iters),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+
+    pub fn throughput(&self, items: f64, unit: &str) {
+        let per_sec = items / (self.mean_ns / 1e9);
+        println!("{:<44} {:>24}", format!("  ↳ {}", self.name), format!("{per_sec:.1} {unit}/s"));
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` with automatic iteration count targeting ~`target_ms` of total
+/// measurement time (min 3 iters), after 1 warmup call.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos() as f64;
+    let iters = ((target_ms as f64 * 1e6 / once_ns.max(1.0)) as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        min_ns: min,
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 1, || {
+            n = n.wrapping_add(1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = parse("experiment fig2 --steps 100 --scale=tiny --verbose --out results");
+        assert_eq!(a.positional, vec!["experiment", "fig2"]);
+        assert_eq!(a.u64("steps", 0).unwrap(), 100);
+        assert_eq!(a.str("scale", ""), "tiny");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str("out", ""), "results");
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run");
+        assert_eq!(a.u64("steps", 42).unwrap(), 42);
+        assert!(a.req("model").is_err());
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("--steps banana");
+        assert!(a.u64("steps", 0).is_err());
+    }
+}

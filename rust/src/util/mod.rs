@@ -1,0 +1,7 @@
+//! In-tree utility substrates (this environment has no network registry, so
+//! JSON, RNG, CLI parsing and the bench harness are implemented here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,273 @@
+//! Deterministic RNG substrate: PCG32 core + the distributions the data
+//! pipelines and surgery need (normal, categorical, Zipf, permutation).
+//!
+//! Offline environment: the `rand` crate is unavailable; the coordinator
+//! needs *reproducible* streams anyway (every experiment is keyed by an
+//! explicit seed so figure regeneration is deterministic).
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut r = Rng { state: 0, inc: (stream << 1) | 1 };
+        r.next_u32();
+        r.state = r.state.wrapping_add(seed);
+        r.next_u32();
+        r
+    }
+
+    /// Derive an independent child stream (hash-mixes the label).
+    pub fn fork(&mut self, label: u64) -> Rng {
+        let s = self.next_u64() ^ splitmix(label);
+        Rng::with_stream(s, splitmix(s ^ 0x9e37_79b9_7f4a_7c15))
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire rejection-free for our sizes).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.f32();
+            if u1 > 1e-9 {
+                let u2 = self.f32();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_vec(&mut self, n: usize, stddev: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * stddev).collect()
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut t = self.f32() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (unigram skew for
+    /// the synthetic corpus; matches natural-language token statistics).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF on the harmonic partial sums would need a table; for
+        // data generation we use the rejection-free approximation of
+        // bounded inverse sampling, adequate for corpus statistics.
+        let u = self.f64();
+        let hmax = harmonic(n, s);
+        let target = u * hmax;
+        // Binary search over the monotone partial-sum function.
+        let (mut lo, mut hi) = (1usize, n);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if harmonic(mid, s) < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n), order randomized.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Precomputed Zipf CDF: O(log n) sampling with zero per-sample `powf`.
+///
+/// `Rng::zipf` recomputes generalized harmonic numbers inside its binary
+/// search — O(n log n) powf calls per sample, which made large-vocab corpus
+/// generation cost ~38 ms/batch (see EXPERIMENTS.md §Perf). Pipelines hold
+/// one table per distribution instead.
+#[derive(Clone, Debug)]
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(n: usize, s: f64) -> ZipfTable {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s);
+            cdf.push(acc);
+        }
+        ZipfTable { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let target = rng.f64() * self.cdf.last().copied().unwrap_or(1.0);
+        match self.cdf.binary_search_by(|v| v.partial_cmp(&target).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+fn harmonic(n: usize, s: f64) -> f64 {
+    // Cached generalized harmonic numbers would matter for huge n; our
+    // vocabularies are ≤ 32k and generation is not the bottleneck (see
+    // rust/benches/data_pipeline.rs).
+    (1..=n).map(|k| (k as f64).powf(-s)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_independent() {
+        let mut r = Rng::new(1);
+        let mut c1 = r.fork(1);
+        let mut c2 = r.fork(2);
+        let xs: Vec<u32> = (0..8).map(|_| c1.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| c2.next_u32()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 20000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Rng::new(5);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..5000 {
+            counts[r.zipf(50, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[49] * 4);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(2);
+        let mut xs: Vec<usize> = (0..40).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..40).collect::<Vec<_>>());
+    }
+}
+
+#[cfg(test)]
+mod zipf_table_tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_direct_zipf_distribution() {
+        let n = 50;
+        let s = 1.1;
+        let table = ZipfTable::new(n, s);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0usize; n];
+        for _ in 0..20000 {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        // Same qualitative shape as Rng::zipf's test: heavy head.
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[49] * 4);
+        // Head frequency close to analytic p(0) = 1/H(n,s).
+        let h: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let expect = 20000.0 / h;
+        assert!((counts[0] as f64 - expect).abs() < expect * 0.15,
+                "head count {} vs analytic {expect}", counts[0]);
+    }
+
+    #[test]
+    fn table_sample_in_range() {
+        let table = ZipfTable::new(7, 1.3);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(table.sample(&mut rng) < 7);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Property tests for the data substrates and supporting math
+//! (hand-rolled case generation; deterministic seeds).
+
+use sparse_upcycle::coordinator::Schedule;
+use sparse_upcycle::data::text::{
+    sentinel, span_corrupt, ClassificationPipeline, HmmCorpus, HmmSpec, TextPipeline, EOS,
+    FIRST_CONTENT, NUM_SENTINELS, PAD,
+};
+use sparse_upcycle::data::vision::{VisionPipeline, VisionSpec, NUM_CLASSES};
+use sparse_upcycle::linalg::{argmax_rows, ridge, Mat};
+use sparse_upcycle::util::rng::Rng;
+
+/// Property: span corruption always produces fixed-shape, well-formed
+/// examples over random raw lengths, vocab sizes and shapes.
+#[test]
+fn prop_span_corruption_wellformed() {
+    let mut rng = Rng::new(1);
+    for case in 0..128 {
+        let vocab = [128usize, 256, 512][rng.below(3)];
+        let enc_len = rng.range(12, 48);
+        let dec_len = rng.range(8, 24);
+        let raw_len = rng.range(10, 80);
+        let corpus = HmmCorpus::new(HmmSpec { vocab_size: vocab, ..Default::default() }, case);
+        let raw = corpus.sample(raw_len, &mut rng);
+        let ex = span_corrupt(&raw, vocab, enc_len, dec_len, &mut rng);
+
+        assert_eq!(ex.enc_tokens.len(), enc_len);
+        assert_eq!(ex.dec_tokens.len(), dec_len);
+        assert_eq!(ex.targets.len(), dec_len);
+        assert_eq!(ex.loss_mask.len(), dec_len);
+        // Shift-right invariant.
+        assert_eq!(ex.dec_tokens[0], PAD);
+        for i in 1..dec_len {
+            assert_eq!(ex.dec_tokens[i], ex.targets[i - 1], "case {case} pos {i}");
+        }
+        // Mask ⊆ non-pad targets; sentinels within range; ids in vocab.
+        for i in 0..dec_len {
+            if ex.loss_mask[i] == 0.0 {
+                assert_eq!(ex.targets[i], PAD);
+            }
+            assert!((ex.targets[i] as usize) < vocab);
+        }
+        for &t in &ex.enc_tokens {
+            assert!((t as usize) < vocab);
+            assert!(t >= PAD);
+        }
+        // Every sentinel that appears in the targets also appears in the
+        // encoder input (T5 pairing invariant), as long as it wasn't
+        // truncated away from the encoder side.
+        let first_sent = sentinel(vocab, NUM_SENTINELS - 1);
+        let enc_sents: Vec<i32> =
+            ex.enc_tokens.iter().copied().filter(|&t| t >= first_sent).collect();
+        for (k, &s) in enc_sents.iter().enumerate() {
+            assert_eq!(s, sentinel(vocab, k), "sentinels in order");
+        }
+    }
+}
+
+/// Property: corruption rate lands near the T5 target (15%) on average.
+#[test]
+fn prop_corruption_rate() {
+    let corpus = HmmCorpus::new(HmmSpec::default(), 5);
+    let mut rng = Rng::new(5);
+    let mut masked = 0usize;
+    let mut total = 0usize;
+    for _ in 0..200 {
+        let raw = corpus.sample(60, &mut rng);
+        let ex = span_corrupt(&raw, 256, 64, 32, &mut rng);
+        // Count masked source tokens = targets that are content (not
+        // sentinel/EOS/PAD).
+        let first_sent = sentinel(256, NUM_SENTINELS - 1);
+        masked += ex
+            .targets
+            .iter()
+            .filter(|&&t| t >= FIRST_CONTENT && t < first_sent)
+            .count();
+        total += 60;
+    }
+    let rate = masked as f64 / total as f64;
+    assert!((0.08..=0.22).contains(&rate), "corruption rate {rate} outside band");
+}
+
+/// Property: pipeline shards are deterministic, disjoint, and batches are
+/// always the right shape.
+#[test]
+fn prop_pipeline_sharding() {
+    for shard in 0..4u64 {
+        let mk = || {
+            let c = HmmCorpus::new(HmmSpec::default(), 1);
+            TextPipeline::new(c, 4, 32, 16, 9, shard)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..3 {
+            let (ba, bb) = (a.next_batch(), b.next_batch());
+            assert_eq!(ba[0], bb[0], "shard {shard} must be deterministic");
+            assert_eq!(ba[0].shape, vec![4, 32]);
+            assert_eq!(ba[3].shape, vec![4, 16]);
+        }
+    }
+}
+
+/// Property: classification batches encode labels consistently and the
+/// label token never collides with PAD/EOS.
+#[test]
+fn prop_classification_labels() {
+    let mut p = ClassificationPipeline::new(8, 256, 8, 32, 16, 2);
+    for _ in 0..10 {
+        let (tensors, labels) = p.next_batch();
+        let tgt = tensors[2].i32s().unwrap();
+        let mask = tensors[3].f32s().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            let tok = ClassificationPipeline::label_token(l);
+            assert!(tok > EOS);
+            assert_eq!(tgt[i * 16], tok);
+            assert_eq!(tgt[i * 16 + 1], EOS);
+            assert_eq!(mask[i * 16], 1.0);
+            assert_eq!(&mask[i * 16 + 2..i * 16 + 16], &[0.0; 14]);
+        }
+    }
+}
+
+/// Property: vision batches hit every class eventually and pixel stats stay
+/// in a sane range for any seed.
+#[test]
+fn prop_vision_coverage_and_range() {
+    let mut seen = vec![false; NUM_CLASSES];
+    let mut p = VisionPipeline::new(VisionSpec::default(), 32, 4, 0);
+    for _ in 0..10 {
+        let (tensors, labels) = p.next_batch();
+        for l in labels {
+            seen[l] = true;
+        }
+        let px = tensors[0].f32s().unwrap();
+        let mean = px.iter().sum::<f32>() / px.len() as f32;
+        assert!((0.2..0.8).contains(&mean), "mean pixel {mean}");
+        assert!(px.iter().all(|v| (-1.0..=2.0).contains(v)));
+    }
+    assert!(seen.iter().all(|&s| s), "all 16 classes must appear");
+}
+
+/// Property: ridge regression separates the (noiseless) vision classes from
+/// raw pixels — a sanity floor for the few-shot probe machinery.
+#[test]
+fn prop_ridge_separates_easy_classes() {
+    let spec = VisionSpec { noise: 0.0, distractors: 0, ..Default::default() };
+    let mut train = VisionPipeline::new(spec.clone(), 1, 7, 0);
+    let (tensors, labels) = train.class_balanced(5);
+    let px = tensors[0].f32s().unwrap();
+    let n = labels.len();
+    let dim = px.len() / n;
+    let x = Mat::from_rows(
+        &(0..n).map(|i| px[i * dim..(i + 1) * dim].iter().map(|&v| v as f64).collect()).collect::<Vec<_>>(),
+    );
+    let mut y = Mat::zeros(n, NUM_CLASSES);
+    for (i, &l) in labels.iter().enumerate() {
+        *y.at_mut(i, l) = 1.0;
+    }
+    let w = ridge(&x, &y, 1e-3).unwrap();
+    let preds = argmax_rows(&x.mul(&w));
+    let train_acc =
+        preds.iter().zip(&labels).filter(|(p, l)| **p == **l).count() as f64 / n as f64;
+    assert!(train_acc > 0.9, "pixel ridge should fit the support set, got {train_acc}");
+}
+
+/// Property: LR schedule is non-negative, warmup is monotone increasing,
+/// decay is monotone decreasing, for random schedule parameters.
+#[test]
+fn prop_schedule_shape() {
+    let mut rng = Rng::new(11);
+    for _ in 0..64 {
+        let warmup = rng.range(1, 200) as u64;
+        let peak = 0.001 + rng.f64() * 0.1;
+        let s = Schedule::t5_pretrain(peak, warmup);
+        let mut prev = 0.0;
+        for step in 1..=warmup {
+            let lr = s.lr(step);
+            assert!(lr >= prev - 1e-12, "warmup must be monotone");
+            prev = lr;
+        }
+        let mut prev = f64::MAX;
+        for step in (warmup..warmup + 500).step_by(7) {
+            let lr = s.lr(step.max(1));
+            assert!(lr <= prev + 1e-12, "decay must be monotone");
+            assert!(lr >= 0.0 && lr <= peak * 1.0001);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration tests: the full stack — manifest → PJRT compile → surgery →
+//! train/eval through real AOT artifacts. Every test no-ops gracefully when
+//! `artifacts/` has not been built (CI without `make artifacts`).
+//!
+//! Compiling a train module costs ~30 s on this single-core CPU, so the
+//! whole file shares ONE sequential test (`full_stack`) that threads through
+//! the scenarios instead of paying the compile per test.
+
+use sparse_upcycle::coordinator::{Evaluator, Schedule, TrainConfig, TrainState};
+use sparse_upcycle::data::text::{HmmCorpus, HmmSpec, TextPipeline};
+use sparse_upcycle::init::{init_opt_state, init_params};
+use sparse_upcycle::manifest::Manifest;
+use sparse_upcycle::runtime::Runtime;
+use sparse_upcycle::upcycle::{upcycle_params, UpcycleOptions};
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+}
+
+#[test]
+fn full_stack() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipping integration tests: run `make artifacts` first");
+        return;
+    };
+    let runtime = Runtime::new().unwrap();
+
+    // ---------------------------------------------------------------- dense
+    let dense_entry = manifest.model("lm_tiny_dense").unwrap().clone();
+    let dense = runtime
+        .load_model(&manifest, "lm_tiny_dense", &["train", "eval"])
+        .unwrap();
+
+    let mut state = TrainState::from_checkpoints(
+        &dense_entry,
+        &init_params(&dense_entry, 3).unwrap(),
+        &init_opt_state(&dense_entry).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(state.params.len(), dense_entry.params.len());
+
+    let corpus = HmmCorpus::new(
+        HmmSpec { vocab_size: dense_entry.config.vocab_size, ..Default::default() },
+        1,
+    );
+    let mut pipe = TextPipeline::new(
+        corpus,
+        dense_entry.config.batch_size,
+        dense_entry.config.enc_len,
+        dense_entry.config.dec_len,
+        1,
+        0,
+    );
+    let mut held = TextPipeline::new(
+        HmmCorpus::new(
+            HmmSpec { vocab_size: dense_entry.config.vocab_size, ..Default::default() },
+            1,
+        ),
+        dense_entry.config.batch_size,
+        dense_entry.config.enc_len,
+        dense_entry.config.dec_len,
+        1,
+        99,
+    );
+    let evaluator = Evaluator::from_source(&mut held, 2);
+
+    // Scenario 1: training reduces loss and improves on the random baseline.
+    let m0 = evaluator.eval(&dense, &state).unwrap();
+    let loss0 = m0["loss"];
+    // Random init ⇒ loss ≈ ln(vocab) = ln 256 ≈ 5.55.
+    assert!((4.5..7.0).contains(&loss0), "initial loss {loss0} implausible");
+
+    let cfg = TrainConfig {
+        steps: 60,
+        schedule: Schedule::t5_pretrain(0.01, 20),
+        weight_decay: 0.0,
+        eval_every: 0,
+        log_every: 0,
+    };
+    let series = sparse_upcycle::coordinator::train(
+        &dense, &mut state, &mut pipe, &evaluator, &cfg, "t",
+    )
+    .unwrap();
+    let loss1 = series.last().unwrap().values["loss"];
+    assert!(
+        loss1 < loss0 - 0.3,
+        "60 steps must reduce held-out loss materially: {loss0} -> {loss1}"
+    );
+    assert_eq!(state.step, 60);
+
+    // Scenario 2: checkpoint round-trip preserves evaluation exactly.
+    let (p_ck, o_ck) = state.to_checkpoints(&dense_entry, "it").unwrap();
+    let dir = std::env::temp_dir().join("supc_integration");
+    let pp = dir.join("p.supc");
+    let op = dir.join("o.supc");
+    p_ck.save(&pp).unwrap();
+    o_ck.save(&op).unwrap();
+    let p_back = sparse_upcycle::checkpoint::Checkpoint::load(&pp).unwrap();
+    let o_back = sparse_upcycle::checkpoint::Checkpoint::load(&op).unwrap();
+    let state2 = TrainState::from_checkpoints(&dense_entry, &p_back, &o_back).unwrap();
+    let m_a = evaluator.eval(&dense, &state).unwrap();
+    let m_b = evaluator.eval(&dense, &state2).unwrap();
+    assert_eq!(m_a["loss"], m_b["loss"], "checkpoint round-trip must be exact");
+
+    // Scenario 3: upcycled model evaluates close to the parent at step 0
+    // (within the function-preservation band) and trains further.
+    let sparse_entry = manifest.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let sparse_params =
+        upcycle_params(&p_ck, &sparse_entry, &UpcycleOptions::default()).unwrap();
+    let sparse = runtime
+        .load_model(&manifest, "lm_tiny_moe_e8_c2", &["train", "eval"])
+        .unwrap();
+    let mut sp_state = TrainState::from_checkpoints(
+        &sparse_entry,
+        &sparse_params,
+        &init_opt_state(&sparse_entry).unwrap(),
+    )
+    .unwrap();
+    sp_state.step = state.step;
+    let m_sp0 = evaluator.eval(&sparse, &sp_state).unwrap();
+    assert!(
+        (m_sp0["loss"] - m_a["loss"]).abs() < 1.0,
+        "surgery must roughly preserve quality: dense {} vs upcycled {}",
+        m_a["loss"],
+        m_sp0["loss"]
+    );
+    assert!(m_sp0["coverage"] > 0.5, "EC routing must reach most tokens");
+
+    let cfg = TrainConfig {
+        steps: 40,
+        schedule: Schedule::t5_pretrain(0.01, 20),
+        weight_decay: 0.0,
+        eval_every: 0,
+        log_every: 0,
+    };
+    let mut pipe2 = TextPipeline::new(
+        HmmCorpus::new(
+            HmmSpec { vocab_size: dense_entry.config.vocab_size, ..Default::default() },
+            1,
+        ),
+        dense_entry.config.batch_size,
+        dense_entry.config.enc_len,
+        dense_entry.config.dec_len,
+        1,
+        2,
+    );
+    let s2 = sparse_upcycle::coordinator::train(
+        &sparse, &mut sp_state, &mut pipe2, &evaluator, &cfg, "up",
+    )
+    .unwrap();
+    let loss_sp = s2.last().unwrap().values["loss"];
+    assert!(
+        loss_sp < m_sp0["loss"],
+        "upcycled training must improve: {} -> {loss_sp}",
+        m_sp0["loss"]
+    );
+
+    // Scenario 4: signature mismatches are rejected, not silently mangled.
+    let bad = TrainState::from_checkpoints(
+        &sparse_entry,
+        &p_ck, // dense checkpoint into sparse signature
+        &init_opt_state(&sparse_entry).unwrap(),
+    );
+    assert!(bad.is_err(), "dense checkpoint must not bind to sparse signature");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

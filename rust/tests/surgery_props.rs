@@ -1,0 +1,208 @@
+//! Property tests for the upcycling surgery (hand-rolled generator loop —
+//! proptest is unavailable offline; `Rng` provides the shrink-free random
+//! case generation, 64 cases per property, all seeds deterministic).
+
+use sparse_upcycle::checkpoint::Checkpoint;
+use sparse_upcycle::init::{init_opt_state, init_params};
+use sparse_upcycle::manifest::Manifest;
+use sparse_upcycle::upcycle::{
+    depth_tile_params, tile_source_block, upcycle_opt_state, upcycle_params, UpcycleOptions,
+};
+use sparse_upcycle::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+}
+
+/// Property: for every MoE weight tensor, every expert slice is bit-equal to
+/// the dense parent's MLP weights; every non-MoE tensor is copied verbatim;
+/// routers match the requested init scale statistically.
+#[test]
+fn prop_surgery_is_exact_replication() {
+    let Some(m) = manifest() else { return };
+    let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
+    let mut seeds = Rng::new(42);
+    for case in 0..8 {
+        let seed = seeds.next_u64();
+        let dense = init_params(&dense_entry, seed).unwrap();
+        for target in ["lm_tiny_moe_e8_c2", "lm_tiny_moe_e2_c2", "lm_tiny_moe_last2"] {
+            let sparse_entry = m.model(target).unwrap().clone();
+            let opts = UpcycleOptions { seed: seed ^ 1, ..Default::default() };
+            let sparse = upcycle_params(&dense, &sparse_entry, &opts).unwrap();
+            for spec in &sparse_entry.params {
+                let t = sparse.get(&spec.name).unwrap();
+                assert_eq!(t.shape, spec.shape, "case {case} {target} {}", spec.name);
+                if spec.name.contains("/moe/wi") || spec.name.contains("/moe/wo") {
+                    let src = dense.get(&spec.name.replace("/moe/", "/mlp/")).unwrap();
+                    let e = spec.shape[0];
+                    let n = src.numel();
+                    let data = t.f32s().unwrap();
+                    for x in 0..e {
+                        assert_eq!(
+                            &data[x * n..(x + 1) * n],
+                            src.f32s().unwrap(),
+                            "expert {x} of {} must be a bit-exact copy",
+                            spec.name
+                        );
+                    }
+                } else if spec.name.contains("/moe/router") {
+                    let data = t.f32s().unwrap();
+                    let std = (data.iter().map(|v| v * v).sum::<f32>()
+                        / data.len() as f32)
+                        .sqrt();
+                    assert!(std < 0.1, "router init too large: {std}");
+                    assert!(data.iter().any(|v| *v != 0.0), "router must not be zero");
+                } else {
+                    assert_eq!(t, dense.get(&spec.name).unwrap(), "{} must copy", spec.name);
+                }
+            }
+        }
+    }
+}
+
+/// Property: surgery is deterministic in its seed and differs across seeds
+/// (router init only).
+#[test]
+fn prop_surgery_seed_determinism() {
+    let Some(m) = manifest() else { return };
+    let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
+    let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let dense = init_params(&dense_entry, 7).unwrap();
+    let a = upcycle_params(&dense, &sparse_entry, &UpcycleOptions { seed: 5, ..Default::default() }).unwrap();
+    let b = upcycle_params(&dense, &sparse_entry, &UpcycleOptions { seed: 5, ..Default::default() }).unwrap();
+    let c = upcycle_params(&dense, &sparse_entry, &UpcycleOptions { seed: 6, ..Default::default() }).unwrap();
+    for spec in &sparse_entry.params {
+        assert_eq!(a.get(&spec.name).unwrap(), b.get(&spec.name).unwrap());
+        if spec.name.contains("/moe/router") {
+            assert_ne!(a.get(&spec.name).unwrap(), c.get(&spec.name).unwrap());
+        } else {
+            assert_eq!(a.get(&spec.name).unwrap(), c.get(&spec.name).unwrap());
+        }
+    }
+}
+
+/// Property: expert noise perturbs each expert independently with the
+/// requested magnitude; load_experts=false produces experts unrelated to
+/// the parent.
+#[test]
+fn prop_noise_and_random_experts() {
+    let Some(m) = manifest() else { return };
+    let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
+    let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let dense = init_params(&dense_entry, 11).unwrap();
+
+    let noisy = upcycle_params(
+        &dense,
+        &sparse_entry,
+        &UpcycleOptions { expert_noise: 0.01, ..Default::default() },
+    )
+    .unwrap();
+    for spec in &sparse_entry.params {
+        if spec.name.contains("/moe/wi") {
+            let src = dense.get(&spec.name.replace("/moe/", "/mlp/")).unwrap();
+            let n = src.numel();
+            let data = noisy.get(&spec.name).unwrap().f32s().unwrap();
+            let e = spec.shape[0];
+            // Distinct experts, each close to the parent.
+            for x in 1..e {
+                assert_ne!(&data[0..n], &data[x * n..x * n + n]);
+            }
+            let max_dev = data
+                .iter()
+                .zip(src.f32s().unwrap().iter().cycle())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_dev < 0.1, "noise too large: {max_dev}");
+        }
+    }
+
+    let random = upcycle_params(
+        &dense,
+        &sparse_entry,
+        &UpcycleOptions { load_experts: false, ..Default::default() },
+    )
+    .unwrap();
+    for spec in &sparse_entry.params {
+        if spec.name.contains("/moe/wi") {
+            let src = dense.get(&spec.name.replace("/moe/", "/mlp/")).unwrap();
+            let n = src.numel();
+            let data = random.get(&spec.name).unwrap().f32s().unwrap();
+            assert_ne!(&data[0..n], src.f32s().unwrap(), "random experts must differ");
+        }
+    }
+}
+
+/// Property: optimizer-state surgery carries factored accumulators across
+/// and zeroes exactly the router slots (or everything with load=false).
+#[test]
+fn prop_opt_state_surgery() {
+    let Some(m) = manifest() else { return };
+    let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
+    let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let mut dense_opt = init_opt_state(&dense_entry).unwrap();
+    // Make the accumulators non-trivial.
+    let mut rng = Rng::new(3);
+    let names: Vec<String> = dense_opt.tensors.keys().cloned().collect();
+    for name in names {
+        let t = dense_opt.tensors.get_mut(&name).unwrap();
+        let shape = t.shape.clone();
+        let n = t.numel();
+        *t = sparse_upcycle::tensor::Tensor::from_f32(&shape, rng.normal_vec(n, 1.0));
+    }
+
+    let loaded = upcycle_opt_state(&dense_opt, &sparse_entry, true).unwrap();
+    let zeroed = upcycle_opt_state(&dense_opt, &sparse_entry, false).unwrap();
+    for spec in &sparse_entry.opt_state {
+        let z = zeroed.get(&spec.name).unwrap();
+        assert!(z.f32s().unwrap().iter().all(|&v| v == 0.0), "{} not zeroed", spec.name);
+        let l = loaded.get(&spec.name).unwrap();
+        let base = spec.name.trim_start_matches("opt/").rsplit_once('/').unwrap().0.to_string();
+        if base.contains("/moe/router") {
+            assert!(l.f32s().unwrap().iter().all(|&v| v == 0.0), "router state must be fresh");
+        } else if base.contains("/moe/w") {
+            let slot = spec.name.rsplit_once('/').unwrap().1;
+            let dense_name = format!("opt/{}/{slot}", base.replace("/moe/", "/mlp/"));
+            let src = dense_opt.get(&dense_name).unwrap();
+            let n = src.numel();
+            let data = l.f32s().unwrap();
+            for x in 0..spec.shape[0] {
+                assert_eq!(&data[x * n..(x + 1) * n], src.f32s().unwrap());
+            }
+        } else {
+            assert_eq!(l, dense_opt.get(&spec.name).unwrap());
+        }
+    }
+}
+
+/// Property: depth tiling covers every source block, is monotone, and the
+/// tiled checkpoint's block tensors equal their mapped source tensors.
+#[test]
+fn prop_depth_tiling() {
+    // Pure mapping properties over random (n_old, n_new) pairs.
+    let mut rng = Rng::new(9);
+    for _ in 0..64 {
+        let n_old = rng.range(1, 12);
+        let n_new = rng.range(n_old, n_old * 3 + 1);
+        let map: Vec<usize> = (0..n_new).map(|i| tile_source_block(i, n_new, n_old)).collect();
+        assert_eq!(map[0], 0);
+        assert!(map.windows(2).all(|w| w[0] <= w[1]), "monotone: {map:?}");
+        assert!(map.iter().all(|&s| s < n_old));
+        let covered: std::collections::BTreeSet<usize> = map.iter().copied().collect();
+        assert_eq!(covered.len(), n_old, "all source blocks used: {map:?}");
+    }
+
+    // Checkpoint-level check on the real manifest geometry.
+    let Some(m) = manifest() else { return };
+    let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
+    let tiled_entry = m.model("lm_tiny_dense_tiled").unwrap().clone();
+    let dense = init_params(&dense_entry, 1).unwrap();
+    let tiled: Checkpoint = depth_tile_params(&dense, &dense_entry, &tiled_entry).unwrap();
+    assert_eq!(tiled.tensors.len(), tiled_entry.params.len());
+    let t = tiled.get("enc/block_05/attn/wq").unwrap();
+    // Block 5 of 6 maps to source block 5*4/6 = 3.
+    assert_eq!(t, dense.get("enc/block_03/attn/wq").unwrap());
+    assert_eq!(
+        tiled.get("token_embed").unwrap(),
+        dense.get("token_embed").unwrap()
+    );
+}
