@@ -1,0 +1,44 @@
+# Sparse Upcycling reproduction — build/verify entry points.
+#
+# `make verify` mirrors .github/workflows/ci.yml exactly: if it is green
+# here, CI is green.
+
+.PHONY: verify build test bench-compile fmt fmt-check clippy quickstart artifacts clean
+
+verify: build test fmt-check clippy bench-compile quickstart
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench-compile:
+	cargo bench --no-run
+
+fmt:
+	cargo fmt --all
+
+# Advisory (matching the CI rustfmt step): the tree was authored offline
+# without rustfmt; drop the leading `-` together with CI's
+# continue-on-error once a `cargo fmt` pass is committed.
+fmt-check:
+	-cargo fmt --all -- --check
+
+# Advisory, mirroring CI's continue-on-error on the clippy step; drop the
+# `-` together with CI's once the lint run is clean.
+clippy:
+	-cargo clippy --all-targets -- -D warnings
+
+quickstart:
+	cargo run --release -- quickstart --pretrain-steps 30 --extra-steps 5
+
+# AOT artifacts for the PJRT backend (requires the Python toolchain; not
+# needed for the default native build). Written under rust/ because cargo
+# runs test binaries with the package dir as cwd.
+artifacts:
+	python3 -m python.compile.aot --out rust/artifacts
+
+clean:
+	cargo clean
+	rm -rf results

@@ -57,7 +57,7 @@ fn main() {
         std::hint::black_box(simulate_routing(&s, 4096, &mesh, &mut rng));
     });
 
-    if let Ok(manifest) = Manifest::load("artifacts") {
+    if let Ok(manifest) = Manifest::load_or_native("artifacts") {
         println!("\n== placement (manifest models, mesh dp=2 ep=4 mp=1) ==");
         for name in ["lm_tiny_moe_e8_c2", "lm_tiny_moe_e16_c2", "lm_small_moe_e8_c2"] {
             if let Ok(entry) = manifest.model(name) {

@@ -1,14 +1,17 @@
-//! Bench: end-to-end training/eval step cost through the PJRT runtime —
+//! Bench: end-to-end training/eval step cost through the execution backend —
 //! the L3 hot path. This regenerates the paper's per-step cost claims:
 //!
 //! * Fig. 9 / §2.1: a sparse step costs ≈ C× the dense MLP FLOPs + router,
 //!   so dense < C=1 < C=2 < C=3;
 //! * §3.1 "number of experts": E is ~FLOPs-neutral (E=2 vs E=16 ≈ same);
 //!
-//! and it is the measurement harness for the §Perf optimization loop
-//! (EXPERIMENTS.md): step latency, steps/s and achieved FLOP/s per variant.
+//! and it is the measurement harness for the §Perf optimization loop:
+//! native step latency, steps/s and achieved FLOP/s per variant. Runs on
+//! the native CPU backend out of the box (no artifacts needed); a `pjrt`
+//! build with `artifacts/manifest.json` present measures the AOT
+//! signatures instead.
 //!
-//! Run: make artifacts && cargo bench --bench runtime_step
+//! Run: cargo bench --bench runtime_step [-- --full]
 
 use sparse_upcycle::coordinator::TrainState;
 use sparse_upcycle::init::{init_opt_state, init_params};
@@ -17,31 +20,32 @@ use sparse_upcycle::runtime::Runtime;
 use sparse_upcycle::util::bench::bench;
 
 fn main() {
-    let manifest = match Manifest::load("artifacts") {
+    let manifest = match Manifest::load_or_native("artifacts") {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("skipping runtime bench (no artifacts): {e}");
+            eprintln!("skipping runtime bench (bad artifacts): {e}");
             return;
         }
     };
-    let runtime = Runtime::new().unwrap();
-    println!("platform: {}", runtime.platform());
+    let runtime = Runtime::for_manifest(&manifest).unwrap();
+    println!("platform: {}  (manifest source: {})", runtime.platform(), manifest.source_hash);
 
-    // Keep the compile bill bounded: XLA compilation of each train module
-    // costs ~30-55 s on this 1-core CPU (the bench itself runs in seconds).
     // Pass --full for the whole C/E sweep.
     let full = std::env::args().any(|a| a == "--full");
     let variants: &[&str] = if full {
         &[
-            "lm_tiny_dense", "lm_tiny_moe_e8_c1", "lm_tiny_moe_e8_c2",
-            "lm_tiny_moe_e8_c3", "lm_tiny_moe_e2_c2", "lm_tiny_moe_e16_c2",
-            "vit_tiny_dense", "vit_tiny_moe_e8_c2",
+            "lm_tiny_dense",
+            "lm_tiny_moe_e8_c1",
+            "lm_tiny_moe_e8_c2",
+            "lm_tiny_moe_e8_c3",
+            "lm_tiny_moe_e2_c2",
+            "lm_tiny_moe_e16_c2",
+            "vit_tiny_dense",
+            "vit_tiny_moe_e8_c2",
         ]
     } else {
         &["lm_tiny_dense", "lm_tiny_moe_e8_c1", "lm_tiny_moe_e8_c2", "vit_tiny_moe_e8_c2"]
     };
-    println!("\n(compiling {} train modules — XLA compile is the dominant fixed cost,", variants.len());
-    println!(" see EXPERIMENTS.md §Perf; per-step numbers follow)\n");
 
     for name in variants {
         let entry = manifest.model(name).unwrap().clone();

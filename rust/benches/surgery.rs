@@ -12,10 +12,10 @@ use sparse_upcycle::upcycle::{depth_tile_params, upcycle_opt_state, upcycle_para
 use sparse_upcycle::util::bench::bench;
 
 fn main() {
-    let manifest = match Manifest::load("artifacts") {
+    let manifest = match Manifest::load_or_native("artifacts") {
         Ok(m) => m,
         Err(e) => {
-            eprintln!("skipping surgery bench (no artifacts): {e}");
+            eprintln!("skipping surgery bench (bad artifacts): {e}");
             return;
         }
     };

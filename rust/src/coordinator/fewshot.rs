@@ -25,12 +25,8 @@ impl Default for FewShotConfig {
 }
 
 /// Extract features for a [N,H,W,C] image tensor by slicing into the
-/// artifact's fixed batch size (padding the tail batch by repetition).
-fn batched_features(
-    model: &LoadedModel,
-    params: &[xla::Literal],
-    images: &Tensor,
-) -> Result<Mat> {
+/// model's fixed batch size (padding the tail batch by repetition).
+fn batched_features(model: &LoadedModel, params: &[Tensor], images: &Tensor) -> Result<Mat> {
     let b = model.entry.config.batch_size;
     let (n, h, w, c) = (
         images.shape[0],
@@ -71,7 +67,7 @@ fn one_hot_mat(labels: &[usize], classes: usize) -> Mat {
 /// 10-shot accuracy of frozen representations (mean over support seeds).
 pub fn fewshot_accuracy(
     model: &LoadedModel,
-    params: &[xla::Literal],
+    params: &[Tensor],
     cfg: &FewShotConfig,
     base_seed: u64,
 ) -> Result<f64> {

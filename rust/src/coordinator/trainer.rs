@@ -10,7 +10,7 @@ use crate::checkpoint::Checkpoint;
 use crate::costmodel::Cost;
 use crate::manifest::ModelEntry;
 use crate::metrics::Series;
-use crate::runtime::{checkpoint_from_literals, literals_from_checkpoint, LoadedModel, Metrics};
+use crate::runtime::{checkpoint_from_tensors, tensors_from_checkpoint, LoadedModel, Metrics};
 use crate::tensor::Tensor;
 
 use super::schedule::Schedule;
@@ -38,11 +38,12 @@ impl BatchSource for crate::data::vision::VisionPipeline {
     }
 }
 
-/// Live training state: device-side literals in manifest order + the global
-/// step counter (which also drives Adafactor's decay and the LR schedule).
+/// Live training state: host tensors in manifest order + the global step
+/// counter (which also drives the optimizer's bias correction and the LR
+/// schedule).
 pub struct TrainState {
-    pub params: Vec<xla::Literal>,
-    pub opt_state: Vec<xla::Literal>,
+    pub params: Vec<Tensor>,
+    pub opt_state: Vec<Tensor>,
     pub step: u64,
 }
 
@@ -53,9 +54,9 @@ impl TrainState {
         opt: &Checkpoint,
     ) -> Result<TrainState> {
         Ok(TrainState {
-            params: literals_from_checkpoint(params, &entry.params)
+            params: tensors_from_checkpoint(params, &entry.params)
                 .context("binding params to manifest signature")?,
-            opt_state: literals_from_checkpoint(opt, &entry.opt_state)
+            opt_state: tensors_from_checkpoint(opt, &entry.opt_state)
                 .context("binding optimizer state to manifest signature")?,
             step: params.step,
         })
@@ -66,9 +67,9 @@ impl TrainState {
         entry: &ModelEntry,
         provenance: &str,
     ) -> Result<(Checkpoint, Checkpoint)> {
-        let p = checkpoint_from_literals(
+        let p = checkpoint_from_tensors(
             &entry.name, self.step, provenance, &entry.params, &self.params)?;
-        let o = checkpoint_from_literals(
+        let o = checkpoint_from_tensors(
             &entry.name, self.step, provenance, &entry.opt_state, &self.opt_state)?;
         Ok((p, o))
     }

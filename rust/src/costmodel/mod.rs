@@ -63,12 +63,6 @@ pub fn step_cost_ratio(a: &ModelEntry, b: &ModelEntry) -> f64 {
 mod tests {
     use super::*;
     use crate::manifest::Manifest;
-    use std::path::PathBuf;
-
-    fn manifest() -> Option<Manifest> {
-        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        d.join("manifest.json").exists().then(|| Manifest::load(d).unwrap())
-    }
 
     #[test]
     fn cost_arithmetic() {
@@ -83,7 +77,7 @@ mod tests {
 
     #[test]
     fn moe_costs_more_per_step_than_dense() {
-        let Some(m) = manifest() else { return };
+        let m = Manifest::native();
         let dense = m.model("lm_tiny_dense").unwrap();
         let c1 = m.model("lm_tiny_moe_e8_c1").unwrap();
         let c2 = m.model("lm_tiny_moe_e8_c2").unwrap();
@@ -98,7 +92,7 @@ mod tests {
     #[test]
     fn experts_do_not_change_flops_much() {
         // Paper §3.1: adding experts does not significantly affect FLOPs.
-        let Some(m) = manifest() else { return };
+        let m = Manifest::native();
         let e2 = m.model("lm_tiny_moe_e2_c2").unwrap();
         let e16 = m.model("lm_tiny_moe_e16_c2").unwrap();
         let ratio = step_cost_ratio(e16, e2);

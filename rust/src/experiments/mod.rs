@@ -76,9 +76,11 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(artifacts: &str, out_dir: &str, p: ExpParams, verbose: bool) -> Result<Ctx> {
+        let manifest = Manifest::load_or_native(artifacts)?;
+        let runtime = Runtime::for_manifest(&manifest)?;
         Ok(Ctx {
-            runtime: Runtime::new()?,
-            manifest: Manifest::load(artifacts)?,
+            runtime,
+            manifest,
             out_dir: PathBuf::from(out_dir),
             ck_dir: PathBuf::from(out_dir).join("checkpoints"),
             p,

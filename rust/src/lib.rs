@@ -1,22 +1,28 @@
 //! # sparse-upcycle
 //!
-//! Rust + JAX + Pallas reproduction of **"Sparse Upcycling: Training
-//! Mixture-of-Experts from Dense Checkpoints"** (ICLR 2023).
+//! Rust reproduction of **"Sparse Upcycling: Training Mixture-of-Experts
+//! from Dense Checkpoints"** (ICLR 2023), built around a swappable
+//! execution [`runtime::Backend`]:
 //!
-//! Three layers (see DESIGN.md):
-//! * **L1** — Pallas kernels (`python/compile/kernels/`): grouped expert MLP
-//!   and fused router, AOT-lowered into the model HLO.
-//! * **L2** — JAX models (`python/compile/`): T5-style LM and ViT with
-//!   Expert Choice / Top-K MoE layers, Adafactor train step; lowered once to
-//!   `artifacts/*.hlo.txt`.
-//! * **L3** — this crate: the training coordinator. Loads the artifacts via
-//!   PJRT (`runtime`), owns data (`data`), schedules (`coordinator`),
-//!   checkpoints (`checkpoint`), and — the paper's contribution — the
-//!   **upcycling checkpoint surgery** (`upcycle`). The experiment harness
-//!   (`experiments`) regenerates every figure and table of the paper.
+//! * **Native CPU backend** (`runtime::native`, the default): a pure-Rust
+//!   implementation of the full MoE training path — token embedding →
+//!   Expert Choice / Top-K routing → grouped expert MLP → loss + auxiliary
+//!   load-balance loss — with hand-written backward passes and an Adam
+//!   optimizer, over the built-in model zoo (`manifest::zoo`). A clean
+//!   checkout runs `cargo test` / `cargo run -- quickstart` with **zero**
+//!   Python, XLA or network artifacts.
+//! * **PJRT backend** (`runtime::pjrt`, cargo feature `pjrt`, off by
+//!   default): executes AOT-compiled HLO artifacts produced by the JAX +
+//!   Pallas layer (`python/compile/`), for runs on real accelerators. The
+//!   workspace vendors an API stub (`vendor/xla`); link the real bindings
+//!   to enable it.
 //!
-//! Python never runs on the training path: after `make artifacts` the
-//! binary is self-contained.
+//! Around the backend sit the training coordinator (`coordinator`), data
+//! substrates (`data`), checkpoints (`checkpoint`), cost accounting
+//! (`costmodel`), the parallelism simulator (`parallel`) and — the paper's
+//! contribution — the **upcycling checkpoint surgery** (`upcycle`). The
+//! experiment harness (`experiments`) regenerates every figure and table of
+//! the paper on either backend.
 
 pub mod checkpoint;
 pub mod coordinator;

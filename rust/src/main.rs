@@ -1,6 +1,8 @@
 //! `upcycle` — CLI for the sparse-upcycling training coordinator.
 //!
 //! Subcommands:
+//!   quickstart                    — native end-to-end demo (pretrain →
+//!                                   surgery → continued MoE training)
 //!   list                          — experiments and models available
 //!   train      --model M          — (pre)train a model from scratch
 //!   upcycle    --dense CK --model M — run checkpoint surgery, save sparse CK
@@ -9,7 +11,8 @@
 //!   experiment <id>|all           — regenerate a paper figure/table
 //!   mesh       --model M          — expert-parallel placement report (§A.4)
 //!
-//! Run `make artifacts` once before using any subcommand that executes HLO.
+//! Everything runs on the native CPU backend out of the box; `make
+//! artifacts` + the `pjrt` cargo feature switch to the AOT/XLA path.
 
 use anyhow::{bail, Context, Result};
 
@@ -68,19 +71,55 @@ fn run() -> Result<()> {
             for (id, title, _) in registry() {
                 println!("  {id:<6} {title}");
             }
-            if let Ok(m) = Manifest::load(&artifacts) {
-                println!("\nmodels ({}):", m.models.len());
-                for (name, e) in &m.models {
-                    println!(
-                        "  {name:<32} {:<4} {:>9.2}M params{}",
-                        e.family,
-                        e.param_count as f64 / 1e6,
-                        if e.is_sparse() { "  (sparse)" } else { "" }
-                    );
-                }
-            } else {
-                println!("\n(no artifacts yet — run `make artifacts`)");
+            let m = Manifest::load_or_native(&artifacts)?;
+            println!("\nmodels ({}, source {}):", m.models.len(), m.source_hash);
+            for (name, e) in &m.models {
+                println!(
+                    "  {name:<32} {:<4} {:>9.2}M params{}",
+                    e.family,
+                    e.param_count as f64 / 1e6,
+                    if e.is_sparse() { "  (sparse)" } else { "" }
+                );
             }
+            Ok(())
+        }
+        "quickstart" => {
+            let mut p = params_from_args(&a)?;
+            if !a.flags.contains_key("pretrain-steps") {
+                p.pretrain_steps = 60;
+            }
+            if !a.flags.contains_key("extra-steps") {
+                p.extra_steps = 20;
+            }
+            if !a.flags.contains_key("eval-every") {
+                p.eval_every = 10;
+            }
+            let ctx = Ctx::new(&artifacts, &out_dir, p, true)?;
+            println!("backend: {}", ctx.runtime.platform());
+            println!("\n== 1. dense pretraining ({} steps) ==", ctx.p.pretrain_steps);
+            let parent = ctx.dense_parent("lm_tiny_dense", ctx.p.pretrain_steps)?;
+
+            println!("\n== 2. upcycling surgery: lm_tiny_dense -> lm_tiny_moe_e8_c2 ==");
+            let (moe, mut moe_state) = ctx.branch_upcycle(
+                &parent, "lm_tiny_moe_e8_c2", &UpcycleOptions::default(), false)?;
+            println!(
+                "  {:.2}M dense params -> {:.2}M sparse params ({:.2}M in experts)",
+                ctx.entry("lm_tiny_dense")?.param_count as f64 / 1e6,
+                moe.entry.param_count as f64 / 1e6,
+                moe.entry.expert_param_count() as f64 / 1e6
+            );
+
+            println!("\n== 3. continued MoE training (+{} steps) ==", ctx.p.extra_steps);
+            let series = ctx.run_branch(&moe, &mut moe_state, 2, ctx.p.extra_steps, "upcycled")?;
+            let loss = |pt: Option<&sparse_upcycle::metrics::Point>| {
+                pt.and_then(|q| q.values.get("loss").copied()).unwrap_or(f64::NAN)
+            };
+            let at_branch = loss(series.points.first());
+            let at_end = loss(series.points.last());
+            println!("\n== result ==");
+            println!("  held-out loss at the branch point: {at_branch:.4}");
+            println!("  held-out loss after +{} steps:     {at_end:.4}", ctx.p.extra_steps);
+            println!("  improvement: {:+.4}", at_branch - at_end);
             Ok(())
         }
         "experiment" => {
@@ -174,7 +213,7 @@ fn run() -> Result<()> {
         "upcycle" => {
             let dense_path = a.req("dense")?;
             let sparse_name = a.req("model")?;
-            let manifest = Manifest::load(&artifacts)?;
+            let manifest = Manifest::load_or_native(&artifacts)?;
             let entry = manifest.model(sparse_name)?;
             let dense = Checkpoint::load(dense_path)?;
             let opts = UpcycleOptions {
@@ -219,18 +258,18 @@ fn run() -> Result<()> {
         "fewshot" => {
             let model_name = a.req("model")?;
             let params_path = a.req("params")?;
-            let runtime = Runtime::new()?;
-            let manifest = Manifest::load(&artifacts)?;
+            let manifest = Manifest::load_or_native(&artifacts)?;
+            let runtime = Runtime::for_manifest(&manifest)?;
             let model = runtime.load_model(&manifest, model_name, &["features"])?;
             let params = Checkpoint::load(params_path)?;
-            let lits = sparse_upcycle::runtime::literals_from_checkpoint(
+            let tensors = sparse_upcycle::runtime::tensors_from_checkpoint(
                 &params, &model.entry.params)?;
             let cfg = FewShotConfig {
                 shots: a.usize("shots", 10)?,
                 seeds: a.usize("probe-seeds", 5)?,
                 ..Default::default()
             };
-            let acc = fewshot_accuracy(&model, &lits, &cfg, a.u64("seed", 17)?)?;
+            let acc = fewshot_accuracy(&model, &tensors, &cfg, a.u64("seed", 17)?)?;
             println!("{model_name}: {}-shot accuracy = {acc:.4}", cfg.shots);
             Ok(())
         }
@@ -263,7 +302,7 @@ fn run() -> Result<()> {
         }
         "comms" => {
             let model_name = a.req("model")?;
-            let manifest = Manifest::load(&artifacts)?;
+            let manifest = Manifest::load_or_native(&artifacts)?;
             let entry = manifest.model(model_name)?;
             let mesh = MeshSpec {
                 data_parallel: a.usize("dp", 2)?,
@@ -286,7 +325,7 @@ fn run() -> Result<()> {
         }
         "mesh" => {
             let model_name = a.req("model")?;
-            let manifest = Manifest::load(&artifacts)?;
+            let manifest = Manifest::load_or_native(&artifacts)?;
             let entry = manifest.model(model_name)?;
             let mesh = MeshSpec {
                 data_parallel: a.usize("dp", 2)?,
@@ -311,6 +350,7 @@ const HELP: &str = "\
 upcycle — Sparse Upcycling (ICLR 2023) training coordinator
 
 USAGE:
+  upcycle quickstart [--pretrain-steps N] [--extra-steps N]   # native demo
   upcycle list
   upcycle experiment <id>|all [--pretrain-steps N] [--extra-steps N] [--seed S]
   upcycle train   --model <name> [--steps N]

@@ -1,12 +1,23 @@
-//! Artifact manifest: the signature contract between the Python compile path
-//! and the Rust runtime.
+//! Model manifest: the signature contract between model definitions and the
+//! execution backends.
 //!
-//! `python/compile/aot.py` writes `artifacts/manifest.json` describing, for
-//! every model configuration: the ordered flat parameter / optimizer-state /
-//! batch tensor signatures (names, shapes, dtypes, init specs), the model
-//! hyperparameters, an analytic FLOPs estimate, and the HLO artifact file
-//! names. Everything the coordinator does — initialization, checkpointing,
-//! surgery, cost accounting, step execution — is keyed off this file.
+//! Two sources produce a [`Manifest`]:
+//!
+//! * **Native zoo** ([`Manifest::native`], the default): model entries built
+//!   in pure Rust by [`zoo`], no artifacts required.
+//! * **AOT artifacts** ([`Manifest::load`]): `python/compile/aot.py` writes
+//!   `artifacts/manifest.json` describing, for every model configuration,
+//!   the ordered flat parameter / optimizer-state / batch tensor signatures
+//!   (names, shapes, dtypes, init specs), the model hyperparameters, an
+//!   analytic FLOPs estimate, and the HLO artifact file names (the `pjrt`
+//!   backend's input).
+//!
+//! Everything the coordinator does — initialization, checkpointing, surgery,
+//! cost accounting, step execution — is keyed off this structure.
+//! [`Manifest::load_or_native`] picks the artifact manifest when one exists
+//! on disk and falls back to the zoo otherwise.
+
+pub mod zoo;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -92,6 +103,30 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The built-in native model zoo (no artifacts needed).
+    pub fn native() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("<native>"),
+            source_hash: zoo::NATIVE_SOURCE.to_string(),
+            models: zoo::native_models(),
+        }
+    }
+
+    /// The manifest matching the compiled execution backend. This is what
+    /// the CLI, experiments and benches use: a clean checkout works
+    /// immediately on the native zoo. AOT signatures (`dir/manifest.json`,
+    /// written by `make artifacts`) describe Adafactor state layouts and
+    /// attention parameters the native backend does not implement, so they
+    /// are only picked up when the `pjrt` backend that executes them is
+    /// compiled in; default builds always use the zoo.
+    pub fn load_or_native(dir: impl AsRef<Path>) -> Result<Manifest> {
+        if cfg!(feature = "pjrt") && dir.as_ref().join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::native())
+        }
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -263,20 +298,15 @@ fn parse_entry(v: &Json) -> Result<ModelEntry> {
 mod tests {
     use super::*;
 
-    fn manifest_dir() -> Option<PathBuf> {
-        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        d.join("manifest.json").exists().then_some(d)
-    }
-
     #[test]
-    fn loads_real_manifest() {
-        let Some(dir) = manifest_dir() else { return };
-        let m = Manifest::load(dir).unwrap();
-        assert!(m.models.len() >= 20, "expected full artifact set");
+    fn native_manifest_loads() {
+        let m = Manifest::native();
+        assert!(m.models.len() >= 20, "expected the full zoo");
+        assert_eq!(m.source_hash, zoo::NATIVE_SOURCE);
         let e = m.model("lm_tiny_moe_e8_c2").unwrap();
         assert!(e.is_sparse());
         assert_eq!(e.scalars, vec!["lr", "wd", "step"]);
-        assert!(e.param_count > 1_000_000);
+        assert!(e.param_count > 50_000);
         assert!(e.flops.train_step > e.flops.eval_step);
         // Signature bookkeeping: sorted and unique names.
         let names: Vec<&str> = e.params.iter().map(|s| s.name.as_str()).collect();
@@ -284,17 +314,27 @@ mod tests {
         sorted.sort();
         sorted.dedup();
         assert_eq!(names, sorted, "param specs must be sorted and unique");
+        assert!(m.model("nope").is_err());
     }
 
     #[test]
     fn dense_vs_sparse_bookkeeping() {
-        let Some(dir) = manifest_dir() else { return };
-        let m = Manifest::load(dir).unwrap();
+        let m = Manifest::native();
         let dense = m.model("lm_tiny_dense").unwrap();
         let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
         assert!(!dense.is_sparse());
         assert_eq!(dense.expert_param_count(), 0);
         assert!(sparse.expert_param_count() > 0);
         assert!(sparse.param_count > dense.param_count);
+    }
+
+    #[test]
+    fn load_or_native_falls_back() {
+        // A directory without manifest.json yields the native zoo.
+        let dir = std::env::temp_dir().join("supc_no_artifacts_here");
+        std::fs::create_dir_all(&dir).ok();
+        let m = Manifest::load_or_native(&dir).unwrap();
+        assert_eq!(m.source_hash, zoo::NATIVE_SOURCE);
+        assert!(m.model("vit_tiny_dense").is_ok());
     }
 }

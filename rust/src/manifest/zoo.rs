@@ -1,0 +1,487 @@
+//! Built-in model zoo for the native backend.
+//!
+//! The AOT path derives model signatures from `python/compile/aot.py`; the
+//! native backend derives them here, in pure Rust, so a clean checkout can
+//! run the full pipeline (init → train → surgery → continued MoE training)
+//! with zero artifacts. Names and tensor naming conventions match the AOT
+//! manifest (`enc/block_XX/mlp/wi`, `.../moe/wi [E,d,f]`,
+//! `.../moe/router [d,E]`, `opt/<param>/<slot>`), so the upcycling surgery
+//! and the checkpoint format are identical across backends.
+//!
+//! The geometry is deliberately tiny (the paper's protocol at toy scale):
+//! every entry here trains in seconds on a laptop CPU.
+
+use std::collections::BTreeMap;
+
+use super::{FlopsInfo, InitSpec, ModelConfig, ModelEntry, MoeSpec, TensorSpec};
+use crate::tensor::DType;
+
+/// Source-hash marker for the built-in zoo.
+pub const NATIVE_SOURCE: &str = "native-zoo-v1";
+
+#[derive(Clone, Copy)]
+struct LmGeom {
+    vocab: usize,
+    d: usize,
+    ff: usize,
+    n_enc: usize,
+    n_dec: usize,
+    enc_len: usize,
+    dec_len: usize,
+    batch: usize,
+}
+
+const LM_TINY: LmGeom =
+    LmGeom { vocab: 256, d: 32, ff: 64, n_enc: 4, n_dec: 2, enc_len: 32, dec_len: 16, batch: 8 };
+
+const LM_TINY_TILED: LmGeom =
+    LmGeom { vocab: 256, d: 32, ff: 64, n_enc: 6, n_dec: 3, enc_len: 32, dec_len: 16, batch: 8 };
+
+const LM_SMALL: LmGeom = LmGeom {
+    vocab: 8192,
+    d: 64,
+    ff: 128,
+    n_enc: 4,
+    n_dec: 2,
+    enc_len: 128,
+    dec_len: 32,
+    batch: 8,
+};
+
+#[derive(Clone, Copy)]
+struct VitGeom {
+    image: usize,
+    patch: usize,
+    channels: usize,
+    classes: usize,
+    d: usize,
+    ff: usize,
+    n_layers: usize,
+    batch: usize,
+}
+
+const VIT_TINY: VitGeom = VitGeom {
+    image: 32,
+    patch: 8,
+    channels: 3,
+    classes: 16,
+    d: 32,
+    ff: 64,
+    n_layers: 4,
+    batch: 8,
+};
+
+/// MoE knobs for one sparse variant.
+#[derive(Clone)]
+struct MoeVariant {
+    num_experts: usize,
+    capacity: f64,
+    router: &'static str,
+    renormalize: bool,
+    bpr: bool,
+    group_size: usize,
+    enc_layers: Vec<usize>,
+    dec_layers: Vec<usize>,
+}
+
+impl MoeVariant {
+    /// The standard recipe: every other layer sparsified, Expert Choice.
+    fn standard(e: usize, c: f64) -> MoeVariant {
+        MoeVariant {
+            num_experts: e,
+            capacity: c,
+            router: "ec",
+            renormalize: false,
+            bpr: false,
+            group_size: 0,
+            enc_layers: vec![1, 3],
+            dec_layers: vec![1],
+        }
+    }
+
+    fn spec(&self, layers: &[usize]) -> Option<MoeSpec> {
+        if layers.is_empty() {
+            return None;
+        }
+        Some(MoeSpec {
+            num_experts: self.num_experts,
+            capacity_factor: self.capacity,
+            router_type: self.router.to_string(),
+            moe_layers: layers.to_vec(),
+            group_size: self.group_size,
+            renormalize: self.renormalize,
+            bpr: self.bpr,
+        })
+    }
+}
+
+fn spec(name: &str, shape: &[usize], kind: &str, stddev: f32) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::F32,
+        init: Some(InitSpec { kind: kind.to_string(), stddev }),
+    }
+}
+
+fn batch_spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype, init: None }
+}
+
+/// Residual-block params for one tower; MoE layers get expert weights + a
+/// router, others a dense MLP.
+fn block_params(
+    params: &mut Vec<TensorSpec>,
+    tower: &str,
+    n: usize,
+    d: usize,
+    ff: usize,
+    moe: Option<&MoeSpec>,
+) {
+    let wi_std = 1.0 / (d as f32).sqrt();
+    let wo_std = 1.0 / (ff as f32).sqrt();
+    for i in 0..n {
+        let prefix = format!("{tower}/block_{i:02}");
+        let is_moe = moe.map(|m| m.moe_layers.contains(&i)).unwrap_or(false);
+        if is_moe {
+            let e = moe.expect("moe spec present").num_experts;
+            params.push(spec(&format!("{prefix}/moe/wi"), &[e, d, ff], "fan_in", wi_std));
+            params.push(spec(&format!("{prefix}/moe/wo"), &[e, ff, d], "fan_in", wo_std));
+            params.push(spec(&format!("{prefix}/moe/router"), &[d, e], "normal", 0.02));
+        } else {
+            params.push(spec(&format!("{prefix}/mlp/wi"), &[d, ff], "fan_in", wi_std));
+            params.push(spec(&format!("{prefix}/mlp/wo"), &[ff, d], "fan_in", wo_std));
+        }
+    }
+}
+
+/// Optimizer slots: Adam (m, v) per parameter, in param order.
+fn opt_specs(params: &[TensorSpec]) -> Vec<TensorSpec> {
+    let mut out = Vec::with_capacity(2 * params.len());
+    for p in params {
+        out.push(batch_spec(&format!("opt/{}/m", p.name), &p.shape, DType::F32));
+        out.push(batch_spec(&format!("opt/{}/v", p.name), &p.shape, DType::F32));
+    }
+    out
+}
+
+/// Per-token forward FLOPs of one residual block.
+fn block_flops(d: usize, ff: usize, moe: Option<&MoeSpec>, layer: usize) -> f64 {
+    let dense = 4.0 * d as f64 * ff as f64;
+    match moe {
+        Some(m) if m.moe_layers.contains(&layer) => {
+            dense * m.capacity_factor + 2.0 * d as f64 * m.num_experts as f64
+        }
+        _ => dense,
+    }
+}
+
+fn metrics_for(sparse: bool) -> Vec<String> {
+    if sparse {
+        vec!["accuracy".into(), "aux_loss".into(), "coverage".into(), "loss".into()]
+    } else {
+        vec!["accuracy".into(), "loss".into()]
+    }
+}
+
+fn scalars() -> Vec<String> {
+    vec!["lr".into(), "wd".into(), "step".into()]
+}
+
+fn native_artifacts(features: bool) -> BTreeMap<String, String> {
+    let mut a = BTreeMap::new();
+    a.insert("train".to_string(), "native".to_string());
+    a.insert("eval".to_string(), "native".to_string());
+    if features {
+        a.insert("features".to_string(), "native".to_string());
+    }
+    a
+}
+
+fn lm_entry(name: &str, g: LmGeom, variant: Option<&MoeVariant>) -> ModelEntry {
+    let enc_moe = variant.and_then(|v| v.spec(&v.enc_layers));
+    let dec_moe = variant.and_then(|v| v.spec(&v.dec_layers));
+    let mut params = vec![
+        spec("token_embed", &[g.vocab, g.d], "normal", 0.1),
+        spec("dec/cross_w", &[g.d, g.d], "fan_in", 1.0 / (g.d as f32).sqrt()),
+    ];
+    block_params(&mut params, "enc", g.n_enc, g.d, g.ff, enc_moe.as_ref());
+    block_params(&mut params, "dec", g.n_dec, g.d, g.ff, dec_moe.as_ref());
+    params.sort_by(|a, b| a.name.cmp(&b.name));
+    let opt_state = opt_specs(&params);
+    let param_count: usize = params.iter().map(|s| s.shape.iter().product::<usize>()).sum();
+
+    let batch = vec![
+        batch_spec("enc_tokens", &[g.batch, g.enc_len], DType::I32),
+        batch_spec("dec_tokens", &[g.batch, g.dec_len], DType::I32),
+        batch_spec("targets", &[g.batch, g.dec_len], DType::I32),
+        batch_spec("loss_mask", &[g.batch, g.dec_len], DType::F32),
+    ];
+
+    let enc_tok_flops: f64 =
+        (0..g.n_enc).map(|i| block_flops(g.d, g.ff, enc_moe.as_ref(), i)).sum();
+    let dec_tok_flops: f64 =
+        (0..g.n_dec).map(|i| block_flops(g.d, g.ff, dec_moe.as_ref(), i)).sum();
+    let fwd = g.enc_len as f64 * enc_tok_flops
+        + g.dec_len as f64 * (dec_tok_flops + 2.0 * g.d as f64 * g.vocab as f64)
+        + 2.0 * (g.d * g.d) as f64;
+    let flops = FlopsInfo {
+        train_step: 3.0 * fwd * g.batch as f64,
+        eval_step: fwd * g.batch as f64,
+        fwd_per_example: fwd,
+    };
+
+    let sparse = enc_moe.is_some() || dec_moe.is_some();
+    ModelEntry {
+        name: name.to_string(),
+        family: "lm".to_string(),
+        config: ModelConfig {
+            family: "lm".to_string(),
+            d_model: g.d,
+            d_ff: g.ff,
+            num_heads: 1,
+            num_layers: g.n_enc,
+            num_decoder_layers: g.n_dec,
+            vocab_size: g.vocab,
+            enc_len: g.enc_len,
+            dec_len: g.dec_len,
+            image_size: 0,
+            patch_size: 0,
+            channels: 0,
+            num_classes: 0,
+            batch_size: g.batch,
+            enc_moe,
+            dec_moe,
+        },
+        params,
+        opt_state,
+        batch,
+        scalars: scalars(),
+        metrics: metrics_for(sparse),
+        param_count,
+        flops,
+        artifacts: native_artifacts(false),
+    }
+}
+
+fn vit_entry(name: &str, g: VitGeom, variant: Option<&MoeVariant>) -> ModelEntry {
+    let enc_moe = variant.and_then(|v| v.spec(&v.enc_layers));
+    let plen = g.patch * g.patch * g.channels;
+    let mut params = vec![
+        spec("patch_embed/w", &[plen, g.d], "fan_in", 1.0 / (plen as f32).sqrt()),
+        spec("head/w", &[g.d, g.classes], "normal", 1.0 / (g.d as f32).sqrt()),
+    ];
+    block_params(&mut params, "enc", g.n_layers, g.d, g.ff, enc_moe.as_ref());
+    params.sort_by(|a, b| a.name.cmp(&b.name));
+    let opt_state = opt_specs(&params);
+    let param_count: usize = params.iter().map(|s| s.shape.iter().product::<usize>()).sum();
+
+    let batch = vec![
+        batch_spec("images", &[g.batch, g.image, g.image, g.channels], DType::F32),
+        batch_spec("labels", &[g.batch], DType::I32),
+    ];
+
+    let np = (g.image / g.patch) * (g.image / g.patch);
+    let tok_flops: f64 =
+        (0..g.n_layers).map(|i| block_flops(g.d, g.ff, enc_moe.as_ref(), i)).sum();
+    let fwd = np as f64 * (2.0 * (plen * g.d) as f64 + tok_flops)
+        + 2.0 * (g.d * g.classes) as f64;
+    let flops = FlopsInfo {
+        train_step: 3.0 * fwd * g.batch as f64,
+        eval_step: fwd * g.batch as f64,
+        fwd_per_example: fwd,
+    };
+
+    let sparse = enc_moe.is_some();
+    ModelEntry {
+        name: name.to_string(),
+        family: "vit".to_string(),
+        config: ModelConfig {
+            family: "vit".to_string(),
+            d_model: g.d,
+            d_ff: g.ff,
+            num_heads: 1,
+            num_layers: g.n_layers,
+            num_decoder_layers: 0,
+            vocab_size: 0,
+            enc_len: 0,
+            dec_len: 0,
+            image_size: g.image,
+            patch_size: g.patch,
+            channels: g.channels,
+            num_classes: g.classes,
+            batch_size: g.batch,
+            enc_moe,
+            dec_moe: None,
+        },
+        params,
+        opt_state,
+        batch,
+        scalars: scalars(),
+        metrics: metrics_for(sparse),
+        param_count,
+        flops,
+        artifacts: native_artifacts(true),
+    }
+}
+
+/// All models the native backend ships with.
+pub fn native_models() -> BTreeMap<String, ModelEntry> {
+    let mut models = BTreeMap::new();
+    let mut add = |e: ModelEntry| {
+        models.insert(e.name.clone(), e);
+    };
+
+    // -- language, tiny -----------------------------------------------------
+    add(lm_entry("lm_tiny_dense", LM_TINY, None));
+    add(lm_entry("lm_tiny_dense_tiled", LM_TINY_TILED, None));
+
+    for (e, name) in [
+        (2usize, "lm_tiny_moe_e2_c2"),
+        (4, "lm_tiny_moe_e4_c2"),
+        (8, "lm_tiny_moe_e8_c2"),
+        (16, "lm_tiny_moe_e16_c2"),
+    ] {
+        add(lm_entry(name, LM_TINY, Some(&MoeVariant::standard(e, 2.0))));
+    }
+    add(lm_entry("lm_tiny_moe_e8_c1", LM_TINY, Some(&MoeVariant::standard(8, 1.0))));
+    add(lm_entry("lm_tiny_moe_e8_c3", LM_TINY, Some(&MoeVariant::standard(8, 3.0))));
+
+    for (router, bpr, name) in [
+        ("top1", false, "lm_tiny_moe_e8_c2_top1"),
+        ("top2", false, "lm_tiny_moe_e8_c2_top2"),
+        ("top2", true, "lm_tiny_moe_e8_c2_top2bpr"),
+    ] {
+        let mut v = MoeVariant::standard(8, 2.0);
+        v.router = router;
+        v.bpr = bpr;
+        // Top-k combine weights are conventionally renormalized over k.
+        v.renormalize = true;
+        add(lm_entry(name, LM_TINY, Some(&v)));
+    }
+
+    {
+        let mut v = MoeVariant::standard(8, 2.0);
+        v.renormalize = true;
+        add(lm_entry("lm_tiny_moe_e8_c2_renorm", LM_TINY, Some(&v)));
+    }
+    for (g, name) in [(16usize, "lm_tiny_moe_e8_c2_g16"), (64, "lm_tiny_moe_e8_c2_g64")] {
+        let mut v = MoeVariant::standard(8, 2.0);
+        v.group_size = g;
+        add(lm_entry(name, LM_TINY, Some(&v)));
+    }
+
+    // MoE layer placement variants (encoder only; decoder stays dense).
+    for (layers, name) in [
+        (vec![0usize, 1], "lm_tiny_moe_first2"),
+        (vec![3], "lm_tiny_moe_last1"),
+        (vec![2, 3], "lm_tiny_moe_last2"),
+        (vec![1, 2, 3], "lm_tiny_moe_last3"),
+    ] {
+        let mut v = MoeVariant::standard(8, 2.0);
+        v.enc_layers = layers;
+        v.dec_layers = Vec::new();
+        add(lm_entry(name, LM_TINY, Some(&v)));
+    }
+
+    // -- language, small ----------------------------------------------------
+    add(lm_entry("lm_small_dense", LM_SMALL, None));
+    add(lm_entry("lm_small_moe_e8_c2", LM_SMALL, Some(&MoeVariant::standard(8, 2.0))));
+
+    // -- vision -------------------------------------------------------------
+    add(vit_entry("vit_tiny_dense", VIT_TINY, None));
+    for (c, name) in [(1.0f64, "vit_tiny_moe_e8_c1"), (2.0, "vit_tiny_moe_e8_c2")] {
+        // Vision recipe (§3.1): Expert Choice + renormalized combine weights.
+        let mut v = MoeVariant::standard(8, c);
+        v.renormalize = true;
+        v.dec_layers = Vec::new();
+        add(vit_entry(name, VIT_TINY, Some(&v)));
+    }
+    for (c, name) in
+        [(1.0f64, "vit_tiny_moe_e8_c1_norenorm"), (2.0, "vit_tiny_moe_e8_c2_norenorm")]
+    {
+        let mut v = MoeVariant::standard(8, c);
+        v.dec_layers = Vec::new();
+        add(vit_entry(name, VIT_TINY, Some(&v)));
+    }
+    {
+        let mut v = MoeVariant::standard(8, 2.0);
+        v.router = "top2";
+        v.renormalize = true;
+        v.dec_layers = Vec::new();
+        add(vit_entry("vit_tiny_moe_e8_c2_top2", VIT_TINY, Some(&v)));
+    }
+
+    models
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_is_consistent() {
+        let models = native_models();
+        assert!(models.len() >= 20, "zoo has {} models", models.len());
+        for (name, e) in &models {
+            assert_eq!(&e.name, name);
+            // Params sorted + unique.
+            let names: Vec<&str> = e.params.iter().map(|s| s.name.as_str()).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(names, sorted, "{name}: param specs must be sorted and unique");
+            // Adam slots pair with params.
+            assert_eq!(e.opt_state.len(), 2 * e.params.len(), "{name}");
+            for (i, p) in e.params.iter().enumerate() {
+                assert_eq!(e.opt_state[2 * i].name, format!("opt/{}/m", p.name));
+                assert_eq!(e.opt_state[2 * i + 1].name, format!("opt/{}/v", p.name));
+                assert_eq!(e.opt_state[2 * i].shape, p.shape);
+            }
+            assert_eq!(e.scalars, vec!["lr", "wd", "step"], "{name}");
+            assert!(e.param_count > 0 && e.flops.train_step > e.flops.eval_step);
+            assert!(e.artifacts.contains_key("train") && e.artifacts.contains_key("eval"));
+            if e.family == "vit" {
+                assert!(e.artifacts.contains_key("features"), "{name}");
+            }
+            // Every param has an init spec (from-scratch baselines need it).
+            assert!(e.params.iter().all(|p| p.init.is_some()), "{name}");
+        }
+    }
+
+    #[test]
+    fn sparse_variants_expand_params_not_flops_much() {
+        let models = native_models();
+        let dense = &models["lm_tiny_dense"];
+        let e8 = &models["lm_tiny_moe_e8_c2"];
+        let e16 = &models["lm_tiny_moe_e16_c2"];
+        assert!(e8.is_sparse() && !dense.is_sparse());
+        assert!(e8.param_count > dense.param_count);
+        assert!(e16.param_count > e8.param_count);
+        assert!(e8.expert_param_count() > 0);
+        assert_eq!(dense.expert_param_count(), 0);
+        // Experts are ~FLOPs-neutral; capacity is not.
+        let r = e16.flops.train_step / e8.flops.train_step;
+        assert!(r < 1.1, "experts should be ~FLOPs-neutral, got {r}");
+    }
+
+    #[test]
+    fn surgery_geometry_matches() {
+        // Every sparse tiny-LM tensor must map onto the dense parent.
+        let models = native_models();
+        let dense = &models["lm_tiny_dense"];
+        let dense_names: Vec<&str> = dense.params.iter().map(|s| s.name.as_str()).collect();
+        let sparse = &models["lm_tiny_moe_e8_c2"];
+        for s in &sparse.params {
+            if s.name.contains("/moe/router") {
+                continue;
+            }
+            let expect = s.name.replace("/moe/", "/mlp/");
+            assert!(
+                dense_names.contains(&expect.as_str()),
+                "dense parent lacks `{expect}` for `{}`",
+                s.name
+            );
+        }
+    }
+}

@@ -21,8 +21,11 @@ pub struct MeshSpec {
 }
 
 impl MeshSpec {
+    /// Total devices. A zero-sized axis (e.g. `expert_parallel = 0` for a
+    /// dense entry with no expert sharding) counts as one device on that
+    /// axis — a mesh can never have zero devices.
     pub fn devices(&self) -> usize {
-        self.data_parallel * self.expert_parallel * self.model_parallel
+        self.data_parallel.max(1) * self.expert_parallel.max(1) * self.model_parallel.max(1)
     }
 }
 
@@ -38,6 +41,10 @@ pub struct PlacementReport {
 
 /// Static placement: experts round-robined over the expert-parallel axis,
 /// dense weights replicated (data parallel) and split over model-parallel.
+///
+/// `expert_parallel == 0` (a mesh with no expert axis, i.e. a dense entry's
+/// placement) is normalized to one expert-parallel device rather than
+/// dividing by zero; a dense entry reports an empty expert placement.
 pub fn place(entry: &ModelEntry, mesh: &MeshSpec) -> PlacementReport {
     let num_experts = entry
         .config
@@ -46,20 +53,22 @@ pub fn place(entry: &ModelEntry, mesh: &MeshSpec) -> PlacementReport {
         .or(entry.config.dec_moe.as_ref())
         .map(|m| m.num_experts)
         .unwrap_or(0);
-    let mut experts_per_device = vec![0usize; mesh.expert_parallel.max(1)];
-    for e in 0..num_experts {
-        experts_per_device[e % mesh.expert_parallel.max(1)] += 1;
-    }
+    let ep = mesh.expert_parallel.max(1);
+    let experts_per_device = if num_experts == 0 {
+        Vec::new()
+    } else {
+        let mut per = vec![0usize; ep];
+        for e in 0..num_experts {
+            per[e % ep] += 1;
+        }
+        per
+    };
     let expert_bytes = entry.expert_param_count() * 4;
     let dense_bytes = (entry.param_count - entry.expert_param_count()) * 4;
     PlacementReport {
         devices: mesh.devices(),
         experts_per_device,
-        expert_param_bytes_per_device: if num_experts == 0 {
-            0
-        } else {
-            expert_bytes / mesh.expert_parallel.max(1)
-        },
+        expert_param_bytes_per_device: if num_experts == 0 { 0 } else { expert_bytes / ep },
         dense_param_bytes: dense_bytes / mesh.model_parallel.max(1),
     }
 }
@@ -202,5 +211,34 @@ mod tests {
     fn mesh_accounting() {
         let mesh = MeshSpec { data_parallel: 2, expert_parallel: 4, model_parallel: 2 };
         assert_eq!(mesh.devices(), 16);
+    }
+
+    #[test]
+    fn zero_expert_parallel_axis_is_normalized() {
+        // A mesh with no expert axis must not divide by zero or report an
+        // empty device set.
+        let mesh = MeshSpec { data_parallel: 2, expert_parallel: 0, model_parallel: 1 };
+        assert_eq!(mesh.devices(), 2);
+        let m = crate::manifest::Manifest::native();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let rep = place(sparse, &mesh);
+        assert_eq!(rep.devices, 2);
+        // All experts land on the single (implicit) expert-parallel device.
+        assert_eq!(rep.experts_per_device, vec![8]);
+        assert!(rep.expert_param_bytes_per_device > 0);
+    }
+
+    #[test]
+    fn dense_entry_places_without_experts() {
+        let m = crate::manifest::Manifest::native();
+        let dense = m.model("lm_tiny_dense").unwrap();
+        let mesh = MeshSpec { data_parallel: 2, expert_parallel: 4, model_parallel: 1 };
+        let rep = place(dense, &mesh);
+        assert!(rep.experts_per_device.is_empty(), "dense entry has no expert placement");
+        assert_eq!(rep.expert_param_bytes_per_device, 0);
+        assert_eq!(rep.dense_param_bytes, dense.param_count * 4);
+        // Degenerate all-zero mesh still reports one device.
+        let zero = MeshSpec { data_parallel: 0, expert_parallel: 0, model_parallel: 0 };
+        assert_eq!(place(dense, &zero).devices, 1);
     }
 }

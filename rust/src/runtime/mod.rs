@@ -1,114 +1,118 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Execution backends: the [`Backend`] trait and its two implementations.
 //!
-//! The interchange format is HLO **text** (see `python/compile/aot.py` for
-//! why). Python never runs on this path: artifacts are compiled once at
-//! `Runtime::load_model` and then executed step after step by the trainer.
+//! The trainer, experiment harness and benches all talk to a [`LoadedModel`]
+//! — (`train_step` / `eval_step` / `features`) over host [`Tensor`]s — and
+//! never care how the step is executed:
 //!
-//! Output convention (probed at bring-up, DESIGN.md): the artifacts are
-//! lowered with `return_tuple=True`, and this PJRT build returns the whole
-//! result as a *single tuple buffer* regardless of arity. Each step we sync
-//! the tuple to a host literal and decompose it; on the CPU client this is a
-//! memcpy, and the decomposed parameter literals are fed straight back into
-//! the next step without re-staging (see `rust/benches/runtime_step.rs`).
+//! * [`native`] (default): a pure-Rust CPU backend that implements the MoE
+//!   forward/backward path (token embedding → top-k / expert-choice routing
+//!   → grouped expert MLP → loss + aux load-balance loss) directly on
+//!   `tensor::Tensor`, with an in-tree Adam optimizer. Needs **zero**
+//!   Python/XLA artifacts: model signatures come from the built-in zoo
+//!   (`manifest::zoo`).
+//! * [`pjrt`] (cargo feature `pjrt`, off by default): loads AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them through
+//!   PJRT. Tensors convert to device literals at this boundary only.
+//!
+//! State (`params` / `opt_state`) lives host-side as `Vec<Tensor>` in
+//! manifest signature order and is threaded through the step loop by the
+//! trainer.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::collections::BTreeMap;
-use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::manifest::{Manifest, ModelEntry};
+use crate::manifest::{Manifest, ModelEntry, TensorSpec};
 use crate::tensor::Tensor;
-
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-pub struct LoadedModel {
-    pub entry: ModelEntry,
-    train: Option<xla::PjRtLoadedExecutable>,
-    eval: Option<xla::PjRtLoadedExecutable>,
-    features: Option<xla::PjRtLoadedExecutable>,
-}
 
 /// Scalar training metrics of one step/eval, keyed by manifest metric names.
 pub type Metrics = BTreeMap<String, f64>;
 
-impl Runtime {
-    pub fn new() -> Result<Runtime> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?)
-    }
-
-    /// Load and compile the artifacts of one model. `kinds` selects which
-    /// executables to build ("train", "eval", "features") — compiling only
-    /// what an experiment needs keeps sweep startup fast (XLA compilation of
-    /// a train-step module dominates experiment startup; see EXPERIMENTS.md
-    /// §Perf).
-    pub fn load_model(
-        &self,
-        manifest: &Manifest,
-        name: &str,
-        kinds: &[&str],
-    ) -> Result<LoadedModel> {
-        let entry = manifest.model(name)?.clone();
-        let get = |k: &str| -> Result<Option<xla::PjRtLoadedExecutable>> {
-            if !kinds.contains(&k) || !entry.artifacts.contains_key(k) {
-                return Ok(None);
-            }
-            Ok(Some(self.compile(&manifest.artifact_path(&entry, k)?)?))
-        };
-        let train = get("train")?;
-        let eval = get("eval")?;
-        let features = get("features")?;
-        Ok(LoadedModel { entry, train, eval, features })
-    }
-}
-
-impl LoadedModel {
-    /// Which artifact kinds have compiled executables.
-    pub fn has(&self, kind: &str) -> bool {
-        match kind {
-            "train" => self.train.is_some(),
-            "eval" => self.eval.is_some(),
-            "features" => self.features.is_some(),
-            _ => false,
-        }
-    }
-}
-
-/// Result of one executed train step: updated state literals + metrics.
+/// Result of one executed train step: updated state tensors + metrics.
 pub struct StepOutput {
-    pub params: Vec<xla::Literal>,
-    pub opt_state: Vec<xla::Literal>,
+    pub params: Vec<Tensor>,
+    pub opt_state: Vec<Tensor>,
     pub metrics: Metrics,
 }
 
+/// One model's executable surface, produced by a [`Backend`].
+///
+/// `params` / `opt_state` follow the manifest signature order of the entry
+/// the executable was loaded for; `batch` follows the manifest batch
+/// signature; scalars are (lr, wd, step).
+pub trait Executable {
+    /// Which artifact kinds ("train" | "eval" | "features") can execute.
+    fn has(&self, kind: &str) -> bool;
+
+    /// One optimizer step: consumes the state and returns it updated.
+    fn train_step(
+        &self,
+        params: Vec<Tensor>,
+        opt_state: Vec<Tensor>,
+        batch: &[Tensor],
+        lr: f64,
+        wd: f64,
+        step: u64,
+    ) -> Result<StepOutput>;
+
+    /// Evaluate one batch (no state update).
+    fn eval_step(&self, params: &[Tensor], batch: &[Tensor]) -> Result<Metrics>;
+
+    /// Frozen-feature extraction (vision): images [B,H,W,C] → [B, d].
+    fn features(&self, params: &[Tensor], images: &Tensor) -> Result<Tensor>;
+
+    /// Raw loss gradients for one batch, in manifest param order. Optional:
+    /// backends that cannot expose gradients (PJRT fuses them into the
+    /// update) return an error. Used by gradient-check tests.
+    fn grads(&self, _params: &[Tensor], _batch: &[Tensor]) -> Result<(Metrics, Vec<Tensor>)> {
+        bail!("this backend does not expose raw gradients")
+    }
+}
+
+/// An execution backend: turns a manifest entry into an [`Executable`].
+pub trait Backend {
+    fn platform(&self) -> String;
+
+    /// Load one model. `kinds` selects which executables to build ("train",
+    /// "eval", "features") — backends with a compile cost (PJRT) only build
+    /// what an experiment needs; the native backend ignores it (its
+    /// "compilation" is free).
+    fn load_model(&self, manifest: &Manifest, name: &str, kinds: &[&str]) -> Result<LoadedModel>;
+}
+
+/// A loaded model: the manifest entry plus a backend executable.
+pub struct LoadedModel {
+    pub entry: ModelEntry,
+    exec: Box<dyn Executable>,
+}
+
 impl LoadedModel {
+    pub fn new(entry: ModelEntry, exec: Box<dyn Executable>) -> LoadedModel {
+        LoadedModel { entry, exec }
+    }
+
+    /// Which artifact kinds have executables.
+    pub fn has(&self, kind: &str) -> bool {
+        self.exec.has(kind)
+    }
+
     /// Execute one training step.
     ///
     /// `params` / `opt_state` are consumed in manifest order and returned
-    /// updated (so callers thread them through a loop); `batch` follows the
-    /// manifest batch signature; scalars are (lr, wd, step).
+    /// updated (so callers thread them through a loop).
     pub fn train_step(
         &self,
-        params: Vec<xla::Literal>,
-        opt_state: Vec<xla::Literal>,
+        params: Vec<Tensor>,
+        opt_state: Vec<Tensor>,
         batch: &[Tensor],
         lr: f64,
         wd: f64,
         step: u64,
     ) -> Result<StepOutput> {
-        let exe = self.train.as_ref().context("train executable not loaded")?;
         let e = &self.entry;
         if params.len() != e.params.len()
             || opt_state.len() != e.opt_state.len()
@@ -116,76 +120,85 @@ impl LoadedModel {
         {
             bail!(
                 "signature mismatch: got {}/{}/{} params/opt/batch, want {}/{}/{}",
-                params.len(), opt_state.len(), batch.len(),
-                e.params.len(), e.opt_state.len(), e.batch.len()
+                params.len(),
+                opt_state.len(),
+                batch.len(),
+                e.params.len(),
+                e.opt_state.len(),
+                e.batch.len()
             );
         }
-        let mut inputs: Vec<xla::Literal> = params;
-        inputs.extend(opt_state);
-        for t in batch {
-            inputs.push(t.to_literal()?);
-        }
-        inputs.push(Tensor::scalar_f32(lr as f32).to_literal()?);
-        inputs.push(Tensor::scalar_f32(wd as f32).to_literal()?);
-        inputs.push(Tensor::scalar_f32(step as f32).to_literal()?);
-
-        let out = exe.execute::<xla::Literal>(&inputs)?;
-        let mut flat = out[0][0].to_literal_sync()?.to_tuple()?;
-        let expected = e.params.len() + e.opt_state.len() + e.metrics.len();
-        if flat.len() != expected {
-            bail!("train step returned {} outputs, expected {expected}", flat.len());
-        }
-        let metrics_lits = flat.split_off(e.params.len() + e.opt_state.len());
-        let opt_lits = flat.split_off(e.params.len());
-        let metrics = extract_metrics(&e.metrics, &metrics_lits)?;
-        Ok(StepOutput { params: flat, opt_state: opt_lits, metrics })
+        self.exec.train_step(params, opt_state, batch, lr, wd, step)
     }
 
     /// Evaluate one batch (no state update).
-    pub fn eval_step(&self, params: &[xla::Literal], batch: &[Tensor]) -> Result<Metrics> {
-        let exe = self.eval.as_ref().context("eval executable not loaded")?;
-        let e = &self.entry;
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + batch.len());
-        for p in params {
-            // Literal has no cheap clone; round-trip through host tensor.
-            inputs.push(Tensor::from_literal(p)?.to_literal()?);
-        }
-        for t in batch {
-            inputs.push(t.to_literal()?);
-        }
-        let out = exe.execute::<xla::Literal>(&inputs)?;
-        let flat = out[0][0].to_literal_sync()?.to_tuple()?;
-        extract_metrics(&e.metrics, &flat)
+    pub fn eval_step(&self, params: &[Tensor], batch: &[Tensor]) -> Result<Metrics> {
+        self.exec.eval_step(params, batch)
     }
 
     /// Frozen-feature extraction (vit only): images [B,H,W,C] → [B, d].
-    pub fn features(&self, params: &[xla::Literal], images: &Tensor) -> Result<Tensor> {
-        let exe = self.features.as_ref().context("features executable not loaded")?;
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 1);
-        for p in params {
-            inputs.push(Tensor::from_literal(p)?.to_literal()?);
+    pub fn features(&self, params: &[Tensor], images: &Tensor) -> Result<Tensor> {
+        self.exec.features(params, images)
+    }
+
+    /// Raw loss gradients (native backend only); see [`Executable::grads`].
+    pub fn grads(&self, params: &[Tensor], batch: &[Tensor]) -> Result<(Metrics, Vec<Tensor>)> {
+        self.exec.grads(params, batch)
+    }
+}
+
+/// Backend selector + the façade the rest of the crate uses.
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// Default runtime: the native pure-Rust CPU backend.
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(native::NativeBackend::new()) })
+    }
+
+    /// PJRT runtime over AOT HLO artifacts (requires the `pjrt` feature and
+    /// a real xla crate in place of the vendored stub).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(pjrt::PjrtBackend::new()?) })
+    }
+
+    /// The backend that can actually execute `manifest`: AOT manifests
+    /// (loaded from `artifacts/`) run on PJRT, the native zoo on the native
+    /// backend. `Manifest::load_or_native` only returns an AOT manifest
+    /// when the `pjrt` feature is compiled in, so the pairing is total.
+    pub fn for_manifest(manifest: &Manifest) -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        {
+            if manifest.source_hash != crate::manifest::zoo::NATIVE_SOURCE {
+                return Runtime::pjrt();
+            }
         }
-        inputs.push(images.to_literal()?);
-        let out = exe.execute::<xla::Literal>(&inputs)?;
-        let flat = out[0][0].to_literal_sync()?.to_tuple()?;
-        Tensor::from_literal(&flat[0])
+        let _ = manifest;
+        Runtime::new()
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    pub fn load_model(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+        kinds: &[&str],
+    ) -> Result<LoadedModel> {
+        self.backend.load_model(manifest, name, kinds)
     }
 }
 
-fn extract_metrics(names: &[String], lits: &[xla::Literal]) -> Result<Metrics> {
-    let mut m = Metrics::new();
-    for (name, lit) in names.iter().zip(lits) {
-        let t = Tensor::from_literal(lit)?;
-        m.insert(name.clone(), t.f32s()?[0] as f64);
-    }
-    Ok(m)
-}
-
-/// Convert a checkpoint's tensors (in manifest order) to input literals.
-pub fn literals_from_checkpoint(
+/// Bind a checkpoint's tensors (in manifest order) to a state vector.
+pub fn tensors_from_checkpoint(
     ck: &crate::checkpoint::Checkpoint,
-    specs: &[crate::manifest::TensorSpec],
-) -> Result<Vec<xla::Literal>> {
+    specs: &[TensorSpec],
+) -> Result<Vec<Tensor>> {
     specs
         .iter()
         .map(|s| {
@@ -193,22 +206,25 @@ pub fn literals_from_checkpoint(
             if t.shape != s.shape {
                 bail!("tensor `{}` shape {:?} != manifest {:?}", s.name, t.shape, s.shape);
             }
-            t.to_literal()
+            Ok(t.clone())
         })
         .collect()
 }
 
-/// Convert state literals back into a named checkpoint.
-pub fn checkpoint_from_literals(
+/// Convert state tensors back into a named checkpoint.
+pub fn checkpoint_from_tensors(
     model: &str,
     step: u64,
     provenance: &str,
-    specs: &[crate::manifest::TensorSpec],
-    lits: &[xla::Literal],
+    specs: &[TensorSpec],
+    tensors: &[Tensor],
 ) -> Result<crate::checkpoint::Checkpoint> {
+    if specs.len() != tensors.len() {
+        bail!("state has {} tensors but the signature lists {}", tensors.len(), specs.len());
+    }
     let mut ck = crate::checkpoint::Checkpoint::new(model, step, provenance);
-    for (s, l) in specs.iter().zip(lits) {
-        ck.insert(&s.name, Tensor::from_literal(l)?);
+    for (s, t) in specs.iter().zip(tensors) {
+        ck.insert(&s.name, t.clone());
     }
     Ok(ck)
 }

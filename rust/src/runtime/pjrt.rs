@@ -1,0 +1,176 @@
+//! PJRT backend (cargo feature `pjrt`): load AOT-compiled HLO artifacts and
+//! execute them.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py` for
+//! why). Python never runs on this path: artifacts are compiled once at
+//! `load_model` and then executed step after step by the trainer.
+//!
+//! Output convention (probed at bring-up, DESIGN.md): the artifacts are
+//! lowered with `return_tuple=True`, and this PJRT build returns the whole
+//! result as a *single tuple buffer* regardless of arity. Each step we sync
+//! the tuple to a host literal and decompose it; on the CPU client this is a
+//! memcpy.
+//!
+//! NOTE: the workspace vendors an API-compatible **stub** of the `xla` crate
+//! (see `vendor/xla`): this module type-checks and its entry points return a
+//! clear "PJRT unavailable" error until the real bindings are linked in.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{Manifest, ModelEntry};
+use crate::tensor::{Data, Tensor};
+
+use super::{Backend, Executable, LoadedModel, Metrics, StepOutput};
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v.as_slice()),
+        Data::I32(v) => xla::Literal::vec1(v.as_slice()),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+// The catch-all arm is unreachable against the vendored stub (two variants)
+// but required by the real xla bindings' wider ElementType.
+#[allow(unreachable_patterns)]
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::from_f32(&dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(Tensor::from_i32(&dims, lit.to_vec::<i32>()?)),
+        t => bail!("unsupported literal element type {t:?}"),
+    }
+}
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { client: xla::PjRtClient::cpu()? })
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile the artifacts of one model. `kinds` selects which
+    /// executables to build ("train", "eval", "features") — compiling only
+    /// what an experiment needs keeps sweep startup fast (XLA compilation of
+    /// a train-step module dominates experiment startup).
+    fn load_model(&self, manifest: &Manifest, name: &str, kinds: &[&str]) -> Result<LoadedModel> {
+        let entry = manifest.model(name)?.clone();
+        let get = |k: &str| -> Result<Option<xla::PjRtLoadedExecutable>> {
+            if !kinds.contains(&k) || !entry.artifacts.contains_key(k) {
+                return Ok(None);
+            }
+            Ok(Some(self.compile(&manifest.artifact_path(&entry, k)?)?))
+        };
+        let exec = PjrtExec {
+            entry: entry.clone(),
+            train: get("train")?,
+            eval: get("eval")?,
+            features: get("features")?,
+        };
+        Ok(LoadedModel::new(entry, Box::new(exec)))
+    }
+}
+
+pub struct PjrtExec {
+    entry: ModelEntry,
+    train: Option<xla::PjRtLoadedExecutable>,
+    eval: Option<xla::PjRtLoadedExecutable>,
+    features: Option<xla::PjRtLoadedExecutable>,
+}
+
+fn extract_metrics(names: &[String], lits: &[xla::Literal]) -> Result<Metrics> {
+    let mut m = Metrics::new();
+    for (name, lit) in names.iter().zip(lits) {
+        let t = from_literal(lit)?;
+        m.insert(name.clone(), t.f32s()?[0] as f64);
+    }
+    Ok(m)
+}
+
+impl Executable for PjrtExec {
+    fn has(&self, kind: &str) -> bool {
+        match kind {
+            "train" => self.train.is_some(),
+            "eval" => self.eval.is_some(),
+            "features" => self.features.is_some(),
+            _ => false,
+        }
+    }
+
+    fn train_step(
+        &self,
+        params: Vec<Tensor>,
+        opt_state: Vec<Tensor>,
+        batch: &[Tensor],
+        lr: f64,
+        wd: f64,
+        step: u64,
+    ) -> Result<StepOutput> {
+        let exe = self.train.as_ref().context("train executable not loaded")?;
+        let e = &self.entry;
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        for t in params.iter().chain(opt_state.iter()).chain(batch.iter()) {
+            inputs.push(to_literal(t)?);
+        }
+        inputs.push(to_literal(&Tensor::scalar_f32(lr as f32))?);
+        inputs.push(to_literal(&Tensor::scalar_f32(wd as f32))?);
+        inputs.push(to_literal(&Tensor::scalar_f32(step as f32))?);
+
+        let out = exe.execute::<xla::Literal>(&inputs)?;
+        let mut flat = out[0][0].to_literal_sync()?.to_tuple()?;
+        let expected = e.params.len() + e.opt_state.len() + e.metrics.len();
+        if flat.len() != expected {
+            bail!("train step returned {} outputs, expected {expected}", flat.len());
+        }
+        let metrics_lits = flat.split_off(e.params.len() + e.opt_state.len());
+        let opt_lits = flat.split_off(e.params.len());
+        let metrics = extract_metrics(&e.metrics, &metrics_lits)?;
+        Ok(StepOutput {
+            params: flat.iter().map(from_literal).collect::<Result<_>>()?,
+            opt_state: opt_lits.iter().map(from_literal).collect::<Result<_>>()?,
+            metrics,
+        })
+    }
+
+    fn eval_step(&self, params: &[Tensor], batch: &[Tensor]) -> Result<Metrics> {
+        let exe = self.eval.as_ref().context("eval executable not loaded")?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + batch.len());
+        for t in params.iter().chain(batch.iter()) {
+            inputs.push(to_literal(t)?);
+        }
+        let out = exe.execute::<xla::Literal>(&inputs)?;
+        let flat = out[0][0].to_literal_sync()?.to_tuple()?;
+        extract_metrics(&self.entry.metrics, &flat)
+    }
+
+    fn features(&self, params: &[Tensor], images: &Tensor) -> Result<Tensor> {
+        let exe = self.features.as_ref().context("features executable not loaded")?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 1);
+        for t in params {
+            inputs.push(to_literal(t)?);
+        }
+        inputs.push(to_literal(images)?);
+        let out = exe.execute::<xla::Literal>(&inputs)?;
+        let flat = out[0][0].to_literal_sync()?.to_tuple()?;
+        from_literal(&flat[0])
+    }
+}

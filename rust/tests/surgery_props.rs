@@ -1,6 +1,9 @@
 //! Property tests for the upcycling surgery (hand-rolled generator loop —
 //! proptest is unavailable offline; `Rng` provides the shrink-free random
-//! case generation, 64 cases per property, all seeds deterministic).
+//! case generation, all seeds deterministic).
+//!
+//! Runs against the native model zoo, so these properties are checked on
+//! every `cargo test` with no artifacts present.
 
 use sparse_upcycle::checkpoint::Checkpoint;
 use sparse_upcycle::init::{init_opt_state, init_params};
@@ -10,16 +13,12 @@ use sparse_upcycle::upcycle::{
 };
 use sparse_upcycle::util::rng::Rng;
 
-fn manifest() -> Option<Manifest> {
-    Manifest::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
-}
-
 /// Property: for every MoE weight tensor, every expert slice is bit-equal to
 /// the dense parent's MLP weights; every non-MoE tensor is copied verbatim;
 /// routers match the requested init scale statistically.
 #[test]
 fn prop_surgery_is_exact_replication() {
-    let Some(m) = manifest() else { return };
+    let m = Manifest::native();
     let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
     let mut seeds = Rng::new(42);
     for case in 0..8 {
@@ -61,10 +60,10 @@ fn prop_surgery_is_exact_replication() {
 }
 
 /// Property: surgery is deterministic in its seed and differs across seeds
-/// (router init only).
+/// (router init only, when `expert_noise = 0`).
 #[test]
 fn prop_surgery_seed_determinism() {
-    let Some(m) = manifest() else { return };
+    let m = Manifest::native();
     let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
     let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
     let dense = init_params(&dense_entry, 7).unwrap();
@@ -81,12 +80,53 @@ fn prop_surgery_seed_determinism() {
     }
 }
 
+/// Property: the whole sparse checkpoint is bit-identical across repeated
+/// surgeries with the same seed — including when expert noise is on — and
+/// different seeds diversify exactly the randomized tensors (routers, and
+/// experts too once noise is non-zero).
+#[test]
+fn prop_surgery_bitwise_determinism() {
+    let m = Manifest::native();
+    let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
+    let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let dense = init_params(&dense_entry, 13).unwrap();
+
+    for noise in [0.0f32, 0.05] {
+        let opts = |seed| UpcycleOptions { expert_noise: noise, seed, ..Default::default() };
+        let a = upcycle_params(&dense, &sparse_entry, &opts(9)).unwrap();
+        let b = upcycle_params(&dense, &sparse_entry, &opts(9)).unwrap();
+        // Same seed ⇒ bit-identical checkpoint (tensor set and every value).
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        for (name, t) in &a.tensors {
+            assert_eq!(t, b.get(name).unwrap(), "noise={noise}: `{name}` must be bit-identical");
+        }
+
+        let c = upcycle_params(&dense, &sparse_entry, &opts(10)).unwrap();
+        for spec in &sparse_entry.params {
+            let differs = a.get(&spec.name).unwrap() != c.get(&spec.name).unwrap();
+            if spec.name.contains("/moe/router") {
+                assert!(differs, "routers must differ across seeds");
+            } else if spec.name.contains("/moe/wi") || spec.name.contains("/moe/wo") {
+                // Experts depend on the seed only through the noise.
+                assert_eq!(
+                    differs,
+                    noise > 0.0,
+                    "expert tensors should {} across seeds at noise={noise}",
+                    if noise > 0.0 { "differ" } else { "be identical" }
+                );
+            } else {
+                assert!(!differs, "copied tensor `{}` must not depend on the seed", spec.name);
+            }
+        }
+    }
+}
+
 /// Property: expert noise perturbs each expert independently with the
 /// requested magnitude; load_experts=false produces experts unrelated to
 /// the parent.
 #[test]
 fn prop_noise_and_random_experts() {
-    let Some(m) = manifest() else { return };
+    let m = Manifest::native();
     let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
     let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
     let dense = init_params(&dense_entry, 11).unwrap();
@@ -132,11 +172,11 @@ fn prop_noise_and_random_experts() {
     }
 }
 
-/// Property: optimizer-state surgery carries factored accumulators across
-/// and zeroes exactly the router slots (or everything with load=false).
+/// Property: optimizer-state surgery carries accumulators across and zeroes
+/// exactly the router slots (or everything with load=false).
 #[test]
 fn prop_opt_state_surgery() {
-    let Some(m) = manifest() else { return };
+    let m = Manifest::native();
     let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
     let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
     let mut dense_opt = init_opt_state(&dense_entry).unwrap();
@@ -191,16 +231,16 @@ fn prop_depth_tiling() {
         assert_eq!(covered.len(), n_old, "all source blocks used: {map:?}");
     }
 
-    // Checkpoint-level check on the real manifest geometry.
-    let Some(m) = manifest() else { return };
+    // Checkpoint-level check on the zoo geometry (4 → 6 encoder blocks).
+    let m = Manifest::native();
     let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
     let tiled_entry = m.model("lm_tiny_dense_tiled").unwrap().clone();
     let dense = init_params(&dense_entry, 1).unwrap();
     let tiled: Checkpoint = depth_tile_params(&dense, &dense_entry, &tiled_entry).unwrap();
     assert_eq!(tiled.tensors.len(), tiled_entry.params.len());
-    let t = tiled.get("enc/block_05/attn/wq").unwrap();
+    let t = tiled.get("enc/block_05/mlp/wi").unwrap();
     // Block 5 of 6 maps to source block 5*4/6 = 3.
-    assert_eq!(t, dense.get("enc/block_03/attn/wq").unwrap());
+    assert_eq!(t, dense.get("enc/block_03/mlp/wi").unwrap());
     assert_eq!(
         tiled.get("token_embed").unwrap(),
         dense.get("token_embed").unwrap()

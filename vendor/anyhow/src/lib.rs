@@ -1,0 +1,184 @@
+//! Minimal, offline-vendored subset of the `anyhow` error-handling API.
+//!
+//! This container has no crates.io access, so the workspace vendors the
+//! small slice of `anyhow` the codebase actually uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` / `bail!`
+//! / `ensure!` macros. Semantics follow upstream where it matters:
+//!
+//! * `Display` shows the outermost message; `{:#}` shows the whole context
+//!   chain joined by `": "` (the `eprintln!("{e:#}")` convention).
+//! * Any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//!   via `?`. [`Error`] itself deliberately does **not** implement
+//!   `std::error::Error`, exactly like upstream, so the blanket conversion
+//!   does not conflict with the identity `From`.
+//! * `Context` is implemented for both `Result` and `Option`.
+
+use std::fmt;
+
+/// Error type: an ordered chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.chain.len() == 1 {
+            return f.write_str(&self.chain[0]);
+        }
+        writeln!(f, "{}", self.chain[0])?;
+        writeln!(f, "\nCaused by:")?;
+        for (i, c) in self.chain.iter().skip(1).enumerate() {
+            writeln!(f, "    {i}: {c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context frames.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`; the error defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing flag").unwrap_err();
+        assert_eq!(format!("{e}"), "missing flag");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("x too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(200).unwrap_err()), "x too large: 200");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<(), std::num::ParseIntError> = "x".parse::<i32>().map(|_| ());
+        let e = r.with_context(|| format!("parsing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "parsing x: invalid digit found in string");
+    }
+}

@@ -1,0 +1,200 @@
+//! API-compatible **stub** of the `xla` / PJRT Rust bindings.
+//!
+//! The real PJRT bindings link against libxla, which cannot be built in this
+//! offline container. This stub exposes the exact API surface the `pjrt`
+//! cargo feature of `sparse-upcycle` compiles against, so the feature-gated
+//! code keeps type-checking in CI. Host-side [`Literal`] operations are
+//! implemented for real (they are plain memory); every device operation
+//! (client construction, compilation, execution) returns
+//! [`Error::Unavailable`] at runtime.
+//!
+//! To run the PJRT backend for real, replace this path dependency with the
+//! actual `xla` crate in the workspace `Cargo.toml`.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum Error {
+    /// The stub cannot perform device operations.
+    Unavailable(String),
+    /// Host-side literal misuse (wrong dtype, bad reshape, ...).
+    Literal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT is unavailable in this build (vendor/xla is a stub; \
+                 link the real xla crate to enable the `pjrt` backend)"
+            ),
+            Error::Literal(m) => write!(f, "literal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error::Unavailable(what.to_string()))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side typed element: the types `Literal` can hold.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn push_into(data: &[Self], lit: &mut LiteralData);
+    fn extract(lit: &LiteralData) -> Option<Vec<Self>>;
+}
+
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn push_into(data: &[Self], lit: &mut LiteralData) {
+        *lit = LiteralData::F32(data.to_vec());
+    }
+
+    fn extract(lit: &LiteralData) -> Option<Vec<Self>> {
+        match lit {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn push_into(data: &[Self], lit: &mut LiteralData) {
+        *lit = LiteralData::I32(data.to_vec());
+    }
+
+    fn extract(lit: &LiteralData) -> Option<Vec<Self>> {
+        match lit {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host literal: dims + typed buffer. Fully functional (host memory only).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut d = LiteralData::F32(Vec::new());
+        T::push_into(data, &mut d);
+        Literal { dims: vec![data.len() as i64], data: d }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len() as i64,
+            LiteralData::I32(v) => v.len() as i64,
+        };
+        if n != have {
+            return Err(Error::Literal(format!("cannot reshape {have} elements to {dims:?}")));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data).ok_or_else(|| Error::Literal("dtype mismatch".to_string()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("decomposing a device tuple literal")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        unavailable("parsing HLO text")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("creating a PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an XLA computation")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a PJRT executable")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("syncing a device buffer to host")
+    }
+}
