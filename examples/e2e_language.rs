@@ -57,7 +57,8 @@ fn main() -> Result<()> {
     // 1. Dense pretraining (cached across runs).
     let t0 = std::time::Instant::now();
     let parent = ctx.dense_parent(dense_name, ctx.p.pretrain_steps)?;
-    println!("  [t+{:.0}s] dense parent ready (step {})", t0.elapsed().as_secs_f64(), parent.0.step);
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!("  [t+{elapsed:.0}s] dense parent ready (step {})", parent.0.step);
 
     let mut report = Report::new("e2e_language", "End-to-end sparse upcycling run");
 

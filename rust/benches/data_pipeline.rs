@@ -3,6 +3,7 @@
 //! tiny scale); these benches keep it honest (EXPERIMENTS.md §Perf).
 //!
 //! Run: cargo bench --bench data_pipeline
+//! (How to run + interpret all benches: docs/BENCHMARKS.md.)
 
 use sparse_upcycle::data::text::{span_corrupt, HmmCorpus, HmmSpec, TextPipeline};
 use sparse_upcycle::data::vision::{VisionPipeline, VisionSpec};

@@ -7,6 +7,7 @@
 //! memory from `mesh` placement.
 //!
 //! Run: cargo bench --bench routing_sim
+//! (How to run + interpret all benches: docs/BENCHMARKS.md.)
 
 use sparse_upcycle::manifest::{Manifest, MoeSpec};
 use sparse_upcycle::parallel::{place, simulate_routing, MeshSpec};

@@ -1,25 +1,179 @@
 //! Bench: end-to-end training/eval step cost through the execution backend —
-//! the L3 hot path. This regenerates the paper's per-step cost claims:
+//! the L3 hot path — and the writer of the machine-readable
+//! **`BENCH_runtime.json`** baseline (schema + recorded numbers:
+//! `docs/BENCHMARKS.md`). This regenerates the paper's per-step cost claims:
 //!
 //! * Fig. 9 / §2.1: a sparse step costs ≈ C× the dense MLP FLOPs + router,
 //!   so dense < C=1 < C=2 < C=3;
 //! * §3.1 "number of experts": E is ~FLOPs-neutral (E=2 vs E=16 ≈ same);
 //!
-//! and it is the measurement harness for the §Perf optimization loop:
-//! native step latency, steps/s and achieved FLOP/s per variant. Runs on
-//! the native CPU backend out of the box (no artifacts needed); a `pjrt`
-//! build with `artifacts/manifest.json` present measures the AOT
-//! signatures instead.
+//! and it is the measurement harness for the §Perf optimization loop. Every
+//! run measures, on this machine:
 //!
-//! Run: cargo bench --bench runtime_step [-- --full]
+//! * step/eval latency percentiles + tokens/sec per zoo variant,
+//! * the blocked-kernel speedup against the preserved PR 1 scalar path
+//!   (`NativeBackend::reference_kernels`), at both the kernel and the
+//!   full-train-step level,
+//! * the per-phase breakdown (router / dispatch / expert_mlp / combine /
+//!   backward / optimizer) via the `util::bench` phase profiler,
+//! * data-parallel scaling (`coordinator::dp_train_step`) over worker
+//!   replicas.
+//!
+//! Run: cargo bench --bench runtime_step [-- --full] [--quick]
+//!      [--json-out PATH]   (default PATH: BENCH_runtime.json in the bench
+//!      CWD, i.e. `rust/`)
 
-use sparse_upcycle::coordinator::TrainState;
+use sparse_upcycle::coordinator::{dp_train_step, BatchSource, DpConfig, TrainState};
 use sparse_upcycle::init::{init_opt_state, init_params};
-use sparse_upcycle::manifest::Manifest;
-use sparse_upcycle::runtime::Runtime;
-use sparse_upcycle::util::bench::bench;
+use sparse_upcycle::linalg::gemm;
+use sparse_upcycle::manifest::{Manifest, ModelEntry};
+use sparse_upcycle::runtime::native::NativeBackend;
+use sparse_upcycle::runtime::{Backend, LoadedModel, Runtime};
+use sparse_upcycle::util::bench::{
+    bench, phases_enable, phases_reset, phases_snapshot, BenchResult,
+};
+use sparse_upcycle::util::json::{arr, num, obj, s, Json};
+
+fn pipeline(entry: &ModelEntry) -> Box<dyn sparse_upcycle::coordinator::BatchSource> {
+    if entry.family == "lm" {
+        Box::new(sparse_upcycle::data::text::TextPipeline::new(
+            sparse_upcycle::data::text::HmmCorpus::new(
+                sparse_upcycle::data::text::HmmSpec {
+                    vocab_size: entry.config.vocab_size,
+                    ..Default::default()
+                },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            0,
+        ))
+    } else {
+        Box::new(sparse_upcycle::data::vision::VisionPipeline::new(
+            sparse_upcycle::data::vision::VisionSpec::default(),
+            entry.config.batch_size,
+            1,
+            0,
+        ))
+    }
+}
+
+fn fresh_state(entry: &ModelEntry) -> TrainState {
+    TrainState::from_checkpoints(
+        entry,
+        &init_params(entry, 0).unwrap(),
+        &init_opt_state(entry).unwrap(),
+    )
+    .unwrap()
+}
+
+/// Tokens processed per training step (the throughput denominator).
+fn tokens_per_step(entry: &ModelEntry) -> f64 {
+    let c = &entry.config;
+    if entry.family == "lm" {
+        (c.batch_size * (c.enc_len + c.dec_len)) as f64
+    } else {
+        let np = (c.image_size / c.patch_size.max(1)).pow(2);
+        (c.batch_size * np) as f64
+    }
+}
+
+fn result_json(r: &BenchResult, items_per_iter: f64, flops_per_iter: f64) -> Json {
+    obj(vec![
+        ("iters", num(r.iters as f64)),
+        ("mean_ns", num(r.mean_ns)),
+        ("p50_ns", num(r.p50_ns)),
+        ("p90_ns", num(r.p90_ns)),
+        ("p99_ns", num(r.p99_ns)),
+        ("min_ns", num(r.min_ns)),
+        ("stddev_ns", num(r.stddev_ns)),
+        ("per_s", num(1e9 / r.mean_ns)),
+        ("items_per_s", num(items_per_iter * 1e9 / r.mean_ns)),
+        ("gflops_per_s", num(flops_per_iter / r.mean_ns)),
+    ])
+}
+
+/// Bench one model's train loop, threading the optimizer state through
+/// `state` (which stays warmed for later sections).
+fn bench_train(
+    name: &str,
+    model: &LoadedModel,
+    state: &mut TrainState,
+    batch: &[sparse_upcycle::tensor::Tensor],
+    target_ms: u64,
+) -> BenchResult {
+    let mut step = 0u64;
+    bench(name, target_ms, || {
+        step += 1;
+        let params = std::mem::take(&mut state.params);
+        let opt = std::mem::take(&mut state.opt_state);
+        let out = model.train_step(params, opt, batch, 1e-3, 0.0, step).unwrap();
+        state.params = out.params;
+        state.opt_state = out.opt_state;
+    })
+}
+
+/// Kernel-level blocked vs scalar comparison on zoo-shaped GEMMs.
+fn kernel_section(target_ms: u64) -> Json {
+    println!("== kernels: blocked vs PR 1 scalar reference ==");
+    let mut rng = sparse_upcycle::util::rng::Rng::new(42);
+    let mut shapes = Vec::new();
+    // (n, k, m): token×d·ff MLP, token×d·vocab logits, small-geometry logits.
+    for &(n, k, m) in &[(256usize, 32usize, 64usize), (128, 32, 256), (256, 64, 1024)] {
+        let a: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+        let mut out = vec![0f32; n * m];
+        let rb = bench(&format!("mm_nn blocked {n}x{k}x{m}"), target_ms, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            gemm::mm_nn(&a, &b, n, k, m, &mut out);
+        });
+        let rr = bench(&format!("mm_nn scalar  {n}x{k}x{m}"), target_ms, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            gemm::reference::mm_nn(&a, &b, n, k, m, &mut out);
+        });
+        // The transposed-product form (logits / activation grads).
+        let bt: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut out_nt = vec![0f32; n * m];
+        let ntb = bench(&format!("mm_nt blocked {n}x{k}x{m}"), target_ms, || {
+            out_nt.iter_mut().for_each(|v| *v = 0.0);
+            gemm::mm_nt(&a, &bt, n, k, m, &mut out_nt);
+        });
+        let ntr = bench(&format!("mm_nt scalar  {n}x{k}x{m}"), target_ms, || {
+            out_nt.iter_mut().for_each(|v| *v = 0.0);
+            gemm::reference::mm_nt(&a, &bt, n, k, m, &mut out_nt);
+        });
+        println!(
+            "  ↳ {n}x{k}x{m}: mm_nn speedup {:.2}x, mm_nt speedup {:.2}x\n",
+            rr.mean_ns / rb.mean_ns,
+            ntr.mean_ns / ntb.mean_ns
+        );
+        shapes.push(obj(vec![
+            ("n", num(n as f64)),
+            ("k", num(k as f64)),
+            ("m", num(m as f64)),
+            ("mm_nn_blocked_ns", num(rb.mean_ns)),
+            ("mm_nn_reference_ns", num(rr.mean_ns)),
+            ("mm_nn_speedup", num(rr.mean_ns / rb.mean_ns)),
+            ("mm_nt_blocked_ns", num(ntb.mean_ns)),
+            ("mm_nt_reference_ns", num(ntr.mean_ns)),
+            ("mm_nt_speedup", num(ntr.mean_ns / ntb.mean_ns)),
+        ]));
+    }
+    obj(vec![("shapes", arr(shapes))])
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_out = args
+        .iter()
+        .position(|a| a == "--json-out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_runtime.json".to_string());
+
     let manifest = match Manifest::load_or_native("artifacts") {
         Ok(m) => m,
         Err(e) => {
@@ -28,10 +182,11 @@ fn main() {
         }
     };
     let runtime = Runtime::for_manifest(&manifest).unwrap();
+    let reference_backend = NativeBackend::reference_kernels();
     println!("platform: {}  (manifest source: {})", runtime.platform(), manifest.source_hash);
 
-    // Pass --full for the whole C/E sweep.
-    let full = std::env::args().any(|a| a == "--full");
+    let (t_train, t_eval, t_kern) = if quick { (300, 200, 100) } else { (1500, 800, 300) };
+
     let variants: &[&str] = if full {
         &[
             "lm_tiny_dense",
@@ -47,59 +202,151 @@ fn main() {
         &["lm_tiny_dense", "lm_tiny_moe_e8_c1", "lm_tiny_moe_e8_c2", "vit_tiny_moe_e8_c2"]
     };
 
+    let kernels = kernel_section(t_kern);
+
+    let mut model_entries = Vec::new();
     for name in variants {
         let entry = manifest.model(name).unwrap().clone();
         let model = runtime.load_model(&manifest, name, &["train", "eval"]).unwrap();
-        let mut state = TrainState::from_checkpoints(
-            &entry,
-            &init_params(&entry, 0).unwrap(),
-            &init_opt_state(&entry).unwrap(),
-        )
-        .unwrap();
-        let mut pipeline: Box<dyn sparse_upcycle::coordinator::BatchSource> =
-            if entry.family == "lm" {
-                Box::new(sparse_upcycle::data::text::TextPipeline::new(
-                    sparse_upcycle::data::text::HmmCorpus::new(
-                        sparse_upcycle::data::text::HmmSpec {
-                            vocab_size: entry.config.vocab_size,
-                            ..Default::default()
-                        },
-                        1,
-                    ),
-                    entry.config.batch_size,
-                    entry.config.enc_len,
-                    entry.config.dec_len,
-                    1,
-                    0,
-                ))
-            } else {
-                Box::new(sparse_upcycle::data::vision::VisionPipeline::new(
-                    sparse_upcycle::data::vision::VisionSpec::default(),
-                    entry.config.batch_size,
-                    1,
-                    0,
-                ))
-            };
-        let batch = pipeline.next();
-        let mut step = 0u64;
-        let r = bench(&format!("train_step {name}"), 1500, || {
-            step += 1;
-            let params = std::mem::take(&mut state.params);
-            let opt = std::mem::take(&mut state.opt_state);
-            let out = model.train_step(params, opt, &batch, 1e-3, 0.0, step).unwrap();
-            state.params = out.params;
-            state.opt_state = out.opt_state;
-        });
+        let scalar = reference_backend.load_model(&manifest, name, &["train", "eval"]).unwrap();
+        let mut state = fresh_state(&entry);
+        let mut pipe = pipeline(&entry);
+        let batch = pipe.next();
+        let tokens = tokens_per_step(&entry);
         let flops = entry.flops.train_step;
+
+        // Blocked-kernel step (the shipping path).
+        let r_train =
+            bench_train(&format!("train_step {name}"), &model, &mut state, &batch, t_train);
         println!(
-            "  ↳ {:.1} steps/s, {:.2} GFLOP/s achieved (analytic {:.2} MFLOP/step)",
-            1e9 / r.mean_ns,
-            flops / r.mean_ns,
-            flops / 1e6
+            "  ↳ {:.1} steps/s, {:.1} tokens/s, {:.2} GFLOP/s achieved",
+            1e9 / r_train.mean_ns,
+            tokens * 1e9 / r_train.mean_ns,
+            flops / r_train.mean_ns
         );
-        let r = bench(&format!("eval_step  {name}"), 800, || {
+
+        // The preserved PR 1 scalar path, same model + batch.
+        let mut ref_state = fresh_state(&entry);
+        let r_ref = bench_train(
+            &format!("train_step {name} [scalar ref]"),
+            &scalar,
+            &mut ref_state,
+            &batch,
+            t_eval,
+        );
+        let step_speedup = r_ref.mean_ns / r_train.mean_ns;
+        println!("  ↳ blocked vs PR 1 scalar: {step_speedup:.2}x");
+
+        let r_eval = bench(&format!("eval_step  {name}"), t_eval, || {
             std::hint::black_box(model.eval_step(&state.params, &batch).unwrap());
         });
-        println!("  ↳ {:.1} evals/s\n", 1e9 / r.mean_ns);
+        println!("  ↳ {:.1} evals/s", 1e9 / r_eval.mean_ns);
+
+        // Per-phase attribution over a few profiled steps.
+        phases_reset();
+        phases_enable(true);
+        let profiled_steps = 5u64;
+        let wall = std::time::Instant::now();
+        for i in 1..=profiled_steps {
+            let params = std::mem::take(&mut state.params);
+            let opt = std::mem::take(&mut state.opt_state);
+            let out = model.train_step(params, opt, &batch, 1e-3, 0.0, 1000 + i).unwrap();
+            state.params = out.params;
+            state.opt_state = out.opt_state;
+        }
+        let wall_ns = wall.elapsed().as_nanos() as f64;
+        phases_enable(false);
+        let mut phases = Vec::new();
+        let mut attributed = 0.0;
+        for (phase, total_ns, calls) in phases_snapshot() {
+            attributed += total_ns;
+            phases.push(obj(vec![
+                ("phase", s(&phase)),
+                ("total_ns", num(total_ns)),
+                ("calls", num(calls as f64)),
+                ("fraction_of_step", num(total_ns / wall_ns)),
+            ]));
+        }
+        phases.push(obj(vec![
+            ("phase", s("other")),
+            ("total_ns", num((wall_ns - attributed).max(0.0))),
+            ("calls", num(profiled_steps as f64)),
+            ("fraction_of_step", num(((wall_ns - attributed) / wall_ns).max(0.0))),
+        ]));
+
+        // Data-parallel scaling: same shard decomposition, 1 vs N workers.
+        let mut dp_entries = Vec::new();
+        let mut best_dp_ns = r_train.mean_ns;
+        let mut dp_plans = vec![(2usize, 1usize), (2, 2)];
+        if full {
+            dp_plans.push((4, 4));
+        }
+        for (replicas, workers) in dp_plans {
+            if entry.config.batch_size % replicas != 0 {
+                continue;
+            }
+            let dp = DpConfig { replicas, workers };
+            let mut dp_state = fresh_state(&entry);
+            let mut step = 0u64;
+            let r_dp = bench(
+                &format!("dp_train_step {name} r{replicas} w{workers}"),
+                t_eval,
+                || {
+                    step += 1;
+                    let params = std::mem::take(&mut dp_state.params);
+                    let opt = std::mem::take(&mut dp_state.opt_state);
+                    let out =
+                        dp_train_step(&model, params, opt, &batch, 1e-3, 0.0, step, &dp).unwrap();
+                    dp_state.params = out.params;
+                    dp_state.opt_state = out.opt_state;
+                },
+            );
+            if workers > 1 {
+                best_dp_ns = best_dp_ns.min(r_dp.mean_ns);
+            }
+            dp_entries.push(obj(vec![
+                ("replicas", num(replicas as f64)),
+                ("workers", num(workers as f64)),
+                ("mean_ns", num(r_dp.mean_ns)),
+                ("steps_per_s", num(1e9 / r_dp.mean_ns)),
+                ("tokens_per_s", num(tokens * 1e9 / r_dp.mean_ns)),
+            ]));
+        }
+        println!("  ↳ best step vs PR 1 scalar: {:.2}x\n", r_ref.mean_ns / best_dp_ns);
+
+        model_entries.push(obj(vec![
+            ("model", s(name)),
+            ("family", s(&entry.family)),
+            ("sparse", Json::Bool(entry.is_sparse())),
+            ("tokens_per_step", num(tokens)),
+            ("analytic_train_mflop", num(flops / 1e6)),
+            ("train", result_json(&r_train, tokens, flops)),
+            ("train_reference_scalar", result_json(&r_ref, tokens, flops)),
+            ("step_speedup_vs_scalar", num(step_speedup)),
+            ("best_speedup_vs_scalar", num(r_ref.mean_ns / best_dp_ns)),
+            ("eval", result_json(&r_eval, tokens, entry.flops.eval_step)),
+            ("phases", arr(phases)),
+            ("data_parallel", arr(dp_entries)),
+        ]));
     }
+
+    let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let report = obj(vec![
+        ("schema_version", num(1.0)),
+        ("bench", s("runtime_step")),
+        ("platform", s(&runtime.platform())),
+        ("manifest_source", s(&manifest.source_hash)),
+        ("threads", num(threads as f64)),
+        ("unix_time_s", num(unix_s as f64)),
+        ("quick", Json::Bool(quick)),
+        ("full", Json::Bool(full)),
+        ("kernels", kernels),
+        ("models", arr(model_entries)),
+    ]);
+    std::fs::write(&json_out, report.to_string()).expect("writing bench JSON");
+    println!("wrote {json_out}");
 }

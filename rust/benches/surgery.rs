@@ -4,6 +4,7 @@
 //! becoming accidentally quadratic as the expert count grows.
 //!
 //! Run: cargo bench --bench surgery
+//! (How to run + interpret all benches: docs/BENCHMARKS.md.)
 
 use sparse_upcycle::checkpoint::Checkpoint;
 use sparse_upcycle::init::{init_opt_state, init_params};

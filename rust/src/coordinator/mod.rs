@@ -7,4 +7,7 @@ pub mod schedule;
 pub mod trainer;
 
 pub use schedule::{Schedule, ScheduleKind};
-pub use trainer::{train, BatchSource, Evaluator, TrainConfig, TrainState};
+pub use trainer::{
+    dp_train_step, shard_batch, train, train_dp, BatchSource, DpConfig, Evaluator, TrainConfig,
+    TrainState,
+};

@@ -1,17 +1,53 @@
 //! Training orchestrator: owns the step loop, the LR schedule, periodic
-//! evaluation and checkpointing. This is where "dense continuation",
-//! "upcycled" and "MoE from scratch" branches become concrete runs.
+//! evaluation, checkpointing, and data-parallel replicated training. This
+//! is where "dense continuation", "upcycled" and "MoE from scratch"
+//! branches become concrete runs.
+//!
+//! **Data parallelism.** [`dp_train_step`] splits the global batch into
+//! [`DpConfig::replicas`] contiguous shards, computes per-shard gradients
+//! on [`DpConfig::workers`] scoped worker threads, all-reduces them through
+//! `parallel::collectives::reduce_sum_ordered`, and applies **one** Adam
+//! update (`runtime::adam_update`) to the replicated state. Replica
+//! workers run with `util::serial_compute` in effect, so the backend's
+//! kernel- and expert-level threading stands down inside them — DP
+//! parallelizes *across* replicas instead of *within* kernels, and the two
+//! levels never contend for the same cores.
+//!
+//! **Gradient-reduction ordering invariant.** Shard gradients are always
+//! combined in ascending shard order — `((g₀ + g₁) + g₂) + …` — which is
+//! exactly the floating-point reduction a single worker performs when it
+//! accumulates the same microbatches sequentially. Combined with the
+//! thread-count-independent kernels (`linalg::gemm`) and `util::par_map`'s
+//! slot determinism, this makes the trained state a pure function of the
+//! *shard decomposition*, never of the worker count:
+//! `DpConfig { replicas: N, workers: N }` (N replicas) is bitwise-identical
+//! to `DpConfig { replicas: N, workers: 1 }` (single-replica gradient
+//! accumulation over the same effective batch) — asserted by this module's
+//! tests. Note that the shard count *does* change the arithmetic (each
+//! shard routes its own tokens and normalizes its own loss, as on a real
+//! data-parallel mesh), so `replicas: N` vs `replicas: 1` are equal in
+//! expectation, not bitwise.
+//!
+//! Replica counts are validated against the model's batch geometry and the
+//! host's parallelism when a [`DpConfig`] is constructed
+//! (`parallel::validate_replicas`) — misconfiguration fails at setup time
+//! with an actionable message, not deep inside the step loop.
 
 use std::collections::BTreeMap;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::costmodel::Cost;
 use crate::manifest::ModelEntry;
 use crate::metrics::Series;
-use crate::runtime::{checkpoint_from_tensors, tensors_from_checkpoint, LoadedModel, Metrics};
-use crate::tensor::Tensor;
+use crate::parallel::collectives::reduce_sum_ordered;
+use crate::runtime::{
+    adam_update, checkpoint_from_tensors, tensors_from_checkpoint, LoadedModel, Metrics,
+    StepOutput,
+};
+use crate::tensor::{Data, Tensor};
+use crate::util::par_map_workers;
 
 use super::schedule::Schedule;
 
@@ -68,9 +104,19 @@ impl TrainState {
         provenance: &str,
     ) -> Result<(Checkpoint, Checkpoint)> {
         let p = checkpoint_from_tensors(
-            &entry.name, self.step, provenance, &entry.params, &self.params)?;
+            &entry.name,
+            self.step,
+            provenance,
+            &entry.params,
+            &self.params,
+        )?;
         let o = checkpoint_from_tensors(
-            &entry.name, self.step, provenance, &entry.opt_state, &self.opt_state)?;
+            &entry.name,
+            self.step,
+            provenance,
+            &entry.opt_state,
+            &self.opt_state,
+        )?;
         Ok((p, o))
     }
 }
@@ -109,16 +155,152 @@ pub struct TrainConfig {
     pub log_every: u64,
 }
 
-/// Run `cfg.steps` steps; returns the eval curve (extra-cost x-axis measured
-/// from the state's starting step, in this model's per-step FLOPs).
-pub fn train(
+// ---------------------------------------------------------------------------
+// Data-parallel replicated training
+// ---------------------------------------------------------------------------
+
+/// Data-parallel execution shape for one training run.
+///
+/// `replicas` fixes the shard decomposition of every global batch (and with
+/// it the arithmetic — see the module docs); `workers` only chooses how
+/// many scoped threads step those shards concurrently.
+#[derive(Debug, Clone, Copy)]
+pub struct DpConfig {
+    /// Number of batch shards (data-parallel replicas).
+    pub replicas: usize,
+    /// Worker threads stepping the shards: `== replicas` for replicated
+    /// execution, `1` for single-replica gradient accumulation.
+    pub workers: usize,
+}
+
+impl DpConfig {
+    /// N worker replicas, one shard each. Validates `replicas` against the
+    /// model's batch geometry *and* the host's available parallelism.
+    pub fn replicated(entry: &ModelEntry, replicas: usize) -> Result<DpConfig> {
+        crate::parallel::validate_replicas(entry, replicas, None)?;
+        Ok(DpConfig { replicas, workers: replicas })
+    }
+
+    /// Single worker accumulating over `microbatches` shards — the same
+    /// arithmetic as [`DpConfig::replicated`] with `replicas ==
+    /// microbatches`, without needing that many hardware threads.
+    pub fn accumulated(entry: &ModelEntry, microbatches: usize) -> Result<DpConfig> {
+        crate::parallel::validate_replicas(entry, microbatches, Some(usize::MAX))?;
+        Ok(DpConfig { replicas: microbatches, workers: 1 })
+    }
+}
+
+/// Rows `r0..r1` of a batch tensor (leading dim = example index).
+fn slice_rows(t: &Tensor, r0: usize, r1: usize) -> Result<Tensor> {
+    let b = *t.shape.first().context("batch tensor has no leading dim")?;
+    if r1 > b || r0 >= r1 {
+        bail!("row slice {r0}..{r1} out of range for leading dim {b}");
+    }
+    let row = t.numel() / b;
+    let mut shape = t.shape.clone();
+    shape[0] = r1 - r0;
+    Ok(match &t.data {
+        Data::F32(v) => Tensor::from_f32(&shape, v[r0 * row..r1 * row].to_vec()),
+        Data::I32(v) => Tensor::from_i32(&shape, v[r0 * row..r1 * row].to_vec()),
+    })
+}
+
+/// Split a global batch into `shards` contiguous equal shards along the
+/// leading (example) dimension of every batch tensor.
+pub fn shard_batch(batch: &[Tensor], shards: usize) -> Result<Vec<Vec<Tensor>>> {
+    if shards == 0 {
+        bail!("cannot shard a batch into 0 shards");
+    }
+    if shards == 1 {
+        return Ok(vec![batch.to_vec()]);
+    }
+    let b = batch.first().and_then(|t| t.shape.first().copied()).unwrap_or(0);
+    if b == 0 {
+        bail!("cannot shard an empty batch");
+    }
+    for t in batch {
+        if t.shape.first() != Some(&b) {
+            bail!("batch tensors disagree on the leading dim: {:?} vs {b}", t.shape);
+        }
+    }
+    if b % shards != 0 {
+        bail!("batch dim {b} does not split into {shards} equal shards");
+    }
+    let per = b / shards;
+    (0..shards)
+        .map(|s| batch.iter().map(|t| slice_rows(t, s * per, (s + 1) * per)).collect())
+        .collect()
+}
+
+/// One data-parallel training step: shard the batch, compute per-shard
+/// gradients on worker threads, all-reduce in shard order, apply a single
+/// Adam update. Metrics are the mean over shards. See the module docs for
+/// the determinism guarantee.
+#[allow(clippy::too_many_arguments)]
+pub fn dp_train_step(
+    model: &LoadedModel,
+    mut params: Vec<Tensor>,
+    mut opt_state: Vec<Tensor>,
+    batch: &[Tensor],
+    lr: f64,
+    wd: f64,
+    step: u64,
+    dp: &DpConfig,
+) -> Result<StepOutput> {
+    let shards = shard_batch(batch, dp.replicas)?;
+    let r = shards.len();
+    // Replica fan-out: each worker computes gradients of its shard's mean
+    // loss against the same replicated params. Workers run their kernels in
+    // serial-compute mode so replica- and kernel-level parallelism never
+    // stack up and oversubscribe the host (bitwise-identical either way).
+    let results: Vec<Result<(Metrics, Vec<Tensor>)>> = par_map_workers(dp.workers.max(1), r, |i| {
+        crate::util::serial_compute(|| model.grads(&params, &shards[i]))
+    });
+    let mut metric_sums: Metrics = Metrics::new();
+    let mut shard_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(r);
+    for (i, res) in results.into_iter().enumerate() {
+        let (m, g) = res.with_context(|| format!("replica {i} gradient computation"))?;
+        for (k, v) in m {
+            *metric_sums.entry(k).or_insert(0.0) += v;
+        }
+        shard_grads.push(g.into_iter().map(Tensor::into_f32s).collect::<Result<Vec<_>>>()?);
+    }
+    // Rank-ordered all-reduce per parameter, then scale to the mean.
+    let inv = 1.0 / r as f32;
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(params.len());
+    for p in 0..params.len() {
+        let parts: Vec<Vec<f32>> =
+            shard_grads.iter_mut().map(|s| std::mem::take(&mut s[p])).collect();
+        let mut g = reduce_sum_ordered(parts)?;
+        for v in g.iter_mut() {
+            *v *= inv;
+        }
+        grads.push(g);
+    }
+    // Single optimizer update on the replicated state.
+    adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
+    let metrics = metric_sums.into_iter().map(|(k, v)| (k, v / r as f64)).collect();
+    Ok(StepOutput { params, opt_state, metrics })
+}
+
+// ---------------------------------------------------------------------------
+// Step loops
+// ---------------------------------------------------------------------------
+
+/// Shared step loop behind [`train`] and [`train_dp`]: schedules, evals,
+/// logging, series bookkeeping; `step_fn` performs one optimizer step.
+fn run_loop<F>(
     model: &LoadedModel,
     state: &mut TrainState,
     data: &mut dyn BatchSource,
     evaluator: &Evaluator,
     cfg: &TrainConfig,
     series_name: &str,
-) -> Result<Series> {
+    mut step_fn: F,
+) -> Result<Series>
+where
+    F: FnMut(Vec<Tensor>, Vec<Tensor>, &[Tensor], f64, u64) -> Result<StepOutput>,
+{
     let mut series = Series::new(series_name);
     let start_step = state.step;
     let flops_per_step = model.entry.flops.train_step;
@@ -135,8 +317,7 @@ pub fn train(
         let batch = data.next();
         let params = std::mem::take(&mut state.params);
         let opt = std::mem::take(&mut state.opt_state);
-        let out = model
-            .train_step(params, opt, &batch, lr, cfg.weight_decay, step)
+        let out = step_fn(params, opt, &batch, lr, step)
             .with_context(|| format!("train step {step}"))?;
         state.params = out.params;
         state.opt_state = out.opt_state;
@@ -156,12 +337,204 @@ pub fn train(
     }
     let mut m = evaluator.eval(model, state)?;
     m.insert("train_loss".into(), last_train_loss);
-    series.push(state.step, flops_per_step * cfg.steps as f64,
-                m.into_iter().collect());
+    series.push(state.step, flops_per_step * cfg.steps as f64, m.into_iter().collect());
     Ok(series)
+}
+
+/// Run `cfg.steps` steps; returns the eval curve (extra-cost x-axis measured
+/// from the state's starting step, in this model's per-step FLOPs).
+pub fn train(
+    model: &LoadedModel,
+    state: &mut TrainState,
+    data: &mut dyn BatchSource,
+    evaluator: &Evaluator,
+    cfg: &TrainConfig,
+    series_name: &str,
+) -> Result<Series> {
+    run_loop(model, state, data, evaluator, cfg, series_name, |p, o, b, lr, step| {
+        model.train_step(p, o, b, lr, cfg.weight_decay, step)
+    })
+}
+
+/// [`train`], stepping each batch data-parallel under `dp` (see
+/// [`dp_train_step`]).
+pub fn train_dp(
+    model: &LoadedModel,
+    state: &mut TrainState,
+    data: &mut dyn BatchSource,
+    evaluator: &Evaluator,
+    cfg: &TrainConfig,
+    dp: &DpConfig,
+    series_name: &str,
+) -> Result<Series> {
+    run_loop(model, state, data, evaluator, cfg, series_name, |p, o, b, lr, step| {
+        dp_train_step(model, p, o, b, lr, cfg.weight_decay, step, dp)
+    })
 }
 
 /// Total extra cost of a finished series' final point.
 pub fn final_cost(series: &Series) -> Cost {
     Cost { flops: series.last().map(|p| p.extra_flops).unwrap_or(0.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::text::{HmmCorpus, HmmSpec, TextPipeline};
+    use crate::init::{init_opt_state, init_params};
+    use crate::manifest::Manifest;
+    use crate::runtime::Runtime;
+
+    const MODEL: &str = "lm_tiny_moe_e8_c2";
+
+    fn setup() -> (ModelEntry, LoadedModel, Vec<Vec<Tensor>>) {
+        let manifest = Manifest::native();
+        let runtime = Runtime::new().unwrap();
+        let entry = manifest.model(MODEL).unwrap().clone();
+        let model = runtime.load_model(&manifest, MODEL, &["train", "eval"]).unwrap();
+        let mut pipe = TextPipeline::new(
+            HmmCorpus::new(
+                HmmSpec { vocab_size: entry.config.vocab_size, ..Default::default() },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            0,
+        );
+        let batches = (0..3).map(|_| pipe.next_batch()).collect();
+        (entry, model, batches)
+    }
+
+    fn fresh_state(entry: &ModelEntry) -> TrainState {
+        TrainState::from_checkpoints(
+            entry,
+            &init_params(entry, 7).unwrap(),
+            &init_opt_state(entry).unwrap(),
+        )
+        .unwrap()
+    }
+
+    /// The PR acceptance invariant: N-replica data-parallel training is
+    /// bitwise-identical to single-replica training (gradient accumulation)
+    /// on the same effective batch — params, optimizer state and metrics.
+    #[test]
+    fn data_parallel_is_bitwise_identical_to_single_replica() {
+        let (entry, model, batches) = setup();
+        let replicas = 4; // fixed shard decomposition; worker count varies
+        let run = |workers: usize| {
+            let dp = DpConfig { replicas, workers };
+            let mut st = fresh_state(&entry);
+            let mut losses = Vec::new();
+            for (i, b) in batches.iter().enumerate() {
+                let out = dp_train_step(
+                    &model,
+                    std::mem::take(&mut st.params),
+                    std::mem::take(&mut st.opt_state),
+                    b,
+                    1e-3,
+                    0.01,
+                    (i + 1) as u64,
+                    &dp,
+                )
+                .unwrap();
+                st.params = out.params;
+                st.opt_state = out.opt_state;
+                losses.push(out.metrics["loss"]);
+            }
+            (st.params, st.opt_state, losses)
+        };
+        let (p1, o1, l1) = run(1); // single replica stepping all 4 shards
+        let (p4, o4, l4) = run(4); // four worker replicas, one shard each
+        assert_eq!(l1, l4, "per-step loss must match exactly");
+        for ((a, b), spec) in p1.iter().zip(&p4).zip(&entry.params) {
+            assert_eq!(a, b, "param `{}` must match bitwise", spec.name);
+        }
+        for ((a, b), spec) in o1.iter().zip(&o4).zip(&entry.opt_state) {
+            assert_eq!(a, b, "opt slot `{}` must match bitwise", spec.name);
+        }
+        assert!(l1.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn shard_batch_partitions_leading_dim() {
+        let (_, _, batches) = setup();
+        let batch = &batches[0];
+        let shards = shard_batch(batch, 4).unwrap();
+        assert_eq!(shards.len(), 4);
+        for shard in &shards {
+            assert_eq!(shard.len(), batch.len());
+            for (s, t) in shard.iter().zip(batch) {
+                assert_eq!(s.shape[0], t.shape[0] / 4);
+                assert_eq!(s.shape[1..], t.shape[1..]);
+            }
+        }
+        // Concatenating the shards reproduces the original tensors.
+        let enc0 = batch[0].i32s().unwrap();
+        let cat: Vec<i32> = shards
+            .iter()
+            .flat_map(|s| s[0].i32s().unwrap().iter().copied())
+            .collect();
+        assert_eq!(enc0, &cat[..]);
+        // Indivisible and degenerate shard counts fail loudly.
+        assert!(shard_batch(batch, 3).is_err());
+        assert!(shard_batch(batch, 0).is_err());
+        assert!(shard_batch(&[], 2).is_err());
+    }
+
+    #[test]
+    fn dp_config_validates_at_construction_time() {
+        let (entry, _, _) = setup();
+        // batch_size 8 does not split 3 ways.
+        assert!(DpConfig::accumulated(&entry, 3).is_err());
+        let dp = DpConfig::accumulated(&entry, 8).unwrap();
+        assert_eq!((dp.replicas, dp.workers), (8, 1));
+        // Replicated mode is additionally bounded by host parallelism.
+        assert!(DpConfig::replicated(&entry, 1024).is_err());
+    }
+
+    /// train_dp drives the same loop as train and improves the loss.
+    #[test]
+    fn train_dp_reduces_loss() {
+        let (entry, model, _) = setup();
+        let mut pipe = TextPipeline::new(
+            HmmCorpus::new(
+                HmmSpec { vocab_size: entry.config.vocab_size, ..Default::default() },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            3,
+        );
+        let mut held = TextPipeline::new(
+            HmmCorpus::new(
+                HmmSpec { vocab_size: entry.config.vocab_size, ..Default::default() },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            99,
+        );
+        let evaluator = Evaluator::from_source(&mut held, 1);
+        let mut state = fresh_state(&entry);
+        let cfg = TrainConfig {
+            steps: 20,
+            schedule: Schedule::constant(0.01),
+            weight_decay: 0.0,
+            eval_every: 0,
+            log_every: 0,
+        };
+        let dp = DpConfig { replicas: 2, workers: 2 };
+        let series =
+            train_dp(&model, &mut state, &mut pipe, &evaluator, &cfg, &dp, "dp").unwrap();
+        let first = series.points.first().unwrap().values["loss"];
+        let last = series.points.last().unwrap().values["loss"];
+        assert!(last < first, "dp training must reduce held-out loss: {first} -> {last}");
+        assert_eq!(state.step, 20);
+    }
 }

@@ -67,8 +67,9 @@ impl HmmCorpus {
         let mut state_vocab = Vec::new();
         for s in 0..spec.num_states {
             let lo = FIRST_CONTENT as usize + (s * per_state) % content;
+            let base = lo - FIRST_CONTENT as usize;
             let mut ids: Vec<i32> = (0..per_state)
-                .map(|k| (FIRST_CONTENT as usize + (lo - FIRST_CONTENT as usize + k) % content) as i32)
+                .map(|k| (FIRST_CONTENT as usize + (base + k) % content) as i32)
                 .collect();
             rng.shuffle(&mut ids);
             state_vocab.push(ids);

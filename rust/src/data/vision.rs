@@ -213,7 +213,8 @@ mod tests {
     #[test]
     fn hue_dominates_target_pixels() {
         // A red circle image must contain strongly red pixels.
-        let p = VisionPipeline::new(VisionSpec { noise: 0.0, distractors: 0, ..Default::default() }, 1, 0, 0);
+        let spec = VisionSpec { noise: 0.0, distractors: 0, ..Default::default() };
+        let p = VisionPipeline::new(spec, 1, 0, 0);
         let mut img = vec![0f32; 32 * 32 * 3];
         p.render(0, &mut Rng::new(1), &mut img); // shape 0 (circle), hue 0 (red)
         let red_px = img

@@ -14,7 +14,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::coordinator::{train, Evaluator, Schedule, TrainConfig, TrainState};
+use crate::coordinator::{train, train_dp, DpConfig, Evaluator, Schedule, TrainConfig, TrainState};
 use crate::data::text::{HmmCorpus, HmmSpec, TextPipeline};
 use crate::data::vision::{VisionPipeline, VisionSpec};
 use crate::manifest::{Manifest, ModelEntry};
@@ -160,7 +160,11 @@ impl Ctx {
         Evaluator::from_source(&mut held_out, self.p.eval_batches)
     }
 
-    pub fn pipeline(&self, entry: &ModelEntry, shard: u64) -> Box<dyn crate::coordinator::BatchSource> {
+    pub fn pipeline(
+        &self,
+        entry: &ModelEntry,
+        shard: u64,
+    ) -> Box<dyn crate::coordinator::BatchSource> {
         if entry.family == "lm" {
             Box::new(self.lm_pipeline(entry, shard))
         } else {
@@ -291,7 +295,11 @@ impl Ctx {
     }
 
     /// Fresh random init of `name` ("MoE from scratch" / dense-from-scratch).
-    pub fn branch_scratch(&self, name: &str, seed: u64) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+    pub fn branch_scratch(
+        &self,
+        name: &str,
+        seed: u64,
+    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
         let entry = self.entry(name)?.clone();
         let model = self.load(name, &["train", "eval"])?;
         let state = TrainState::from_checkpoints(
@@ -311,13 +319,41 @@ impl Ctx {
         steps: u64,
         series_name: &str,
     ) -> Result<Series> {
+        self.run_branch_inner(model, state, shard, steps, None, series_name)
+    }
+
+    /// [`Ctx::run_branch`], stepping each batch data-parallel under `dp`.
+    pub fn run_branch_dp(
+        &self,
+        model: &LoadedModel,
+        state: &mut TrainState,
+        shard: u64,
+        steps: u64,
+        dp: &DpConfig,
+        series_name: &str,
+    ) -> Result<Series> {
+        self.run_branch_inner(model, state, shard, steps, Some(dp), series_name)
+    }
+
+    fn run_branch_inner(
+        &self,
+        model: &LoadedModel,
+        state: &mut TrainState,
+        shard: u64,
+        steps: u64,
+        dp: Option<&DpConfig>,
+        series_name: &str,
+    ) -> Result<Series> {
         let entry = &model.entry;
         let mut data = self.pipeline(entry, shard);
         let evaluator = self.evaluator(entry);
         let mut cfg = self.train_cfg(steps);
         cfg.schedule = self.schedule(entry);
         cfg.weight_decay = self.weight_decay(entry);
-        train(model, state, data.as_mut(), &evaluator, &cfg, series_name)
+        match dp {
+            Some(dp) => train_dp(model, state, data.as_mut(), &evaluator, &cfg, dp, series_name),
+            None => train(model, state, data.as_mut(), &evaluator, &cfg, series_name),
+        }
     }
 
     /// Finetune on the downstream task (topic classification for LM,
@@ -370,8 +406,16 @@ type Runner = fn(&Ctx) -> Result<Report>;
 /// Registry of all experiments, in paper order.
 pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
     vec![
-        ("fig2", "pretrain quality vs extra cost: dense continuation vs upcycling", core_figs::fig2 as Runner),
-        ("fig2long", "fig2 with a saturated dense parent (paper operating point)", core_figs::fig2long),
+        (
+            "fig2",
+            "pretrain quality vs extra cost: dense continuation vs upcycling",
+            core_figs::fig2 as Runner,
+        ),
+        (
+            "fig2long",
+            "fig2 with a saturated dense parent (paper operating point)",
+            core_figs::fig2long,
+        ),
         ("fig3", "finetuned quality vs extra pretrain cost", core_figs::fig3),
         ("fig4", "upcycling vs MoE-from-scratch", core_figs::fig4),
         ("fig5", "sparse upcycling vs dense (depth-tiled) upcycling", core_figs::fig5),

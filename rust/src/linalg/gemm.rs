@@ -1,0 +1,502 @@
+//! Blocked f32 GEMM kernels for the native backend's hot path.
+//!
+//! Three accumulating, row-major kernels cover every matmul in the forward
+//! and backward passes of `runtime::native`:
+//!
+//! * [`mm_nn`]: `out[n,m] += a[n,k] · b[k,m]`
+//! * [`mm_tn`]: `out[k,m] += aᵀ · b` with `a[n,k]`, `b[n,m]` (weight grads)
+//! * [`mm_nt`]: `out[n,k] += a · bᵀ` with `a[n,m]`, `b[k,m]` (tied-embedding
+//!   logits and activation grads)
+//!
+//! Layout strategy: the product kernels run in *transposed-B* form — `mm_nn`
+//! transposes `b` once into a scratch panel so that, like `mm_nt`, every
+//! output element is a contiguous dot product, computed with an 8-lane
+//! unrolled accumulator (auto-vectorizes; a naive `s += x[j]*y[j]` loop is a
+//! serial dependence chain the compiler must not reorder). Output rows are
+//! walked in [`ROW_TILE`] blocks so the active slice of `a` stays in L1
+//! while each row of the (transposed) `b` panel streams through — for the
+//! zoo's large vocabulary projections `b` no longer re-streams from memory
+//! once per token. `mm_tn` keeps the saxpy form but tiles output rows in
+//! [`COL_TILE`] blocks so the accumulator panel stays cache-resident across
+//! the full sweep over `n`.
+//!
+//! Determinism contract: every output element is computed with a fixed
+//! floating-point reduction order that depends only on the operand shapes —
+//! never on the thread count. The `*_par` entry points shard disjoint output
+//! rows across scoped threads (above [`PAR_MIN_MACS`] multiply-accumulates)
+//! and are bitwise-identical to their serial counterparts; the data-parallel
+//! trainer's replica-invariance guarantee rests on this.
+//!
+//! The [`reference`] module preserves the scalar kernels these replaced
+//! (the "PR 1 path"): `cargo bench --bench runtime_step` measures blocked
+//! vs. reference on every run and records the speedup in
+//! `BENCH_runtime.json` (see `docs/BENCHMARKS.md`), and the unit tests
+//! check the blocked kernels against them on odd/prime shapes.
+//!
+//! ```
+//! // 2×2 GEMM: out += a·b, row-major, accumulating into `out`.
+//! let a = [1.0f32, 2.0, 3.0, 4.0];
+//! let b = [5.0f32, 6.0, 7.0, 8.0];
+//! let mut out = [100.0f32; 4];
+//! sparse_upcycle::linalg::gemm::mm_nn(&a, &b, 2, 2, 2, &mut out);
+//! assert_eq!(out, [119.0, 122.0, 143.0, 150.0]);
+//! ```
+
+/// Output rows processed per cache block in the dot-product kernels.
+const ROW_TILE: usize = 64;
+/// Output-row tile of `mm_tn` kept hot across the sweep over `n`.
+const COL_TILE: usize = 32;
+/// Unroll width of the dot-product accumulator.
+const LANES: usize = 8;
+/// Minimum multiply-accumulate count before `*_par` spawns threads; below
+/// this, thread spawn overhead exceeds the parallel win.
+const PAR_MIN_MACS: usize = 1 << 21;
+
+/// Contiguous dot product with a fixed 8-lane unrolled reduction order.
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xs = &x[c * LANES..(c + 1) * LANES];
+        let ys = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for j in chunks * LANES..x.len() {
+        s += x[j] * y[j];
+    }
+    s
+}
+
+/// Scratch transpose: returns `bᵀ` (shape `[m,k]`) of row-major `b[k,m]`.
+fn transpose(b: &[f32], k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(b.len(), k * m);
+    let mut bt = vec![0f32; k * m];
+    for i in 0..k {
+        let brow = &b[i * m..(i + 1) * m];
+        for (j, &v) in brow.iter().enumerate() {
+            bt[j * k + i] = v;
+        }
+    }
+    bt
+}
+
+/// Dot-product core over a row range: `out[i,j] += dot(a_row(row0+i), bt_row(j))`
+/// for `i in 0..rows`, `j in 0..cols`, with `inner` the shared length.
+/// `out` is the chunk holding exactly rows `row0..row0+rows`.
+fn dot_block(
+    a: &[f32],
+    bt: &[f32],
+    inner: usize,
+    cols: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + ROW_TILE).min(rows);
+        for j in 0..cols {
+            let bj = &bt[j * inner..(j + 1) * inner];
+            for i in i0..i1 {
+                let ai = &a[(row0 + i) * inner..(row0 + i + 1) * inner];
+                out[i * cols + j] += dot(ai, bj);
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// Saxpy core of `mm_tn` over output rows `l0..l1` (columns of `a`).
+/// `out` is the chunk holding exactly rows `l0..l1`.
+fn tn_block(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    l0: usize,
+    l1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (l1 - l0) * m);
+    let mut t0 = l0;
+    while t0 < l1 {
+        let t1 = (t0 + COL_TILE).min(l1);
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * m..(i + 1) * m];
+            for l in t0..t1 {
+                let av = arow[l];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(l - l0) * m..(l - l0 + 1) * m];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        t0 = t1;
+    }
+}
+
+/// Shard `out` into contiguous row chunks over scoped threads. Each row is
+/// produced by exactly one thread with shape-determined arithmetic, so the
+/// result is bitwise-independent of the thread count.
+fn par_rows<F: Fn(usize, usize, &mut [f32]) + Sync>(
+    rows: usize,
+    row_len: usize,
+    out: &mut [f32],
+    body: F,
+) {
+    let threads = if crate::util::in_serial_compute() {
+        1
+    } else {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1).min(rows).max(1)
+    };
+    if threads <= 1 {
+        body(0, rows, out);
+        return;
+    }
+    let chunk_rows = (rows + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(chunk_rows * row_len).enumerate() {
+            let body = &body;
+            s.spawn(move || {
+                body(ci * chunk_rows, chunk.len() / row_len, chunk);
+            });
+        }
+    });
+}
+
+/// `out[n,m] += a[n,k] · b[k,m]` (blocked, transposed-B).
+pub fn mm_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    let bt = transpose(b, k, m);
+    dot_block(a, &bt, k, m, 0, n, out);
+}
+
+/// `out[k,m] += aᵀ · b` with `a[n,k]`, `b[n,m]` (blocked saxpy).
+pub fn mm_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * m);
+    debug_assert_eq!(out.len(), k * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    tn_block(a, b, n, k, m, 0, k, out);
+}
+
+/// `out[n,k] += a · bᵀ` with `a[n,m]`, `b[k,m]` (blocked dot products).
+pub fn mm_nt(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * k);
+    if n == 0 || m == 0 || k == 0 {
+        return;
+    }
+    dot_block(a, b, m, k, 0, n, out);
+}
+
+/// [`mm_nn`], sharding output rows across threads for large products.
+/// Bitwise-identical to the serial kernel for any thread count.
+pub fn mm_nn_par(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    if n * k * m < PAR_MIN_MACS {
+        mm_nn(a, b, n, k, m, out);
+        return;
+    }
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * m);
+    let bt = transpose(b, k, m);
+    par_rows(n, m, out, |row0, rows, chunk| dot_block(a, &bt, k, m, row0, rows, chunk));
+}
+
+/// [`mm_tn`], sharding output rows (columns of `a`) across threads.
+/// Bitwise-identical to the serial kernel for any thread count.
+pub fn mm_tn_par(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    if n * k * m < PAR_MIN_MACS {
+        mm_tn(a, b, n, k, m, out);
+        return;
+    }
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * m);
+    debug_assert_eq!(out.len(), k * m);
+    par_rows(k, m, out, |l0, rows, chunk| tn_block(a, b, n, k, m, l0, l0 + rows, chunk));
+}
+
+/// [`mm_nt`], sharding output rows across threads for large products.
+/// Bitwise-identical to the serial kernel for any thread count.
+pub fn mm_nt_par(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+    if n * m * k < PAR_MIN_MACS {
+        mm_nt(a, b, n, m, k, out);
+        return;
+    }
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * k);
+    par_rows(n, k, out, |row0, rows, chunk| dot_block(a, b, m, k, row0, rows, chunk));
+}
+
+/// Kernel family selector: the native backend is built with [`Blocked`]
+/// kernels; [`Reference`] preserves the PR 1 scalar path so the bench can
+/// measure the end-to-end step speedup on every run.
+///
+/// [`Blocked`]: GemmKernels::Blocked
+/// [`Reference`]: GemmKernels::Reference
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKernels {
+    Blocked,
+    Reference,
+}
+
+impl GemmKernels {
+    /// Serial `out[n,m] += a·b` (used inside already-parallel regions).
+    pub fn mm_nn(self, a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        match self {
+            GemmKernels::Blocked => mm_nn(a, b, n, k, m, out),
+            GemmKernels::Reference => reference::mm_nn(a, b, n, k, m, out),
+        }
+    }
+
+    /// Serial `out[k,m] += aᵀ·b`.
+    pub fn mm_tn(self, a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        match self {
+            GemmKernels::Blocked => mm_tn(a, b, n, k, m, out),
+            GemmKernels::Reference => reference::mm_tn(a, b, n, k, m, out),
+        }
+    }
+
+    /// Serial `out[n,k] += a·bᵀ`.
+    pub fn mm_nt(self, a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+        match self {
+            GemmKernels::Blocked => mm_nt(a, b, n, m, k, out),
+            GemmKernels::Reference => reference::mm_nt(a, b, n, m, k, out),
+        }
+    }
+
+    /// Row-parallel `mm_nn` for tower-level products (Reference stays
+    /// serial: it reproduces the PR 1 execution exactly).
+    pub fn mm_nn_big(self, a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        match self {
+            GemmKernels::Blocked => mm_nn_par(a, b, n, k, m, out),
+            GemmKernels::Reference => reference::mm_nn(a, b, n, k, m, out),
+        }
+    }
+
+    /// Row-parallel `mm_tn` for tower-level products.
+    pub fn mm_tn_big(self, a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        match self {
+            GemmKernels::Blocked => mm_tn_par(a, b, n, k, m, out),
+            GemmKernels::Reference => reference::mm_tn(a, b, n, k, m, out),
+        }
+    }
+
+    /// Row-parallel `mm_nt` for tower-level products.
+    pub fn mm_nt_big(self, a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+        match self {
+            GemmKernels::Blocked => mm_nt_par(a, b, n, m, k, out),
+            GemmKernels::Reference => reference::mm_nt(a, b, n, m, k, out),
+        }
+    }
+}
+
+/// The scalar kernels the blocked path replaced (PR 1), kept as the
+/// correctness reference for tests and as the bench's speedup baseline.
+pub mod reference {
+    /// out[n,m] += a[n,k] · b[k,m]
+    pub fn mm_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), n * k);
+        debug_assert_eq!(b.len(), k * m);
+        debug_assert_eq!(out.len(), n * m);
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (l, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[l * m..(l + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+
+    /// out[k,m] += aᵀ · b  with a[n,k], b[n,m]
+    pub fn mm_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), n * k);
+        debug_assert_eq!(b.len(), n * m);
+        debug_assert_eq!(out.len(), k * m);
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * m..(i + 1) * m];
+            for (l, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[l * m..(l + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+
+    /// out[n,k] += a · bᵀ  with a[n,m], b[k,m]
+    pub fn mm_nt(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), n * m);
+        debug_assert_eq!(b.len(), k * m);
+        debug_assert_eq!(out.len(), n * k);
+        for i in 0..n {
+            let arow = &a[i * m..(i + 1) * m];
+            for l in 0..k {
+                let brow = &b[l * m..(l + 1) * m];
+                let mut s = 0.0f32;
+                for j in 0..m {
+                    s += arow[j] * brow[j];
+                }
+                out[i * k + l] += s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let tol = 1e-3 + 1e-4 * w.abs();
+            assert!((g - w).abs() <= tol, "{ctx}[{i}]: blocked {g} vs reference {w}");
+        }
+    }
+
+    /// Odd and prime shapes exercise every tail path of the tiled kernels.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (17, 13, 11),
+        (23, 1, 19),
+        (5, 31, 2),
+        (2, 97, 3),
+        (67, 8, 64),
+        (129, 65, 33),
+    ];
+
+    #[test]
+    fn blocked_matches_reference_on_odd_shapes() {
+        let mut rng = Rng::new(11);
+        for &(n, k, m) in SHAPES {
+            let a = randv(&mut rng, n * k);
+            let b = randv(&mut rng, k * m);
+            // Accumulation semantics: start from a non-zero out.
+            let seed = randv(&mut rng, n * m);
+            let mut got = seed.clone();
+            let mut want = seed.clone();
+            mm_nn(&a, &b, n, k, m, &mut got);
+            reference::mm_nn(&a, &b, n, k, m, &mut want);
+            assert_close(&got, &want, &format!("mm_nn {n}x{k}x{m}"));
+
+            let bt = randv(&mut rng, n * m);
+            let seed = randv(&mut rng, k * m);
+            let mut got = seed.clone();
+            let mut want = seed.clone();
+            mm_tn(&a, &bt, n, k, m, &mut got);
+            reference::mm_tn(&a, &bt, n, k, m, &mut want);
+            assert_close(&got, &want, &format!("mm_tn {n}x{k}x{m}"));
+
+            let am = randv(&mut rng, n * m);
+            let bm = randv(&mut rng, k * m);
+            let seed = randv(&mut rng, n * k);
+            let mut got = seed.clone();
+            let mut want = seed.clone();
+            mm_nt(&am, &bm, n, m, k, &mut got);
+            reference::mm_nt(&am, &bm, n, m, k, &mut want);
+            assert_close(&got, &want, &format!("mm_nt {n}x{m}x{k}"));
+        }
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(5);
+        // Big enough to clear PAR_MIN_MACS and actually spawn threads.
+        let (n, k, m) = (257, 129, 67);
+        let a = randv(&mut rng, n * k);
+        let b = randv(&mut rng, k * m);
+        let mut serial = vec![0f32; n * m];
+        let mut par = vec![0f32; n * m];
+        mm_nn(&a, &b, n, k, m, &mut serial);
+        mm_nn_par(&a, &b, n, k, m, &mut par);
+        assert_eq!(serial, par, "mm_nn_par must be bitwise-deterministic");
+
+        let bt = randv(&mut rng, n * m);
+        let mut serial = vec![0f32; k * m];
+        let mut par = vec![0f32; k * m];
+        mm_tn(&a, &bt, n, k, m, &mut serial);
+        mm_tn_par(&a, &bt, n, k, m, &mut par);
+        assert_eq!(serial, par, "mm_tn_par must be bitwise-deterministic");
+
+        let am = randv(&mut rng, n * m);
+        let bm = randv(&mut rng, k * m);
+        let mut serial = vec![0f32; n * k];
+        let mut par = vec![0f32; n * k];
+        mm_nt(&am, &bm, n, m, k, &mut serial);
+        mm_nt_par(&am, &bm, n, m, k, &mut par);
+        assert_eq!(serial, par, "mm_nt_par must be bitwise-deterministic");
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let mut out = vec![7.0f32; 0];
+        mm_nn(&[], &[], 0, 0, 0, &mut out);
+        let mut out = vec![3.0f32; 6];
+        // Inner dim 0: += 0, out unchanged.
+        mm_nn(&[], &[], 2, 0, 3, &mut out);
+        assert_eq!(out, vec![3.0; 6]);
+        mm_nt(&[], &[], 2, 0, 3, &mut out);
+        assert_eq!(out, vec![3.0; 6]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let b: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 3x4
+        let bt = transpose(&b, 3, 4);
+        let bb = transpose(&bt, 4, 3);
+        assert_eq!(b, bb);
+        assert_eq!(bt[0], b[0]);
+        assert_eq!(bt[2 * 3 + 1], b[4 + 2]);
+    }
+
+    #[test]
+    fn kernel_selector_dispatches_both_families() {
+        let mut rng = Rng::new(3);
+        let (n, k, m) = (7, 11, 5);
+        let a = randv(&mut rng, n * k);
+        let b = randv(&mut rng, k * m);
+        let mut blocked = vec![0f32; n * m];
+        let mut refr = vec![0f32; n * m];
+        GemmKernels::Blocked.mm_nn(&a, &b, n, k, m, &mut blocked);
+        GemmKernels::Reference.mm_nn(&a, &b, n, k, m, &mut refr);
+        assert_close(&blocked, &refr, "selector mm_nn");
+    }
+}

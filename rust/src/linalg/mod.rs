@@ -1,9 +1,23 @@
-//! Small dense linear algebra: Cholesky solve + ridge regression.
+//! Dense linear algebra: the native backend's blocked GEMM kernels plus the
+//! Cholesky/ridge solvers behind the few-shot probe.
 //!
-//! Backs the paper's few-shot linear evaluation (§A.2.2): a least-squares
-//! regressor from frozen image representations to one-hot labels with fixed
-//! L2 regularization (the paper fixes λ = 1024 on normalized features; we
-//! keep λ configurable and default to their choice).
+//! Two tiers live here, with different performance contracts:
+//!
+//! * [`gemm`] — cache-blocked, transposed-B f32 matmul kernels shared by the
+//!   forward and backward passes of `runtime::native` (the training hot
+//!   path). Invariants: kernels *accumulate* into `out`, use a fixed
+//!   shape-determined floating-point reduction order, and their `*_par`
+//!   variants are bitwise-identical to the serial forms for any thread
+//!   count — the data-parallel trainer's determinism guarantee
+//!   (`coordinator::trainer`) depends on this.
+//! * [`Mat`] / [`cholesky`] / [`ridge`] — f64 solvers for the paper's
+//!   few-shot linear evaluation (§A.2.2): a least-squares regressor from
+//!   frozen image representations to one-hot labels with fixed L2
+//!   regularization (the paper fixes λ = 1024 on normalized features; we
+//!   keep λ configurable and default to their choice). These run once per
+//!   probe, not per step, and stay in readable scalar form.
+
+pub mod gemm;
 
 use anyhow::{bail, Result};
 

@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use sparse_upcycle::checkpoint::Checkpoint;
 use sparse_upcycle::coordinator::fewshot::{fewshot_accuracy, FewShotConfig};
-use sparse_upcycle::coordinator::{train, TrainState};
+use sparse_upcycle::coordinator::{train, DpConfig, TrainState};
 use sparse_upcycle::experiments::{registry, run_by_id, Ctx, ExpParams};
 use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::parallel::{place, MeshSpec};
@@ -196,9 +196,17 @@ fn run() -> Result<()> {
         "train" => {
             let model_name = a.req("model")?;
             let steps = a.u64("steps", 400)?;
+            let replicas = a.usize("replicas", 1)?;
             let ctx = Ctx::new(&artifacts, &out_dir, params_from_args(&a)?, a.bool("verbose"))?;
             let (model, mut state) = ctx.branch_scratch(model_name, ctx.p.seed)?;
-            let series = ctx.run_branch(&model, &mut state, 0, steps, model_name)?;
+            let series = if replicas > 1 {
+                // Validated at setup: bad replica counts fail here, not
+                // mid-run (see parallel::validate_replicas).
+                let dp = DpConfig::replicated(&model.entry, replicas)?;
+                ctx.run_branch_dp(&model, &mut state, 0, steps, &dp, model_name)?
+            } else {
+                ctx.run_branch(&model, &mut state, 0, steps, model_name)?
+            };
             if let Some(p) = series.last() {
                 println!("final: {:?}", p.values);
             }
@@ -223,7 +231,9 @@ fn run() -> Result<()> {
                 seed: a.u64("seed", 0)?,
             };
             let sparse = upcycle_params(&dense, entry, &opts)?;
-            let out = a.str("out-ck", &format!("{}/checkpoints/{sparse_name}_upcycled.params.supc", out_dir));
+            let default_out =
+                format!("{}/checkpoints/{sparse_name}_upcycled.params.supc", out_dir);
+            let out = a.str("out-ck", &default_out);
             sparse.save(&out)?;
             println!(
                 "upcycled {} ({} tensors) -> {} ({} tensors) at {}",
@@ -309,6 +319,7 @@ fn run() -> Result<()> {
                 expert_parallel: a.usize("ep", 4)?,
                 model_parallel: a.usize("mp", 1)?,
             };
+            sparse_upcycle::parallel::validate_mesh(entry, &mesh)?;
             let net = sparse_upcycle::parallel::collectives::Interconnect::tpu_like(
                 mesh.devices());
             let tokens = a.usize("tokens-per-device", 4096)?;
@@ -332,6 +343,7 @@ fn run() -> Result<()> {
                 expert_parallel: a.usize("ep", 4)?,
                 model_parallel: a.usize("mp", 1)?,
             };
+            sparse_upcycle::parallel::validate_mesh(entry, &mesh)?;
             let rep = place(entry, &mesh);
             println!("{model_name} on {} devices (dp={} ep={} mp={}):",
                      rep.devices, mesh.data_parallel, mesh.expert_parallel, mesh.model_parallel);
@@ -353,7 +365,7 @@ USAGE:
   upcycle quickstart [--pretrain-steps N] [--extra-steps N]   # native demo
   upcycle list
   upcycle experiment <id>|all [--pretrain-steps N] [--extra-steps N] [--seed S]
-  upcycle train   --model <name> [--steps N]
+  upcycle train   --model <name> [--steps N] [--replicas N]   # data-parallel
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]
                   [--expert-noise σ] [--dense-opt <ck>] [--load-optimizer]
   upcycle eval    --model <name> --params <ck.supc>

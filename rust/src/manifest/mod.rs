@@ -120,11 +120,13 @@ impl Manifest {
     /// are only picked up when the `pjrt` backend that executes them is
     /// compiled in; default builds always use the zoo.
     pub fn load_or_native(dir: impl AsRef<Path>) -> Result<Manifest> {
-        if cfg!(feature = "pjrt") && dir.as_ref().join("manifest.json").exists() {
-            Manifest::load(dir)
+        let m = if cfg!(feature = "pjrt") && dir.as_ref().join("manifest.json").exists() {
+            Manifest::load(dir)?
         } else {
-            Ok(Manifest::native())
-        }
+            Manifest::native()
+        };
+        m.validate()?;
+        Ok(m)
     }
 
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
@@ -138,11 +140,23 @@ impl Manifest {
             let e = parse_entry(m)?;
             models.insert(e.name.clone(), e);
         }
-        Ok(Manifest {
+        let m = Manifest {
             dir,
             source_hash: v.get("source_hash")?.as_str()?.to_string(),
             models,
-        })
+        };
+        m.validate().context("validating manifest.json")?;
+        Ok(m)
+    }
+
+    /// Structural validation of every entry, run at manifest load time so a
+    /// malformed model geometry fails here with a named error rather than
+    /// deep inside the trainer or the parallel placement.
+    pub fn validate(&self) -> Result<()> {
+        for e in self.models.values() {
+            e.validate()?;
+        }
+        Ok(())
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
@@ -188,6 +202,39 @@ impl ModelEntry {
             .filter(|s| s.name.contains("/moe/w"))
             .map(|s| s.shape.iter().product::<usize>())
             .sum()
+    }
+
+    /// Structural sanity of one entry: geometry that later layers assume
+    /// without re-checking. Called by [`Manifest::validate`] at load time.
+    pub fn validate(&self) -> Result<()> {
+        if self.config.batch_size == 0 {
+            bail!("model `{}`: batch_size must be >= 1", self.name);
+        }
+        let towers = [
+            ("enc_moe", self.config.enc_moe.as_ref(), self.config.num_layers),
+            ("dec_moe", self.config.dec_moe.as_ref(), self.config.num_decoder_layers),
+        ];
+        for (which, moe, layers) in towers {
+            let Some(m) = moe else { continue };
+            if m.num_experts == 0 {
+                bail!("model `{}`: {which} has 0 experts", self.name);
+            }
+            if !m.capacity_factor.is_finite() || m.capacity_factor <= 0.0 {
+                bail!(
+                    "model `{}`: {which} capacity_factor {} must be > 0",
+                    self.name,
+                    m.capacity_factor
+                );
+            }
+            if let Some(&bad) = m.moe_layers.iter().find(|&&l| l >= layers) {
+                bail!(
+                    "model `{}`: {which} sparsifies layer {bad} but the tower has {layers} \
+                     layer(s) (valid: 0..{layers})",
+                    self.name,
+                );
+            }
+        }
+        Ok(())
     }
 }
 
@@ -326,6 +373,22 @@ mod tests {
         assert_eq!(dense.expert_param_count(), 0);
         assert!(sparse.expert_param_count() > 0);
         assert!(sparse.param_count > dense.param_count);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_entries() {
+        let m = Manifest::native();
+        m.validate().expect("the shipped zoo must validate");
+        let mut e = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
+        e.config.enc_moe.as_mut().unwrap().moe_layers.push(99);
+        let err = e.validate().unwrap_err().to_string();
+        assert!(err.contains("layer 99"), "{err}");
+        let mut e = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
+        e.config.enc_moe.as_mut().unwrap().num_experts = 0;
+        assert!(e.validate().is_err());
+        let mut e = m.model("lm_tiny_dense").unwrap().clone();
+        e.config.batch_size = 0;
+        assert!(e.validate().is_err());
     }
 
     #[test]

@@ -450,6 +450,20 @@ mod tests {
     }
 
     #[test]
+    fn zoo_entries_validate_and_shard_for_data_parallel() {
+        // Every shipped entry must pass load-time validation, and its batch
+        // must shard for the data-parallel replica counts the trainer and
+        // benches use (the whole zoo ships batch_size 8).
+        for (name, e) in &native_models() {
+            e.validate().unwrap_or_else(|err| panic!("{name}: {err}"));
+            for r in [1usize, 2, 4, 8] {
+                crate::parallel::validate_replicas(e, r, Some(64))
+                    .unwrap_or_else(|err| panic!("{name} x{r} replicas: {err}"));
+            }
+        }
+    }
+
+    #[test]
     fn sparse_variants_expand_params_not_flops_much() {
         let models = native_models();
         let dense = &models["lm_tiny_dense"];

@@ -1,14 +1,71 @@
-//! Collective-communication cost model (paper §A.4).
+//! Collectives: the in-process gradient reductions used by data-parallel
+//! training, plus the communication cost model (paper §A.4).
 //!
-//! The paper composes data / expert / model parallelism; the communication
-//! patterns behind them are all-to-all (MoE dispatch + combine),
-//! all-reduce (data-parallel gradients) and all-gather (model-parallel
-//! activations). This module prices them on an abstract interconnect
-//! (per-link bandwidth + latency, ring or full-mesh topology), so the
-//! placement simulator can answer the §A.4 question the paper settles by
-//! construction on TPU pods: which parallelism axis saturates first as E,
-//! C and the mesh grow. Exercised by `cargo bench --bench routing_sim`
-//! extensions and unit tests.
+//! **Functional collectives.** [`reduce_sum_ordered`] / [`allreduce_mean`]
+//! are the real reductions behind `coordinator::trainer::dp_train_step`:
+//! replica gradient buffers are combined **in ascending rank order** —
+//! `((g₀ + g₁) + g₂) + …` exactly — which is the same floating-point
+//! reduction a single replica performs when it accumulates the same
+//! microbatches sequentially. That ordering invariant is what makes
+//! N-replica training bitwise-identical to single-replica gradient
+//! accumulation on the same effective batch (asserted by the trainer's
+//! tests); do not replace it with a tree or pairwise order without
+//! re-deriving that guarantee.
+//!
+//! **Cost model.** The paper composes data / expert / model parallelism;
+//! the communication patterns behind them are all-to-all (MoE dispatch +
+//! combine), all-reduce (data-parallel gradients) and all-gather
+//! (model-parallel activations). [`Interconnect`] prices them on an
+//! abstract link (per-link bandwidth + latency), so the placement simulator
+//! can answer the §A.4 question the paper settles by construction on TPU
+//! pods: which parallelism axis saturates first as E, C and the mesh grow.
+//! Exercised by `cargo bench --bench routing_sim` and unit tests.
+
+use anyhow::{bail, Result};
+
+/// Sum equal-length replica buffers in ascending rank order:
+/// `((bufs[0] + bufs[1]) + bufs[2]) + …`, consuming the inputs.
+///
+/// The rank-ordered reduction is deliberate — see the module docs for the
+/// determinism contract it upholds.
+///
+/// ```
+/// use sparse_upcycle::parallel::collectives::reduce_sum_ordered;
+/// let total = reduce_sum_ordered(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+/// assert_eq!(total, vec![4.0, 6.0]);
+/// ```
+pub fn reduce_sum_ordered(bufs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+    let mut it = bufs.into_iter();
+    let Some(mut acc) = it.next() else {
+        bail!("reduce_sum_ordered: no buffers to reduce");
+    };
+    for (rank, buf) in it.enumerate() {
+        if buf.len() != acc.len() {
+            bail!(
+                "reduce_sum_ordered: rank {} buffer has {} elements, rank 0 has {}",
+                rank + 1,
+                buf.len(),
+                acc.len()
+            );
+        }
+        for (a, b) in acc.iter_mut().zip(&buf) {
+            *a += *b;
+        }
+    }
+    Ok(acc)
+}
+
+/// Rank-ordered all-reduce-mean: [`reduce_sum_ordered`] scaled by `1/R`.
+/// Every replica would observe this same buffer; in-process we return one.
+pub fn allreduce_mean(bufs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+    let r = bufs.len();
+    let mut acc = reduce_sum_ordered(bufs)?;
+    let inv = 1.0 / r as f32;
+    for v in acc.iter_mut() {
+        *v *= inv;
+    }
+    Ok(acc)
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct Interconnect {
@@ -137,6 +194,33 @@ pub fn step_comms(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reduce_is_rank_ordered_and_checked() {
+        // Rank order matters in f32: pick values where order changes bits.
+        let a = vec![1.0e8f32, 1.0];
+        let b = vec![1.0f32, -1.0e8];
+        let c = vec![-1.0e8f32, 1.0e8];
+        let seq = {
+            let mut acc = a.clone();
+            for buf in [&b, &c] {
+                for (x, y) in acc.iter_mut().zip(buf.iter()) {
+                    *x += *y;
+                }
+            }
+            acc
+        };
+        let red = reduce_sum_ordered(vec![a, b, c]).unwrap();
+        assert_eq!(seq, red, "collective must match sequential accumulation bitwise");
+        assert!(reduce_sum_ordered(vec![]).is_err());
+        assert!(reduce_sum_ordered(vec![vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn allreduce_mean_scales() {
+        let m = allreduce_mean(vec![vec![2.0, 4.0], vec![6.0, 8.0]]).unwrap();
+        assert_eq!(m, vec![4.0, 6.0]);
+    }
 
     #[test]
     fn single_device_is_free() {

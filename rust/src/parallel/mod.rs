@@ -1,17 +1,131 @@
-//! Expert/data/model-parallel placement simulator (paper §A.4).
+//! Expert/data/model-parallel placement: validation, the placement
+//! simulator (paper §A.4), and the functional collectives behind
+//! data-parallel training ([`collectives`]).
 //!
 //! The paper trains with three composed parallelism axes: data (batch
 //! shards), expert (experts partitioned across devices) and model (weight
-//! matrices sharded). The actual training here runs on one CPU PJRT device,
-//! so this module *simulates* the distributed execution to account the
-//! quantities that drive the paper's cost discussion: per-device token load
-//! (balance), all-to-all dispatch volume, and per-device parameter memory.
-//! The `routing_sim` bench sweeps these against E / C / device count.
+//! matrices sharded). Two of those are real in this repo: the native
+//! backend shards expert compute across threads, and the trainer's
+//! data-parallel mode (`coordinator::trainer::dp_train_step`) steps batch
+//! shards on worker replicas. The rest of this module *simulates* the
+//! distributed execution to account the quantities that drive the paper's
+//! cost discussion: per-device token load (balance), all-to-all dispatch
+//! volume, and per-device parameter memory. The `routing_sim` bench sweeps
+//! these against E / C / device count.
+//!
+//! [`validate_replicas`] and [`validate_mesh`] are the front door: they
+//! check a requested replica count / mesh against the model entry and the
+//! host *at configuration time*, so a bad replica count fails with an
+//! actionable message when the run is set up instead of deep inside the
+//! trainer's step loop.
 
 pub mod collectives;
 
+use anyhow::{bail, Result};
+
 use crate::manifest::{ModelEntry, MoeSpec};
 use crate::util::rng::Rng;
+
+/// All divisors of `n`, ascending (the valid replica counts for a batch).
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Validate a data-parallel replica count for `entry` at configuration
+/// time. `max_workers` bounds the worker threads the host can usefully run
+/// (defaults to `std::thread::available_parallelism`); pass an explicit
+/// value to allow deliberate oversubscription.
+///
+/// Errors are actionable: they name the model, the offending number and the
+/// valid choices, instead of letting the trainer fail mid-run on a
+/// malformed batch shard.
+pub fn validate_replicas(
+    entry: &ModelEntry,
+    replicas: usize,
+    max_workers: Option<usize>,
+) -> Result<()> {
+    let b = entry.config.batch_size;
+    if replicas == 0 {
+        bail!("model `{}`: data-parallel replica count must be >= 1 (got 0)", entry.name);
+    }
+    if b == 0 {
+        bail!("model `{}`: batch_size is 0; nothing to shard across replicas", entry.name);
+    }
+    if b % replicas != 0 {
+        bail!(
+            "model `{}`: batch_size {} does not split into {} equal replica shards; \
+             valid replica counts for this model: {:?}",
+            entry.name,
+            b,
+            replicas,
+            divisors(b)
+        );
+    }
+    let avail = max_workers
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1));
+    if replicas > avail {
+        bail!(
+            "model `{}`: {} replicas exceed the available parallelism of {} worker thread(s); \
+             use <= {} replicas, or run single-replica gradient accumulation over {} \
+             microbatches (DpConfig::accumulated) for the same arithmetic",
+            entry.name,
+            replicas,
+            avail,
+            avail,
+            replicas
+        );
+    }
+    Ok(())
+}
+
+/// Validate a simulated mesh against a model entry: each axis must be
+/// satisfiable by the model's geometry. Zero-sized axes are legal (they
+/// normalize to 1, see [`MeshSpec::devices`]).
+pub fn validate_mesh(entry: &ModelEntry, mesh: &MeshSpec) -> Result<()> {
+    let num_experts = entry
+        .config
+        .enc_moe
+        .as_ref()
+        .or(entry.config.dec_moe.as_ref())
+        .map(|m| m.num_experts)
+        .unwrap_or(0);
+    let ep = mesh.expert_parallel.max(1);
+    // A dense entry simply has no expert placement (see `place`); an expert
+    // axis on it is a no-op, not an error. Only a sparse model with more
+    // expert-parallel devices than experts is unsatisfiable.
+    if num_experts > 0 && ep > num_experts {
+        bail!(
+            "model `{}`: {} expert-parallel devices but only {} experts; \
+             use expert_parallel <= {}",
+            entry.name,
+            ep,
+            num_experts,
+            num_experts
+        );
+    }
+    let dp = mesh.data_parallel.max(1);
+    let b = entry.config.batch_size;
+    if b > 0 && (dp > b || b % dp != 0) {
+        bail!(
+            "model `{}`: batch_size {} does not shard evenly over {} data-parallel devices; \
+             valid data_parallel values: {:?}",
+            entry.name,
+            b,
+            dp,
+            divisors(b)
+        );
+    }
+    let mp = mesh.model_parallel.max(1);
+    if mp > entry.config.d_model.max(1) {
+        bail!(
+            "model `{}`: model_parallel {} exceeds d_model {}; weight shards would be empty",
+            entry.name,
+            mp,
+            entry.config.d_model
+        );
+    }
+    Ok(())
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct MeshSpec {
@@ -159,7 +273,8 @@ pub fn simulate_routing(
         offdevice_tokens: offdevice,
         dispatched_tokens: dispatched,
         imbalance: if mean > 0.0 { max / mean } else { 1.0 },
-        drop_fraction: dropped as f64 / (n_tokens * (dispatched + dropped).max(1) / n_tokens.max(1)).max(1) as f64,
+        drop_fraction: dropped as f64
+            / (n_tokens * (dispatched + dropped).max(1) / n_tokens.max(1)).max(1) as f64,
     }
 }
 
@@ -226,6 +341,45 @@ mod tests {
         // All experts land on the single (implicit) expert-parallel device.
         assert_eq!(rep.experts_per_device, vec![8]);
         assert!(rep.expert_param_bytes_per_device > 0);
+    }
+
+    #[test]
+    fn replica_validation_is_actionable_at_config_time() {
+        let m = crate::manifest::Manifest::native();
+        let entry = m.model("lm_tiny_moe_e8_c2").unwrap();
+        // batch_size 8: divisors are valid (given enough workers), 3 is not.
+        for r in [1usize, 2, 4, 8] {
+            validate_replicas(entry, r, Some(64)).unwrap();
+        }
+        let err = validate_replicas(entry, 3, Some(64)).unwrap_err().to_string();
+        assert!(err.contains("lm_tiny_moe_e8_c2") && err.contains("[1, 2, 4, 8]"), "{err}");
+        assert!(validate_replicas(entry, 0, Some(64)).is_err());
+        assert!(validate_replicas(entry, 16, Some(64)).is_err(), "16 > batch 8 must fail");
+        // Exceeding the host's worker budget is rejected with a hint.
+        let err = validate_replicas(entry, 8, Some(2)).unwrap_err().to_string();
+        assert!(err.contains("available parallelism") && err.contains("accumulated"), "{err}");
+    }
+
+    #[test]
+    fn mesh_validation_catches_impossible_axes() {
+        let m = crate::manifest::Manifest::native();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let dense = m.model("lm_tiny_dense").unwrap();
+        let ok = MeshSpec { data_parallel: 2, expert_parallel: 4, model_parallel: 1 };
+        validate_mesh(sparse, &ok).unwrap();
+        // More expert-parallel devices than experts.
+        let bad = MeshSpec { data_parallel: 1, expert_parallel: 16, model_parallel: 1 };
+        let err = validate_mesh(sparse, &bad).unwrap_err().to_string();
+        assert!(err.contains("8 experts"), "{err}");
+        // A dense model ignores the expert axis (the CLI default mesh has
+        // ep=4; `upcycle mesh` on a dense entry must keep working).
+        validate_mesh(dense, &ok).unwrap();
+        // Batch that does not shard over the data axis.
+        let bad = MeshSpec { data_parallel: 3, expert_parallel: 1, model_parallel: 1 };
+        assert!(validate_mesh(dense, &bad).is_err());
+        // Zero axes normalize instead of erroring.
+        let zeroes = MeshSpec { data_parallel: 0, expert_parallel: 0, model_parallel: 0 };
+        validate_mesh(sparse, &zeroes).unwrap();
     }
 
     #[test]

@@ -44,7 +44,10 @@ pub struct StepOutput {
 /// `params` / `opt_state` follow the manifest signature order of the entry
 /// the executable was loaded for; `batch` follows the manifest batch
 /// signature; scalars are (lr, wd, step).
-pub trait Executable {
+///
+/// `Send + Sync` is part of the contract: the data-parallel trainer shares
+/// one executable across replica worker threads (`grads` is `&self`).
+pub trait Executable: Send + Sync {
     /// Which artifact kinds ("train" | "eval" | "features") can execute.
     fn has(&self, kind: &str) -> bool;
 
@@ -192,6 +195,70 @@ impl Runtime {
     ) -> Result<LoadedModel> {
         self.backend.load_model(manifest, name, kinds)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Optimizer
+// ---------------------------------------------------------------------------
+
+const ADAM_B1: f64 = 0.9;
+const ADAM_B2: f64 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// One Adam step with decoupled weight decay, shared by the native
+/// backend's fused `train_step` and the data-parallel trainer's single
+/// post-all-reduce update.
+///
+/// State layout contract: `opt_state` holds two slots per parameter in
+/// manifest order — `(m, v)` at indices `(2i, 2i+1)` — and `grads[i]`
+/// matches `params[i]` element count. `step` drives bias correction and is
+/// the *global* step (1-based; 0 is clamped to 1).
+pub fn adam_update(
+    params: &mut [Tensor],
+    opt_state: &mut [Tensor],
+    grads: &[Vec<f32>],
+    lr: f64,
+    wd: f64,
+    step: u64,
+) -> Result<()> {
+    if grads.len() != params.len() || opt_state.len() != 2 * params.len() {
+        bail!(
+            "adam_update: {} params need {} grads and {} optimizer slots (got {}, {})",
+            params.len(),
+            params.len(),
+            2 * params.len(),
+            grads.len(),
+            opt_state.len()
+        );
+    }
+    let t = step.max(1) as f64;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    let (b1, b2) = (ADAM_B1 as f32, ADAM_B2 as f32);
+    let lr32 = lr as f32;
+    let wd32 = wd as f32;
+    let (bc1f, bc2f) = (bc1 as f32, bc2 as f32);
+    for i in 0..params.len() {
+        let g = &grads[i];
+        // m and v are adjacent slots; split so both borrow mutably at once
+        // (no per-step accumulator copies on the hot path).
+        let (head, tail) = opt_state.split_at_mut(2 * i + 1);
+        let m = head[2 * i].f32s_mut()?;
+        let vs = tail[0].f32s_mut()?;
+        let p = params[i].f32s_mut()?;
+        if g.len() != p.len() {
+            bail!("adam_update: grad {} has {} elements, param has {}", i, g.len(), p.len());
+        }
+        for j in 0..p.len() {
+            let gj = g[j];
+            m[j] = b1 * m[j] + (1.0 - b1) * gj;
+            vs[j] = b2 * vs[j] + (1.0 - b2) * gj * gj;
+            let mhat = m[j] / bc1f;
+            let vhat = vs[j] / bc2f;
+            p[j] -= lr32 * (mhat / (vhat.sqrt() + ADAM_EPS) + wd32 * p[j]);
+        }
+    }
+    Ok(())
 }
 
 /// Bind a checkpoint's tensors (in manifest order) to a state vector.

@@ -11,111 +11,87 @@
 //! batch-priority routing (BPR) and combine-weight renormalization, plus the
 //! Switch-style auxiliary load-balance loss for token choice.
 //!
-//! Backward passes are hand-written (verified by finite differences in the
-//! unit tests below) and the optimizer is Adam with decoupled weight decay;
-//! the optimizer state layout is two slots (`opt/<param>/m`, `opt/<param>/v`)
-//! per parameter so the upcycling surgery can broadcast dense accumulators
-//! across experts exactly as with the factored path.
+//! **Capacity invariants.** Expert Choice keeps exactly
+//! `c = max(1, ⌊n_g·C/E⌋)` tokens per expert per routing group (balanced by
+//! construction); token choice caps each expert at `⌈n_g·C·k/E⌉` and drops
+//! overflow, so `coverage <= 1` and the dispatched-token count never
+//! exceeds `n_g·C·k` per group. Routing groups partition tokens in batch
+//! order; group boundaries never straddle a data-parallel shard because
+//! shards are themselves contiguous batch prefixes.
 //!
-//! Expert dispatch is batch-parallel across experts via scoped threads
-//! (rayon is unavailable offline; `par_map` is the in-tree substitute).
+//! **Compute path.** All matmuls run on the blocked, transposed-B kernels
+//! in [`crate::linalg::gemm`] (shared by forward and backward); tower-level
+//! products use the row-parallel `_big` variants while per-expert products
+//! stay serial inside the expert-parallel `par_map` region — the two levels
+//! never nest. The grouped expert MLP and the per-group Expert Choice
+//! selection fan out across experts on scoped threads (rayon is unavailable
+//! offline; `crate::util::par_map` is the in-tree substitute).
+//!
+//! **Determinism.** Every result is a pure function of (params, batch,
+//! scalars): thread counts only move work between workers, never reorder a
+//! floating-point reduction (see the `gemm` and `par_map` contracts). This
+//! is what makes data-parallel training bitwise-reproducible and lets the
+//! surgery tests assert exact equality.
+//!
+//! Backward passes are hand-written (verified by finite differences in the
+//! unit tests below) and the optimizer is Adam with decoupled weight decay
+//! ([`crate::runtime::adam_update`], shared with the data-parallel
+//! trainer); the optimizer state layout is two slots (`opt/<param>/m`,
+//! `opt/<param>/v`) per parameter so the upcycling surgery can broadcast
+//! dense accumulators across experts exactly as with the factored path.
+//!
+//! When the phase profiler (`util::bench::phases_enable`) is on, the step
+//! is attributed to "router" / "dispatch" / "expert_mlp" / "combine" /
+//! "backward" / "optimizer" buckets; `cargo bench --bench runtime_step`
+//! turns that into the `BENCH_runtime.json` breakdown.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::linalg::gemm::GemmKernels;
 use crate::manifest::{Manifest, ModelEntry, MoeSpec};
 use crate::tensor::Tensor;
+use crate::util::bench::phase;
+use crate::util::par_map;
 
-use super::{Backend, Executable, LoadedModel, Metrics, StepOutput};
+use super::{adam_update, Backend, Executable, LoadedModel, Metrics, StepOutput};
 
 /// Coefficient on the auxiliary load-balance loss (token-choice routers).
 pub const AUX_COEF: f32 = 1e-2;
 
-const ADAM_B1: f64 = 0.9;
-const ADAM_B2: f64 = 0.999;
-const ADAM_EPS: f32 = 1e-8;
-
 /// The native backend: stateless; every model is "compiled" instantly.
-pub struct NativeBackend;
+/// Carries the GEMM kernel family its executables will run on.
+pub struct NativeBackend {
+    gemm: GemmKernels,
+}
 
 impl NativeBackend {
+    /// Default backend: blocked kernels.
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend { gemm: GemmKernels::Blocked }
+    }
+
+    /// Scalar-kernel backend reproducing the PR 1 execution exactly; kept so
+    /// `cargo bench --bench runtime_step` can measure the blocked-kernel
+    /// speedup end-to-end on every run.
+    pub fn reference_kernels() -> NativeBackend {
+        NativeBackend { gemm: GemmKernels::Reference }
     }
 }
 
 impl Backend for NativeBackend {
     fn platform(&self) -> String {
-        "native-cpu".to_string()
+        match self.gemm {
+            GemmKernels::Blocked => "native-cpu".to_string(),
+            GemmKernels::Reference => "native-cpu-reference".to_string(),
+        }
     }
 
     fn load_model(&self, manifest: &Manifest, name: &str, _kinds: &[&str]) -> Result<LoadedModel> {
         let entry = manifest.model(name)?.clone();
-        let exec = NativeExec::new(entry.clone())?;
+        let exec = NativeExec::new(entry.clone(), self.gemm)?;
         Ok(LoadedModel::new(entry, Box::new(exec)))
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Small dense kernels (row-major, accumulate into `out`).
-// ---------------------------------------------------------------------------
-
-/// out[n,m] += a[n,k] · b[k,m]
-fn mm_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), k * m);
-    debug_assert_eq!(out.len(), n * m);
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[l * m..(l + 1) * m];
-            for j in 0..m {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// out[k,m] += aᵀ · b  with a[n,k], b[n,m]
-fn mm_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), n * m);
-    debug_assert_eq!(out.len(), k * m);
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * m..(i + 1) * m];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[l * m..(l + 1) * m];
-            for j in 0..m {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-}
-
-/// out[n,k] += a · bᵀ  with a[n,m], b[k,m]
-fn mm_nt(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), n * m);
-    debug_assert_eq!(b.len(), k * m);
-    debug_assert_eq!(out.len(), n * k);
-    for i in 0..n {
-        let arow = &a[i * m..(i + 1) * m];
-        for l in 0..k {
-            let brow = &b[l * m..(l + 1) * m];
-            let mut s = 0.0f32;
-            for j in 0..m {
-                s += arow[j] * brow[j];
-            }
-            out[i * k + l] += s;
-        }
     }
 }
 
@@ -125,30 +101,6 @@ fn relu_inplace(x: &mut [f32]) {
             *v = 0.0;
         }
     }
-}
-
-/// Map `f` over `0..n` on up to `available_parallelism` scoped threads.
-/// Deterministic: slot i always holds f(i); only scheduling varies.
-fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
-    let threads =
-        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1).min(n).max(1);
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
-    out.resize_with(n, || None);
-    let chunk = (n + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (ci, slots) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (j, slot) in slots.iter_mut().enumerate() {
-                    *slot = Some(f(ci * chunk + j));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -193,14 +145,18 @@ pub fn route_tokens(spec: &MoeSpec, probs: &[f32], n: usize) -> Routing {
         if !token_choice {
             let c =
                 ((((ng as f64) * spec.capacity_factor) / e_cnt as f64).max(1.0) as usize).min(ng);
-            for x in 0..e_cnt {
+            // Per-expert top-c selection is independent across experts; fan
+            // the sorts (the EC routing hot loop) out over scoped threads.
+            let picks: Vec<Vec<usize>> = par_map(e_cnt, |x| {
                 let mut idx: Vec<usize> = (start..end).collect();
                 idx.sort_by(|&a, &b| {
                     probs[b * e_cnt + x].total_cmp(&probs[a * e_cnt + x]).then(a.cmp(&b))
                 });
-                for &t in idx.iter().take(c) {
-                    expert_tok[x].push(t);
-                }
+                idx.truncate(c);
+                idx
+            });
+            for (x, chosen) in picks.into_iter().enumerate() {
+                expert_tok[x].extend(chosen);
             }
         } else {
             let cap = (((ng as f64) * spec.capacity_factor * k as f64) / e_cnt as f64)
@@ -338,6 +294,7 @@ pub struct NativeExec {
     pidx: BTreeMap<String, usize>,
     enc_blocks: Vec<Block>,
     dec_blocks: Vec<Block>,
+    gemm: GemmKernels,
 }
 
 fn make_blocks(entry: &ModelEntry, tower: &str) -> Vec<Block> {
@@ -371,7 +328,7 @@ fn make_blocks(entry: &ModelEntry, tower: &str) -> Vec<Block> {
 }
 
 impl NativeExec {
-    pub fn new(entry: ModelEntry) -> Result<NativeExec> {
+    pub fn new(entry: ModelEntry, gemm: GemmKernels) -> Result<NativeExec> {
         if entry.family != "lm" && entry.family != "vit" {
             bail!("native backend: unknown model family `{}`", entry.family);
         }
@@ -399,7 +356,7 @@ impl NativeExec {
         }
         let enc_blocks = make_blocks(&entry, "enc");
         let dec_blocks = make_blocks(&entry, "dec");
-        let exec = NativeExec { entry, pidx, enc_blocks, dec_blocks };
+        let exec = NativeExec { entry, pidx, enc_blocks, dec_blocks, gemm };
         // Every block parameter must exist in the signature.
         for b in exec.enc_blocks.iter().chain(exec.dec_blocks.iter()) {
             for name in [Some(&b.wi), Some(&b.wo), b.router.as_ref()].into_iter().flatten() {
@@ -462,11 +419,11 @@ impl NativeExec {
                     let wi = self.pslice(params, &blk.wi)?;
                     let wo = self.pslice(params, &blk.wo)?;
                     let mut u = vec![0f32; n * ff];
-                    mm_nn(h, wi, n, d, ff, &mut u);
+                    self.gemm.mm_nn_big(h, wi, n, d, ff, &mut u);
                     let mut r = u.clone();
                     relu_inplace(&mut r);
                     let mut y = vec![0f32; n * d];
-                    mm_nn(&r, wo, n, ff, d, &mut y);
+                    self.gemm.mm_nn_big(&r, wo, n, ff, d, &mut y);
                     for j in 0..n * d {
                         h[j] += y[j];
                     }
@@ -505,13 +462,17 @@ impl NativeExec {
         let wi = self.pslice(params, &blk.wi)?; // [E, d, ff]
         let wo = self.pslice(params, &blk.wo)?; // [E, ff, d]
 
+        // Router: logits → softmax → routing decisions.
         let mut probs = vec![0f32; n * e_cnt];
-        mm_nn(x, wr, n, d, e_cnt, &mut probs);
-        softmax_rows(&mut probs, n, e_cnt);
+        let routing = {
+            let _ph = phase("router");
+            self.gemm.mm_nn(x, wr, n, d, e_cnt, &mut probs);
+            softmax_rows(&mut probs, n, e_cnt);
+            route_tokens(spec, &probs, n)
+        };
 
-        let routing = route_tokens(spec, &probs, n);
-
-        // Token → (expert, row) view, then combine weights.
+        // Dispatch bookkeeping: token → (expert, row) view + combine weights.
+        let _ph = phase("dispatch");
         let mut tok_sel: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
         for (x_i, toks) in routing.expert_tok.iter().enumerate() {
             for (j, &t) in toks.iter().enumerate() {
@@ -533,8 +494,11 @@ impl NativeExec {
                 expert_gate[x_i][j] = probs[t * e_cnt + x_i] / denom;
             }
         }
+        drop(_ph);
 
-        // Grouped expert MLP, batch-parallel across experts.
+        // Grouped expert MLP, batch-parallel across experts (the per-expert
+        // gather + matmuls run serial kernels inside the parallel region).
+        let _ph = phase("expert_mlp");
         let per_expert: Vec<(Vec<f32>, Vec<f32>)> = par_map(e_cnt, |x_i| {
             let toks = &routing.expert_tok[x_i];
             let a = toks.len();
@@ -545,14 +509,17 @@ impl NativeExec {
                 xg[j * d..(j + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
             }
             let mut u = vec![0f32; a * ff];
-            mm_nn(&xg, wi_e, a, d, ff, &mut u);
+            self.gemm.mm_nn(&xg, wi_e, a, d, ff, &mut u);
             let mut r = u.clone();
             relu_inplace(&mut r);
             let mut y = vec![0f32; a * d];
-            mm_nn(&r, wo_e, a, ff, d, &mut y);
+            self.gemm.mm_nn(&r, wo_e, a, ff, d, &mut y);
             (u, y)
         });
+        drop(_ph);
 
+        // Combine: gate-weighted scatter back to token order.
+        let _ph = phase("combine");
         let mut out = vec![0f32; n * d];
         let mut expert_u = Vec::with_capacity(e_cnt);
         let mut expert_y = Vec::with_capacity(e_cnt);
@@ -566,6 +533,7 @@ impl NativeExec {
             expert_u.push(u);
             expert_y.push(y);
         }
+        drop(_ph);
 
         let cache = MoeCache {
             probs,
@@ -606,17 +574,17 @@ impl NativeExec {
                     let mut r = u.clone();
                     relu_inplace(&mut r);
                     let mut dwo = vec![0f32; ff * d];
-                    mm_tn(&r, dh, n, ff, d, &mut dwo);
+                    self.gemm.mm_tn_big(&r, dh, n, ff, d, &mut dwo);
                     let mut dr = vec![0f32; n * ff];
-                    mm_nt(dh, wo, n, d, ff, &mut dr);
+                    self.gemm.mm_nt_big(dh, wo, n, d, ff, &mut dr);
                     for j in 0..n * ff {
                         if u[j] <= 0.0 {
                             dr[j] = 0.0;
                         }
                     }
                     let mut dwi = vec![0f32; d * ff];
-                    mm_tn(x, &dr, n, d, ff, &mut dwi);
-                    mm_nt(&dr, wi, n, ff, d, &mut dx);
+                    self.gemm.mm_tn_big(x, &dr, n, d, ff, &mut dwi);
+                    self.gemm.mm_nt_big(&dr, wi, n, ff, d, &mut dx);
                     accumulate(&mut grads[self.idx(&blk.wi)?], &dwi);
                     accumulate(&mut grads[self.idx(&blk.wo)?], &dwo);
                 }
@@ -672,9 +640,9 @@ impl NativeExec {
                 }
             }
             let mut dwo = vec![0f32; ff * d];
-            mm_tn(&r, &dye, a, ff, d, &mut dwo);
+            self.gemm.mm_tn(&r, &dye, a, ff, d, &mut dwo);
             let mut dr = vec![0f32; a * ff];
-            mm_nt(&dye, wo_e, a, d, ff, &mut dr);
+            self.gemm.mm_nt(&dye, wo_e, a, d, ff, &mut dr);
             for j in 0..a * ff {
                 if u[j] <= 0.0 {
                     dr[j] = 0.0;
@@ -685,9 +653,9 @@ impl NativeExec {
                 xg[j * d..(j + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
             }
             let mut dwi = vec![0f32; d * ff];
-            mm_tn(&xg, &dr, a, d, ff, &mut dwi);
+            self.gemm.mm_tn(&xg, &dr, a, d, ff, &mut dwi);
             let mut dxg = vec![0f32; a * d];
-            mm_nt(&dr, wi_e, a, ff, d, &mut dxg);
+            self.gemm.mm_nt(&dr, wi_e, a, ff, d, &mut dxg);
             (dwi, dwo, dxg)
         });
 
@@ -768,9 +736,9 @@ impl NativeExec {
             }
         }
         let mut dwr = vec![0f32; d * e_cnt];
-        mm_tn(x, &dlogits, n, d, e_cnt, &mut dwr);
+        self.gemm.mm_tn(x, &dlogits, n, d, e_cnt, &mut dwr);
         accumulate(&mut grads[self.idx(router_name)?], &dwr);
-        mm_nt(&dlogits, wr, n, e_cnt, d, dx);
+        self.gemm.mm_nt(&dlogits, wr, n, e_cnt, d, dx);
         Ok(())
     }
 
@@ -837,7 +805,7 @@ impl NativeExec {
             }
         }
         let mut hc = vec![0f32; b * d];
-        mm_nn(&c, wc, b, d, d, &mut hc);
+        self.gemm.mm_nn(&c, wc, b, d, d, &mut hc);
         // Decoder.
         let mut h_dec = gather(dec_tok, nd)?;
         for bi in 0..b {
@@ -852,7 +820,7 @@ impl NativeExec {
         // Tied-embedding logits + masked cross-entropy (softmax in place;
         // raw logits are never needed again).
         let mut probs = vec![0f32; nd * v];
-        mm_nt(&h_dec, embed, nd, d, v, &mut probs);
+        self.gemm.mm_nt_big(&h_dec, embed, nd, d, v, &mut probs);
         softmax_rows(&mut probs, nd, v);
         let mask_sum: f64 = mask.iter().map(|&m| m as f64).sum();
         if mask_sum <= 0.0 {
@@ -890,8 +858,8 @@ impl NativeExec {
         metrics.insert("accuracy".into(), accuracy);
         if self.entry.is_sparse() {
             metrics.insert("aux_loss".into(), aux_total);
-            let cov_blocks = (enc_run.coverage_sum + dec_run.coverage_sum)
-                / moe_blocks.max(1) as f64;
+            let blocks = moe_blocks.max(1) as f64;
+            let cov_blocks = (enc_run.coverage_sum + dec_run.coverage_sum) / blocks;
             metrics.insert("coverage".into(), if moe_blocks > 0 { cov_blocks } else { 1.0 });
         }
         if !want_grads {
@@ -899,6 +867,7 @@ impl NativeExec {
         }
 
         // ---- backward ----
+        let _ph = phase("backward");
         let mut grads: Vec<Vec<f32>> =
             self.entry.params.iter().map(|s| vec![0f32; s.shape.iter().product()]).collect();
         let inv = 1.0 / mask_sum as f32;
@@ -918,9 +887,9 @@ impl NativeExec {
         }
         let embed_idx = self.idx("token_embed")?;
         // Tied projection: dE += dlogitsᵀ·H, dH = dlogits·E.
-        mm_tn(&dlogits, &h_dec, nd, v, d, &mut grads[embed_idx]);
+        self.gemm.mm_tn_big(&dlogits, &h_dec, nd, v, d, &mut grads[embed_idx]);
         let mut dh_dec = vec![0f32; nd * d];
-        mm_nn(&dlogits, embed, nd, v, d, &mut dh_dec);
+        self.gemm.mm_nn_big(&dlogits, embed, nd, v, d, &mut dh_dec);
 
         self.tower_backward(params, &self.dec_blocks, &dec_run, &mut dh_dec, nd, &mut grads)?;
 
@@ -941,10 +910,10 @@ impl NativeExec {
         }
         {
             let wc_idx = self.idx("dec/cross_w")?;
-            mm_tn(&c, &dhc, b, d, d, &mut grads[wc_idx]);
+            self.gemm.mm_tn(&c, &dhc, b, d, d, &mut grads[wc_idx]);
         }
         let mut dc = vec![0f32; b * d];
-        mm_nt(&dhc, wc, b, d, d, &mut dc);
+        self.gemm.mm_nt(&dhc, wc, b, d, d, &mut dc);
         let mut dh_enc = vec![0f32; ne * d];
         let inv_le = 1.0 / le as f32;
         for bi in 0..b {
@@ -1012,7 +981,7 @@ impl NativeExec {
         let plen = pmat.len() / (b * np);
         let n = b * np;
         let mut h = vec![0f32; n * d];
-        mm_nn(&pmat, wp, n, plen, d, &mut h);
+        self.gemm.mm_nn_big(&pmat, wp, n, plen, d, &mut h);
         let run = self.tower_forward(params, &self.enc_blocks, &mut h, n, want_cache)?;
         let mut pooled = vec![0f32; b * d];
         for bi in 0..b {
@@ -1046,7 +1015,7 @@ impl NativeExec {
         }
         let wh = self.pslice(params, "head/w")?;
         let mut probs = vec![0f32; b * nc];
-        mm_nn(&pooled, wh, b, d, nc, &mut probs);
+        self.gemm.mm_nn(&pooled, wh, b, d, nc, &mut probs);
         softmax_rows(&mut probs, b, nc);
         let mut loss = 0f64;
         let mut correct = 0usize;
@@ -1084,6 +1053,7 @@ impl NativeExec {
             return Ok((metrics, None));
         }
 
+        let _ph = phase("backward");
         let mut grads: Vec<Vec<f32>> =
             self.entry.params.iter().map(|s| vec![0f32; s.shape.iter().product()]).collect();
         let inv = 1.0 / b as f32;
@@ -1099,10 +1069,10 @@ impl NativeExec {
         }
         {
             let wh_idx = self.idx("head/w")?;
-            mm_tn(&pooled, &dlogits, b, d, nc, &mut grads[wh_idx]);
+            self.gemm.mm_tn(&pooled, &dlogits, b, d, nc, &mut grads[wh_idx]);
         }
         let mut dpooled = vec![0f32; b * d];
-        mm_nt(&dlogits, wh, b, nc, d, &mut dpooled);
+        self.gemm.mm_nt(&dlogits, wh, b, nc, d, &mut dpooled);
         let n = b * np;
         let mut dh = vec![0f32; n * d];
         let inv_np = 1.0 / np as f32;
@@ -1117,7 +1087,7 @@ impl NativeExec {
         let plen = pmat.len() / n;
         {
             let wp_idx = self.idx("patch_embed/w")?;
-            mm_tn(&pmat, &dh, n, plen, d, &mut grads[wp_idx]);
+            self.gemm.mm_tn_big(&pmat, &dh, n, plen, d, &mut grads[wp_idx]);
         }
         Ok((metrics, Some(grads)))
     }
@@ -1161,30 +1131,9 @@ impl Executable for NativeExec {
         let (metrics, grads) = self.step(&params, batch, true)?;
         let grads = grads.expect("grads requested");
         // Adam with decoupled weight decay; state layout (m, v) per param.
-        let t = step.max(1) as f64;
-        let bc1 = 1.0 - ADAM_B1.powf(t);
-        let bc2 = 1.0 - ADAM_B2.powf(t);
-        let (b1, b2) = (ADAM_B1 as f32, ADAM_B2 as f32);
-        let lr32 = lr as f32;
-        let wd32 = wd as f32;
-        let (bc1f, bc2f) = (bc1 as f32, bc2 as f32);
-        for i in 0..params.len() {
-            let g = &grads[i];
-            // m and v are adjacent slots; split so both borrow mutably at
-            // once (no per-step accumulator copies on the hot path).
-            let (head, tail) = opt_state.split_at_mut(2 * i + 1);
-            let m = head[2 * i].f32s_mut()?;
-            let vs = tail[0].f32s_mut()?;
-            let p = params[i].f32s_mut()?;
-            for j in 0..p.len() {
-                let gj = g[j];
-                m[j] = b1 * m[j] + (1.0 - b1) * gj;
-                vs[j] = b2 * vs[j] + (1.0 - b2) * gj * gj;
-                let mhat = m[j] / bc1f;
-                let vhat = vs[j] / bc2f;
-                p[j] -= lr32 * (mhat / (vhat.sqrt() + ADAM_EPS) + wd32 * p[j]);
-            }
-        }
+        // Shared with the data-parallel trainer's post-all-reduce update.
+        let _ph = phase("optimizer");
+        adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
         Ok(StepOutput { params, opt_state, metrics })
     }
 
@@ -1420,9 +1369,9 @@ mod tests {
             model.entry.opt_state.iter().map(|s| Tensor::zeros(&s.shape)).collect();
         let l0 = model.eval_step(&params, &batch).unwrap()["loss"];
         for step in 1..=25u64 {
-            let out = model
-                .train_step(std::mem::take(&mut params), std::mem::take(&mut opt), &batch, 5e-3, 0.0, step)
-                .unwrap();
+            let params_in = std::mem::take(&mut params);
+            let opt_in = std::mem::take(&mut opt);
+            let out = model.train_step(params_in, opt_in, &batch, 5e-3, 0.0, step).unwrap();
             params = out.params;
             opt = out.opt_state;
         }
@@ -1517,11 +1466,30 @@ mod tests {
         }
     }
 
+    /// Blocked and reference kernels must produce the same training
+    /// trajectory within float tolerance (the bench relies on the reference
+    /// backend being a faithful scalar re-execution of the same model).
     #[test]
-    fn par_map_matches_serial() {
-        let sq = par_map(37, |i| i * i);
-        assert_eq!(sq, (0..37).map(|i| i * i).collect::<Vec<_>>());
-        assert_eq!(par_map(1, |i| i + 10), vec![10]);
+    fn reference_kernels_track_blocked_kernels() {
+        let (entry, model, params, batch) = micro_model("top2", true);
+        let mut models = BTreeMap::new();
+        models.insert(entry.name.clone(), entry.clone());
+        let manifest = Manifest {
+            dir: std::path::PathBuf::new(),
+            source_hash: "test".to_string(),
+            models,
+        };
+        let scalar = NativeBackend::reference_kernels()
+            .load_model(&manifest, "micro", &["train", "eval"])
+            .unwrap();
+        let mb = model.eval_step(&params, &batch).unwrap();
+        let ms = scalar.eval_step(&params, &batch).unwrap();
+        assert!(
+            (mb["loss"] - ms["loss"]).abs() < 1e-4,
+            "blocked {} vs reference {}",
+            mb["loss"],
+            ms["loss"]
+        );
     }
 
     #[test]

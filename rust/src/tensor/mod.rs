@@ -101,6 +101,14 @@ impl Tensor {
         }
     }
 
+    /// Consume the tensor, returning its f32 buffer without copying.
+    pub fn into_f32s(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
     /// Mean of f32 elements (metrics convenience).
     pub fn mean(&self) -> f32 {
         match &self.data {

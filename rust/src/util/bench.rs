@@ -1,6 +1,18 @@
 //! Tiny benchmark harness (criterion is unavailable offline): warmup +
-//! timed iterations with mean/σ/min reporting, used by `rust/benches/*`.
+//! timed iterations with mean/σ/min and latency-percentile reporting, used
+//! by `rust/benches/*`, plus the per-phase step profiler behind the
+//! machine-readable `BENCH_runtime.json` baseline (see `docs/BENCHMARKS.md`
+//! for the schema and the recorded numbers).
+//!
+//! The phase profiler is a process-global accumulator keyed by static phase
+//! names ("router", "dispatch", "expert_mlp", "combine", "backward",
+//! "optimizer"). It is off by default and costs one relaxed atomic load per
+//! [`phase`] call when disabled, so the instrumentation can stay in the hot
+//! path of `runtime::native` permanently.
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -9,16 +21,21 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub stddev_ns: f64,
     pub min_ns: f64,
+    /// Latency percentiles over the timed iterations (p50/p90/p99).
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub p99_ns: f64,
 }
 
 impl BenchResult {
     pub fn print(&self) {
         println!(
-            "{:<44} {:>10}  mean {:>12}  σ {:>10}  min {:>12}",
+            "{:<44} {:>10}  mean {:>12}  p50 {:>12}  p99 {:>12}  min {:>12}",
             self.name,
             format!("x{}", self.iters),
             fmt_ns(self.mean_ns),
-            fmt_ns(self.stddev_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
             fmt_ns(self.min_ns),
         );
     }
@@ -41,6 +58,18 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Percentile (0..=100) of `samples` by nearest-rank on a sorted copy.
+/// Returns 0.0 for an empty slice.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
 /// Run `f` with automatic iteration count targeting ~`target_ms` of total
 /// measurement time (min 3 iters), after 1 warmup call.
 pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
@@ -57,8 +86,8 @@ pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
         samples.push(t.elapsed().as_nanos() as f64);
     }
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
-        / samples.len() as f64;
+    let sq_sum: f64 = samples.iter().map(|s| (s - mean) * (s - mean)).sum();
+    let var = sq_sum / samples.len() as f64;
     let min = samples.iter().cloned().fold(f64::MAX, f64::min);
     let r = BenchResult {
         name: name.to_string(),
@@ -66,9 +95,69 @@ pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
         mean_ns: mean,
         stddev_ns: var.sqrt(),
         min_ns: min,
+        p50_ns: percentile(&samples, 50.0),
+        p90_ns: percentile(&samples, 90.0),
+        p99_ns: percentile(&samples, 99.0),
     };
     r.print();
     r
+}
+
+// ---------------------------------------------------------------------------
+// Phase profiler
+// ---------------------------------------------------------------------------
+
+static PHASES_ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn phase_store() -> &'static Mutex<BTreeMap<&'static str, (u128, u64)>> {
+    static STORE: OnceLock<Mutex<BTreeMap<&'static str, (u128, u64)>>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Turn per-phase accumulation on or off (off by default).
+pub fn phases_enable(on: bool) {
+    PHASES_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Clear all accumulated phase totals.
+pub fn phases_reset() {
+    phase_store().lock().expect("phase store").clear();
+}
+
+/// Snapshot of accumulated phases: (name, total_ns, calls), name-sorted.
+pub fn phases_snapshot() -> Vec<(String, f64, u64)> {
+    phase_store()
+        .lock()
+        .expect("phase store")
+        .iter()
+        .map(|(k, (ns, calls))| (k.to_string(), *ns as f64, *calls))
+        .collect()
+}
+
+/// RAII phase timer: accumulates elapsed wall time under `name` on drop.
+/// Near-free when profiling is disabled (one relaxed atomic load).
+pub struct PhaseGuard {
+    name: &'static str,
+    start: Option<Instant>,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let ns = t0.elapsed().as_nanos();
+            let mut store = phase_store().lock().expect("phase store");
+            let slot = store.entry(self.name).or_insert((0, 0));
+            slot.0 += ns;
+            slot.1 += 1;
+        }
+    }
+}
+
+/// Start timing a phase; the returned guard records on drop. See the module
+/// docs for the phase names used by the native backend.
+pub fn phase(name: &'static str) -> PhaseGuard {
+    let enabled = PHASES_ENABLED.load(Ordering::Relaxed);
+    PhaseGuard { name, start: if enabled { Some(Instant::now()) } else { None } }
 }
 
 #[cfg(test)]
@@ -84,6 +173,8 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ns >= 0.0);
         assert!(r.min_ns <= r.mean_ns);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.min_ns <= r.p50_ns);
     }
 
     #[test]
@@ -92,5 +183,39 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with("s"));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn phase_profiler_accumulates_only_when_enabled() {
+        phases_reset();
+        {
+            let _g = phase("test_disabled");
+        }
+        assert!(phases_snapshot().iter().all(|(n, _, _)| n != "test_disabled"));
+
+        phases_enable(true);
+        {
+            let _g = phase("test_enabled");
+        }
+        {
+            let _g = phase("test_enabled");
+        }
+        phases_enable(false);
+        let snap = phases_snapshot();
+        let (_, ns, calls) =
+            snap.iter().find(|(n, _, _)| n == "test_enabled").expect("phase recorded");
+        assert_eq!(*calls, 2);
+        assert!(*ns >= 0.0);
+        phases_reset();
+        assert!(phases_snapshot().iter().all(|(n, _, _)| n != "test_enabled"));
     }
 }

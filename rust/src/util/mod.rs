@@ -1,7 +1,107 @@
 //! In-tree utility substrates (this environment has no network registry, so
-//! JSON, RNG, CLI parsing and the bench harness are implemented here).
+//! JSON, RNG, CLI parsing, the bench harness and the scoped-thread map are
+//! implemented here).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+
+use std::cell::Cell;
+
+thread_local! {
+    static SERIAL_COMPUTE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread is inside [`serial_compute`]: the nested
+/// parallel helpers ([`par_map`], [`par_map_workers`], and the row-sharded
+/// GEMM kernels in `linalg::gemm`) then run serially instead of spawning
+/// threads. The data-parallel trainer wraps each replica worker in this so
+/// replica-level and kernel-level parallelism never stack up and
+/// oversubscribe the host. Results are unaffected either way — the serial
+/// and threaded paths are bitwise-identical by contract.
+pub fn in_serial_compute() -> bool {
+    SERIAL_COMPUTE.with(|c| c.get())
+}
+
+/// Run `f` with nested parallel helpers forced serial on this thread.
+pub fn serial_compute<R>(f: impl FnOnce() -> R) -> R {
+    SERIAL_COMPUTE.with(|c| {
+        let prev = c.get();
+        c.set(true);
+        let out = f();
+        c.set(prev);
+        out
+    })
+}
+
+/// Map `f` over `0..n` on up to `workers` scoped threads.
+///
+/// Determinism contract: slot `i` of the result always holds `f(i)`, and
+/// each `f(i)` call runs exactly once on exactly one thread — the worker
+/// count changes only *where* an index is evaluated, never the arithmetic
+/// performed for it. Callers that keep every `f(i)` independent of thread
+/// identity (everything in this crate does) therefore get results that are
+/// bitwise-identical for any `workers >= 1`.
+pub fn par_map_workers<T: Send, F: Fn(usize) -> T + Sync>(
+    workers: usize,
+    n: usize,
+    f: F,
+) -> Vec<T> {
+    let threads = if in_serial_compute() { 1 } else { workers.min(n).max(1) };
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = (n + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(f(ci * chunk + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
+}
+
+/// [`par_map_workers`] with one worker per available hardware thread.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let workers = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    par_map_workers(workers, n, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let sq = par_map(37, |i| i * i);
+        assert_eq!(sq, (0..37).map(|i| i * i).collect::<Vec<_>>());
+        assert_eq!(par_map(1, |i| i + 10), vec![10]);
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn serial_compute_forces_single_thread_and_restores() {
+        assert!(!in_serial_compute());
+        let out = serial_compute(|| {
+            assert!(in_serial_compute());
+            par_map(7, |i| i * 2)
+        });
+        assert_eq!(out, (0..7).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(!in_serial_compute());
+    }
+
+    #[test]
+    fn worker_count_never_changes_results() {
+        let expect: Vec<usize> = (0..23).map(|i| i * 3 + 1).collect();
+        for workers in [1, 2, 3, 8, 64] {
+            assert_eq!(par_map_workers(workers, 23, |i| i * 3 + 1), expect);
+        }
+    }
+}

@@ -148,9 +148,9 @@ fn prop_ridge_separates_easy_classes() {
     let px = tensors[0].f32s().unwrap();
     let n = labels.len();
     let dim = px.len() / n;
-    let x = Mat::from_rows(
-        &(0..n).map(|i| px[i * dim..(i + 1) * dim].iter().map(|&v| v as f64).collect()).collect::<Vec<_>>(),
-    );
+    let rows: Vec<Vec<f64>> =
+        (0..n).map(|i| px[i * dim..(i + 1) * dim].iter().map(|&v| v as f64).collect()).collect();
+    let x = Mat::from_rows(&rows);
     let mut y = Mat::zeros(n, NUM_CLASSES);
     for (i, &l) in labels.iter().enumerate() {
         *y.at_mut(i, l) = 1.0;

@@ -120,9 +120,15 @@ fn native_full_stack() {
         log_every: 0,
     };
     let mut pipe2 = lm_pipeline(&dense_entry, 2);
-    let s2 =
-        sparse_upcycle::coordinator::train(&sparse, &mut sp_state, &mut pipe2, &evaluator, &cfg, "up")
-            .unwrap();
+    let s2 = sparse_upcycle::coordinator::train(
+        &sparse,
+        &mut sp_state,
+        &mut pipe2,
+        &evaluator,
+        &cfg,
+        "up",
+    )
+    .unwrap();
     let loss_sp = s2.last().unwrap().values["loss"];
     assert!(
         loss_sp < m_sp0["loss"],

@@ -67,9 +67,10 @@ fn prop_surgery_seed_determinism() {
     let dense_entry = m.model("lm_tiny_dense").unwrap().clone();
     let sparse_entry = m.model("lm_tiny_moe_e8_c2").unwrap().clone();
     let dense = init_params(&dense_entry, 7).unwrap();
-    let a = upcycle_params(&dense, &sparse_entry, &UpcycleOptions { seed: 5, ..Default::default() }).unwrap();
-    let b = upcycle_params(&dense, &sparse_entry, &UpcycleOptions { seed: 5, ..Default::default() }).unwrap();
-    let c = upcycle_params(&dense, &sparse_entry, &UpcycleOptions { seed: 6, ..Default::default() }).unwrap();
+    let seeded = |seed: u64| UpcycleOptions { seed, ..Default::default() };
+    let a = upcycle_params(&dense, &sparse_entry, &seeded(5)).unwrap();
+    let b = upcycle_params(&dense, &sparse_entry, &seeded(5)).unwrap();
+    let c = upcycle_params(&dense, &sparse_entry, &seeded(6)).unwrap();
     for spec in &sparse_entry.params {
         assert_eq!(a.get(&spec.name).unwrap(), b.get(&spec.name).unwrap());
         if spec.name.contains("/moe/router") {
