@@ -3,9 +3,11 @@
 # `make verify` mirrors .github/workflows/ci.yml exactly: if it is green
 # here, CI is green.
 
-.PHONY: verify build test bench-compile bench-json fmt fmt-check clippy quickstart artifacts clean
+.PHONY: verify build test bench-compile bench-json bench-gate bench-baseline check-features \
+        fmt fmt-check clippy quickstart mesh-smoke artifacts clean
 
-verify: build test fmt-check clippy bench-compile bench-json quickstart
+verify: build test fmt-check clippy bench-compile bench-json bench-gate check-features \
+        quickstart mesh-smoke
 
 build:
 	cargo build --release
@@ -20,6 +22,24 @@ bench-compile:
 bench-json:
 	cargo bench --bench runtime_step -- --quick
 
+# Fail on tokens/s or p50 regression vs the committed baseline (same
+# tolerance CI uses; see docs/BENCHMARKS.md for the refresh procedure).
+# Depends on bench-json so `make -j verify` can never gate a stale report.
+bench-gate: bench-json
+	cargo run --release -- bench-gate --baseline BENCH_baseline.json \
+	  --current rust/BENCH_runtime.json --tolerance-pct 50
+
+# Refresh the committed baseline from a fresh --quick run on this machine.
+bench-baseline: bench-json
+	cargo run --release -- bench-gate --baseline BENCH_baseline.json \
+	  --current rust/BENCH_runtime.json --update-baseline
+
+# Feature matrix: the off-by-default PJRT stub and the no-default build
+# must keep compiling even though neither is exercised by default tests.
+check-features:
+	cargo check -p sparse-upcycle --all-targets --features pjrt
+	cargo check -p sparse-upcycle --all-targets --no-default-features
+
 fmt:
 	cargo fmt --all
 
@@ -31,6 +51,10 @@ clippy:
 
 quickstart:
 	cargo run --release -- quickstart --pretrain-steps 30 --extra-steps 5
+
+# End-to-end expert parallelism: 2x2 mesh, experts sharded across EP ranks.
+mesh-smoke:
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --mesh 2x2 --steps 10
 
 # AOT artifacts for the PJRT backend (requires the Python toolchain; not
 # needed for the default native build). Written under rust/ because cargo

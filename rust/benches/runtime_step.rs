@@ -17,16 +17,23 @@
 //! * the per-phase breakdown (router / dispatch / expert_mlp / combine /
 //!   backward / optimizer) via the `util::bench` phase profiler,
 //! * data-parallel scaling (`coordinator::dp_train_step`) over worker
-//!   replicas.
+//!   replicas,
+//! * expert-parallel DP×EP mesh scaling (`coordinator::mesh_train_step`):
+//!   serial-vs-threaded mesh step time, the dispatch/alltoall/expert_mlp
+//!   phase split, and the measured all-to-all exchange time against the
+//!   `Interconnect::shared_memory` cost model.
 //!
 //! Run: cargo bench --bench runtime_step [-- --full] [--quick]
 //!      [--json-out PATH]   (default PATH: BENCH_runtime.json in the bench
 //!      CWD, i.e. `rust/`)
 
-use sparse_upcycle::coordinator::{dp_train_step, BatchSource, DpConfig, TrainState};
+use sparse_upcycle::coordinator::{
+    dp_train_step, mesh_train_step, BatchSource, DpConfig, MeshConfig, TrainState,
+};
 use sparse_upcycle::init::{init_opt_state, init_params};
 use sparse_upcycle::linalg::gemm;
 use sparse_upcycle::manifest::{Manifest, ModelEntry};
+use sparse_upcycle::parallel::collectives::Interconnect;
 use sparse_upcycle::runtime::native::NativeBackend;
 use sparse_upcycle::runtime::{Backend, LoadedModel, Runtime};
 use sparse_upcycle::util::bench::{
@@ -164,6 +171,149 @@ fn kernel_section(target_ms: u64) -> Json {
     obj(vec![("shapes", arr(shapes))])
 }
 
+/// Analytic all-to-all payload of one mesh step (Expert Choice): per MoE
+/// block, every rank dispatches `E·c` rows of `d` floats; each of the 4
+/// exchanges per block (fwd/bwd × out/ret) moves `rows·d·4 / ep` bytes per
+/// peer. Returns the `Interconnect::shared_memory` prediction for the
+/// whole step, summed over every rank's exchanges (matching how the phase
+/// profiler accumulates the measured time across rank threads).
+fn alltoall_model_ns_per_step(entry: &ModelEntry, mesh: &MeshConfig) -> f64 {
+    let ranks = mesh.ranks();
+    let d = entry.config.d_model;
+    let examples_per_rank = entry.config.batch_size / ranks.max(1);
+    let net = Interconnect::shared_memory(mesh.ep);
+    let mut total_s = 0.0;
+    for (tag, spec) in entry.moe_block_tags() {
+        let len = if tag.starts_with("enc") { entry.config.enc_len } else { entry.config.dec_len };
+        let n_rank = examples_per_rank * len;
+        let c = (((n_rank as f64 * spec.capacity_factor) / spec.num_experts as f64).max(1.0)
+            as usize)
+            .min(n_rank);
+        let rows = spec.num_experts * c;
+        let bytes_per_peer = rows * d * 4 / mesh.ep.max(1);
+        // 4 exchanges per block per rank per step; every rank measures the
+        // same rendezvous window, so the aggregate scales by dp·ep.
+        total_s += 4.0 * ranks as f64 * net.alltoall_time(bytes_per_peer);
+    }
+    total_s * 1e9
+}
+
+/// Expert-parallel mesh scaling on the reference sparse LM: serial
+/// (1-worker, full experts local) vs threaded (sharded experts + real
+/// all-to-all), phase attribution, and the measured-vs-model exchange cost.
+fn expert_parallel_section(
+    manifest: &Manifest,
+    runtime: &Runtime,
+    target_ms: u64,
+    full: bool,
+) -> Json {
+    println!("== expert parallel: DP×EP mesh scaling ==");
+    let name = "lm_tiny_moe_e8_c2";
+    let entry = manifest.model(name).unwrap().clone();
+    let model = runtime.load_model(manifest, name, &["train", "eval"]).unwrap();
+    let mut pipe = pipeline(&entry);
+    let batch = pipe.next();
+    let tokens = tokens_per_step(&entry);
+
+    // Serial reference before its threaded twin, per mesh shape, so every
+    // speedup compares identical shard decompositions.
+    let mut plans = vec![(1usize, 2usize, false), (1, 2, true), (2, 2, false), (2, 2, true)];
+    if full {
+        plans.push((1, 4, false));
+        plans.push((1, 4, true));
+    }
+    let mut entries = Vec::new();
+    let mut serial_ns: std::collections::BTreeMap<(usize, usize), f64> =
+        std::collections::BTreeMap::new();
+    for (dp, ep, parallel) in plans {
+        if entry.config.batch_size % (dp * ep) != 0 {
+            continue;
+        }
+        let mesh = MeshConfig { dp, ep, parallel };
+        let label = format!(
+            "mesh_train_step {name} {dp}x{ep}{}",
+            if parallel { "" } else { " [serial ref]" }
+        );
+        let mut state = fresh_state(&entry);
+        let mut step = 0u64;
+        let r = bench(&label, target_ms, || {
+            step += 1;
+            let params = std::mem::take(&mut state.params);
+            let opt = std::mem::take(&mut state.opt_state);
+            let out = mesh_train_step(&model, params, opt, &batch, 1e-3, 0.0, step, &mesh)
+                .unwrap();
+            state.params = out.params;
+            state.opt_state = out.opt_state;
+        });
+        if !parallel {
+            serial_ns.insert((dp, ep), r.mean_ns);
+        }
+
+        // Phase attribution over a few profiled steps (parallel plans only:
+        // the serial reference never touches the exchange).
+        let mut alltoall_ns = 0.0;
+        let mut ep_mlp_ns = 0.0;
+        let profiled_steps = 3u64;
+        if parallel {
+            phases_reset();
+            phases_enable(true);
+            for i in 1..=profiled_steps {
+                let params = std::mem::take(&mut state.params);
+                let opt = std::mem::take(&mut state.opt_state);
+                let out =
+                    mesh_train_step(&model, params, opt, &batch, 1e-3, 0.0, 500 + i, &mesh)
+                        .unwrap();
+                state.params = out.params;
+                state.opt_state = out.opt_state;
+            }
+            phases_enable(false);
+            for (phase, total_ns, _calls) in phases_snapshot() {
+                if phase == "ep_alltoall" {
+                    alltoall_ns = total_ns / profiled_steps as f64;
+                } else if phase == "ep_expert_mlp" {
+                    ep_mlp_ns = total_ns / profiled_steps as f64;
+                }
+            }
+            phases_reset();
+        }
+        let model_ns = alltoall_model_ns_per_step(&entry, &mesh);
+        // Speedup vs the serial run of the SAME mesh shape (identical shard
+        // decomposition; 0 when no serial reference was measured).
+        let speedup = serial_ns.get(&(dp, ep)).map(|s| s / r.mean_ns).unwrap_or(0.0);
+        if parallel {
+            println!(
+                "  ↳ {dp}x{ep}: {:.2}x vs serial mesh, alltoall {:.1} µs/step (model {:.1} µs)",
+                speedup,
+                alltoall_ns / 1e3,
+                model_ns / 1e3
+            );
+        }
+        entries.push(obj(vec![
+            ("dp", num(dp as f64)),
+            ("ep", num(ep as f64)),
+            ("parallel", Json::Bool(parallel)),
+            ("mean_ns", num(r.mean_ns)),
+            ("p50_ns", num(r.p50_ns)),
+            ("steps_per_s", num(1e9 / r.mean_ns)),
+            ("tokens_per_s", num(tokens * 1e9 / r.mean_ns)),
+            ("speedup_vs_serial_mesh", num(speedup)),
+            ("alltoall_ns_per_step", num(alltoall_ns)),
+            ("expert_mlp_ns_per_step", num(ep_mlp_ns)),
+            ("alltoall_model_ns_per_step", num(model_ns)),
+            (
+                "alltoall_model_error",
+                num(if model_ns > 0.0 && alltoall_ns > 0.0 { alltoall_ns / model_ns } else { 0.0 }),
+            ),
+        ]));
+    }
+    obj(vec![
+        ("model", s(name)),
+        ("tokens_per_step", num(tokens)),
+        ("moe_blocks", num(entry.moe_block_tags().len() as f64)),
+        ("plans", arr(entries)),
+    ])
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let full = args.iter().any(|a| a == "--full");
@@ -203,6 +353,7 @@ fn main() {
     };
 
     let kernels = kernel_section(t_kern);
+    let expert_parallel = expert_parallel_section(&manifest, &runtime, t_eval, full);
 
     let mut model_entries = Vec::new();
     for name in variants {
@@ -345,6 +496,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("full", Json::Bool(full)),
         ("kernels", kernels),
+        ("expert_parallel", expert_parallel),
         ("models", arr(model_entries)),
     ]);
     std::fs::write(&json_out, report.to_string()).expect("writing bench JSON");

@@ -32,16 +32,41 @@
 //! host's parallelism when a [`DpConfig`] is constructed
 //! (`parallel::validate_replicas`) — misconfiguration fails at setup time
 //! with an actionable message, not deep inside the step loop.
+//!
+//! **Expert parallelism (DP×EP mesh).** [`mesh_train_step`] shards the
+//! global batch into `dp·ep` token shards and runs one rank thread per
+//! shard. Ranks in the same DP group form an expert-parallel group: each
+//! owns only its round-robin shard of every MoE block's expert weights
+//! (`runtime::ep::EpRankExchange`), computes router + dispatch on its own
+//! tokens, and exchanges token buffers with its peers through real
+//! all-to-all collectives (`parallel::collectives::EpGroup`) at every MoE
+//! block, forward and backward. Gradients reduce hierarchically — within
+//! each EP group in ascending source order, then across DP groups in group
+//! order — and one Adam update applies to the replicated state.
+//!
+//! The mesh determinism guarantee extends the DP one: a
+//! [`MeshConfig`] with `parallel: true` (one thread per rank, sharded
+//! expert weights, live collectives) is **bitwise-identical** to
+//! `parallel: false` (the same shard decomposition stepped serially by one
+//! worker holding the full expert set), asserted by this module's tests.
+//! The two paths share no expert-execution code — the serial baseline goes
+//! through `LoadedModel::grads` — so the test pins the entire distributed
+//! machinery (dispatch packing, all-to-all, shard GEMMs, combine, ordered
+//! accumulation) to the plain local arithmetic. With one DP group the
+//! hierarchy collapses and `1xE` is additionally bitwise-identical to
+//! [`DpConfig`] gradient accumulation over `E` shards.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::costmodel::Cost;
 use crate::manifest::ModelEntry;
 use crate::metrics::Series;
-use crate::parallel::collectives::reduce_sum_ordered;
+use crate::parallel::collectives::{reduce_sum_ordered, EpGroup, EP_ABORTED_MSG};
+use crate::runtime::ep::{EpPayload, EpRankExchange};
 use crate::runtime::{
     adam_update, checkpoint_from_tensors, tensors_from_checkpoint, LoadedModel, Metrics,
     StepOutput,
@@ -284,6 +309,203 @@ pub fn dp_train_step(
 }
 
 // ---------------------------------------------------------------------------
+// Expert-parallel (DP×EP mesh) training
+// ---------------------------------------------------------------------------
+
+/// Execution shape of one DP×EP mesh run: `dp` data-parallel groups of
+/// `ep` expert-parallel ranks, `dp·ep` token shards. See the module docs
+/// for the arithmetic and the determinism contract.
+#[derive(Debug, Clone, Copy)]
+pub struct MeshConfig {
+    /// Data-parallel groups.
+    pub dp: usize,
+    /// Expert-parallel ranks per group (experts round-robin sharded).
+    pub ep: usize,
+    /// `true`: one worker thread per rank, expert weights sharded, live
+    /// all-to-all collectives. `false`: the same shard decomposition
+    /// stepped serially by this thread with the full expert set local —
+    /// the 1-worker reference arithmetic. Bitwise-identical by contract.
+    pub parallel: bool,
+}
+
+impl MeshConfig {
+    /// Parse a `DxE` mesh spec ("2x2" → dp 2, ep 2).
+    pub fn parse(spec: &str) -> Result<(usize, usize)> {
+        let (d, e) = spec
+            .split_once('x')
+            .with_context(|| format!("mesh `{spec}` must be DxE (e.g. 2x2)"))?;
+        let dp: usize =
+            d.trim().parse().with_context(|| format!("bad data-parallel axis in `{spec}`"))?;
+        let ep: usize =
+            e.trim().parse().with_context(|| format!("bad expert-parallel axis in `{spec}`"))?;
+        Ok((dp, ep))
+    }
+
+    /// Validated mesh with one worker thread per rank.
+    pub fn replicated(entry: &ModelEntry, dp: usize, ep: usize) -> Result<MeshConfig> {
+        crate::parallel::validate_mesh_exec(entry, dp, ep)?;
+        Ok(MeshConfig { dp, ep, parallel: true })
+    }
+
+    /// The same mesh arithmetic executed serially by the calling thread
+    /// (the 1-worker baseline of the bitwise-identity contract).
+    pub fn accumulated(entry: &ModelEntry, dp: usize, ep: usize) -> Result<MeshConfig> {
+        crate::parallel::validate_mesh_exec(entry, dp, ep)?;
+        Ok(MeshConfig { dp, ep, parallel: false })
+    }
+
+    /// Total ranks (= token shards) on the mesh.
+    pub fn ranks(&self) -> usize {
+        self.dp.max(1) * self.ep.max(1)
+    }
+}
+
+/// Per-rank shard gradients of the parallel mesh path: one thread per rank,
+/// expert weights sharded over each DP group's EP ranks, token buffers
+/// exchanged through the group's collectives. Results arrive in rank order
+/// `(dp_group · ep + ep_rank)`.
+fn mesh_rank_grads(
+    model: &LoadedModel,
+    params: &[Tensor],
+    shards: &[Vec<Tensor>],
+    mesh: &MeshConfig,
+) -> Result<Vec<(Metrics, Vec<Vec<f32>>)>> {
+    let dp = mesh.dp.max(1);
+    let ep = mesh.ep.max(1);
+    // One rendezvous group per DP row of the mesh.
+    let groups: Vec<Arc<EpGroup<EpPayload>>> =
+        (0..dp).map(|_| Arc::new(EpGroup::new(ep))).collect();
+    let results: Vec<Result<(Metrics, Vec<Vec<f32>>)>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(dp * ep);
+        for r in 0..dp * ep {
+            let group = groups[r / ep].clone();
+            let shard = &shards[r];
+            handles.push(s.spawn(move || {
+                let rank = r % ep;
+                let body = || -> Result<(Metrics, Vec<Vec<f32>>)> {
+                    // Rank threads force nested kernel/expert threading
+                    // serial, exactly like DP replica workers.
+                    crate::util::serial_compute(|| {
+                        let mut exch =
+                            EpRankExchange::new(&model.entry, params, rank, group.clone())?;
+                        let (m, g) = model.grads_ep(params, shard, &mut exch)?;
+                        let g = g.into_iter().map(Tensor::into_f32s).collect::<Result<Vec<_>>>()?;
+                        Ok((m, g))
+                    })
+                };
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+                match out {
+                    Ok(res) => {
+                        // A failed rank must release peers blocked on the
+                        // group's collectives before reporting.
+                        if res.is_err() {
+                            group.abort();
+                        }
+                        res
+                    }
+                    Err(_) => {
+                        group.abort();
+                        Err(anyhow!("mesh rank panicked"))
+                    }
+                }
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("mesh rank thread died"))))
+            .collect()
+    });
+    // Report the root cause: a failed rank aborts its group, so peers also
+    // error with a secondary "collective aborted" message — prefer the
+    // first error that is NOT one of those echoes.
+    let mut out = Vec::with_capacity(results.len());
+    let mut root_cause: Option<anyhow::Error> = None;
+    let mut first_abort: Option<anyhow::Error> = None;
+    for (r, res) in results.into_iter().enumerate() {
+        match res {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                let e =
+                    e.context(format!("mesh rank {r} (dp group {}, ep rank {})", r / ep, r % ep));
+                if format!("{e:#}").contains(EP_ABORTED_MSG) {
+                    if first_abort.is_none() {
+                        first_abort = Some(e);
+                    }
+                } else if root_cause.is_none() {
+                    root_cause = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = root_cause.or(first_abort) {
+        return Err(e);
+    }
+    Ok(out)
+}
+
+/// One DP×EP mesh training step: shard the batch over all ranks, compute
+/// per-shard gradients (expert-parallel threads or the serial 1-worker
+/// reference, per [`MeshConfig::parallel`]), reduce hierarchically in rank
+/// order, apply a single Adam update. Metrics are the mean over ranks.
+#[allow(clippy::too_many_arguments)]
+pub fn mesh_train_step(
+    model: &LoadedModel,
+    mut params: Vec<Tensor>,
+    mut opt_state: Vec<Tensor>,
+    batch: &[Tensor],
+    lr: f64,
+    wd: f64,
+    step: u64,
+    mesh: &MeshConfig,
+) -> Result<StepOutput> {
+    let ranks = mesh.ranks();
+    let shards = shard_batch(batch, ranks)?;
+    let results: Vec<(Metrics, Vec<Vec<f32>>)> = if mesh.parallel && ranks > 1 {
+        mesh_rank_grads(model, &params, &shards, mesh)?
+    } else {
+        // 1-worker reference: every token shard steps with the full expert
+        // set local; only the reduction below is mesh-shaped.
+        let mut out = Vec::with_capacity(ranks);
+        for (r, shard) in shards.iter().enumerate() {
+            let (m, g) = model
+                .grads(&params, shard)
+                .with_context(|| format!("mesh rank {r} (serial) gradient computation"))?;
+            out.push((m, g.into_iter().map(Tensor::into_f32s).collect::<Result<Vec<_>>>()?));
+        }
+        out
+    };
+    let mut metric_sums: Metrics = Metrics::new();
+    let mut rank_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(ranks);
+    for (m, g) in results {
+        for (k, v) in m {
+            *metric_sums.entry(k).or_insert(0.0) += v;
+        }
+        rank_grads.push(g);
+    }
+    // Hierarchical rank-ordered reduction: sources within each EP group
+    // first, then across DP groups — both ascending, so the parallel and
+    // serial paths perform the identical float additions.
+    let inv = 1.0 / ranks as f32;
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(params.len());
+    for p in 0..params.len() {
+        let mut group_sums: Vec<Vec<f32>> = Vec::with_capacity(mesh.dp.max(1));
+        for dp_group in rank_grads.chunks_mut(mesh.ep.max(1)) {
+            let parts: Vec<Vec<f32>> =
+                dp_group.iter_mut().map(|rg| std::mem::take(&mut rg[p])).collect();
+            group_sums.push(reduce_sum_ordered(parts)?);
+        }
+        let mut g = reduce_sum_ordered(group_sums)?;
+        for v in g.iter_mut() {
+            *v *= inv;
+        }
+        grads.push(g);
+    }
+    adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
+    let metrics = metric_sums.into_iter().map(|(k, v)| (k, v / ranks as f64)).collect();
+    Ok(StepOutput { params, opt_state, metrics })
+}
+
+// ---------------------------------------------------------------------------
 // Step loops
 // ---------------------------------------------------------------------------
 
@@ -372,6 +594,24 @@ pub fn train_dp(
     })
 }
 
+/// [`train`], stepping each batch on a DP×EP mesh under `mesh` (see
+/// [`mesh_train_step`]). Evaluation runs on the replicated parameters —
+/// on a real mesh every rank holds the dense weights and the gathered
+/// expert weights are only resident shard-wise during the step.
+pub fn train_mesh(
+    model: &LoadedModel,
+    state: &mut TrainState,
+    data: &mut dyn BatchSource,
+    evaluator: &Evaluator,
+    cfg: &TrainConfig,
+    mesh: &MeshConfig,
+    series_name: &str,
+) -> Result<Series> {
+    run_loop(model, state, data, evaluator, cfg, series_name, |p, o, b, lr, step| {
+        mesh_train_step(model, p, o, b, lr, cfg.weight_decay, step, mesh)
+    })
+}
+
 /// Total extra cost of a finished series' final point.
 pub fn final_cost(series: &Series) -> Cost {
     Cost { flops: series.last().map(|p| p.extra_flops).unwrap_or(0.0) }
@@ -455,6 +695,132 @@ mod tests {
             assert_eq!(a, b, "opt slot `{}` must match bitwise", spec.name);
         }
         assert!(l1.iter().all(|l| l.is_finite()));
+    }
+
+    /// Run `steps` mesh training steps from a fresh state; returns the
+    /// final (params, opt_state, per-step losses).
+    fn run_mesh(
+        entry: &ModelEntry,
+        model: &LoadedModel,
+        batches: &[Vec<Tensor>],
+        mesh: &MeshConfig,
+    ) -> (Vec<Tensor>, Vec<Tensor>, Vec<f64>) {
+        let mut st = fresh_state(entry);
+        let mut losses = Vec::new();
+        for (i, b) in batches.iter().enumerate() {
+            let out = mesh_train_step(
+                model,
+                std::mem::take(&mut st.params),
+                std::mem::take(&mut st.opt_state),
+                b,
+                1e-3,
+                0.01,
+                (i + 1) as u64,
+                mesh,
+            )
+            .unwrap();
+            st.params = out.params;
+            st.opt_state = out.opt_state;
+            losses.push(out.metrics["loss"]);
+        }
+        (st.params, st.opt_state, losses)
+    }
+
+    /// The PR acceptance invariant: a 2x2 mesh — 4 rank threads, expert
+    /// weights sharded over each DP group's EP pair, token buffers moving
+    /// through real all-to-all collectives — is bitwise-identical to the
+    /// same shard decomposition stepped serially by one worker holding the
+    /// full expert set (an independent code path through `grads`).
+    #[test]
+    fn mesh_2x2_is_bitwise_identical_to_one_worker() {
+        let (entry, model, batches) = setup();
+        let parallel = MeshConfig { dp: 2, ep: 2, parallel: true };
+        let serial = MeshConfig { dp: 2, ep: 2, parallel: false };
+        let (p_par, o_par, l_par) = run_mesh(&entry, &model, &batches, &parallel);
+        let (p_ser, o_ser, l_ser) = run_mesh(&entry, &model, &batches, &serial);
+        assert_eq!(l_par, l_ser, "per-step loss must match exactly");
+        for ((a, b), spec) in p_par.iter().zip(&p_ser).zip(&entry.params) {
+            assert_eq!(a, b, "param `{}` must match bitwise", spec.name);
+        }
+        for ((a, b), spec) in o_par.iter().zip(&o_ser).zip(&entry.opt_state) {
+            assert_eq!(a, b, "opt slot `{}` must match bitwise", spec.name);
+        }
+        assert!(l_par.iter().all(|l| l.is_finite()));
+    }
+
+    /// With one DP group the hierarchical reduction collapses to the flat
+    /// one, so a 1xE mesh must also be bitwise-identical to plain DP
+    /// gradient accumulation over E shards — tying the expert-parallel
+    /// arithmetic to the established data-parallel guarantee.
+    #[test]
+    fn mesh_1x2_matches_dp_accumulation_bitwise() {
+        let (entry, model, batches) = setup();
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let (p_mesh, o_mesh, l_mesh) = run_mesh(&entry, &model, &batches, &mesh);
+        let dp = DpConfig { replicas: 2, workers: 1 };
+        let mut st = fresh_state(&entry);
+        let mut losses = Vec::new();
+        for (i, b) in batches.iter().enumerate() {
+            let out = dp_train_step(
+                &model,
+                std::mem::take(&mut st.params),
+                std::mem::take(&mut st.opt_state),
+                b,
+                1e-3,
+                0.01,
+                (i + 1) as u64,
+                &dp,
+            )
+            .unwrap();
+            st.params = out.params;
+            st.opt_state = out.opt_state;
+            losses.push(out.metrics["loss"]);
+        }
+        assert_eq!(l_mesh, losses, "per-step loss must match exactly");
+        for ((a, b), spec) in p_mesh.iter().zip(&st.params).zip(&entry.params) {
+            assert_eq!(a, b, "param `{}` must match bitwise", spec.name);
+        }
+        for ((a, b), spec) in o_mesh.iter().zip(&st.opt_state).zip(&entry.opt_state) {
+            assert_eq!(a, b, "opt slot `{}` must match bitwise", spec.name);
+        }
+    }
+
+    #[test]
+    fn mesh_config_validates_and_parses() {
+        let (entry, _, _) = setup();
+        assert_eq!(MeshConfig::parse("2x2").unwrap(), (2, 2));
+        assert_eq!(MeshConfig::parse("1x8").unwrap(), (1, 8));
+        assert!(MeshConfig::parse("2").is_err());
+        assert!(MeshConfig::parse("ax2").is_err());
+        let mesh = MeshConfig::replicated(&entry, 2, 2).unwrap();
+        assert_eq!((mesh.dp, mesh.ep, mesh.ranks()), (2, 2, 4));
+        assert!(mesh.parallel);
+        assert!(!MeshConfig::accumulated(&entry, 2, 2).unwrap().parallel);
+        // batch 8 does not shard over 3 ranks; E=8 caps the expert axis.
+        assert!(MeshConfig::replicated(&entry, 3, 1).is_err());
+        assert!(MeshConfig::replicated(&entry, 1, 16).is_err());
+    }
+
+    /// A rank failure mid-step must surface as an error, not a deadlock.
+    #[test]
+    fn mesh_step_fails_loudly_on_bad_batch() {
+        let (entry, model, batches) = setup();
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        // Truncate one batch tensor so shard 1 is malformed.
+        let mut bad = batches[0].clone();
+        bad.pop();
+        let mut st = fresh_state(&entry);
+        let res = mesh_train_step(
+            &model,
+            std::mem::take(&mut st.params),
+            std::mem::take(&mut st.opt_state),
+            &bad,
+            1e-3,
+            0.0,
+            1,
+            &mesh,
+        );
+        assert!(res.is_err(), "malformed batch must error, not hang");
     }
 
     #[test]

@@ -14,7 +14,10 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::coordinator::{train, train_dp, DpConfig, Evaluator, Schedule, TrainConfig, TrainState};
+use crate::coordinator::{
+    train, train_dp, train_mesh, DpConfig, Evaluator, MeshConfig, Schedule, TrainConfig,
+    TrainState,
+};
 use crate::data::text::{HmmCorpus, HmmSpec, TextPipeline};
 use crate::data::vision::{VisionPipeline, VisionSpec};
 use crate::manifest::{Manifest, ModelEntry};
@@ -59,6 +62,15 @@ impl ExpParams {
             seed: 17,
         }
     }
+}
+
+/// How one branch's steps execute: single-worker, data-parallel, or on a
+/// DP×EP mesh. One enum so every mode shares `run_branch_inner`'s setup
+/// (pipeline, evaluator, schedule, weight decay) verbatim.
+enum BranchExec<'a> {
+    Single,
+    Dp(&'a DpConfig),
+    Mesh(&'a MeshConfig),
 }
 
 pub struct Ctx {
@@ -319,7 +331,7 @@ impl Ctx {
         steps: u64,
         series_name: &str,
     ) -> Result<Series> {
-        self.run_branch_inner(model, state, shard, steps, None, series_name)
+        self.run_branch_inner(model, state, shard, steps, BranchExec::Single, series_name)
     }
 
     /// [`Ctx::run_branch`], stepping each batch data-parallel under `dp`.
@@ -332,7 +344,22 @@ impl Ctx {
         dp: &DpConfig,
         series_name: &str,
     ) -> Result<Series> {
-        self.run_branch_inner(model, state, shard, steps, Some(dp), series_name)
+        self.run_branch_inner(model, state, shard, steps, BranchExec::Dp(dp), series_name)
+    }
+
+    /// [`Ctx::run_branch`] on a DP×EP mesh: token shards per rank, expert
+    /// weights sharded over each group's EP ranks (see
+    /// `coordinator::trainer::mesh_train_step`).
+    pub fn run_branch_mesh(
+        &self,
+        model: &LoadedModel,
+        state: &mut TrainState,
+        shard: u64,
+        steps: u64,
+        mesh: &MeshConfig,
+        series_name: &str,
+    ) -> Result<Series> {
+        self.run_branch_inner(model, state, shard, steps, BranchExec::Mesh(mesh), series_name)
     }
 
     fn run_branch_inner(
@@ -341,7 +368,7 @@ impl Ctx {
         state: &mut TrainState,
         shard: u64,
         steps: u64,
-        dp: Option<&DpConfig>,
+        exec: BranchExec<'_>,
         series_name: &str,
     ) -> Result<Series> {
         let entry = &model.entry;
@@ -350,9 +377,14 @@ impl Ctx {
         let mut cfg = self.train_cfg(steps);
         cfg.schedule = self.schedule(entry);
         cfg.weight_decay = self.weight_decay(entry);
-        match dp {
-            Some(dp) => train_dp(model, state, data.as_mut(), &evaluator, &cfg, dp, series_name),
-            None => train(model, state, data.as_mut(), &evaluator, &cfg, series_name),
+        match exec {
+            BranchExec::Single => train(model, state, data.as_mut(), &evaluator, &cfg, series_name),
+            BranchExec::Dp(dp) => {
+                train_dp(model, state, data.as_mut(), &evaluator, &cfg, dp, series_name)
+            }
+            BranchExec::Mesh(mesh) => {
+                train_mesh(model, state, data.as_mut(), &evaluator, &cfg, mesh, series_name)
+            }
         }
     }
 

@@ -5,6 +5,9 @@
 //!                                   surgery → continued MoE training)
 //!   list                          — experiments and models available
 //!   train      --model M          — (pre)train a model from scratch
+//!                                   (--replicas N data-parallel, --mesh DxE
+//!                                   expert-parallel over a DP×EP mesh)
+//!   bench-gate --baseline B --current C — CI bench regression gate
 //!   upcycle    --dense CK --model M — run checkpoint surgery, save sparse CK
 //!   eval       --model M --params CK — evaluate a checkpoint
 //!   fewshot    --model M --params CK — 10-shot linear probe (vision)
@@ -18,7 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use sparse_upcycle::checkpoint::Checkpoint;
 use sparse_upcycle::coordinator::fewshot::{fewshot_accuracy, FewShotConfig};
-use sparse_upcycle::coordinator::{train, DpConfig, TrainState};
+use sparse_upcycle::coordinator::{train, DpConfig, MeshConfig, TrainState};
 use sparse_upcycle::experiments::{registry, run_by_id, Ctx, ExpParams};
 use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::parallel::{place, MeshSpec};
@@ -199,7 +202,31 @@ fn run() -> Result<()> {
             let replicas = a.usize("replicas", 1)?;
             let ctx = Ctx::new(&artifacts, &out_dir, params_from_args(&a)?, a.bool("verbose"))?;
             let (model, mut state) = ctx.branch_scratch(model_name, ctx.p.seed)?;
-            let series = if replicas > 1 {
+            let series = if let Some(mesh_spec) = a.flags.get("mesh") {
+                if a.flags.contains_key("replicas") {
+                    bail!(
+                        "--mesh and --replicas conflict: the mesh's data axis IS the replica \
+                         count (use --mesh {}x<E> instead of --replicas {replicas})",
+                        replicas
+                    );
+                }
+                // DP×EP mesh: token shards per rank, expert weights sharded
+                // over each group's EP ranks, real all-to-all dispatch.
+                // Validated at setup (parallel::validate_mesh_exec).
+                let (dp_axis, ep_axis) = MeshConfig::parse(mesh_spec)?;
+                let mesh = if a.bool("serial-mesh") {
+                    MeshConfig::accumulated(&model.entry, dp_axis, ep_axis)?
+                } else {
+                    MeshConfig::replicated(&model.entry, dp_axis, ep_axis)?
+                };
+                println!(
+                    "mesh {dp_axis}x{ep_axis}: {} rank(s), experts round-robin over {ep_axis} \
+                     expert-parallel rank(s){}",
+                    mesh.ranks(),
+                    if mesh.parallel { "" } else { " (serial 1-worker reference)" }
+                );
+                ctx.run_branch_mesh(&model, &mut state, 0, steps, &mesh, model_name)?
+            } else if replicas > 1 {
                 // Validated at setup: bad replica counts fail here, not
                 // mid-run (see parallel::validate_replicas).
                 let dp = DpConfig::replicated(&model.entry, replicas)?;
@@ -281,6 +308,46 @@ fn run() -> Result<()> {
             };
             let acc = fewshot_accuracy(&model, &tensors, &cfg, a.u64("seed", 17)?)?;
             println!("{model_name}: {}-shot accuracy = {acc:.4}", cfg.shots);
+            Ok(())
+        }
+        "bench-gate" => {
+            let baseline_path = a.req("baseline")?.to_string();
+            let current_path = a.req("current")?.to_string();
+            let tol = a.f64("tolerance-pct", 25.0)?;
+            let read = |p: &str| -> Result<sparse_upcycle::util::json::Json> {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading bench report {p}"))?;
+                sparse_upcycle::util::json::Json::parse(&text)
+                    .with_context(|| format!("parsing bench report {p}"))
+            };
+            // The current report must always parse; it becomes the new
+            // baseline under --update-baseline.
+            let current = read(&current_path)?;
+            if a.bool("update-baseline") {
+                // Refresh must work across schema bumps and from a missing
+                // or corrupt baseline — compare only best-effort here.
+                match read(&baseline_path).and_then(|baseline| {
+                    sparse_upcycle::metrics::bench_gate::compare(&baseline, &current, tol)
+                }) {
+                    Ok(rep) => rep.print(),
+                    Err(e) => println!("old baseline not comparable ({e:#}); replacing it"),
+                }
+                std::fs::copy(&current_path, &baseline_path)
+                    .with_context(|| format!("writing {baseline_path}"))?;
+                println!("baseline refreshed from {current_path}");
+                return Ok(());
+            }
+            let baseline = read(&baseline_path)?;
+            let rep =
+                sparse_upcycle::metrics::bench_gate::compare(&baseline, &current, tol)?;
+            rep.print();
+            if rep.gating_failures() > 0 {
+                bail!(
+                    "{} bench metric(s) regressed beyond {tol}% tolerance (see report above); \
+                     if intentional, refresh with `make bench-baseline`",
+                    rep.gating_failures()
+                );
+            }
             Ok(())
         }
         "report" => {
@@ -366,12 +433,15 @@ USAGE:
   upcycle list
   upcycle experiment <id>|all [--pretrain-steps N] [--extra-steps N] [--seed S]
   upcycle train   --model <name> [--steps N] [--replicas N]   # data-parallel
+                  [--mesh DxE [--serial-mesh]]   # expert-parallel DP×EP mesh
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]
                   [--expert-noise σ] [--dense-opt <ck>] [--load-optimizer]
   upcycle eval    --model <name> --params <ck.supc>
   upcycle fewshot --model <vit-name> --params <ck.supc> [--shots K]
   upcycle mesh    --model <name> [--dp N] [--ep N] [--mp N]
   upcycle comms   --model <name> [--dp N] [--ep N] [--mp N] [--imbalance X]
+  upcycle bench-gate --baseline <json> --current <json> [--tolerance-pct N]
+                  [--update-baseline]  # fail on perf regression vs baseline
   upcycle report                      # aggregate results/*.json -> SUMMARY.md
   upcycle inspect --ck <file.supc> [--tensors]
 

@@ -195,6 +195,29 @@ impl ModelEntry {
         self.config.enc_moe.is_some() || self.config.dec_moe.is_some()
     }
 
+    /// MoE block tags in tower/layer order: `("enc/block_01", &MoeSpec)`
+    /// for every sparsified layer of both towers. The tag is the
+    /// parameter-name prefix (`<tag>/moe/{router,wi,wo}`) shared with the
+    /// native backend's block construction — the expert-parallel weight
+    /// scatter (`runtime::ep`) and the executor resolve the same blocks
+    /// through it.
+    pub fn moe_block_tags(&self) -> Vec<(String, &MoeSpec)> {
+        let towers = [
+            ("enc", self.config.enc_moe.as_ref(), self.config.num_layers),
+            ("dec", self.config.dec_moe.as_ref(), self.config.num_decoder_layers),
+        ];
+        let mut out = Vec::new();
+        for (tower, moe, layers) in towers {
+            let Some(m) = moe else { continue };
+            for i in 0..layers {
+                if m.moe_layers.contains(&i) {
+                    out.push((format!("{tower}/block_{i:02}"), m));
+                }
+            }
+        }
+        out
+    }
+
     /// Total parameters held by MoE experts (sparse capacity).
     pub fn expert_param_count(&self) -> usize {
         self.params
@@ -362,6 +385,27 @@ mod tests {
         sorted.dedup();
         assert_eq!(names, sorted, "param specs must be sorted and unique");
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn moe_block_tags_name_real_parameters() {
+        let m = Manifest::native();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let tags = sparse.moe_block_tags();
+        // Standard recipe: enc layers 1 and 3, dec layer 1.
+        let names: Vec<&str> = tags.iter().map(|(t, _)| t.as_str()).collect();
+        assert_eq!(names, vec!["enc/block_01", "enc/block_03", "dec/block_01"]);
+        for (tag, spec) in &tags {
+            assert_eq!(spec.num_experts, 8);
+            for suffix in ["router", "wi", "wo"] {
+                let pname = format!("{tag}/moe/{suffix}");
+                assert!(
+                    sparse.params.iter().any(|s| s.name == pname),
+                    "tag must resolve to parameter `{pname}`"
+                );
+            }
+        }
+        assert!(m.model("lm_tiny_dense").unwrap().moe_block_tags().is_empty());
     }
 
     #[test]

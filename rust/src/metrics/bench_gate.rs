@@ -1,0 +1,207 @@
+//! Bench regression gate: compare a fresh `BENCH_runtime.json` against the
+//! committed `BENCH_baseline.json` and fail on throughput or latency
+//! regressions beyond a tolerance.
+//!
+//! Driven by `upcycle bench-gate --baseline ... --current ...
+//! [--tolerance-pct N] [--update-baseline]`; CI runs it right after the
+//! `--quick` bench so a perf regression fails the pipeline instead of
+//! silently landing (see `docs/BENCHMARKS.md` for the refresh procedure).
+//!
+//! Gated metrics, per model present in the baseline:
+//! * `tokens_per_s` (`models[].train.items_per_s`) — must not drop more
+//!   than `tolerance_pct` below the baseline;
+//! * `train_p50_ns` (`models[].train.p50_ns`) — must not rise more than
+//!   `tolerance_pct` above it.
+//!
+//! A baseline with `"bootstrap": true` was not measured on the gating
+//! machine (e.g. committed from an offline authoring environment):
+//! comparisons are reported but regressions only warn, so the gate arms
+//! itself the first time a measured baseline is committed
+//! (`make bench-baseline` / `--update-baseline` writes one).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// One gated comparison.
+pub struct GateCheck {
+    pub model: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// `current / baseline` (tokens/s: higher is better; latency: lower).
+    pub ratio: f64,
+    pub ok: bool,
+}
+
+pub struct GateReport {
+    pub checks: Vec<GateCheck>,
+    pub tolerance_pct: f64,
+    /// Baseline is a bootstrap placeholder; regressions warn instead of
+    /// failing (see the module docs).
+    pub bootstrap: bool,
+}
+
+impl GateReport {
+    /// Checks outside tolerance, regardless of bootstrap status.
+    pub fn regressions(&self) -> usize {
+        self.checks.iter().filter(|c| !c.ok).count()
+    }
+
+    /// Regressions that should fail the pipeline (none while the baseline
+    /// is a bootstrap placeholder).
+    pub fn gating_failures(&self) -> usize {
+        if self.bootstrap {
+            0
+        } else {
+            self.regressions()
+        }
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench gate: {} checks, tolerance {:.0}%{}",
+            self.checks.len(),
+            self.tolerance_pct,
+            if self.bootstrap { " (bootstrap baseline: regressions warn only)" } else { "" }
+        );
+        for c in &self.checks {
+            println!(
+                "  {} {:<28} {:<14} base {:>14.1}  now {:>14.1}  ratio {:>6.3}",
+                if c.ok { "ok  " } else { "FAIL" },
+                c.model,
+                c.metric,
+                c.baseline,
+                c.current,
+                c.ratio
+            );
+        }
+    }
+}
+
+/// Compare two `BENCH_runtime.json` documents; see the module docs for the
+/// gated metrics. Fails (as an error, not a check) on schema mismatch.
+pub fn compare(baseline: &Json, current: &Json, tolerance_pct: f64) -> Result<GateReport> {
+    let bv = baseline.get("schema_version")?.as_f64()?;
+    let cv = current.get("schema_version")?.as_f64()?;
+    if bv != cv {
+        bail!(
+            "bench schema mismatch: baseline v{bv} vs current v{cv}; refresh the baseline \
+             (docs/BENCHMARKS.md)"
+        );
+    }
+    if !(0.0..1000.0).contains(&tolerance_pct) {
+        bail!("tolerance {tolerance_pct}% out of range");
+    }
+    let bootstrap =
+        baseline.opt("bootstrap").map(|b| b.as_bool().unwrap_or(false)).unwrap_or(false);
+    let tol = tolerance_pct / 100.0;
+    let mut checks = Vec::new();
+    let current_models = current.get("models")?.as_arr()?;
+    for bm in baseline.get("models")?.as_arr()? {
+        let name = bm.get("model")?.as_str()?.to_string();
+        let found = current_models
+            .iter()
+            .find(|m| m.opt("model").and_then(|v| v.as_str().ok()) == Some(name.as_str()));
+        let Some(cm) = found else {
+            // A benched model vanishing from the report is itself a
+            // regression (the bench was narrowed or the model dropped).
+            checks.push(GateCheck {
+                model: name,
+                metric: "present".to_string(),
+                baseline: 1.0,
+                current: 0.0,
+                ratio: 0.0,
+                ok: false,
+            });
+            continue;
+        };
+        let b_tok = bm.get("train")?.get("items_per_s")?.as_f64()?;
+        let c_tok = cm.get("train")?.get("items_per_s")?.as_f64()?;
+        checks.push(GateCheck {
+            model: name.clone(),
+            metric: "tokens_per_s".to_string(),
+            baseline: b_tok,
+            current: c_tok,
+            ratio: c_tok / b_tok.max(1e-12),
+            ok: c_tok >= b_tok * (1.0 - tol),
+        });
+        let b_p50 = bm.get("train")?.get("p50_ns")?.as_f64()?;
+        let c_p50 = cm.get("train")?.get("p50_ns")?.as_f64()?;
+        checks.push(GateCheck {
+            model: name,
+            metric: "train_p50_ns".to_string(),
+            baseline: b_p50,
+            current: c_p50,
+            ratio: c_p50 / b_p50.max(1e-12),
+            ok: c_p50 <= b_p50 * (1.0 + tol),
+        });
+    }
+    Ok(GateReport { checks, tolerance_pct, bootstrap })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(models: &[(&str, f64, f64)], extra: &str) -> Json {
+        let entries: Vec<String> = models
+            .iter()
+            .map(|(name, tok, p50)| {
+                format!(
+                    r#"{{"model": "{name}", "train": {{"items_per_s": {tok}, "p50_ns": {p50}}}}}"#
+                )
+            })
+            .collect();
+        let text = format!(
+            r#"{{"schema_version": 1, {extra}"models": [{}]}}"#,
+            entries.join(", ")
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn passes_within_tolerance_and_fails_beyond() {
+        let base = report(&[("m1", 1000.0, 5e6), ("m2", 2000.0, 2e6)], "");
+        // m1 slightly slower (within 25%), m2 well within.
+        let ok = report(&[("m1", 900.0, 5.5e6), ("m2", 2100.0, 1.9e6)], "");
+        let rep = compare(&base, &ok, 25.0).unwrap();
+        assert_eq!(rep.regressions(), 0);
+        assert_eq!(rep.gating_failures(), 0);
+        assert_eq!(rep.checks.len(), 4);
+        // m1 thoughput collapses and its p50 balloons: two failures.
+        let bad = report(&[("m1", 500.0, 9e6), ("m2", 2000.0, 2e6)], "");
+        let rep = compare(&base, &bad, 25.0).unwrap();
+        assert_eq!(rep.regressions(), 2);
+        assert_eq!(rep.gating_failures(), 2);
+        assert!(rep.checks.iter().any(|c| c.metric == "tokens_per_s" && !c.ok));
+        assert!(rep.checks.iter().any(|c| c.metric == "train_p50_ns" && !c.ok));
+    }
+
+    #[test]
+    fn missing_model_is_a_regression() {
+        let base = report(&[("m1", 1000.0, 5e6), ("m2", 2000.0, 2e6)], "");
+        let cur = report(&[("m1", 1000.0, 5e6)], "");
+        let rep = compare(&base, &cur, 25.0).unwrap();
+        assert_eq!(rep.regressions(), 1);
+        assert!(rep.checks.iter().any(|c| c.metric == "present" && !c.ok));
+    }
+
+    #[test]
+    fn bootstrap_baseline_warns_but_does_not_gate() {
+        let base = report(&[("m1", 1000.0, 5e6)], r#""bootstrap": true, "#);
+        let bad = report(&[("m1", 10.0, 9e9)], "");
+        let rep = compare(&base, &bad, 25.0).unwrap();
+        assert!(rep.bootstrap);
+        assert_eq!(rep.regressions(), 2, "regressions still reported");
+        assert_eq!(rep.gating_failures(), 0, "but nothing gates");
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let base = report(&[("m1", 1.0, 1.0)], "");
+        let cur = Json::parse(r#"{"schema_version": 2, "models": []}"#).unwrap();
+        assert!(compare(&base, &cur, 25.0).is_err());
+        assert!(compare(&base, &base, -1.0).is_err());
+    }
+}

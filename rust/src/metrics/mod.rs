@@ -1,6 +1,8 @@
 //! Metrics logging: in-memory series + CSV/JSON writers for the experiment
-//! harness (every figure in DESIGN.md §4 is regenerated from these files).
+//! harness (every figure in DESIGN.md §4 is regenerated from these files),
+//! plus the CI bench-regression gate ([`bench_gate`]).
 
+pub mod bench_gate;
 pub mod report_summary;
 
 use std::collections::BTreeMap;

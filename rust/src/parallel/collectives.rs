@@ -1,5 +1,5 @@
-//! Collectives: the in-process gradient reductions used by data-parallel
-//! training, plus the communication cost model (paper §A.4).
+//! Collectives: the in-process reductions and exchanges used by data- and
+//! expert-parallel training, plus the communication cost model (paper §A.4).
 //!
 //! **Functional collectives.** [`reduce_sum_ordered`] / [`allreduce_mean`]
 //! are the real reductions behind `coordinator::trainer::dp_train_step`:
@@ -10,7 +10,19 @@
 //! N-replica training bitwise-identical to single-replica gradient
 //! accumulation on the same effective batch (asserted by the trainer's
 //! tests); do not replace it with a tree or pairwise order without
-//! re-deriving that guarantee.
+//! re-deriving that guarantee. [`all_to_all`] is the functional form of the
+//! MoE dispatch/combine exchange: rank `dst` receives what every `src` sent
+//! it, **in ascending source order** — same discipline, applied to payload
+//! placement instead of addition.
+//!
+//! **Thread rendezvous.** [`EpGroup`] is the blocking counterpart of
+//! [`all_to_all`] for expert-parallel rank *threads*
+//! (`coordinator::trainer::mesh_train_step`): each rank deposits its send
+//! row, an abortable barrier synchronizes the group, and each rank collects
+//! its receive column in source order. Payload placement is a pure function
+//! of rank indices, so thread scheduling can never reorder data. A rank
+//! that fails mid-protocol aborts the group instead of leaving its peers
+//! blocked on the barrier forever.
 //!
 //! **Cost model.** The paper composes data / expert / model parallelism;
 //! the communication patterns behind them are all-to-all (MoE dispatch +
@@ -19,7 +31,11 @@
 //! abstract link (per-link bandwidth + latency), so the placement simulator
 //! can answer the §A.4 question the paper settles by construction on TPU
 //! pods: which parallelism axis saturates first as E, C and the mesh grow.
-//! Exercised by `cargo bench --bench routing_sim` and unit tests.
+//! Exercised by `cargo bench --bench routing_sim` and unit tests; the
+//! `runtime_step` bench compares [`Interconnect::shared_memory`]'s
+//! all-to-all prediction against the measured [`EpGroup`] exchange time.
+
+use std::sync::{Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -67,6 +83,197 @@ pub fn allreduce_mean(bufs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
     Ok(acc)
 }
 
+/// Functional all-to-all: `sends[src][dst]` is what rank `src` sends to
+/// rank `dst`; the result's `recv[dst][src]` is what `dst` received from
+/// `src`. Deterministic and rank-ordered by construction — the output is a
+/// pure transpose of the input matrix, so no execution order can reorder
+/// payloads. The send matrix must be square (`R` rows of `R` payloads).
+///
+/// ```
+/// use sparse_upcycle::parallel::collectives::all_to_all;
+/// let recv = all_to_all(vec![vec!["a0", "a1"], vec!["b0", "b1"]]).unwrap();
+/// assert_eq!(recv, vec![vec!["a0", "b0"], vec!["a1", "b1"]]);
+/// ```
+pub fn all_to_all<T>(sends: Vec<Vec<T>>) -> Result<Vec<Vec<T>>> {
+    let r = sends.len();
+    for (src, row) in sends.iter().enumerate() {
+        if row.len() != r {
+            bail!("all_to_all: rank {src} sends {} payloads for {r} ranks", row.len());
+        }
+    }
+    let mut recv: Vec<Vec<T>> = (0..r).map(|_| Vec::with_capacity(r)).collect();
+    // Ascending source order: each receive row is filled src = 0, 1, …
+    for row in sends.into_iter() {
+        for (dst, payload) in row.into_iter().enumerate() {
+            recv[dst].push(payload);
+        }
+    }
+    Ok(recv)
+}
+
+/// The message every rank blocked in an aborted [`EpGroup`] collective
+/// errors with. The mesh trainer matches on it to distinguish peer-abort
+/// echoes from a failing rank's root-cause error — keep them in sync
+/// through this constant.
+pub const EP_ABORTED_MSG: &str = "expert-parallel collective aborted by a failed rank";
+
+/// A reusable barrier whose waiters can be released with an error instead
+/// of blocking forever when a participant dies mid-protocol.
+struct AbortableBarrier {
+    ranks: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+impl AbortableBarrier {
+    fn new(ranks: usize) -> AbortableBarrier {
+        AbortableBarrier {
+            ranks,
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, aborted: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) -> Result<()> {
+        let mut g = self.state.lock().expect("barrier state");
+        if g.aborted {
+            bail!("{EP_ABORTED_MSG}");
+        }
+        g.arrived += 1;
+        if g.arrived == self.ranks {
+            g.arrived = 0;
+            g.generation = g.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = g.generation;
+        while g.generation == gen && !g.aborted {
+            g = self.cv.wait(g).expect("barrier wait");
+        }
+        if g.aborted {
+            bail!("{EP_ABORTED_MSG}");
+        }
+        Ok(())
+    }
+
+    fn abort(&self) {
+        let mut g = self.state.lock().expect("barrier state");
+        g.aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Blocking all-to-all rendezvous for `R` expert-parallel rank threads —
+/// the threaded counterpart of [`all_to_all`].
+///
+/// Every rank calls [`EpGroup::exchange`] with the same `tag` and its send
+/// row (`send[dst]` = payload for rank `dst`); the call blocks until the
+/// whole group arrives and returns the rank's receive column (`recv[src]` =
+/// payload from rank `src`, ascending source order). Two barrier phases
+/// bound each exchange: deposits all land before any collect, and all
+/// collects finish before any rank can start the next exchange, so slots
+/// are never clobbered across rounds.
+///
+/// Determinism: payload placement depends only on `(src, dst)` indices —
+/// thread scheduling affects *when* a payload moves, never *where*. Tags
+/// are verified across the group, so two ranks disagreeing on the protocol
+/// position (a routing divergence bug) fail loudly instead of silently
+/// swapping tensors. Any rank erroring mid-step should call
+/// [`EpGroup::abort`] so blocked peers return an error instead of hanging.
+pub struct EpGroup<T> {
+    ranks: usize,
+    state: Mutex<EpGroupState<T>>,
+    barrier: AbortableBarrier,
+}
+
+struct EpGroupState<T> {
+    /// `slots[src * ranks + dst]`: payload in flight from `src` to `dst`.
+    slots: Vec<Option<T>>,
+    /// Tag each rank passed to the current exchange (verified to agree).
+    tags: Vec<String>,
+}
+
+impl<T: Send> EpGroup<T> {
+    pub fn new(ranks: usize) -> EpGroup<T> {
+        let ranks = ranks.max(1);
+        EpGroup {
+            ranks,
+            state: Mutex::new(EpGroupState {
+                slots: (0..ranks * ranks).map(|_| None).collect(),
+                tags: vec![String::new(); ranks],
+            }),
+            barrier: AbortableBarrier::new(ranks),
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Release every rank blocked in [`EpGroup::exchange`] with an error.
+    pub fn abort(&self) {
+        self.barrier.abort();
+    }
+
+    /// One tagged all-to-all round; see the type docs for the contract.
+    pub fn exchange(&self, rank: usize, tag: &str, send: Vec<T>) -> Result<Vec<T>> {
+        if rank >= self.ranks {
+            // Abort like every other early-error path: a misaddressed rank
+            // must not leave peers blocked in the barrier forever.
+            self.abort();
+            bail!("exchange `{tag}`: rank {rank} out of range for {} ranks", self.ranks);
+        }
+        if send.len() != self.ranks {
+            self.abort();
+            bail!(
+                "exchange `{tag}`: rank {rank} sends {} payloads for {} ranks",
+                send.len(),
+                self.ranks
+            );
+        }
+        {
+            let mut st = self.state.lock().expect("ep group state");
+            for (dst, payload) in send.into_iter().enumerate() {
+                if st.slots[rank * self.ranks + dst].is_some() {
+                    drop(st);
+                    self.abort();
+                    bail!("exchange `{tag}`: rank {rank} deposited into a busy slot");
+                }
+                st.slots[rank * self.ranks + dst] = Some(payload);
+            }
+            st.tags[rank] = tag.to_string();
+        }
+        self.barrier.wait()?; // all deposits visible
+        let (recv, tags_agree) = {
+            let mut st = self.state.lock().expect("ep group state");
+            let mut recv = Vec::with_capacity(self.ranks);
+            for src in 0..self.ranks {
+                match st.slots[src * self.ranks + rank].take() {
+                    Some(p) => recv.push(p),
+                    None => {
+                        drop(st);
+                        self.abort();
+                        bail!("exchange `{tag}`: rank {rank} found no payload from {src}");
+                    }
+                }
+            }
+            (recv, st.tags.iter().all(|t| t == tag))
+        };
+        if !tags_agree {
+            self.abort();
+            bail!("exchange `{tag}`: ranks disagree on the collective tag (protocol divergence)");
+        }
+        self.barrier.wait()?; // all collects done; slots reusable
+        Ok(recv)
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct Interconnect {
     /// Per-link bandwidth, bytes/second.
@@ -81,6 +288,15 @@ impl Interconnect {
     /// TPUv3-ish ICI defaults: ~70 GB/s links, ~1 µs latency.
     pub fn tpu_like(devices: usize) -> Interconnect {
         Interconnect { link_bandwidth: 70e9, latency: 1e-6, devices }
+    }
+
+    /// In-process shared-memory "interconnect": rank threads exchanging
+    /// buffers through [`EpGroup`] on one host. ~8 GB/s effective memcpy
+    /// bandwidth per link and ~3 µs per rendezvous (mutex + condvar barrier
+    /// handoff). The `runtime_step` bench compares this model's all-to-all
+    /// prediction against the measured exchange time and records the error.
+    pub fn shared_memory(devices: usize) -> Interconnect {
+        Interconnect { link_bandwidth: 8e9, latency: 3e-6, devices }
     }
 
     /// Ring all-reduce of `bytes` per device: 2(n-1)/n · bytes over the
@@ -254,5 +470,88 @@ mod tests {
         let net = Interconnect { link_bandwidth: 1e9, latency: 0.0, devices: 4 };
         let t = net.allreduce_time(1_000_000_000);
         assert!((t - 1.5).abs() < 1e-9, "got {t}");
+    }
+
+    #[test]
+    fn all_to_all_is_a_transpose() {
+        let sends: Vec<Vec<(usize, usize)>> =
+            (0..3).map(|src| (0..3).map(|dst| (src, dst)).collect()).collect();
+        let recv = all_to_all(sends).unwrap();
+        for (dst, row) in recv.iter().enumerate() {
+            for (src, &(s, d)) in row.iter().enumerate() {
+                assert_eq!((s, d), (src, dst), "recv[{dst}][{src}] must come from src {src}");
+            }
+        }
+        // Non-square matrices are rejected.
+        assert!(all_to_all(vec![vec![1], vec![2, 3]]).is_err());
+        // Degenerate cases.
+        assert_eq!(all_to_all(Vec::<Vec<u8>>::new()).unwrap(), Vec::<Vec<u8>>::new());
+        assert_eq!(all_to_all(vec![vec![7u8]]).unwrap(), vec![vec![7u8]]);
+    }
+
+    #[test]
+    fn ep_group_exchanges_across_threads() {
+        let ranks = 3;
+        let group = EpGroup::<(usize, usize, u64)>::new(ranks);
+        let out: Vec<Vec<(usize, usize, u64)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..ranks)
+                .map(|r| {
+                    let group = &group;
+                    s.spawn(move || {
+                        // Two rounds, to exercise barrier/slot reuse.
+                        let mut last = Vec::new();
+                        for round in 0..2u64 {
+                            let send: Vec<(usize, usize, u64)> =
+                                (0..ranks).map(|dst| (r, dst, round)).collect();
+                            last = group.exchange(r, &format!("round{round}"), send).unwrap();
+                        }
+                        last
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (dst, recv) in out.iter().enumerate() {
+            for (src, &(s_, d_, round)) in recv.iter().enumerate() {
+                assert_eq!((s_, d_, round), (src, dst, 1), "payload routed wrong");
+            }
+        }
+    }
+
+    #[test]
+    fn ep_group_single_rank_is_self_exchange() {
+        let group = EpGroup::<Vec<f32>>::new(1);
+        let recv = group.exchange(0, "solo", vec![vec![1.0, 2.0]]).unwrap();
+        assert_eq!(recv, vec![vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn ep_group_abort_releases_waiters() {
+        let group = EpGroup::<u8>::new(2);
+        let res: Vec<Result<Vec<u8>>> = std::thread::scope(|s| {
+            let h0 = {
+                let group = &group;
+                s.spawn(move || group.exchange(0, "t", vec![0, 0]))
+            };
+            let h1 = {
+                let group = &group;
+                s.spawn(move || {
+                    // Rank 1 dies before exchanging; peers must not hang.
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    group.abort();
+                    Err(anyhow::anyhow!("rank 1 failed"))
+                })
+            };
+            vec![h0.join().unwrap(), h1.join().unwrap()]
+        });
+        assert!(res.iter().all(|r| r.is_err()), "abort must release blocked ranks with Err");
+    }
+
+    #[test]
+    fn ep_group_rejects_malformed_sends() {
+        let group = EpGroup::<u8>::new(2);
+        // Wrong payload count fails immediately (and aborts the group).
+        assert!(group.exchange(0, "bad", vec![1]).is_err());
+        assert!(group.exchange(5, "bad", vec![1, 2]).is_err());
     }
 }

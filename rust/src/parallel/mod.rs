@@ -1,23 +1,28 @@
 //! Expert/data/model-parallel placement: validation, the placement
-//! simulator (paper §A.4), and the functional collectives behind
-//! data-parallel training ([`collectives`]).
+//! simulator (paper §A.4), the prescriptive expert↔rank mapping behind
+//! real expert-parallel execution, and the collectives ([`collectives`]).
 //!
 //! The paper trains with three composed parallelism axes: data (batch
 //! shards), expert (experts partitioned across devices) and model (weight
-//! matrices sharded). Two of those are real in this repo: the native
-//! backend shards expert compute across threads, and the trainer's
+//! matrices sharded). The first two are real in this repo: the trainer's
 //! data-parallel mode (`coordinator::trainer::dp_train_step`) steps batch
-//! shards on worker replicas. The rest of this module *simulates* the
-//! distributed execution to account the quantities that drive the paper's
-//! cost discussion: per-device token load (balance), all-to-all dispatch
-//! volume, and per-device parameter memory. The `routing_sim` bench sweeps
-//! these against E / C / device count.
+//! shards on worker replicas, and its DP×EP mesh mode
+//! (`coordinator::trainer::mesh_train_step`) additionally shards the
+//! expert MLP weights across expert-parallel ranks that exchange token
+//! buffers through real all-to-all collectives. [`ExpertPlacement`] is the
+//! single source of truth for which rank owns which expert — the placement
+//! *simulator* ([`place`]) and the *executor* (`runtime::ep`) both read it,
+//! so the accounting and the execution can never disagree. The remaining
+//! axis (model parallel) and the interconnect cost accounting stay
+//! simulated: per-device token load (balance), all-to-all dispatch volume,
+//! and per-device parameter memory. The `routing_sim` bench sweeps these
+//! against E / C / device count.
 //!
-//! [`validate_replicas`] and [`validate_mesh`] are the front door: they
-//! check a requested replica count / mesh against the model entry and the
-//! host *at configuration time*, so a bad replica count fails with an
-//! actionable message when the run is set up instead of deep inside the
-//! trainer's step loop.
+//! [`validate_replicas`], [`validate_mesh`] and [`validate_mesh_exec`] are
+//! the front door: they check a requested replica count / mesh against the
+//! model entry and the host *at configuration time*, so a bad replica
+//! count fails with an actionable message when the run is set up instead
+//! of deep inside the trainer's step loop.
 
 pub mod collectives;
 
@@ -127,6 +132,85 @@ pub fn validate_mesh(entry: &ModelEntry, mesh: &MeshSpec) -> Result<()> {
     Ok(())
 }
 
+/// Validate a DP×EP mesh for *real* execution
+/// (`coordinator::trainer::mesh_train_step`): the batch must shard evenly
+/// into `dp·ep` token shards and a sparse model must have at least one
+/// expert per EP rank. Unlike [`validate_replicas`], the rank count is
+/// deliberately *not* bounded by the host's parallelism: EP ranks spend
+/// much of a step blocked on collectives, so moderate thread
+/// oversubscription is normal (a 2×2 mesh runs fine on a 2-core host).
+pub fn validate_mesh_exec(entry: &ModelEntry, dp: usize, ep: usize) -> Result<()> {
+    if dp == 0 || ep == 0 {
+        bail!("model `{}`: mesh axes must be >= 1 (got {dp}x{ep})", entry.name);
+    }
+    // Every sharded tower must satisfy the expert axis — bound by the
+    // *smallest* MoE block, not just the encoder's (an artifact manifest
+    // may give the towers different expert counts).
+    let num_experts = [entry.config.enc_moe.as_ref(), entry.config.dec_moe.as_ref()]
+        .into_iter()
+        .flatten()
+        .map(|m| m.num_experts)
+        .min()
+        .unwrap_or(0);
+    if ep > 1 && num_experts == 0 {
+        bail!(
+            "model `{}` is dense: no experts to shard across {ep} expert-parallel ranks; \
+             use --replicas for plain data parallelism",
+            entry.name
+        );
+    }
+    if num_experts > 0 && ep > num_experts {
+        bail!(
+            "model `{}`: {ep} expert-parallel ranks but only {num_experts} experts in its \
+             smallest MoE block; use an expert axis <= {num_experts}",
+            entry.name
+        );
+    }
+    let ranks = dp * ep;
+    let b = entry.config.batch_size;
+    if b == 0 {
+        bail!("model `{}`: batch_size is 0; nothing to shard over the mesh", entry.name);
+    }
+    if b % ranks != 0 {
+        bail!(
+            "model `{}`: batch_size {b} does not shard into {dp}x{ep} = {ranks} mesh token \
+             shards; valid rank counts: {:?}",
+            entry.name,
+            divisors(b)
+        );
+    }
+    Ok(())
+}
+
+/// The prescriptive expert↔rank mapping of a sharded MoE block: expert `x`
+/// lives on rank `x % ranks` (round-robin, the same static placement
+/// [`place`] accounts). Both the expert-parallel executor (`runtime::ep`,
+/// which slices weight shards and routes dispatch payloads by owner) and
+/// the placement simulator read this type, so changing the mapping in one
+/// place changes it everywhere.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpertPlacement {
+    pub num_experts: usize,
+    pub ranks: usize,
+}
+
+impl ExpertPlacement {
+    /// `ranks` is clamped to >= 1 (a zero expert axis means "no sharding").
+    pub fn new(num_experts: usize, ranks: usize) -> ExpertPlacement {
+        ExpertPlacement { num_experts, ranks: ranks.max(1) }
+    }
+
+    /// The rank that owns expert `x`.
+    pub fn owner(&self, expert: usize) -> usize {
+        expert % self.ranks
+    }
+
+    /// Experts owned by `rank`, ascending.
+    pub fn owned(&self, rank: usize) -> Vec<usize> {
+        (0..self.num_experts).filter(|x| x % self.ranks == rank).collect()
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct MeshSpec {
     pub data_parallel: usize,
@@ -168,14 +252,13 @@ pub fn place(entry: &ModelEntry, mesh: &MeshSpec) -> PlacementReport {
         .map(|m| m.num_experts)
         .unwrap_or(0);
     let ep = mesh.expert_parallel.max(1);
+    // Same mapping the expert-parallel executor uses (`ExpertPlacement`):
+    // the report is an account of the real placement, not a separate model.
+    let placement = ExpertPlacement::new(num_experts, ep);
     let experts_per_device = if num_experts == 0 {
         Vec::new()
     } else {
-        let mut per = vec![0usize; ep];
-        for e in 0..num_experts {
-            per[e % ep] += 1;
-        }
-        per
+        (0..ep).map(|r| placement.owned(r).len()).collect()
     };
     let expert_bytes = entry.expert_param_count() * 4;
     let dense_bytes = (entry.param_count - entry.expert_param_count()) * 4;
@@ -380,6 +463,59 @@ mod tests {
         // Zero axes normalize instead of erroring.
         let zeroes = MeshSpec { data_parallel: 0, expert_parallel: 0, model_parallel: 0 };
         validate_mesh(sparse, &zeroes).unwrap();
+    }
+
+    #[test]
+    fn expert_placement_partitions_experts() {
+        let p = ExpertPlacement::new(8, 4);
+        // Ownership is a partition: every expert owned exactly once.
+        let mut seen = vec![0usize; 8];
+        for r in 0..4 {
+            for x in p.owned(r) {
+                assert_eq!(p.owner(x), r);
+                seen[x] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each expert owned exactly once: {seen:?}");
+        // Uneven counts round-robin (7 experts on 4 ranks: 2/2/2/1).
+        let p = ExpertPlacement::new(7, 4);
+        let sizes: Vec<usize> = (0..4).map(|r| p.owned(r).len()).collect();
+        assert_eq!(sizes, vec![2, 2, 2, 1]);
+        // A zero rank axis normalizes to one owner.
+        assert_eq!(ExpertPlacement::new(3, 0).owned(0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn place_report_matches_expert_placement() {
+        let m = crate::manifest::Manifest::native();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let mesh = MeshSpec { data_parallel: 1, expert_parallel: 4, model_parallel: 1 };
+        let rep = place(sparse, &mesh);
+        let placement = ExpertPlacement::new(8, 4);
+        let expect: Vec<usize> = (0..4).map(|r| placement.owned(r).len()).collect();
+        assert_eq!(rep.experts_per_device, expect);
+    }
+
+    #[test]
+    fn mesh_exec_validation_is_actionable() {
+        let m = crate::manifest::Manifest::native();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let dense = m.model("lm_tiny_dense").unwrap();
+        // batch 8, E=8: 2x2 / 1x2 / 2x4 / 1x8 all shard cleanly.
+        for (dp, ep) in [(1usize, 1usize), (1, 2), (2, 2), (2, 4), (1, 8)] {
+            validate_mesh_exec(sparse, dp, ep).unwrap();
+        }
+        // Zero axes and indivisible rank counts fail with named errors.
+        assert!(validate_mesh_exec(sparse, 0, 2).is_err());
+        let err = validate_mesh_exec(sparse, 3, 1).unwrap_err().to_string();
+        assert!(err.contains("batch_size 8") && err.contains("3x1"), "{err}");
+        // More EP ranks than experts.
+        let err = validate_mesh_exec(sparse, 1, 16).unwrap_err().to_string();
+        assert!(err.contains("8 experts"), "{err}");
+        // A dense model has nothing to shard on the expert axis.
+        let err = validate_mesh_exec(dense, 1, 2).unwrap_err().to_string();
+        assert!(err.contains("dense"), "{err}");
+        validate_mesh_exec(dense, 2, 1).unwrap();
     }
 
     #[test]

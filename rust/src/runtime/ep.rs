@@ -1,0 +1,447 @@
+//! Expert-parallel execution: weight shards, dispatch packing, and the
+//! rank exchange that ships token buffers between EP workers.
+//!
+//! One expert-parallel rank is a thread stepping its own token shard
+//! through the full model (`coordinator::trainer::mesh_train_step`); at
+//! every MoE block its [`EpRankExchange`] takes over the expert-MLP leg:
+//!
+//! 1. **Dispatch** — the rank's per-expert input buffers are packed by
+//!    owner ([`pack_dispatch`], round-robin `parallel::ExpertPlacement`)
+//!    and exchanged through `parallel::collectives::EpGroup`, so every
+//!    rank receives the token rows routed to the experts *it* owns.
+//! 2. **Shard compute** — the owner runs
+//!    `runtime::native::expert_mlp_forward` on **its weight shard only**
+//!    (sliced out of the replicated params at step start; unowned expert
+//!    weights are never touched), one call per `(expert, source rank)`
+//!    buffer. The gathered inputs and pre-ReLU activations stay cached at
+//!    the owner for the backward pass.
+//! 3. **Combine return** — outputs travel back through a second all-to-all
+//!    and are reassembled into per-expert buffers ([`unpack_combine`]) for
+//!    the rank's local gate-weighted combine.
+//!
+//! Backward mirrors the same two exchanges with gated output grads going
+//! out and input grads coming back; expert *weight* grads accumulate at
+//! the owner, per source rank **in ascending source order** — the
+//! `reduce_sum_ordered` discipline, which keeps every number
+//! bitwise-identical to the serial 1-worker execution of the same mesh
+//! (each `(expert, source)` buffer sees exactly the GEMM the source shard
+//! would have run locally; forward is row-independent, and the ordered
+//! partial sums match the ordered per-shard reduction).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::gemm::GemmKernels;
+use crate::manifest::{ModelEntry, MoeSpec};
+use crate::parallel::collectives::EpGroup;
+use crate::parallel::ExpertPlacement;
+use crate::tensor::Tensor;
+use crate::util::bench::phase;
+
+use super::native::{accumulate, expert_mlp_backward, expert_mlp_forward};
+use super::ExpertExchange;
+
+/// One expert's token buffer crossing the EP interconnect: `rows` rows of
+/// a fixed width (d_model), row-major, in assignment order.
+#[derive(Debug, Clone)]
+pub struct ExpertBuf {
+    pub expert: usize,
+    pub rows: usize,
+    pub data: Vec<f32>,
+}
+
+/// What one rank sends to (or receives from) one peer in a single
+/// all-to-all round: the buffers of every expert the peer owns (dispatch)
+/// or every expert this rank owns (return), ascending expert order.
+pub type EpPayload = Vec<ExpertBuf>;
+
+/// Pack per-expert buffers into per-destination payloads: rank `dst`
+/// receives, in ascending expert order, the buffers of the experts it owns
+/// under `placement`. Every buffer is routed exactly once (the ownership
+/// map is a partition), which is what makes dispatch → combine a lossless
+/// permutation of the token rows — asserted by `tests/ep_props.rs`.
+pub fn pack_dispatch(
+    bufs: Vec<Vec<f32>>,
+    placement: &ExpertPlacement,
+    width: usize,
+) -> Vec<EpPayload> {
+    let mut send: Vec<EpPayload> = (0..placement.ranks).map(|_| Vec::new()).collect();
+    for (expert, data) in bufs.into_iter().enumerate() {
+        let rows = if width == 0 { 0 } else { data.len() / width };
+        send[placement.owner(expert)].push(ExpertBuf { expert, rows, data });
+    }
+    send
+}
+
+/// Inverse of [`pack_dispatch`] on the return path: reassemble per-expert
+/// buffers from the per-owner payloads. Every expert must come back
+/// exactly once.
+pub fn unpack_combine(payloads: Vec<EpPayload>, num_experts: usize) -> Result<Vec<Vec<f32>>> {
+    let mut out: Vec<Option<Vec<f32>>> = (0..num_experts).map(|_| None).collect();
+    for payload in payloads {
+        for buf in payload {
+            if buf.expert >= num_experts {
+                bail!("combine return names expert {} of {num_experts}", buf.expert);
+            }
+            if out[buf.expert].replace(buf.data).is_some() {
+                bail!("expert {} returned by more than one rank", buf.expert);
+            }
+        }
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(x, o)| o.with_context(|| format!("expert {x} missing from combine return")))
+        .collect()
+}
+
+/// This rank's weight shard of one MoE block: `(expert, wi [d·ff],
+/// wo [ff·d])` for every owned expert, ascending.
+struct BlockShard {
+    num_experts: usize,
+    experts: Vec<(usize, Vec<f32>, Vec<f32>)>,
+}
+
+/// Per-block forward cache: for each owned expert (shard order), for each
+/// source rank (ascending), the gathered inputs and pre-ReLU hidden.
+type FwdCache = Vec<Vec<(Vec<f32>, Vec<f32>)>>;
+
+/// The [`ExpertExchange`] of one expert-parallel rank; see the module docs
+/// for the protocol and the determinism contract.
+pub struct EpRankExchange {
+    rank: usize,
+    group: Arc<EpGroup<EpPayload>>,
+    d: usize,
+    ff: usize,
+    gemm: Option<GemmKernels>,
+    shards: BTreeMap<String, BlockShard>,
+    cache: BTreeMap<String, FwdCache>,
+}
+
+impl EpRankExchange {
+    /// Scatter: slice this rank's expert weight shard out of the replicated
+    /// `params` for every MoE block of `entry`
+    /// (`ModelEntry::moe_block_tags` ↔ the native backend's block tags).
+    /// The exchange holds *owned copies* of only the owned experts'
+    /// weights; everything else it ever sees arrives over the group's
+    /// collectives.
+    pub fn new(
+        entry: &ModelEntry,
+        params: &[Tensor],
+        rank: usize,
+        group: Arc<EpGroup<EpPayload>>,
+    ) -> Result<EpRankExchange> {
+        let ranks = group.ranks();
+        if rank >= ranks {
+            bail!("EP rank {rank} out of range for a {ranks}-rank group");
+        }
+        let d = entry.config.d_model;
+        let ff = entry.config.d_ff;
+        let mut shards = BTreeMap::new();
+        for (tag, spec) in entry.moe_block_tags() {
+            let e_cnt = spec.num_experts;
+            let wi_name = format!("{tag}/moe/wi");
+            let wo_name = format!("{tag}/moe/wo");
+            let pidx = |name: &str| {
+                entry
+                    .params
+                    .iter()
+                    .position(|s| s.name == name)
+                    .with_context(|| format!("parameter `{name}` missing from manifest"))
+            };
+            let wi = params[pidx(&wi_name)?].f32s()?;
+            let wo = params[pidx(&wo_name)?].f32s()?;
+            if wi.len() != e_cnt * d * ff || wo.len() != e_cnt * ff * d {
+                bail!("MoE block `{tag}` weights do not match [E={e_cnt}, d={d}, ff={ff}]");
+            }
+            let placement = ExpertPlacement::new(e_cnt, ranks);
+            let mut experts = Vec::new();
+            for x in placement.owned(rank) {
+                let wi_e = wi[x * d * ff..(x + 1) * d * ff].to_vec();
+                let wo_e = wo[x * ff * d..(x + 1) * ff * d].to_vec();
+                experts.push((x, wi_e, wo_e));
+            }
+            shards.insert(tag, BlockShard { num_experts: e_cnt, experts });
+        }
+        Ok(EpRankExchange { rank, group, d, ff, gemm: None, shards, cache: BTreeMap::new() })
+    }
+
+    fn bound_gemm(&self) -> Result<GemmKernels> {
+        self.gemm.context("exchange not bound to a kernel family (bind() not called)")
+    }
+}
+
+impl ExpertExchange for EpRankExchange {
+    fn bind(&mut self, gemm: GemmKernels) -> Result<()> {
+        self.gemm = Some(gemm);
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        xg: Vec<Vec<f32>>,
+        want_cache: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let gemm = self.bound_gemm()?;
+        let (d, ff) = (self.d, self.ff);
+        let e_cnt = spec.num_experts;
+        if xg.len() != e_cnt {
+            bail!("forward `{tag}`: {} expert buffers for {e_cnt} experts", xg.len());
+        }
+        let ranks = self.group.ranks();
+        let placement = ExpertPlacement::new(e_cnt, ranks);
+
+        // Dispatch all-to-all: every expert's rows go to its owner.
+        let send = pack_dispatch(xg, &placement, d);
+        let recv = {
+            let _ph = phase("ep_alltoall");
+            self.group.exchange(self.rank, &format!("{tag}/fwd"), send)?
+        };
+
+        let shard =
+            self.shards.get(tag).with_context(|| format!("no expert shard for `{tag}`"))?;
+        if shard.num_experts != e_cnt {
+            bail!("shard for `{tag}` has {} experts, spec says {e_cnt}", shard.num_experts);
+        }
+        let n_owned = shard.experts.len();
+        let mut cache: FwdCache = (0..n_owned).map(|_| Vec::with_capacity(ranks)).collect();
+        let mut ret: Vec<EpPayload> = (0..ranks).map(|_| Vec::with_capacity(n_owned)).collect();
+        {
+            let _ph = phase("ep_expert_mlp");
+            for (src, payload) in recv.into_iter().enumerate() {
+                if payload.len() != n_owned {
+                    bail!(
+                        "forward `{tag}`: rank {src} sent {} buffers, own {n_owned} experts",
+                        payload.len()
+                    );
+                }
+                for (oi, buf) in payload.into_iter().enumerate() {
+                    let (x, wi_e, wo_e) = &shard.experts[oi];
+                    if buf.expert != *x || buf.data.len() != buf.rows * d {
+                        bail!(
+                            "forward `{tag}`: malformed buffer from rank {src} (expert {}, {} \
+                             values, {} rows)",
+                            buf.expert,
+                            buf.data.len(),
+                            buf.rows
+                        );
+                    }
+                    let (u, y) = expert_mlp_forward(gemm, wi_e, wo_e, &buf.data, d, ff);
+                    ret[src].push(ExpertBuf { expert: *x, rows: buf.rows, data: y });
+                    if want_cache {
+                        cache[oi].push((buf.data, u));
+                    }
+                }
+            }
+        }
+        if want_cache {
+            self.cache.insert(tag.to_string(), cache);
+        }
+
+        // Combine all-to-all: outputs travel back to the token sources.
+        let back = {
+            let _ph = phase("ep_alltoall");
+            self.group.exchange(self.rank, &format!("{tag}/fwd_ret"), ret)?
+        };
+        unpack_combine(back, e_cnt)
+    }
+
+    fn backward(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        dye: Vec<Vec<f32>>,
+        dwi: &mut [f32],
+        dwo: &mut [f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let gemm = self.bound_gemm()?;
+        let (d, ff) = (self.d, self.ff);
+        let e_cnt = spec.num_experts;
+        if dye.len() != e_cnt {
+            bail!("backward `{tag}`: {} expert grad buffers for {e_cnt} experts", dye.len());
+        }
+        if dwi.len() != e_cnt * d * ff || dwo.len() != e_cnt * ff * d {
+            bail!("backward `{tag}`: weight grad buffers do not match [E={e_cnt}, d={d}, ff={ff}]");
+        }
+        let ranks = self.group.ranks();
+        let placement = ExpertPlacement::new(e_cnt, ranks);
+
+        // Ship the gated output grads to the expert owners.
+        let send = pack_dispatch(dye, &placement, d);
+        let recv = {
+            let _ph = phase("ep_alltoall");
+            self.group.exchange(self.rank, &format!("{tag}/bwd"), send)?
+        };
+
+        let cache = self
+            .cache
+            .remove(tag)
+            .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
+        let shard =
+            self.shards.get(tag).with_context(|| format!("no expert shard for `{tag}`"))?;
+        let n_owned = shard.experts.len();
+        if cache.len() != n_owned {
+            bail!("backward `{tag}`: cache has {} experts, shard owns {n_owned}", cache.len());
+        }
+        for (src, payload) in recv.iter().enumerate() {
+            if payload.len() != n_owned {
+                bail!(
+                    "backward `{tag}`: rank {src} sent {} buffers, own {n_owned} experts",
+                    payload.len()
+                );
+            }
+        }
+        let mut ret: Vec<EpPayload> = (0..ranks).map(|_| Vec::with_capacity(n_owned)).collect();
+        {
+            let _ph = phase("ep_expert_mlp");
+            for (oi, (x, wi_e, wo_e)) in shard.experts.iter().enumerate() {
+                if cache[oi].len() != ranks {
+                    bail!(
+                        "backward `{tag}`: expert {x} cached {} sources, want {ranks}",
+                        cache[oi].len()
+                    );
+                }
+                let dwi_slice = &mut dwi[x * d * ff..(x + 1) * d * ff];
+                let dwo_slice = &mut dwo[x * ff * d..(x + 1) * ff * d];
+                // Ascending source order — the reduce_sum_ordered discipline
+                // that keeps the group-summed weight grads bitwise-identical
+                // to the serial per-shard reduction.
+                for (src, payload) in recv.iter().enumerate() {
+                    let buf = &payload[oi];
+                    let (xg, u) = &cache[oi][src];
+                    if buf.expert != *x
+                        || buf.data.len() != buf.rows * d
+                        || xg.len() != buf.data.len()
+                    {
+                        bail!(
+                            "backward `{tag}`: malformed buffer from rank {src} (expert {}, {} \
+                             values, {} rows)",
+                            buf.expert,
+                            buf.data.len(),
+                            buf.rows
+                        );
+                    }
+                    let (dwi_p, dwo_p, dxg) =
+                        expert_mlp_backward(gemm, wi_e, wo_e, xg, u, &buf.data, d, ff);
+                    accumulate(dwi_slice, &dwi_p);
+                    accumulate(dwo_slice, &dwo_p);
+                    ret[src].push(ExpertBuf { expert: *x, rows: buf.rows, data: dxg });
+                }
+            }
+        }
+        // Rebuild per-source payloads in ascending expert order: the loop
+        // above pushed per owned expert outer, source inner, so each
+        // ret[src] is already ascending in `oi` — the order the sources'
+        // unpack expects.
+        let back = {
+            let _ph = phase("ep_alltoall");
+            self.group.exchange(self.rank, &format!("{tag}/bwd_ret"), ret)?
+        };
+        unpack_combine(back, e_cnt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::runtime::{Backend, Runtime};
+
+    /// A 1-rank EP group is a degenerate mesh: every exchange is a
+    /// self-exchange and the rank owns every expert. The gradients must be
+    /// bitwise-identical to the plain local path — this pins the whole
+    /// dispatch → shard-compute → combine machinery to the fused reference
+    /// without needing threads.
+    #[test]
+    fn single_rank_ep_matches_local_grads_bitwise() {
+        let manifest = Manifest::native();
+        let runtime = Runtime::new().unwrap();
+        for name in ["lm_tiny_moe_e8_c2", "lm_tiny_moe_e8_c2_top2", "vit_tiny_moe_e8_c2"] {
+            let entry = manifest.model(name).unwrap().clone();
+            let model = runtime.load_model(&manifest, name, &["train", "eval"]).unwrap();
+            let params = crate::runtime::tensors_from_checkpoint(
+                &crate::init::init_params(&entry, 11).unwrap(),
+                &entry.params,
+            )
+            .unwrap();
+            let batch: Vec<Tensor> = if entry.family == "lm" {
+                crate::data::text::TextPipeline::new(
+                    crate::data::text::HmmCorpus::new(
+                        crate::data::text::HmmSpec {
+                            vocab_size: entry.config.vocab_size,
+                            ..Default::default()
+                        },
+                        1,
+                    ),
+                    entry.config.batch_size,
+                    entry.config.enc_len,
+                    entry.config.dec_len,
+                    1,
+                    0,
+                )
+                .next_batch()
+            } else {
+                crate::data::vision::VisionPipeline::new(
+                    crate::data::vision::VisionSpec::default(),
+                    entry.config.batch_size,
+                    1,
+                    0,
+                )
+                .next_batch()
+                .0
+            };
+            let (m_local, g_local) = model.grads(&params, &batch).unwrap();
+            let group = Arc::new(EpGroup::new(1));
+            let mut exch = EpRankExchange::new(&entry, &params, 0, group).unwrap();
+            let (m_ep, g_ep) = model.grads_ep(&params, &batch, &mut exch).unwrap();
+            assert_eq!(m_local, m_ep, "{name}: metrics must match bitwise");
+            for ((a, b), spec) in g_local.iter().zip(&g_ep).zip(&entry.params) {
+                assert_eq!(a, b, "{name}: grad `{}` must match bitwise", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_dispatch_partitions_and_unpack_roundtrips() {
+        let placement = ExpertPlacement::new(5, 2);
+        let bufs: Vec<Vec<f32>> = (0..5).map(|x| vec![x as f32; 2 * (x + 1)]).collect();
+        let send = pack_dispatch(bufs.clone(), &placement, 2);
+        assert_eq!(send.len(), 2);
+        // Rank 0 owns 0, 2, 4; rank 1 owns 1, 3 — ascending within payload.
+        assert_eq!(send[0].iter().map(|b| b.expert).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(send[1].iter().map(|b| b.expert).collect::<Vec<_>>(), vec![1, 3]);
+        for payload in &send {
+            for b in payload {
+                assert_eq!(b.rows * 2, b.data.len());
+            }
+        }
+        let back = unpack_combine(send, 5).unwrap();
+        assert_eq!(back, bufs, "pack → unpack must be the identity");
+        // Duplicate and missing experts are rejected.
+        let dup = vec![
+            vec![ExpertBuf { expert: 0, rows: 1, data: vec![1.0] }],
+            vec![ExpertBuf { expert: 0, rows: 1, data: vec![2.0] }],
+        ];
+        assert!(unpack_combine(dup, 1).is_err());
+        assert!(unpack_combine(vec![Vec::new()], 1).is_err());
+    }
+
+    #[test]
+    fn ep_exchange_requires_bind() {
+        let manifest = Manifest::native();
+        let entry = manifest.model("lm_tiny_moe_e8_c2").unwrap().clone();
+        let params = crate::runtime::tensors_from_checkpoint(
+            &crate::init::init_params(&entry, 1).unwrap(),
+            &entry.params,
+        )
+        .unwrap();
+        let group = Arc::new(EpGroup::new(1));
+        let mut exch = EpRankExchange::new(&entry, &params, 0, group).unwrap();
+        let spec = entry.config.enc_moe.clone().unwrap();
+        let xg: Vec<Vec<f32>> = (0..spec.num_experts).map(|_| Vec::new()).collect();
+        assert!(exch.forward("enc/block_01", &spec, xg, true).is_err());
+    }
+}

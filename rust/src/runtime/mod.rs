@@ -18,6 +18,7 @@
 //! manifest signature order and is threaded through the step loop by the
 //! trainer.
 
+pub mod ep;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -26,7 +27,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::manifest::{Manifest, ModelEntry, TensorSpec};
+use crate::linalg::gemm::GemmKernels;
+use crate::manifest::{Manifest, ModelEntry, MoeSpec, TensorSpec};
 use crate::tensor::Tensor;
 
 /// Scalar training metrics of one step/eval, keyed by manifest metric names.
@@ -37,6 +39,56 @@ pub struct StepOutput {
     pub params: Vec<Tensor>,
     pub opt_state: Vec<Tensor>,
     pub metrics: Metrics,
+}
+
+/// Where the grouped expert MLP of a MoE block executes.
+///
+/// The native backend splits every sparse block into router → dispatch →
+/// **expert MLP** → combine; this trait owns the expert-MLP leg. The
+/// default (`runtime::native`'s local exchange) runs all experts in
+/// process; the expert-parallel exchange (`runtime::ep::EpRankExchange`)
+/// routes each expert's token buffers to the rank that owns that expert's
+/// weight shard, computes there, and routes the outputs back — real
+/// all-to-all dispatch/combine over `parallel::collectives::EpGroup`.
+///
+/// Contract (what keeps N-rank execution bitwise-identical to local):
+/// * `forward` consumes per-expert gathered inputs `xg[x]` (`[a_x, d]`
+///   rows in assignment order) and returns per-expert raw outputs `y[x]`
+///   (`[a_x, d]`, same row order). Forward is row-independent, so *where*
+///   an expert's rows are computed can never change their values.
+/// * `backward` consumes per-expert output grads `dye[x]` (`[a_x, d]`) and
+///   returns per-expert input grads `dxg[x]`; expert weight grads are
+///   accumulated into the full-size `dwi` (`[E·d·ff]`) / `dwo`
+///   (`[E·ff·d]`) buffers. A sharded exchange writes only the slices of
+///   the experts the rank owns, accumulating per-source partials in
+///   ascending source order (the `reduce_sum_ordered` discipline).
+/// * `bind` hands the exchange the executing backend's GEMM kernel family
+///   before the step, so sharded expert compute runs on exactly the same
+///   kernels as local compute.
+///
+/// Exchanges are stateful across one forward/backward pair: `forward` with
+/// `want_cache` retains whatever `backward` needs (inputs and pre-ReLU
+/// activations stay *at the rank that computed them* — they never cross
+/// the interconnect twice).
+pub trait ExpertExchange {
+    fn bind(&mut self, gemm: GemmKernels) -> Result<()>;
+
+    fn forward(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        xg: Vec<Vec<f32>>,
+        want_cache: bool,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    fn backward(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        dye: Vec<Vec<f32>>,
+        dwi: &mut [f32],
+        dwo: &mut [f32],
+    ) -> Result<Vec<Vec<f32>>>;
 }
 
 /// One model's executable surface, produced by a [`Backend`].
@@ -73,6 +125,19 @@ pub trait Executable: Send + Sync {
     /// update) return an error. Used by gradient-check tests.
     fn grads(&self, _params: &[Tensor], _batch: &[Tensor]) -> Result<(Metrics, Vec<Tensor>)> {
         bail!("this backend does not expose raw gradients")
+    }
+
+    /// [`Executable::grads`] with the expert MLP legs of every MoE block
+    /// executed by `exchange` instead of locally — the expert-parallel
+    /// entry point (`coordinator::trainer::mesh_train_step`). Optional:
+    /// backends without a splittable step return an error.
+    fn grads_ep(
+        &self,
+        _params: &[Tensor],
+        _batch: &[Tensor],
+        _exchange: &mut dyn ExpertExchange,
+    ) -> Result<(Metrics, Vec<Tensor>)> {
+        bail!("this backend does not support expert-parallel execution")
     }
 }
 
@@ -147,6 +212,17 @@ impl LoadedModel {
     /// Raw loss gradients (native backend only); see [`Executable::grads`].
     pub fn grads(&self, params: &[Tensor], batch: &[Tensor]) -> Result<(Metrics, Vec<Tensor>)> {
         self.exec.grads(params, batch)
+    }
+
+    /// Raw loss gradients with the expert MLP executed through `exchange`
+    /// (expert parallelism); see [`Executable::grads_ep`].
+    pub fn grads_ep(
+        &self,
+        params: &[Tensor],
+        batch: &[Tensor],
+        exchange: &mut dyn ExpertExchange,
+    ) -> Result<(Metrics, Vec<Tensor>)> {
+        self.exec.grads_ep(params, batch, exchange)
     }
 }
 

@@ -27,6 +27,17 @@
 //! selection fan out across experts on scoped threads (rayon is unavailable
 //! offline; `crate::util::par_map` is the in-tree substitute).
 //!
+//! **Split sparse step.** Every MoE block decomposes into router →
+//! dispatch → expert MLP → combine, and the expert-MLP leg is pluggable
+//! through [`crate::runtime::ExpertExchange`]: the default
+//! [`LocalExchange`] runs all experts in process (exactly the fused PR 2
+//! arithmetic), while `runtime::ep::EpRankExchange` ships each expert's
+//! token buffers to the expert-parallel rank owning that expert's weight
+//! shard and ships the outputs back (real all-to-all dispatch/combine).
+//! [`expert_mlp_forward`] / [`expert_mlp_backward`] are the shared
+//! per-expert kernels both exchanges call, so the sharded path can never
+//! drift arithmetically from the local one.
+//!
 //! **Determinism.** Every result is a pure function of (params, batch,
 //! scalars): thread counts only move work between workers, never reorder a
 //! floating-point reduction (see the `gemm` and `par_map` contracts). This
@@ -55,7 +66,7 @@ use crate::tensor::Tensor;
 use crate::util::bench::phase;
 use crate::util::par_map;
 
-use super::{adam_update, Backend, Executable, LoadedModel, Metrics, StepOutput};
+use super::{adam_update, Backend, Executable, ExpertExchange, LoadedModel, Metrics, StepOutput};
 
 /// Coefficient on the auxiliary load-balance loss (token-choice routers).
 pub const AUX_COEF: f32 = 1e-2;
@@ -254,23 +265,197 @@ fn softmax_rows(x: &mut [f32], n: usize, m: usize) {
 }
 
 // ---------------------------------------------------------------------------
+// Per-expert MLP kernels (shared by the local and expert-parallel exchanges)
+// ---------------------------------------------------------------------------
+
+/// One expert's MLP forward on its gathered token rows `xg` (`[a, d]`,
+/// assignment order): returns `(u, y)` — pre-ReLU hidden `[a, ff]` and raw
+/// output `[a, d]`.
+///
+/// Row-independent by construction: every output row is a function of its
+/// input row and the weights only, so splitting `xg` into row blocks (as
+/// the expert-parallel dispatch does per source rank) and concatenating
+/// the results is bitwise-identical to one fused call.
+pub fn expert_mlp_forward(
+    gemm: GemmKernels,
+    wi_e: &[f32],
+    wo_e: &[f32],
+    xg: &[f32],
+    d: usize,
+    ff: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let a = if d == 0 { 0 } else { xg.len() / d };
+    let mut u = vec![0f32; a * ff];
+    gemm.mm_nn(xg, wi_e, a, d, ff, &mut u);
+    let mut r = u.clone();
+    relu_inplace(&mut r);
+    let mut y = vec![0f32; a * d];
+    gemm.mm_nn(&r, wo_e, a, ff, d, &mut y);
+    (u, y)
+}
+
+/// One expert's MLP backward: gathered inputs `xg` `[a, d]`, cached
+/// pre-ReLU hidden `u` `[a, ff]`, gated output grads `dye` `[a, d]` →
+/// `(dwi [d·ff], dwo [ff·d], dxg [a·d])`.
+///
+/// The weight grads reduce over the `a` rows of this call only — the
+/// expert-parallel owner invokes this once per source rank and accumulates
+/// the partials in ascending source order, which is bitwise-identical to
+/// the per-shard gradients the serial baseline computes and then
+/// `reduce_sum_ordered`s.
+pub fn expert_mlp_backward(
+    gemm: GemmKernels,
+    wi_e: &[f32],
+    wo_e: &[f32],
+    xg: &[f32],
+    u: &[f32],
+    dye: &[f32],
+    d: usize,
+    ff: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let a = if d == 0 { 0 } else { dye.len() / d };
+    let mut r = u.to_vec();
+    relu_inplace(&mut r);
+    let mut dwo = vec![0f32; ff * d];
+    gemm.mm_tn(&r, dye, a, ff, d, &mut dwo);
+    let mut dr = vec![0f32; a * ff];
+    gemm.mm_nt(dye, wo_e, a, d, ff, &mut dr);
+    for j in 0..a * ff {
+        if u[j] <= 0.0 {
+            dr[j] = 0.0;
+        }
+    }
+    let mut dwi = vec![0f32; d * ff];
+    gemm.mm_tn(xg, &dr, a, d, ff, &mut dwi);
+    let mut dxg = vec![0f32; a * d];
+    gemm.mm_nt(&dr, wi_e, a, ff, d, &mut dxg);
+    (dwi, dwo, dxg)
+}
+
+/// Two distinct mutable elements of a slice (for the wi/wo grad buffers).
+fn two_mut(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+    debug_assert_ne!(i, j);
+    if i < j {
+        let (a, b) = v.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = v.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+/// The default [`ExpertExchange`]: every expert computes in process, fanned
+/// out over scoped threads (`par_map`), weights read straight from the
+/// replicated `params`. This is exactly the fused PR 2 arithmetic — the
+/// expert-parallel exchange must stay bitwise-identical to it.
+struct LocalExchange<'a> {
+    exec: &'a NativeExec,
+    params: &'a [Tensor],
+    /// Per-block forward cache: for each expert, (gathered inputs, pre-ReLU
+    /// hidden).
+    cache: BTreeMap<String, Vec<(Vec<f32>, Vec<f32>)>>,
+}
+
+impl<'a> LocalExchange<'a> {
+    fn new(exec: &'a NativeExec, params: &'a [Tensor]) -> LocalExchange<'a> {
+        LocalExchange { exec, params, cache: BTreeMap::new() }
+    }
+}
+
+impl ExpertExchange for LocalExchange<'_> {
+    fn bind(&mut self, _gemm: GemmKernels) -> Result<()> {
+        Ok(()) // always runs on the owning executable's kernels
+    }
+
+    fn forward(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        xg: Vec<Vec<f32>>,
+        want_cache: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let d = self.exec.entry.config.d_model;
+        let ff = self.exec.entry.config.d_ff;
+        let wi = self.exec.pslice(self.params, &format!("{tag}/moe/wi"))?;
+        let wo = self.exec.pslice(self.params, &format!("{tag}/moe/wo"))?;
+        let gemm = self.exec.gemm;
+        let per_expert: Vec<(Vec<f32>, Vec<f32>)> = {
+            let _ph = phase("expert_mlp");
+            par_map(spec.num_experts, |x| {
+                let wi_e = &wi[x * d * ff..(x + 1) * d * ff];
+                let wo_e = &wo[x * ff * d..(x + 1) * ff * d];
+                expert_mlp_forward(gemm, wi_e, wo_e, &xg[x], d, ff)
+            })
+        };
+        let mut us = Vec::with_capacity(per_expert.len());
+        let mut ys = Vec::with_capacity(per_expert.len());
+        for (u, y) in per_expert {
+            us.push(u);
+            ys.push(y);
+        }
+        if want_cache {
+            self.cache.insert(tag.to_string(), xg.into_iter().zip(us).collect());
+        }
+        Ok(ys)
+    }
+
+    fn backward(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        dye: Vec<Vec<f32>>,
+        dwi: &mut [f32],
+        dwo: &mut [f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let d = self.exec.entry.config.d_model;
+        let ff = self.exec.entry.config.d_ff;
+        let cache = self
+            .cache
+            .remove(tag)
+            .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
+        let wi = self.exec.pslice(self.params, &format!("{tag}/moe/wi"))?;
+        let wo = self.exec.pslice(self.params, &format!("{tag}/moe/wo"))?;
+        let gemm = self.exec.gemm;
+        let per_expert: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = par_map(spec.num_experts, |x| {
+            let wi_e = &wi[x * d * ff..(x + 1) * d * ff];
+            let wo_e = &wo[x * ff * d..(x + 1) * ff * d];
+            let (xg, u) = &cache[x];
+            expert_mlp_backward(gemm, wi_e, wo_e, xg, u, &dye[x], d, ff)
+        });
+        let mut dxgs = Vec::with_capacity(per_expert.len());
+        for (x, (dwi_e, dwo_e, dxg)) in per_expert.into_iter().enumerate() {
+            accumulate(&mut dwi[x * d * ff..(x + 1) * d * ff], &dwi_e);
+            accumulate(&mut dwo[x * ff * d..(x + 1) * ff * d], &dwo_e);
+            dxgs.push(dxg);
+        }
+        Ok(dxgs)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Executable
 // ---------------------------------------------------------------------------
 
 /// One residual feed-forward block: dense MLP or MoE.
 struct Block {
+    /// Parameter-name prefix (`enc/block_01`); MoE blocks use it as the
+    /// exchange tag (`manifest::ModelEntry::moe_block_tags` lists the same
+    /// tags, which is how the expert-parallel weight scatter finds them).
+    tag: String,
     wi: String,
     wo: String,
     router: Option<String>,
     moe: Option<MoeSpec>,
 }
 
-/// Per-MoE-block forward cache for the backward pass.
+/// Per-MoE-block forward cache for the backward pass. The expert-MLP
+/// internals (gathered inputs, pre-ReLU hidden) live in the
+/// [`ExpertExchange`] that computed them, not here — under expert
+/// parallelism they stay at the owning rank.
 struct MoeCache {
     probs: Vec<f32>,                   // [n, E]
     expert_tok: Vec<Vec<usize>>,       // per expert: assigned tokens
     expert_gate: Vec<Vec<f32>>,        // per expert: combine weight per row
-    expert_u: Vec<Vec<f32>>,           // per expert: pre-ReLU hidden [a, ff]
     expert_y: Vec<Vec<f32>>,           // per expert: raw expert output [a, d]
     tok_sel: Vec<Vec<(usize, usize)>>, // per token: (expert, row within expert)
     f_frac: Vec<f32>,
@@ -314,6 +499,7 @@ fn make_blocks(entry: &ModelEntry, tower: &str) -> Vec<Block> {
                     wo: format!("{prefix}/moe/wo"),
                     router: Some(format!("{prefix}/moe/router")),
                     moe: moe.cloned(),
+                    tag: prefix,
                 }
             } else {
                 Block {
@@ -321,6 +507,7 @@ fn make_blocks(entry: &ModelEntry, tower: &str) -> Vec<Block> {
                     wo: format!("{prefix}/mlp/wo"),
                     router: None,
                     moe: None,
+                    tag: prefix,
                 }
             }
         })
@@ -392,7 +579,8 @@ impl NativeExec {
 
     /// Forward one tower in place. `want_cache` retains the per-block
     /// inputs and activations needed by `tower_backward`; eval/features
-    /// calls pass `false` and skip those copies entirely.
+    /// calls pass `false` and skip those copies entirely. `ex` executes the
+    /// expert-MLP leg of every MoE block (local or expert-parallel).
     fn tower_forward(
         &self,
         params: &[Tensor],
@@ -400,6 +588,7 @@ impl NativeExec {
         h: &mut [f32],
         n: usize,
         want_cache: bool,
+        ex: &mut dyn ExpertExchange,
     ) -> Result<TowerRun> {
         let d = self.entry.config.d_model;
         let ff = self.entry.config.d_ff;
@@ -431,7 +620,7 @@ impl NativeExec {
                     run.moe.push(None);
                 }
                 Some(spec) => {
-                    let (cache, y) = self.moe_forward(params, blk, spec, h, n)?;
+                    let (cache, y) = self.moe_forward(params, blk, spec, h, n, want_cache, ex)?;
                     for j in 0..n * d {
                         h[j] += y[j];
                     }
@@ -447,6 +636,11 @@ impl NativeExec {
         Ok(run)
     }
 
+    /// One MoE block forward, split into router → dispatch → expert MLP →
+    /// combine. Router and dispatch always run locally on this rank's
+    /// tokens; the expert-MLP leg goes through `ex`, which may ship the
+    /// per-expert buffers to other expert-parallel ranks and back.
+    #[allow(clippy::too_many_arguments)]
     fn moe_forward(
         &self,
         params: &[Tensor],
@@ -454,13 +648,12 @@ impl NativeExec {
         spec: &MoeSpec,
         x: &[f32],
         n: usize,
+        want_cache: bool,
+        ex: &mut dyn ExpertExchange,
     ) -> Result<(MoeCache, Vec<f32>)> {
         let d = self.entry.config.d_model;
-        let ff = self.entry.config.d_ff;
         let e_cnt = spec.num_experts;
         let wr = self.pslice(params, blk.router.as_ref().expect("moe block has router"))?;
-        let wi = self.pslice(params, &blk.wi)?; // [E, d, ff]
-        let wo = self.pslice(params, &blk.wo)?; // [E, ff, d]
 
         // Router: logits → softmax → routing decisions.
         let mut probs = vec![0f32; n * e_cnt];
@@ -471,7 +664,9 @@ impl NativeExec {
             route_tokens(spec, &probs, n)
         };
 
-        // Dispatch bookkeeping: token → (expert, row) view + combine weights.
+        // Dispatch: token → (expert, row) view, combine weights, and the
+        // per-expert input gather (rows in assignment order — the buffers
+        // an expert-parallel exchange puts on the wire).
         let _ph = phase("dispatch");
         let mut tok_sel: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
         for (x_i, toks) in routing.expert_tok.iter().enumerate() {
@@ -494,44 +689,41 @@ impl NativeExec {
                 expert_gate[x_i][j] = probs[t * e_cnt + x_i] / denom;
             }
         }
-        drop(_ph);
-
-        // Grouped expert MLP, batch-parallel across experts (the per-expert
-        // gather + matmuls run serial kernels inside the parallel region).
-        let _ph = phase("expert_mlp");
-        let per_expert: Vec<(Vec<f32>, Vec<f32>)> = par_map(e_cnt, |x_i| {
+        let xg: Vec<Vec<f32>> = par_map(e_cnt, |x_i| {
             let toks = &routing.expert_tok[x_i];
-            let a = toks.len();
-            let wi_e = &wi[x_i * d * ff..(x_i + 1) * d * ff];
-            let wo_e = &wo[x_i * ff * d..(x_i + 1) * ff * d];
-            let mut xg = vec![0f32; a * d];
+            let mut buf = vec![0f32; toks.len() * d];
             for (j, &t) in toks.iter().enumerate() {
-                xg[j * d..(j + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
+                buf[j * d..(j + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
             }
-            let mut u = vec![0f32; a * ff];
-            self.gemm.mm_nn(&xg, wi_e, a, d, ff, &mut u);
-            let mut r = u.clone();
-            relu_inplace(&mut r);
-            let mut y = vec![0f32; a * d];
-            self.gemm.mm_nn(&r, wo_e, a, ff, d, &mut y);
-            (u, y)
+            buf
         });
         drop(_ph);
+
+        // Grouped expert MLP through the exchange (phases itself).
+        let expert_y = ex.forward(&blk.tag, spec, xg, want_cache)?;
+        if expert_y.len() != e_cnt {
+            bail!("exchange returned {} expert outputs, want {e_cnt}", expert_y.len());
+        }
+        for (x_i, y) in expert_y.iter().enumerate() {
+            if y.len() != routing.expert_tok[x_i].len() * d {
+                bail!(
+                    "exchange output for expert {x_i} has {} values, want {} rows x {d}",
+                    y.len(),
+                    routing.expert_tok[x_i].len()
+                );
+            }
+        }
 
         // Combine: gate-weighted scatter back to token order.
         let _ph = phase("combine");
         let mut out = vec![0f32; n * d];
-        let mut expert_u = Vec::with_capacity(e_cnt);
-        let mut expert_y = Vec::with_capacity(e_cnt);
-        for (x_i, (u, y)) in per_expert.into_iter().enumerate() {
+        for (x_i, y) in expert_y.iter().enumerate() {
             for (j, &t) in routing.expert_tok[x_i].iter().enumerate() {
                 let g = expert_gate[x_i][j];
                 for c in 0..d {
                     out[t * d + c] += g * y[j * d + c];
                 }
             }
-            expert_u.push(u);
-            expert_y.push(y);
         }
         drop(_ph);
 
@@ -539,7 +731,6 @@ impl NativeExec {
             probs,
             expert_tok: routing.expert_tok,
             expert_gate,
-            expert_u,
             expert_y,
             tok_sel,
             f_frac: routing.f_frac,
@@ -552,6 +743,7 @@ impl NativeExec {
 
     /// Backward through a tower. `dh` enters as d(tower output) and leaves
     /// as d(tower input); weight grads accumulate into `grads`.
+    #[allow(clippy::too_many_arguments)]
     fn tower_backward(
         &self,
         params: &[Tensor],
@@ -560,6 +752,7 @@ impl NativeExec {
         dh: &mut [f32],
         n: usize,
         grads: &mut [Vec<f32>],
+        ex: &mut dyn ExpertExchange,
     ) -> Result<()> {
         let d = self.entry.config.d_model;
         let ff = self.entry.config.d_ff;
@@ -590,7 +783,7 @@ impl NativeExec {
                 }
                 Some(spec) => {
                     let cache = run.moe[bi].as_ref().expect("moe cache present");
-                    self.moe_backward(params, blk, spec, cache, x, dh, &mut dx, n, grads)?;
+                    self.moe_backward(params, blk, spec, cache, x, dh, &mut dx, n, grads, ex)?;
                 }
             }
             for j in 0..n * d {
@@ -612,69 +805,51 @@ impl NativeExec {
         dx: &mut [f32],
         n: usize,
         grads: &mut [Vec<f32>],
+        ex: &mut dyn ExpertExchange,
     ) -> Result<()> {
         let d = self.entry.config.d_model;
-        let ff = self.entry.config.d_ff;
         let e_cnt = spec.num_experts;
         let router_name = blk.router.as_ref().expect("moe block has router");
         let wr = self.pslice(params, router_name)?;
-        let wi = self.pslice(params, &blk.wi)?;
-        let wo = self.pslice(params, &blk.wo)?;
 
-        // Per-expert weight grads + input contributions (parallel, disjoint).
-        let per_expert: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = par_map(e_cnt, |x_i| {
+        // Gated output-grad rows per expert (assignment order) — the
+        // buffers an expert-parallel exchange ships to the owners.
+        let dye: Vec<Vec<f32>> = par_map(e_cnt, |x_i| {
             let toks = &cache.expert_tok[x_i];
             let gates = &cache.expert_gate[x_i];
-            let a = toks.len();
-            let wi_e = &wi[x_i * d * ff..(x_i + 1) * d * ff];
-            let wo_e = &wo[x_i * ff * d..(x_i + 1) * ff * d];
-            let u = &cache.expert_u[x_i];
-            let mut r = u.clone();
-            relu_inplace(&mut r);
-            // Gated output grad rows.
-            let mut dye = vec![0f32; a * d];
+            let mut buf = vec![0f32; toks.len() * d];
             for (j, &t) in toks.iter().enumerate() {
                 let g = gates[j];
                 for c in 0..d {
-                    dye[j * d + c] = g * dh[t * d + c];
+                    buf[j * d + c] = g * dh[t * d + c];
                 }
             }
-            let mut dwo = vec![0f32; ff * d];
-            self.gemm.mm_tn(&r, &dye, a, ff, d, &mut dwo);
-            let mut dr = vec![0f32; a * ff];
-            self.gemm.mm_nt(&dye, wo_e, a, d, ff, &mut dr);
-            for j in 0..a * ff {
-                if u[j] <= 0.0 {
-                    dr[j] = 0.0;
-                }
-            }
-            let mut xg = vec![0f32; a * d];
-            for (j, &t) in toks.iter().enumerate() {
-                xg[j * d..(j + 1) * d].copy_from_slice(&x[t * d..(t + 1) * d]);
-            }
-            let mut dwi = vec![0f32; d * ff];
-            self.gemm.mm_tn(&xg, &dr, a, d, ff, &mut dwi);
-            let mut dxg = vec![0f32; a * d];
-            self.gemm.mm_nt(&dr, wi_e, a, ff, d, &mut dxg);
-            (dwi, dwo, dxg)
+            buf
         });
 
-        {
-            let gwi = &mut grads[self.idx(&blk.wi)?];
-            for (x_i, (dwi, _, _)) in per_expert.iter().enumerate() {
-                accumulate(&mut gwi[x_i * d * ff..(x_i + 1) * d * ff], dwi);
-            }
+        // Expert weight grads accumulate where the experts live; the input
+        // grads come back to this rank's tokens.
+        let wi_idx = self.idx(&blk.wi)?;
+        let wo_idx = self.idx(&blk.wo)?;
+        let dxg = {
+            let (dwi_buf, dwo_buf) = two_mut(grads, wi_idx, wo_idx);
+            ex.backward(&blk.tag, spec, dye, dwi_buf, dwo_buf)?
+        };
+        if dxg.len() != e_cnt {
+            bail!("exchange returned {} expert input grads, want {e_cnt}", dxg.len());
         }
-        {
-            let gwo = &mut grads[self.idx(&blk.wo)?];
-            for (x_i, (_, dwo, _)) in per_expert.iter().enumerate() {
-                accumulate(&mut gwo[x_i * ff * d..(x_i + 1) * ff * d], dwo);
+        for (x_i, dxg_e) in dxg.iter().enumerate() {
+            let toks = &cache.expert_tok[x_i];
+            if dxg_e.len() != toks.len() * d {
+                bail!(
+                    "exchange input grad for expert {x_i} has {} values, want {} rows x {d}",
+                    dxg_e.len(),
+                    toks.len()
+                );
             }
-        }
-        for (x_i, (_, _, dxg)) in per_expert.iter().enumerate() {
-            for (j, &t) in cache.expert_tok[x_i].iter().enumerate() {
+            for (j, &t) in toks.iter().enumerate() {
                 for c in 0..d {
-                    dx[t * d + c] += dxg[j * d + c];
+                    dx[t * d + c] += dxg_e[j * d + c];
                 }
             }
         }
@@ -749,6 +924,7 @@ impl NativeExec {
         params: &[Tensor],
         batch: &[Tensor],
         want_grads: bool,
+        ex: &mut dyn ExpertExchange,
     ) -> Result<(Metrics, Option<Vec<Vec<f32>>>)> {
         let cfg = &self.entry.config;
         let (d, v) = (cfg.d_model, cfg.vocab_size);
@@ -791,7 +967,8 @@ impl NativeExec {
 
         // Encoder.
         let mut h_enc = gather(enc_tok, ne)?;
-        let enc_run = self.tower_forward(params, &self.enc_blocks, &mut h_enc, ne, want_grads)?;
+        let enc_run =
+            self.tower_forward(params, &self.enc_blocks, &mut h_enc, ne, want_grads, ex)?;
         // Cross context: per-example mean of encoder outputs through cross_w.
         let mut c = vec![0f32; b * d];
         for bi in 0..b {
@@ -815,7 +992,8 @@ impl NativeExec {
                 }
             }
         }
-        let dec_run = self.tower_forward(params, &self.dec_blocks, &mut h_dec, nd, want_grads)?;
+        let dec_run =
+            self.tower_forward(params, &self.dec_blocks, &mut h_dec, nd, want_grads, ex)?;
 
         // Tied-embedding logits + masked cross-entropy (softmax in place;
         // raw logits are never needed again).
@@ -891,7 +1069,7 @@ impl NativeExec {
         let mut dh_dec = vec![0f32; nd * d];
         self.gemm.mm_nn_big(&dlogits, embed, nd, v, d, &mut dh_dec);
 
-        self.tower_backward(params, &self.dec_blocks, &dec_run, &mut dh_dec, nd, &mut grads)?;
+        self.tower_backward(params, &self.dec_blocks, &dec_run, &mut dh_dec, nd, &mut grads, ex)?;
 
         // Decoder input = embedding + broadcast cross context.
         for (i, &t) in dec_tok.iter().enumerate() {
@@ -923,7 +1101,7 @@ impl NativeExec {
                 }
             }
         }
-        self.tower_backward(params, &self.enc_blocks, &enc_run, &mut dh_enc, ne, &mut grads)?;
+        self.tower_backward(params, &self.enc_blocks, &enc_run, &mut dh_enc, ne, &mut grads, ex)?;
         for (i, &t) in enc_tok.iter().enumerate() {
             accumulate(
                 &mut grads[embed_idx][(t as usize) * d..(t as usize + 1) * d],
@@ -974,6 +1152,7 @@ impl NativeExec {
         params: &[Tensor],
         images: &Tensor,
         want_cache: bool,
+        ex: &mut dyn ExpertExchange,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, TowerRun, usize, usize)> {
         let d = self.entry.config.d_model;
         let (pmat, b, np) = self.patches(images)?;
@@ -982,7 +1161,7 @@ impl NativeExec {
         let n = b * np;
         let mut h = vec![0f32; n * d];
         self.gemm.mm_nn_big(&pmat, wp, n, plen, d, &mut h);
-        let run = self.tower_forward(params, &self.enc_blocks, &mut h, n, want_cache)?;
+        let run = self.tower_forward(params, &self.enc_blocks, &mut h, n, want_cache, ex)?;
         let mut pooled = vec![0f32; b * d];
         for bi in 0..b {
             for t in 0..np {
@@ -1002,6 +1181,7 @@ impl NativeExec {
         params: &[Tensor],
         batch: &[Tensor],
         want_grads: bool,
+        ex: &mut dyn ExpertExchange,
     ) -> Result<(Metrics, Option<Vec<Vec<f32>>>)> {
         let cfg = &self.entry.config;
         let (d, nc) = (cfg.d_model, cfg.num_classes);
@@ -1009,7 +1189,7 @@ impl NativeExec {
             bail!("vit batch must be [images, labels]");
         }
         let labels = batch[1].i32s().context("labels")?;
-        let (pooled, _h, pmat, run, b, np) = self.vit_trunk(params, &batch[0], want_grads)?;
+        let (pooled, _h, pmat, run, b, np) = self.vit_trunk(params, &batch[0], want_grads, ex)?;
         if labels.len() != b {
             bail!("labels length {} != batch {b}", labels.len());
         }
@@ -1083,7 +1263,7 @@ impl NativeExec {
                 }
             }
         }
-        self.tower_backward(params, &self.enc_blocks, &run, &mut dh, n, &mut grads)?;
+        self.tower_backward(params, &self.enc_blocks, &run, &mut dh, n, &mut grads, ex)?;
         let plen = pmat.len() / n;
         {
             let wp_idx = self.idx("patch_embed/w")?;
@@ -1092,22 +1272,45 @@ impl NativeExec {
         Ok((metrics, Some(grads)))
     }
 
+    /// Run one step. `exchange` overrides where the expert MLP executes
+    /// (expert parallelism); `None` builds the in-process [`LocalExchange`].
     fn step(
         &self,
         params: &[Tensor],
         batch: &[Tensor],
         want_grads: bool,
+        exchange: Option<&mut dyn ExpertExchange>,
     ) -> Result<(Metrics, Option<Vec<Vec<f32>>>)> {
         self.check_params(params)?;
+        let mut local = LocalExchange::new(self, params);
+        let ex: &mut dyn ExpertExchange = match exchange {
+            Some(e) => {
+                e.bind(self.gemm)?;
+                e
+            }
+            None => &mut local,
+        };
         if self.entry.family == "lm" {
-            self.lm_step(params, batch, want_grads)
+            self.lm_step(params, batch, want_grads, ex)
         } else {
-            self.vit_step(params, batch, want_grads)
+            self.vit_step(params, batch, want_grads, ex)
         }
+    }
+
+    /// Package raw gradient buffers as manifest-ordered tensors.
+    fn grads_to_tensors(&self, grads: Vec<Vec<f32>>) -> Vec<Tensor> {
+        self.entry
+            .params
+            .iter()
+            .zip(grads)
+            .map(|(s, g)| Tensor::from_f32(&s.shape, g))
+            .collect()
     }
 }
 
-fn accumulate(dst: &mut [f32], src: &[f32]) {
+/// Elementwise `dst += src` (shared with the expert-parallel owner's
+/// source-ordered weight-grad accumulation in `runtime::ep`).
+pub(crate) fn accumulate(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
     for (d, s) in dst.iter_mut().zip(src) {
         *d += *s;
@@ -1128,7 +1331,7 @@ impl Executable for NativeExec {
         wd: f64,
         step: u64,
     ) -> Result<StepOutput> {
-        let (metrics, grads) = self.step(&params, batch, true)?;
+        let (metrics, grads) = self.step(&params, batch, true, None)?;
         let grads = grads.expect("grads requested");
         // Adam with decoupled weight decay; state layout (m, v) per param.
         // Shared with the data-parallel trainer's post-all-reduce update.
@@ -1138,7 +1341,7 @@ impl Executable for NativeExec {
     }
 
     fn eval_step(&self, params: &[Tensor], batch: &[Tensor]) -> Result<Metrics> {
-        Ok(self.step(params, batch, false)?.0)
+        Ok(self.step(params, batch, false, None)?.0)
     }
 
     fn features(&self, params: &[Tensor], images: &Tensor) -> Result<Tensor> {
@@ -1147,21 +1350,26 @@ impl Executable for NativeExec {
         }
         self.check_params(params)?;
         let d = self.entry.config.d_model;
-        let (pooled, _h, _pmat, _run, b, _np) = self.vit_trunk(params, images, false)?;
+        let mut local = LocalExchange::new(self, params);
+        let (pooled, _h, _pmat, _run, b, _np) = self.vit_trunk(params, images, false, &mut local)?;
         Ok(Tensor::from_f32(&[b, d], pooled))
     }
 
     fn grads(&self, params: &[Tensor], batch: &[Tensor]) -> Result<(Metrics, Vec<Tensor>)> {
-        let (metrics, grads) = self.step(params, batch, true)?;
+        let (metrics, grads) = self.step(params, batch, true, None)?;
         let grads = grads.expect("grads requested");
-        let tensors = self
-            .entry
-            .params
-            .iter()
-            .zip(grads)
-            .map(|(s, g)| Tensor::from_f32(&s.shape, g))
-            .collect();
-        Ok((metrics, tensors))
+        Ok((metrics, self.grads_to_tensors(grads)))
+    }
+
+    fn grads_ep(
+        &self,
+        params: &[Tensor],
+        batch: &[Tensor],
+        exchange: &mut dyn ExpertExchange,
+    ) -> Result<(Metrics, Vec<Tensor>)> {
+        let (metrics, grads) = self.step(params, batch, true, Some(exchange))?;
+        let grads = grads.expect("grads requested");
+        Ok((metrics, self.grads_to_tensors(grads)))
     }
 }
 

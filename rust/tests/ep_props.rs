@@ -1,0 +1,148 @@
+//! Property tests for the expert-parallel dispatch/combine machinery:
+//! under random routing, packing per-expert token buffers by owner,
+//! exchanging them all-to-all, and returning them must move every token
+//! row to exactly one owner and back unchanged — dispatch → combine is a
+//! lossless permutation of the routed rows (the invariant the mesh
+//! trainer's bitwise guarantee rests on).
+
+use sparse_upcycle::manifest::MoeSpec;
+use sparse_upcycle::parallel::collectives::all_to_all;
+use sparse_upcycle::parallel::ExpertPlacement;
+use sparse_upcycle::runtime::ep::{pack_dispatch, unpack_combine, EpPayload};
+use sparse_upcycle::runtime::native::route_tokens;
+use sparse_upcycle::util::rng::Rng;
+
+const D: usize = 4;
+
+fn spec(router: &str, e: usize, c: f64) -> MoeSpec {
+    MoeSpec {
+        num_experts: e,
+        capacity_factor: c,
+        router_type: router.to_string(),
+        moe_layers: vec![0],
+        group_size: 0,
+        renormalize: false,
+        bpr: false,
+    }
+}
+
+fn random_probs(n: usize, e: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut p = vec![0f32; n * e];
+    for row in 0..n {
+        let mut sum = 0f32;
+        for x in 0..e {
+            let v = 0.05 + rng.f32();
+            p[row * e + x] = v;
+            sum += v;
+        }
+        for x in 0..e {
+            p[row * e + x] /= sum;
+        }
+    }
+    p
+}
+
+/// Per-expert buffers for one source rank, every row tagged with a unique
+/// (rank, expert, row) sentinel so misrouted or duplicated rows are
+/// detectable by value.
+fn tagged_buffers(rank: usize, rows_per_expert: &[usize]) -> Vec<Vec<f32>> {
+    rows_per_expert
+        .iter()
+        .enumerate()
+        .map(|(x, &rows)| {
+            let mut buf = vec![0f32; rows * D];
+            for j in 0..rows {
+                for c in 0..D {
+                    buf[j * D + c] = (rank * 1_000_000 + x * 10_000 + j * 10 + c) as f32;
+                }
+            }
+            buf
+        })
+        .collect()
+}
+
+/// Round-trip the dispatch for `ranks` sources under `spec` routing:
+/// every row reaches exactly one owner, owners see ascending expert order,
+/// and the combine return reassembles each source's buffers bitwise.
+fn roundtrip(spec: &MoeSpec, ranks: usize, tokens_per_rank: usize, seed: u64) {
+    let e = spec.num_experts;
+    let placement = ExpertPlacement::new(e, ranks);
+    let mut rng = Rng::new(seed);
+
+    let mut originals: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut sends: Vec<Vec<EpPayload>> = Vec::new();
+    let mut routed_rows: Vec<Vec<usize>> = Vec::new();
+    for rank in 0..ranks {
+        let probs = random_probs(tokens_per_rank, e, &mut rng);
+        let routing = route_tokens(spec, &probs, tokens_per_rank);
+        let rows: Vec<usize> = routing.expert_tok.iter().map(|t| t.len()).collect();
+        let bufs = tagged_buffers(rank, &rows);
+        originals.push(bufs.clone());
+        sends.push(pack_dispatch(bufs, &placement, D));
+        routed_rows.push(rows);
+    }
+
+    // Dispatch: sends[src][dst] → recv[dst][src].
+    let recv = all_to_all(sends).unwrap();
+    assert_eq!(recv.len(), ranks);
+
+    // Every (src, expert) buffer lands at exactly the owner, ascending
+    // expert order within each payload, data intact.
+    let mut seen = vec![vec![false; e]; ranks];
+    for (dst, from_each_src) in recv.iter().enumerate() {
+        for (src, payload) in from_each_src.iter().enumerate() {
+            let experts: Vec<usize> = payload.iter().map(|b| b.expert).collect();
+            let mut sorted = experts.clone();
+            sorted.sort_unstable();
+            assert_eq!(experts, sorted, "payload must be ascending in expert");
+            for buf in payload {
+                assert_eq!(placement.owner(buf.expert), dst, "row delivered to a non-owner");
+                assert_eq!(buf.rows, routed_rows[src][buf.expert], "row count changed in flight");
+                assert_eq!(buf.data, originals[src][buf.expert], "data changed in flight");
+                assert!(!seen[src][buf.expert], "expert buffer delivered twice");
+                seen[src][buf.expert] = true;
+            }
+        }
+    }
+    for (src, flags) in seen.iter().enumerate() {
+        assert!(flags.iter().all(|&f| f), "rank {src}: every expert buffer must arrive once");
+    }
+
+    // Combine return: owners echo the buffers back; each source must
+    // reassemble its original per-expert view exactly.
+    let mut ret_sends: Vec<Vec<EpPayload>> = (0..ranks).map(|_| Vec::new()).collect();
+    for (dst, from_each_src) in recv.into_iter().enumerate() {
+        // ret_sends[dst][src]: what owner `dst` returns to source `src`.
+        for payload in from_each_src {
+            ret_sends[dst].push(payload);
+        }
+    }
+    let back = all_to_all(ret_sends).unwrap();
+    for (src, from_each_owner) in back.into_iter().enumerate() {
+        let rebuilt = unpack_combine(from_each_owner, e).unwrap();
+        assert_eq!(rebuilt, originals[src], "rank {src}: combine must invert dispatch");
+    }
+}
+
+#[test]
+fn ec_routing_roundtrips_every_token_exactly_once() {
+    for ranks in [1usize, 2, 4] {
+        roundtrip(&spec("ec", 8, 2.0), ranks, 32, 7);
+    }
+}
+
+#[test]
+fn token_choice_roundtrips_with_uneven_buffers() {
+    // Top-2 with a binding capacity: buffers are uneven and some may be
+    // empty — the permutation property must still hold.
+    for ranks in [2usize, 4] {
+        roundtrip(&spec("top2", 8, 1.0), ranks, 24, 11);
+        roundtrip(&spec("top1", 8, 0.5), ranks, 16, 13);
+    }
+}
+
+#[test]
+fn uneven_expert_counts_still_partition() {
+    // 5 experts over 2 ranks: rank 0 owns 3, rank 1 owns 2.
+    roundtrip(&spec("ec", 5, 1.0), 2, 20, 17);
+}
