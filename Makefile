@@ -3,11 +3,11 @@
 # `make verify` mirrors .github/workflows/ci.yml exactly: if it is green
 # here, CI is green.
 
-.PHONY: verify build test bench-compile bench-json bench-gate bench-baseline check-features \
-        fmt fmt-check clippy quickstart mesh-smoke artifacts clean
+.PHONY: verify build test docs bench-compile bench-json bench-gate bench-baseline \
+        check-features fmt fmt-check clippy quickstart mesh-smoke serve-smoke artifacts clean
 
-verify: build test fmt-check clippy bench-compile bench-json bench-gate check-features \
-        quickstart mesh-smoke
+verify: build test fmt-check clippy docs bench-compile bench-json bench-gate check-features \
+        quickstart mesh-smoke serve-smoke
 
 build:
 	cargo build --release
@@ -52,9 +52,23 @@ clippy:
 quickstart:
 	cargo run --release -- quickstart --pretrain-steps 30 --extra-steps 5
 
+# Blocking docs gate (mirrors the CI docs job): rustdoc must be
+# warning-clean and every relative markdown link in README + docs/*.md
+# must resolve.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p sparse-upcycle --lib
+	cargo run --release -- check-docs
+
 # End-to-end expert parallelism: 2x2 mesh, experts sharded across EP ranks.
 mesh-smoke:
 	cargo run --release -- train --model lm_tiny_moe_e8_c2 --mesh 2x2 --steps 10
+
+# End-to-end serving: train → one-file checkpoint bundle → continuous-
+# batching inference engine (docs/SERVING.md).
+serve-smoke:
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --steps 10 \
+	  --save results/checkpoints/serve_smoke.supc
+	cargo run --release -- serve --load results/checkpoints/serve_smoke.supc --requests 16
 
 # AOT artifacts for the PJRT backend (requires the Python toolchain; not
 # needed for the default native build). Written under rust/ because cargo

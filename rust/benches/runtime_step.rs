@@ -21,7 +21,11 @@
 //! * expert-parallel DP×EP mesh scaling (`coordinator::mesh_train_step`):
 //!   serial-vs-threaded mesh step time, the dispatch/alltoall/expert_mlp
 //!   phase split, and the measured all-to-all exchange time against the
-//!   `Interconnect::shared_memory` cost model.
+//!   `Interconnect::shared_memory` cost model,
+//! * forward-only inference (`runtime::Executable::infer`): a batch-size
+//!   sweep (latency percentiles, tokens/s) and the serve engine's
+//!   continuous-batching throughput against unbatched serving on the same
+//!   fixed arrival trace (`serve::Engine`).
 //!
 //! Run: cargo bench --bench runtime_step [-- --full] [--quick]
 //!      [--json-out PATH]   (default PATH: BENCH_runtime.json in the bench
@@ -36,6 +40,7 @@ use sparse_upcycle::manifest::{Manifest, ModelEntry};
 use sparse_upcycle::parallel::collectives::Interconnect;
 use sparse_upcycle::runtime::native::NativeBackend;
 use sparse_upcycle::runtime::{Backend, LoadedModel, Runtime};
+use sparse_upcycle::serve;
 use sparse_upcycle::util::bench::{
     bench, phases_enable, phases_reset, phases_snapshot, BenchResult,
 };
@@ -314,6 +319,86 @@ fn expert_parallel_section(
     ])
 }
 
+/// Forward-only inference: batch-size sweep of `Executable::infer` plus
+/// the serve engine's batched-vs-unbatched comparison on one fixed burst
+/// trace (see docs/BENCHMARKS.md §inference for the schema, and
+/// docs/SERVING.md for engine semantics).
+fn inference_section(manifest: &Manifest, runtime: &Runtime, target_ms: u64) -> Json {
+    println!("== inference: forward-only batch sweep + continuous batching ==");
+    let name = "lm_tiny_moe_e8_c2";
+    let entry = manifest.model(name).unwrap().clone();
+    let model = runtime.load_model(manifest, name, &["eval"]).unwrap();
+    let state = fresh_state(&entry);
+    let params = &state.params;
+
+    // Batch-size sweep: same per-example geometry, growing batch dim.
+    let mut sweep = Vec::new();
+    let tokens_per_example = (entry.config.enc_len + entry.config.dec_len) as f64;
+    for &b in &[1usize, 2, 4, 8] {
+        if b > entry.config.batch_size {
+            continue;
+        }
+        let trace = serve::synthetic_trace(&entry, b, 3, 0);
+        let inputs = serve::stack_inputs(&trace).unwrap();
+        let r = bench(&format!("infer {name} b{b}"), target_ms, || {
+            std::hint::black_box(model.infer(params, &inputs).unwrap());
+        });
+        let toks = tokens_per_example * b as f64;
+        println!(
+            "  ↳ b={b}: {:.1} inferences/s, {:.1} tokens/s",
+            1e9 / r.mean_ns,
+            toks * 1e9 / r.mean_ns
+        );
+        sweep.push(obj(vec![
+            ("batch", num(b as f64)),
+            ("mean_ns", num(r.mean_ns)),
+            ("p50_ns", num(r.p50_ns)),
+            ("p99_ns", num(r.p99_ns)),
+            ("tokens_per_s", num(toks * 1e9 / r.mean_ns)),
+        ]));
+    }
+
+    // Continuous batching vs one-request-per-batch serving on the SAME
+    // burst trace (identical requests, identical arrival times). One
+    // warmup run per config, then the measured run.
+    let n_req = 16usize;
+    let tpr = serve::tokens_per_request(&entry);
+    let run = |cfg: serve::EngineConfig| {
+        let engine = serve::Engine::new(&model, params, cfg).unwrap();
+        engine.run_trace(serve::synthetic_trace(&entry, n_req, 9, 0)).unwrap();
+        engine.run_trace(serve::synthetic_trace(&entry, n_req, 9, 0)).unwrap()
+    };
+    let batched = run(serve::EngineConfig { max_batch_tokens: 8 * tpr, ..Default::default() });
+    let unbatched = run(serve::EngineConfig::unbatched());
+    let speedup = batched.tokens_per_s() / unbatched.tokens_per_s().max(1e-9);
+    println!(
+        "  ↳ engine, {n_req}-request burst: batched {:.1} tokens/s in {} micro-batch(es) vs \
+         unbatched {:.1} tokens/s — {speedup:.2}x\n",
+        batched.tokens_per_s(),
+        batched.batches.len(),
+        unbatched.tokens_per_s()
+    );
+    let engine_json = |r: &serve::ServeReport| {
+        obj(vec![
+            ("micro_batches", num(r.batches.len() as f64)),
+            ("total_tokens", num(r.total_tokens() as f64)),
+            ("exec_wall_ns", num(r.exec_wall_ns())),
+            ("tokens_per_s", num(r.tokens_per_s())),
+            ("p50_latency_us", num(r.p50_latency_us())),
+            ("p99_latency_us", num(r.p99_latency_us())),
+        ])
+    };
+    obj(vec![
+        ("model", s(name)),
+        ("tokens_per_request", num(tpr as f64)),
+        ("batch_sweep", arr(sweep)),
+        ("engine_requests", num(n_req as f64)),
+        ("engine_batched", engine_json(&batched)),
+        ("engine_unbatched", engine_json(&unbatched)),
+        ("batched_speedup", num(speedup)),
+    ])
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let full = args.iter().any(|a| a == "--full");
@@ -354,6 +439,7 @@ fn main() {
 
     let kernels = kernel_section(t_kern);
     let expert_parallel = expert_parallel_section(&manifest, &runtime, t_eval, full);
+    let inference = inference_section(&manifest, &runtime, t_eval);
 
     let mut model_entries = Vec::new();
     for name in variants {
@@ -497,6 +583,7 @@ fn main() {
         ("full", Json::Bool(full)),
         ("kernels", kernels),
         ("expert_parallel", expert_parallel),
+        ("inference", inference),
         ("models", arr(model_entries)),
     ]);
     std::fs::write(&json_out, report.to_string()).expect("writing bench JSON");

@@ -1,7 +1,8 @@
-//! Versioned binary checkpoint format.
+//! Versioned binary checkpoint format (the byte-level spec lives in
+//! `docs/SERVING.md`).
 //!
 //! A checkpoint bundles named tensors (parameters and, optionally, the
-//! Adafactor accumulators — the paper's optimizer-state resumption knob,
+//! optimizer accumulators — the paper's optimizer-state resumption knob,
 //! Appendix B.6) plus metadata: the model name it belongs to, the training
 //! step it was taken at, and free-form provenance (e.g. "upcycled from X").
 //!
@@ -12,6 +13,31 @@
 //!   header JSON            { model, step, provenance, tensors: [ {name,
 //!                            shape, dtype, offset, len_bytes} ] }
 //!   raw tensor data        concatenated, offsets relative to data section
+//!
+//! On top of the raw container, [`save_train_state`] / [`load_train_state`]
+//! define the **trained-checkpoint bundle**: one file holding a model's
+//! parameters *and* optimizer state (names disjoint by construction:
+//! `opt/<param>/{m,v}`), validated against the manifest signature on load —
+//! the artifact `upcycle train --save` writes and `upcycle serve` /
+//! `upcycle infer --load` consume. Loading rejects wrong magic, unsupported
+//! versions, truncated payloads and signature mismatches with named errors.
+//!
+//! Round trip:
+//!
+//! ```
+//! use sparse_upcycle::checkpoint::Checkpoint;
+//! use sparse_upcycle::tensor::Tensor;
+//!
+//! let mut ck = Checkpoint::new("demo", 42, "doctest");
+//! ck.insert("w", Tensor::from_f32(&[2, 2], vec![1.0, -2.0, 3.0, 4.5]));
+//! let path = std::env::temp_dir().join("supc_doctest").join("demo.supc");
+//! ck.save(&path).unwrap();
+//! let back = Checkpoint::load(&path).unwrap();
+//! assert_eq!(back.model, "demo");
+//! assert_eq!(back.step, 42);
+//! assert_eq!(back.get("w").unwrap(), ck.get("w").unwrap());
+//! # std::fs::remove_file(&path).ok();
+//! ```
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -19,6 +45,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::manifest::{ModelEntry, TensorSpec};
 use crate::tensor::{numel, Data, DType, Tensor};
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -123,22 +150,27 @@ impl Checkpoint {
             std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
         );
         let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
+        f.read_exact(&mut magic).with_context(|| format!("{path:?}: truncated magic"))?;
         if &magic != MAGIC {
             bail!("{path:?}: not a SUPC checkpoint");
         }
         let mut v4 = [0u8; 4];
-        f.read_exact(&mut v4)?;
+        f.read_exact(&mut v4).with_context(|| format!("{path:?}: truncated version field"))?;
         let version = u32::from_le_bytes(v4);
         if version != VERSION {
-            bail!("{path:?}: unsupported checkpoint version {version}");
+            bail!(
+                "{path:?}: unsupported checkpoint version {version} (this build reads \
+                 version {VERSION})"
+            );
         }
         let mut l8 = [0u8; 8];
-        f.read_exact(&mut l8)?;
+        f.read_exact(&mut l8).with_context(|| format!("{path:?}: truncated header length"))?;
         let hlen = u64::from_le_bytes(l8) as usize;
         let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        f.read_exact(&mut hbuf)
+            .with_context(|| format!("{path:?}: truncated header ({hlen} bytes expected)"))?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .with_context(|| format!("{path:?}: malformed checkpoint header"))?;
 
         let mut ck = Checkpoint::new(
             header.get("model")?.as_str()?,
@@ -156,7 +188,12 @@ impl Checkpoint {
             let dtype = DType::from_str(e.get("dtype")?.as_str()?)?;
             let n = numel(&shape);
             let mut raw = vec![0u8; n * 4];
-            f.read_exact(&mut raw)?;
+            f.read_exact(&mut raw).with_context(|| {
+                format!(
+                    "{path:?}: truncated payload reading tensor `{name}` ({} bytes expected)",
+                    n * 4
+                )
+            })?;
             let t = match dtype {
                 DType::F32 => Tensor::from_f32(
                     &shape,
@@ -175,6 +212,109 @@ impl Checkpoint {
         }
         Ok(ck)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Trained-checkpoint bundles (params + optimizer state + step in one file)
+// ---------------------------------------------------------------------------
+
+/// Bind a checkpoint's tensors to a flat signature order, validating
+/// shapes. The one spec-binding implementation in the tree:
+/// `runtime::tensors_from_checkpoint` delegates here.
+pub fn bind_tensors(ck: &Checkpoint, specs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+    specs
+        .iter()
+        .map(|spec| {
+            let t = ck.get(&spec.name)?;
+            if t.shape != spec.shape {
+                bail!("tensor `{}` shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
+            }
+            Ok(t.clone())
+        })
+        .collect()
+}
+
+/// Persist a full training state — parameters *and* optimizer accumulators,
+/// in `entry`'s signature order, plus the global step — as one SUPC bundle
+/// at `path`. The two tensor families cannot collide: optimizer slots are
+/// namespaced `opt/<param>/{m,v}` by the manifest contract.
+///
+/// [`load_train_state`] restores the bundle bitwise, so `train → save →
+/// load → resume` continues the exact trajectory of an uninterrupted run
+/// (asserted in `coordinator::trainer`'s tests).
+pub fn save_train_state(
+    path: impl AsRef<Path>,
+    entry: &ModelEntry,
+    params: &[Tensor],
+    opt_state: &[Tensor],
+    step: u64,
+    provenance: &str,
+) -> Result<()> {
+    if params.len() != entry.params.len() || opt_state.len() != entry.opt_state.len() {
+        bail!(
+            "save_train_state `{}`: got {}/{} params/opt tensors, signature wants {}/{}",
+            entry.name,
+            params.len(),
+            opt_state.len(),
+            entry.params.len(),
+            entry.opt_state.len()
+        );
+    }
+    let mut ck = Checkpoint::new(&entry.name, step, provenance);
+    for (spec, t) in entry.params.iter().zip(params).chain(entry.opt_state.iter().zip(opt_state))
+    {
+        if t.shape != spec.shape {
+            bail!("tensor `{}` shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
+        }
+        ck.insert(&spec.name, t.clone());
+    }
+    ck.save(path)
+}
+
+/// Bind an already-loaded checkpoint as a train-state bundle —
+/// `(params, opt_state, step)` in `entry`'s signature order — rejecting
+/// bundles written for a different model or with missing/mis-shaped
+/// tensors. [`load_train_state`] is the from-disk wrapper; callers that
+/// already read the file (the CLI peeks at the header for the model name)
+/// bind from memory instead of parsing the payload twice.
+pub fn bind_train_state(
+    ck: &Checkpoint,
+    entry: &ModelEntry,
+) -> Result<(Vec<Tensor>, Vec<Tensor>, u64)> {
+    if ck.model != entry.name {
+        bail!(
+            "this is a `{}` checkpoint, not `{}` (pass the matching --model or omit it to \
+             use the bundle's own model)",
+            ck.model,
+            entry.name
+        );
+    }
+    let want = entry.params.len() + entry.opt_state.len();
+    if ck.tensors.len() != want {
+        bail!(
+            "{} tensors but the `{}` train-state signature has {want} — not a train-state \
+             bundle? (params-only checkpoints load via `Checkpoint::load`)",
+            ck.tensors.len(),
+            entry.name
+        );
+    }
+    let params = bind_tensors(ck, &entry.params)
+        .with_context(|| format!("binding params to the `{}` signature", entry.name))?;
+    let opt_state = bind_tensors(ck, &entry.opt_state)
+        .with_context(|| format!("binding optimizer state to the `{}` signature", entry.name))?;
+    Ok((params, opt_state, ck.step))
+}
+
+/// Load a [`save_train_state`] bundle back into `(params, opt_state, step)`
+/// in `entry`'s signature order; see [`bind_train_state`] for the
+/// validation it applies.
+pub fn load_train_state(
+    path: impl AsRef<Path>,
+    entry: &ModelEntry,
+) -> Result<(Vec<Tensor>, Vec<Tensor>, u64)> {
+    let path = path.as_ref();
+    let ck = Checkpoint::load(path)?;
+    bind_train_state(&ck, entry).with_context(|| format!("loading train state from {path:?}"))
 }
 
 #[cfg(test)]
@@ -208,6 +348,71 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// An unsupported format version must be rejected by name, not parsed.
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("supc_test");
+        let path = dir.join("badver.supc");
+        let mut ck = Checkpoint::new("m", 1, "");
+        ck.insert("a", Tensor::scalar_f32(1.0));
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("unsupported checkpoint version 99"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A payload cut short mid-tensor must name the tensor it died in.
+    #[test]
+    fn rejects_truncated_payload() {
+        let dir = std::env::temp_dir().join("supc_test");
+        let path = dir.join("trunc.supc");
+        let mut ck = Checkpoint::new("m", 1, "");
+        ck.insert("big", Tensor::from_f32(&[64], vec![0.5; 64]));
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("truncated payload"), "{err}");
+        assert!(err.contains("`big`"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// save_train_state → load_train_state restores params, optimizer state
+    /// and step bitwise, and rejects a bundle loaded against the wrong
+    /// model signature.
+    #[test]
+    fn train_state_bundle_roundtrips_and_validates() {
+        let m = crate::manifest::Manifest::native();
+        let entry = m.model("lm_tiny_dense").unwrap();
+        let mut params = Vec::new();
+        for (i, spec) in entry.params.iter().enumerate() {
+            let n: usize = spec.shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|j| (i * 31 + j) as f32 * 0.01 - 1.0).collect();
+            params.push(Tensor::from_f32(&spec.shape, data));
+        }
+        let opt: Vec<Tensor> = entry.opt_state.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        let path = std::env::temp_dir().join("supc_test").join("bundle.supc");
+        save_train_state(&path, entry, &params, &opt, 77, "unit-test").unwrap();
+        let (p2, o2, step) = load_train_state(&path, entry).unwrap();
+        assert_eq!(step, 77);
+        assert_eq!(params, p2, "params must round-trip bitwise");
+        assert_eq!(opt, o2, "optimizer state must round-trip bitwise");
+        // Loading against another model's signature fails by name.
+        let other = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let err = format!("{:#}", load_train_state(&path, other).unwrap_err());
+        assert!(err.contains("lm_tiny_dense"), "{err}");
+        // A params-only checkpoint is not a train-state bundle.
+        let ppath = std::env::temp_dir().join("supc_test").join("params_only.supc");
+        crate::init::init_params(entry, 3).unwrap().save(&ppath).unwrap();
+        let err = format!("{:#}", load_train_state(&ppath, entry).unwrap_err());
+        assert!(err.contains("train-state"), "{err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&ppath).ok();
     }
 
     #[test]

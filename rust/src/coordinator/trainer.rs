@@ -123,6 +123,36 @@ impl TrainState {
         })
     }
 
+    /// Persist this state as one trained-checkpoint bundle — params +
+    /// optimizer state + step in a single SUPC file
+    /// (`checkpoint::save_train_state`). This is what `upcycle train
+    /// --save` writes and what `upcycle serve` / `upcycle infer --load`
+    /// consume.
+    pub fn save(
+        &self,
+        entry: &ModelEntry,
+        path: impl AsRef<std::path::Path>,
+        provenance: &str,
+    ) -> Result<()> {
+        crate::checkpoint::save_train_state(
+            path,
+            entry,
+            &self.params,
+            &self.opt_state,
+            self.step,
+            provenance,
+        )
+    }
+
+    /// Restore a bundle written by [`TrainState::save`]. Resuming from the
+    /// result is bitwise-identical to never having stopped (asserted by
+    /// this module's tests): the checkpoint holds the full f32 state and
+    /// the step counter that drives bias correction and the LR schedule.
+    pub fn load(entry: &ModelEntry, path: impl AsRef<std::path::Path>) -> Result<TrainState> {
+        let (params, opt_state, step) = crate::checkpoint::load_train_state(path, entry)?;
+        Ok(TrainState { params, opt_state, step })
+    }
+
     pub fn to_checkpoints(
         &self,
         entry: &ModelEntry,
@@ -654,6 +684,53 @@ mod tests {
             &init_opt_state(entry).unwrap(),
         )
         .unwrap()
+    }
+
+    /// The serving tentpole's resume invariant: train → save → load →
+    /// resume is bitwise-identical to training straight through. The
+    /// bundle carries params, optimizer accumulators and the step counter,
+    /// so Adam bias correction continues exactly where it stopped.
+    #[test]
+    fn save_load_resume_is_bitwise_identical() {
+        let (entry, model, batches) = setup();
+        let step_once = |st: &mut TrainState, b: &[Tensor]| {
+            let out = model
+                .train_step(
+                    std::mem::take(&mut st.params),
+                    std::mem::take(&mut st.opt_state),
+                    b,
+                    1e-3,
+                    0.01,
+                    st.step + 1,
+                )
+                .unwrap();
+            st.params = out.params;
+            st.opt_state = out.opt_state;
+            st.step += 1;
+        };
+        // Straight-through reference: three uninterrupted steps.
+        let mut straight = fresh_state(&entry);
+        for b in &batches {
+            step_once(&mut straight, b);
+        }
+        // Interrupted run: two steps, save, load, one more step.
+        let mut first = fresh_state(&entry);
+        step_once(&mut first, &batches[0]);
+        step_once(&mut first, &batches[1]);
+        let path = std::env::temp_dir().join("supc_trainer").join("resume.supc");
+        first.save(&entry, &path, "resume-test").unwrap();
+        let mut resumed = TrainState::load(&entry, &path).unwrap();
+        assert_eq!(resumed.step, 2, "the bundle must carry the step counter");
+        step_once(&mut resumed, &batches[2]);
+        assert_eq!(straight.step, resumed.step);
+        for ((a, b), spec) in straight.params.iter().zip(&resumed.params).zip(&entry.params) {
+            assert_eq!(a, b, "param `{}` must match bitwise after resume", spec.name);
+        }
+        let opt_pairs = straight.opt_state.iter().zip(&resumed.opt_state);
+        for ((a, b), spec) in opt_pairs.zip(&entry.opt_state) {
+            assert_eq!(a, b, "opt slot `{}` must match bitwise after resume", spec.name);
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     /// The PR acceptance invariant: N-replica data-parallel training is

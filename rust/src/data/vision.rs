@@ -112,7 +112,7 @@ impl VisionPipeline {
         draw(out, sz, shape, cx, cy, r, &hue);
     }
 
-    /// (images [B,H,W,3], labels [B]) in manifest batch order.
+    /// (images `[B,H,W,3]`, labels `[B]`) in manifest batch order.
     pub fn next_batch(&mut self) -> (Vec<Tensor>, Vec<usize>) {
         let sz = self.spec.image_size;
         let b = self.batch_size;

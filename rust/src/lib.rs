@@ -19,10 +19,12 @@
 //!
 //! Around the backend sit the training coordinator (`coordinator`), data
 //! substrates (`data`), checkpoints (`checkpoint`), cost accounting
-//! (`costmodel`), the parallelism simulator (`parallel`) and — the paper's
-//! contribution — the **upcycling checkpoint surgery** (`upcycle`). The
-//! experiment harness (`experiments`) regenerates every figure and table of
-//! the paper on either backend.
+//! (`costmodel`), the parallelism simulator (`parallel`), the forward-only
+//! **inference engine** (`serve`: continuous batching over
+//! `Executable::infer`, fed by `upcycle train --save` checkpoint bundles)
+//! and — the paper's contribution — the **upcycling checkpoint surgery**
+//! (`upcycle`). The experiment harness (`experiments`) regenerates every
+//! figure and table of the paper on either backend.
 
 pub mod checkpoint;
 pub mod coordinator;
@@ -35,6 +37,7 @@ pub mod manifest;
 pub mod metrics;
 pub mod parallel;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod upcycle;
 pub mod util;

@@ -43,14 +43,14 @@
 //! ```
 
 /// Output rows processed per cache block in the dot-product kernels.
-const ROW_TILE: usize = 64;
+pub const ROW_TILE: usize = 64;
 /// Output-row tile of `mm_tn` kept hot across the sweep over `n`.
-const COL_TILE: usize = 32;
+pub const COL_TILE: usize = 32;
 /// Unroll width of the dot-product accumulator.
 const LANES: usize = 8;
 /// Minimum multiply-accumulate count before `*_par` spawns threads; below
 /// this, thread spawn overhead exceeds the parallel win.
-const PAR_MIN_MACS: usize = 1 << 21;
+pub const PAR_MIN_MACS: usize = 1 << 21;
 
 /// Contiguous dot product with a fixed 8-lane unrolled reduction order.
 #[inline]

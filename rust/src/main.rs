@@ -1,13 +1,18 @@
 //! `upcycle` — CLI for the sparse-upcycling training coordinator.
 //!
-//! Subcommands:
+//! Subcommands (the full flag reference lives in `docs/CLI.md`):
 //!   quickstart                    — native end-to-end demo (pretrain →
 //!                                   surgery → continued MoE training)
 //!   list                          — experiments and models available
 //!   train      --model M          — (pre)train a model from scratch
 //!                                   (--replicas N data-parallel, --mesh DxE
-//!                                   expert-parallel over a DP×EP mesh)
+//!                                   expert-parallel, --save CK bundle)
+//!   serve      --load CK          — continuous-batching inference engine
+//!                                   over a trained checkpoint
+//!   infer      --load CK          — one forward-only inference pass
+//!                                   (--ep N shards experts over rank threads)
 //!   bench-gate --baseline B --current C — CI bench regression gate
+//!   check-docs                    — markdown relative-link check (CI docs job)
 //!   upcycle    --dense CK --model M — run checkpoint surgery, save sparse CK
 //!   eval       --model M --params CK — evaluate a checkpoint
 //!   fewshot    --model M --params CK — 10-shot linear probe (vision)
@@ -26,6 +31,7 @@ use sparse_upcycle::experiments::{registry, run_by_id, Ctx, ExpParams};
 use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::parallel::{place, MeshSpec};
 use sparse_upcycle::runtime::Runtime;
+use sparse_upcycle::serve;
 use sparse_upcycle::upcycle::{upcycle_opt_state, upcycle_params, UpcycleOptions};
 use sparse_upcycle::util::cli::Args;
 
@@ -56,6 +62,31 @@ fn params_from_args(a: &Args) -> Result<ExpParams> {
     p.eval_batches = a.usize("eval-batches", p.eval_batches)?;
     p.seed = a.u64("seed", p.seed)?;
     Ok(p)
+}
+
+/// Serving-side parameter loading: accept either a train-state bundle
+/// (`upcycle train --save`) or a params-only checkpoint, returning the
+/// bound parameters and the step they were trained to. Binds from the
+/// checkpoint the caller already read (no second disk pass).
+fn load_serving_params(
+    ck: &Checkpoint,
+    entry: &sparse_upcycle::manifest::ModelEntry,
+) -> Result<(Vec<sparse_upcycle::tensor::Tensor>, u64)> {
+    match sparse_upcycle::checkpoint::bind_train_state(ck, entry) {
+        Ok((params, _opt, step)) => Ok((params, step)),
+        Err(bundle_err) => {
+            // Not a train-state bundle — a params-only checkpoint also
+            // serves (inference never touches optimizer state). If neither
+            // binds, surface both failures: the params-only mismatch is
+            // usually the actionable one.
+            match sparse_upcycle::runtime::tensors_from_checkpoint(ck, &entry.params) {
+                Ok(p) => Ok((p, ck.step)),
+                Err(params_err) => Err(bundle_err.context(format!(
+                    "not loadable as a params-only checkpoint either ({params_err:#})"
+                ))),
+            }
+        }
+    }
 }
 
 fn run() -> Result<()> {
@@ -243,6 +274,109 @@ fn run() -> Result<()> {
             p.save(&pp)?;
             o.save(&op)?;
             println!("saved {} and {}", pp.display(), op.display());
+            if let Some(save) = a.flags.get("save") {
+                // One-file trained-checkpoint bundle: params + optimizer
+                // state + step. `upcycle serve`/`upcycle infer --load`
+                // consume it; loading it back resumes bitwise.
+                state.save(&model.entry, save, "cli train --save")?;
+                println!("saved train-state bundle {save} (step {})", state.step);
+            }
+            Ok(())
+        }
+        "infer" => {
+            let load = a.req("load")?.to_string();
+            let manifest = Manifest::load_or_native(&artifacts)?;
+            let header = Checkpoint::load(&load)?;
+            let model_name = a.str("model", &header.model);
+            let entry = manifest.model(&model_name)?.clone();
+            let runtime = Runtime::for_manifest(&manifest)?;
+            let model = runtime.load_model(&manifest, &model_name, &["eval"])?;
+            let (params, step) = load_serving_params(&header, &entry)?;
+            let n = a.usize("requests", 4)?.max(1);
+            let ep = a.usize("ep", 1)?.max(1);
+            let trace = serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, 0);
+            let inputs = serve::stack_inputs(&trace)?;
+            let out = serve::mesh_infer(&model, &params, &inputs, ep)?;
+            println!(
+                "{model_name} @ step {step}: {n} example(s){}",
+                if ep > 1 {
+                    format!(", experts sharded over {ep} expert-parallel rank(s)")
+                } else {
+                    String::new()
+                }
+            );
+            let preds = out.predictions.i32s()?;
+            let per = preds.len() / n;
+            for (i, (row, score)) in preds.chunks(per).zip(&out.scores).enumerate() {
+                println!("  request {i}: predictions {row:?}  score {score:.4}");
+            }
+            Ok(())
+        }
+        "serve" => {
+            let load = a.req("load")?.to_string();
+            let manifest = Manifest::load_or_native(&artifacts)?;
+            let header = Checkpoint::load(&load)?;
+            let model_name = a.str("model", &header.model);
+            let entry = manifest.model(&model_name)?.clone();
+            let runtime = Runtime::for_manifest(&manifest)?;
+            let model = runtime.load_model(&manifest, &model_name, &["eval"])?;
+            let (params, step) = load_serving_params(&header, &entry)?;
+            let n = a.usize("requests", 32)?;
+            let tpr = serve::tokens_per_request(&entry);
+            let cfg = serve::EngineConfig {
+                max_batch_tokens: a.usize("batch-tokens", 8 * tpr)?,
+                max_batch_requests: if a.bool("unbatched") { 1 } else { a.usize("max-batch", 0)? },
+                ..Default::default()
+            };
+            println!(
+                "serving {model_name} @ step {step}: {n} request(s), token budget {} \
+                 ({tpr} tokens/request){}",
+                cfg.max_batch_tokens,
+                if cfg.max_batch_requests == 1 { " [unbatched]" } else { "" }
+            );
+            let trace =
+                serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, a.u64("gap-us", 300)?);
+            let engine = serve::Engine::new(&model, &params, cfg)?;
+            let report = engine.run_trace(trace)?;
+            if a.bool("verbose") {
+                for b in &report.batches {
+                    println!(
+                        "  batch {:>3}: {:>3} request(s) {:>5} tokens  v[{}..{}]µs  exec {}",
+                        b.index,
+                        b.requests,
+                        b.tokens,
+                        b.start_us,
+                        b.finish_us,
+                        sparse_upcycle::util::bench::fmt_ns(b.wall_ns)
+                    );
+                }
+            }
+            let nb = report.batches.len().max(1);
+            println!("  {} micro-batch(es), mean {:.2} request(s)/batch", nb, n as f64 / nb as f64);
+            println!(
+                "  virtual latency: p50 {:.0} µs  p99 {:.0} µs",
+                report.p50_latency_us(),
+                report.p99_latency_us()
+            );
+            println!("  measured execution throughput: {:.1} tokens/s", report.tokens_per_s());
+            Ok(())
+        }
+        "check-docs" => {
+            let root = a.str("root", ".");
+            let files = sparse_upcycle::util::doclinks::doc_files(&root)?;
+            let dead = sparse_upcycle::util::doclinks::check_files(&files)?;
+            for d in &dead {
+                eprintln!(
+                    "dead link in {}: ({}) resolves to missing {}",
+                    d.file.display(),
+                    d.target,
+                    d.resolved.display()
+                );
+            }
+            if !dead.is_empty() {
+                bail!("{} dead relative link(s) across {} doc file(s)", dead.len(), files.len());
+            }
+            println!("doc links ok: {} file(s) checked, 0 dead relative links", files.len());
             Ok(())
         }
         "upcycle" => {
@@ -426,7 +560,7 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "\
-upcycle — Sparse Upcycling (ICLR 2023) training coordinator
+upcycle — Sparse Upcycling (ICLR 2023) training + serving coordinator
 
 USAGE:
   upcycle quickstart [--pretrain-steps N] [--extra-steps N]   # native demo
@@ -434,6 +568,11 @@ USAGE:
   upcycle experiment <id>|all [--pretrain-steps N] [--extra-steps N] [--seed S]
   upcycle train   --model <name> [--steps N] [--replicas N]   # data-parallel
                   [--mesh DxE [--serial-mesh]]   # expert-parallel DP×EP mesh
+                  [--save <ck.supc>]   # one-file train-state bundle
+  upcycle serve   --load <ck.supc> [--model <name>] [--requests N]
+                  [--batch-tokens T] [--max-batch N] [--unbatched]
+                  [--gap-us G] [--seed S]  # continuous-batching inference
+  upcycle infer   --load <ck.supc> [--model <name>] [--requests N] [--ep N]
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]
                   [--expert-noise σ] [--dense-opt <ck>] [--load-optimizer]
   upcycle eval    --model <name> --params <ck.supc>
@@ -442,10 +581,12 @@ USAGE:
   upcycle comms   --model <name> [--dp N] [--ep N] [--mp N] [--imbalance X]
   upcycle bench-gate --baseline <json> --current <json> [--tolerance-pct N]
                   [--update-baseline]  # fail on perf regression vs baseline
+  upcycle check-docs [--root DIR]     # markdown relative-link check
   upcycle report                      # aggregate results/*.json -> SUMMARY.md
   upcycle inspect --ck <file.supc> [--tensors]
 
-Common flags: --artifacts DIR (default artifacts/), --out DIR (default results/)";
+Full flag reference: docs/CLI.md. Common flags: --artifacts DIR (default
+artifacts/), --out DIR (default results/)";
 
 // The train()/Evaluator imports are exercised through Ctx methods; keep the
 // explicit names for doc discoverability.

@@ -218,6 +218,17 @@ impl ModelEntry {
         out
     }
 
+    /// The leading batch tensors that are pure model *inputs* — the
+    /// signature of the forward-only inference entry point
+    /// (`runtime::Executable::infer`). LM entries take
+    /// `[enc_tokens, dec_tokens]`; vision entries take `[images]`. The
+    /// remaining batch tensors (targets, labels, loss masks) exist only for
+    /// training/eval and are never required to serve.
+    pub fn infer_batch(&self) -> &[TensorSpec] {
+        let n = if self.family == "lm" { 2 } else { 1 };
+        &self.batch[..n.min(self.batch.len())]
+    }
+
     /// Total parameters held by MoE experts (sparse capacity).
     pub fn expert_param_count(&self) -> usize {
         self.params
@@ -406,6 +417,19 @@ mod tests {
             }
         }
         assert!(m.model("lm_tiny_dense").unwrap().moe_block_tags().is_empty());
+    }
+
+    /// The inference signature is the input prefix of the batch signature:
+    /// token streams for LM, images for vision — never targets or masks.
+    #[test]
+    fn infer_batch_selects_model_inputs() {
+        let m = Manifest::native();
+        let lm = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let names: Vec<&str> = lm.infer_batch().iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["enc_tokens", "dec_tokens"]);
+        let vit = m.model("vit_tiny_dense").unwrap();
+        let names: Vec<&str> = vit.infer_batch().iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["images"]);
     }
 
     #[test]

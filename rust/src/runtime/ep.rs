@@ -429,6 +429,44 @@ mod tests {
         assert!(unpack_combine(vec![Vec::new()], 1).is_err());
     }
 
+    /// The forward-only serving path through a 1-rank exchange must also
+    /// pin to the local arithmetic bitwise — inference reuses the same
+    /// dispatch → shard-compute → combine machinery with `want_cache`
+    /// false, so nothing may depend on the backward caches existing.
+    #[test]
+    fn single_rank_ep_matches_local_infer_bitwise() {
+        let manifest = Manifest::native();
+        let runtime = Runtime::new().unwrap();
+        let name = "lm_tiny_moe_e8_c2";
+        let entry = manifest.model(name).unwrap().clone();
+        let model = runtime.load_model(&manifest, name, &["eval"]).unwrap();
+        let params = crate::runtime::tensors_from_checkpoint(
+            &crate::init::init_params(&entry, 11).unwrap(),
+            &entry.params,
+        )
+        .unwrap();
+        let batch = crate::data::text::TextPipeline::new(
+            crate::data::text::HmmCorpus::new(
+                crate::data::text::HmmSpec {
+                    vocab_size: entry.config.vocab_size,
+                    ..Default::default()
+                },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            0,
+        )
+        .next_batch();
+        let local = model.infer(&params, &batch[..2]).unwrap();
+        let group = Arc::new(EpGroup::new(1));
+        let mut exch = EpRankExchange::new(&entry, &params, 0, group).unwrap();
+        let ep = model.infer_ep(&params, &batch[..2], &mut exch).unwrap();
+        assert_eq!(local, ep, "{name}: EP inference must match local bitwise");
+    }
+
     #[test]
     fn ep_exchange_requires_bind() {
         let manifest = Manifest::native();

@@ -10,7 +10,7 @@
 //!   `tensor::Tensor`, with an in-tree Adam optimizer. Needs **zero**
 //!   Python/XLA artifacts: model signatures come from the built-in zoo
 //!   (`manifest::zoo`).
-//! * [`pjrt`] (cargo feature `pjrt`, off by default): loads AOT-compiled HLO
+//! * `pjrt` (cargo feature `pjrt`, off by default): loads AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them through
 //!   PJRT. Tensors convert to device literals at this boundary only.
 //!
@@ -39,6 +39,17 @@ pub struct StepOutput {
     pub params: Vec<Tensor>,
     pub opt_state: Vec<Tensor>,
     pub metrics: Metrics,
+}
+
+/// Result of one forward-only inference call ([`Executable::infer`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferOutput {
+    /// Predicted ids: `[b, dec_len]` i32 for LM entries (argmax token per
+    /// decoder position), `[b]` i32 for vision entries (argmax class).
+    pub predictions: Tensor,
+    /// Per-example mean natural-log probability of the predicted ids — a
+    /// serving-side confidence score, one entry per batch row.
+    pub scores: Vec<f32>,
 }
 
 /// Where the grouped expert MLP of a MoE block executes.
@@ -139,6 +150,27 @@ pub trait Executable: Send + Sync {
     ) -> Result<(Metrics, Vec<Tensor>)> {
         bail!("this backend does not support expert-parallel execution")
     }
+
+    /// Forward-only inference: `inputs` follows the manifest's inference
+    /// signature ([`ModelEntry::infer_batch`] — no targets/labels/masks)
+    /// with any leading batch dim, and no backward or optimizer buffers
+    /// are ever allocated. The serving path (`serve::Engine`). Optional:
+    /// backends without a forward-only entry return an error.
+    fn infer(&self, _params: &[Tensor], _inputs: &[Tensor]) -> Result<InferOutput> {
+        bail!("this backend does not support forward-only inference")
+    }
+
+    /// [`Executable::infer`] with the expert MLP legs of every MoE block
+    /// executed by `exchange` — EP-sharded serving on a mesh
+    /// (`serve::mesh_infer`). Optional, like [`Executable::grads_ep`].
+    fn infer_ep(
+        &self,
+        _params: &[Tensor],
+        _inputs: &[Tensor],
+        _exchange: &mut dyn ExpertExchange,
+    ) -> Result<InferOutput> {
+        bail!("this backend does not support expert-parallel inference")
+    }
 }
 
 /// An execution backend: turns a manifest entry into an [`Executable`].
@@ -223,6 +255,57 @@ impl LoadedModel {
         exchange: &mut dyn ExpertExchange,
     ) -> Result<(Metrics, Vec<Tensor>)> {
         self.exec.grads_ep(params, batch, exchange)
+    }
+
+    /// Arity/dtype gate shared by the two inference entry points: `inputs`
+    /// must match the entry's inference signature tensor-for-tensor in
+    /// everything but the leading (batch) dim.
+    fn check_infer_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        let specs = self.entry.infer_batch();
+        if inputs.len() != specs.len() {
+            bail!(
+                "inference on `{}` takes {} input tensor(s) ({}), got {}",
+                self.entry.name,
+                specs.len(),
+                specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", "),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(specs) {
+            if t.shape.len() != spec.shape.len()
+                || t.shape[1..] != spec.shape[1..]
+                || t.dtype() != spec.dtype
+            {
+                bail!(
+                    "inference input `{}` must be {:?} {:?} with any batch dim, got {:?} {:?}",
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype(),
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward-only inference on `inputs` (the manifest inference
+    /// signature, any batch dim); see [`Executable::infer`].
+    pub fn infer(&self, params: &[Tensor], inputs: &[Tensor]) -> Result<InferOutput> {
+        self.check_infer_inputs(inputs)?;
+        self.exec.infer(params, inputs)
+    }
+
+    /// Forward-only inference with the expert MLP executed through
+    /// `exchange` (EP-sharded serving); see [`Executable::infer_ep`].
+    pub fn infer_ep(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        exchange: &mut dyn ExpertExchange,
+    ) -> Result<InferOutput> {
+        self.check_infer_inputs(inputs)?;
+        self.exec.infer_ep(params, inputs, exchange)
     }
 }
 
@@ -338,20 +421,13 @@ pub fn adam_update(
 }
 
 /// Bind a checkpoint's tensors (in manifest order) to a state vector.
+/// Delegates to the one spec-binding implementation
+/// (`checkpoint::bind_tensors`).
 pub fn tensors_from_checkpoint(
     ck: &crate::checkpoint::Checkpoint,
     specs: &[TensorSpec],
 ) -> Result<Vec<Tensor>> {
-    specs
-        .iter()
-        .map(|s| {
-            let t = ck.get(&s.name)?;
-            if t.shape != s.shape {
-                bail!("tensor `{}` shape {:?} != manifest {:?}", s.name, t.shape, s.shape);
-            }
-            Ok(t.clone())
-        })
-        .collect()
+    crate::checkpoint::bind_tensors(ck, specs)
 }
 
 /// Convert state tensors back into a named checkpoint.

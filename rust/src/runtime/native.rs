@@ -30,7 +30,7 @@
 //! **Split sparse step.** Every MoE block decomposes into router →
 //! dispatch → expert MLP → combine, and the expert-MLP leg is pluggable
 //! through [`crate::runtime::ExpertExchange`]: the default
-//! [`LocalExchange`] runs all experts in process (exactly the fused PR 2
+//! `LocalExchange` runs all experts in process (exactly the fused PR 2
 //! arithmetic), while `runtime::ep::EpRankExchange` ships each expert's
 //! token buffers to the expert-parallel rank owning that expert's weight
 //! shard and ships the outputs back (real all-to-all dispatch/combine).
@@ -66,7 +66,10 @@ use crate::tensor::Tensor;
 use crate::util::bench::phase;
 use crate::util::par_map;
 
-use super::{adam_update, Backend, Executable, ExpertExchange, LoadedModel, Metrics, StepOutput};
+use super::{
+    adam_update, Backend, Executable, ExpertExchange, InferOutput, LoadedModel, Metrics,
+    StepOutput,
+};
 
 /// Coefficient on the auxiliary load-balance loss (token-choice routers).
 pub const AUX_COEF: f32 = 1e-2;
@@ -1272,6 +1275,159 @@ impl NativeExec {
         Ok((metrics, Some(grads)))
     }
 
+    // -- forward-only inference -------------------------------------------
+
+    /// LM forward-only inference: `[enc_tokens, dec_tokens]` → argmax token
+    /// per decoder position + per-example mean log-probability of the
+    /// predicted tokens. `want_cache` stays false all the way down, so no
+    /// backward caches or optimizer buffers are ever allocated — this is
+    /// the serving-path memory footprint.
+    fn lm_infer(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        ex: &mut dyn ExpertExchange,
+    ) -> Result<InferOutput> {
+        let cfg = &self.entry.config;
+        let (d, v) = (cfg.d_model, cfg.vocab_size);
+        if inputs.len() != 2 {
+            bail!("lm inference inputs must be [enc_tokens, dec_tokens]");
+        }
+        let enc_tok = inputs[0].i32s().context("enc_tokens")?;
+        let dec_tok = inputs[1].i32s().context("dec_tokens")?;
+        let b = *inputs[0].shape.first().unwrap_or(&0);
+        let le = *inputs[0].shape.get(1).unwrap_or(&0);
+        let ld = *inputs[1].shape.get(1).unwrap_or(&0);
+        if b == 0 || le == 0 || ld == 0 || inputs[1].shape[0] != b {
+            bail!("malformed lm inference shapes");
+        }
+        let (ne, nd) = (b * le, b * ld);
+        let embed = self.pslice(params, "token_embed")?;
+        let wc = self.pslice(params, "dec/cross_w")?;
+        let gather = |toks: &[i32], n: usize| -> Result<Vec<f32>> {
+            let mut h = vec![0f32; n * d];
+            for (i, &t) in toks.iter().enumerate() {
+                let t = t as usize;
+                if t >= v {
+                    bail!("token id {t} out of vocab range {v}");
+                }
+                h[i * d..(i + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+            }
+            Ok(h)
+        };
+
+        // Encoder → cross context → decoder: a restatement of `lm_step`'s
+        // forward dataflow minus every cache and the loss bookkeeping —
+        // kept separate so the (bitwise-pinned) training path stays
+        // untouched; `infer_predictions_argmax_the_eval_distribution`
+        // pins the two dataflows to each other.
+        let mut h_enc = gather(enc_tok, ne)?;
+        self.tower_forward(params, &self.enc_blocks, &mut h_enc, ne, false, ex)?;
+        let mut c = vec![0f32; b * d];
+        for bi in 0..b {
+            for t in 0..le {
+                for ch in 0..d {
+                    c[bi * d + ch] += h_enc[(bi * le + t) * d + ch];
+                }
+            }
+            for ch in 0..d {
+                c[bi * d + ch] /= le as f32;
+            }
+        }
+        let mut hc = vec![0f32; b * d];
+        self.gemm.mm_nn(&c, wc, b, d, d, &mut hc);
+        let mut h_dec = gather(dec_tok, nd)?;
+        for bi in 0..b {
+            for t in 0..ld {
+                for ch in 0..d {
+                    h_dec[(bi * ld + t) * d + ch] += hc[bi * d + ch];
+                }
+            }
+        }
+        self.tower_forward(params, &self.dec_blocks, &mut h_dec, nd, false, ex)?;
+
+        // Tied-embedding logits → per-position argmax + log-probabilities.
+        let mut probs = vec![0f32; nd * v];
+        self.gemm.mm_nt_big(&h_dec, embed, nd, d, v, &mut probs);
+        softmax_rows(&mut probs, nd, v);
+        let mut preds = vec![0i32; nd];
+        let mut scores = vec![0f32; b];
+        for i in 0..nd {
+            let row = &probs[i * v..(i + 1) * v];
+            let mut am = 0usize;
+            for (j, &p) in row.iter().enumerate() {
+                if p > row[am] {
+                    am = j;
+                }
+            }
+            preds[i] = am as i32;
+            scores[i / ld] += row[am].max(1e-30).ln();
+        }
+        for sc in scores.iter_mut() {
+            *sc /= ld as f32;
+        }
+        Ok(InferOutput { predictions: Tensor::from_i32(&[b, ld], preds), scores })
+    }
+
+    /// Vision forward-only inference: `[images]` → argmax class +
+    /// per-example log-probability of the predicted class.
+    fn vit_infer(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        ex: &mut dyn ExpertExchange,
+    ) -> Result<InferOutput> {
+        let cfg = &self.entry.config;
+        let (d, nc) = (cfg.d_model, cfg.num_classes);
+        if inputs.len() != 1 {
+            bail!("vit inference inputs must be [images]");
+        }
+        let (pooled, _h, _pmat, _run, b, _np) = self.vit_trunk(params, &inputs[0], false, ex)?;
+        let wh = self.pslice(params, "head/w")?;
+        let mut probs = vec![0f32; b * nc];
+        self.gemm.mm_nn(&pooled, wh, b, d, nc, &mut probs);
+        softmax_rows(&mut probs, b, nc);
+        let mut preds = vec![0i32; b];
+        let mut scores = vec![0f32; b];
+        for bi in 0..b {
+            let row = &probs[bi * nc..(bi + 1) * nc];
+            let mut am = 0usize;
+            for (j, &p) in row.iter().enumerate() {
+                if p > row[am] {
+                    am = j;
+                }
+            }
+            preds[bi] = am as i32;
+            scores[bi] = row[am].max(1e-30).ln();
+        }
+        Ok(InferOutput { predictions: Tensor::from_i32(&[b], preds), scores })
+    }
+
+    /// Forward-only inference entry. `exchange` overrides where the expert
+    /// MLP executes (EP-sharded serving); `None` builds the in-process
+    /// [`LocalExchange`].
+    fn infer_impl(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        exchange: Option<&mut dyn ExpertExchange>,
+    ) -> Result<InferOutput> {
+        self.check_params(params)?;
+        let mut local = LocalExchange::new(self, params);
+        let ex: &mut dyn ExpertExchange = match exchange {
+            Some(e) => {
+                e.bind(self.gemm)?;
+                e
+            }
+            None => &mut local,
+        };
+        if self.entry.family == "lm" {
+            self.lm_infer(params, inputs, ex)
+        } else {
+            self.vit_infer(params, inputs, ex)
+        }
+    }
+
     /// Run one step. `exchange` overrides where the expert MLP executes
     /// (expert parallelism); `None` builds the in-process [`LocalExchange`].
     fn step(
@@ -1370,6 +1526,19 @@ impl Executable for NativeExec {
         let (metrics, grads) = self.step(params, batch, true, Some(exchange))?;
         let grads = grads.expect("grads requested");
         Ok((metrics, self.grads_to_tensors(grads)))
+    }
+
+    fn infer(&self, params: &[Tensor], inputs: &[Tensor]) -> Result<InferOutput> {
+        self.infer_impl(params, inputs, None)
+    }
+
+    fn infer_ep(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        exchange: &mut dyn ExpertExchange,
+    ) -> Result<InferOutput> {
+        self.infer_impl(params, inputs, Some(exchange))
     }
 }
 
@@ -1566,6 +1735,48 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Forward-only inference takes only the input tensors, is
+    /// deterministic, and returns well-formed predictions and scores —
+    /// across router families (EC and token choice).
+    #[test]
+    fn infer_runs_forward_only_and_is_deterministic() {
+        for (router, renorm) in [("ec", true), ("top2", false)] {
+            let (_entry, model, params, batch) = micro_model(router, renorm);
+            let out = model.infer(&params, &batch[..2]).unwrap();
+            assert_eq!(out.predictions.shape, vec![2, 2]);
+            assert_eq!(out.scores.len(), 2);
+            assert!(out.scores.iter().all(|sc| sc.is_finite() && *sc <= 0.0));
+            for &p in out.predictions.i32s().unwrap() {
+                assert!((0..8).contains(&p), "prediction {p} out of vocab");
+            }
+            let again = model.infer(&params, &batch[..2]).unwrap();
+            assert_eq!(out, again, "inference must be deterministic");
+            // Targets/masks are not part of the inference signature.
+            assert!(model.infer(&params, &batch).is_err());
+        }
+    }
+
+    /// The serving forward is pinned to the eval forward: feeding infer's
+    /// own predictions back as eval targets (mask all-ones) must score
+    /// exactly 100% accuracy — `lm_infer` re-states `lm_step`'s dataflow,
+    /// and if the two ever drift their argmaxes disagree and this fails.
+    #[test]
+    fn infer_predictions_argmax_the_eval_distribution() {
+        for (router, renorm) in [("ec", true), ("top2", true)] {
+            let (_entry, model, params, batch) = micro_model(router, renorm);
+            let out = model.infer(&params, &batch[..2]).unwrap();
+            let eval_batch = vec![
+                batch[0].clone(),
+                batch[1].clone(),
+                out.predictions.clone(),
+                Tensor::ones(&batch[1].shape),
+            ];
+            let m = model.eval_step(&params, &eval_batch).unwrap();
+            let acc = m["accuracy"];
+            assert_eq!(acc, 1.0, "[{router}] serving argmax must match the eval distribution");
         }
     }
 

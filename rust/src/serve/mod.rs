@@ -1,0 +1,680 @@
+//! Forward-only inference engine: a multi-threaded request scheduler with
+//! continuous (dynamic) batching over [`crate::runtime::Executable::infer`].
+//!
+//! **The serving model.** A [`Request`] is one example (every input tensor
+//! has leading dim 1) with a virtual arrival time on a fixed trace. The
+//! [`Engine`] plays a trace through a producer thread that delivers
+//! requests into a shared queue, while the scheduler thread admits waiting
+//! requests into the *next* micro-batch — FIFO, up to a token budget
+//! ([`EngineConfig::max_batch_tokens`]) and an optional request cap —
+//! stacks them along the batch dim, and executes one forward-only
+//! `infer` call per micro-batch. Requests that arrive while a batch is in
+//! service join the queue and are eligible for the following batch:
+//! continuous batching, not fixed-size batching.
+//!
+//! **Determinism contract** (spelled out in `docs/SERVING.md`): admission
+//! runs on a *virtual clock*. A micro-batch's service time is the
+//! deterministic model `service_base_us + service_per_token_us · tokens`,
+//! so batch composition, completion order and every virtual timestamp are
+//! a pure function of `(trace, EngineConfig)` — real thread scheduling
+//! affects only *when* a request crosses the queue, never *which batch* it
+//! lands in. Since the batch contents are deterministic and the backend is
+//! deterministic, the returned predictions are bitwise-reproducible run to
+//! run. Measured wall time appears only in [`BatchStat::wall_ns`] (the
+//! throughput numbers benches report), never in scheduling decisions. Note
+//! that batching itself changes MoE routing (capacity is computed over the
+//! co-batched tokens), exactly as on a real capacity-constrained server —
+//! the contract is "same trace ⇒ same outputs", not "outputs independent
+//! of co-batched traffic".
+//!
+//! Continuous batching, end to end:
+//!
+//! ```
+//! use sparse_upcycle::manifest::Manifest;
+//! use sparse_upcycle::runtime::Runtime;
+//! use sparse_upcycle::serve::{synthetic_trace, tokens_per_request, Engine, EngineConfig};
+//!
+//! let manifest = Manifest::native();
+//! let runtime = Runtime::new().unwrap();
+//! let model = runtime.load_model(&manifest, "lm_tiny_dense", &["eval"]).unwrap();
+//! let entry = model.entry.clone();
+//! let params = sparse_upcycle::runtime::tensors_from_checkpoint(
+//!     &sparse_upcycle::init::init_params(&entry, 0).unwrap(),
+//!     &entry.params,
+//! )
+//! .unwrap();
+//!
+//! // Four requests arriving at once; budget of two requests per micro-batch.
+//! let trace = synthetic_trace(&entry, 4, 7, 0);
+//! let cfg = EngineConfig {
+//!     max_batch_tokens: 2 * tokens_per_request(&entry),
+//!     ..EngineConfig::default()
+//! };
+//! let report = Engine::new(&model, &params, cfg).unwrap().run_trace(trace).unwrap();
+//! assert_eq!(report.completions.len(), 4);
+//! assert_eq!(report.batches.len(), 2); // two per micro-batch, FIFO
+//! assert!(report.batches.iter().all(|b| b.requests == 2));
+//! ```
+//!
+//! [`mesh_infer`] extends the same forward path across expert-parallel
+//! ranks: the batch shards over `ep` rank threads, each holding only its
+//! round-robin expert-weight shard (`runtime::ep::EpRankExchange`), token
+//! buffers crossing real all-to-all collectives — bitwise-identical to
+//! stepping the same shards serially with every expert local.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::shard_batch;
+use crate::manifest::ModelEntry;
+use crate::parallel::collectives::{EpGroup, EP_ABORTED_MSG};
+use crate::runtime::ep::{EpPayload, EpRankExchange};
+use crate::runtime::{InferOutput, LoadedModel};
+use crate::tensor::{Data, Tensor};
+use crate::util::bench::percentile;
+use crate::util::rng::Rng;
+
+/// One inference request: a single example (leading dim 1 on every input
+/// tensor, manifest inference order — [`ModelEntry::infer_batch`]) plus its
+/// virtual arrival time on the trace.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Virtual arrival time, microseconds since trace start (nondecreasing
+    /// across a trace).
+    pub arrival_us: u64,
+    pub inputs: Vec<Tensor>,
+}
+
+/// Scheduling knobs of one [`Engine`]. All times are virtual microseconds
+/// (see the module docs for the determinism contract).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Token budget per micro-batch. A single request whose cost exceeds
+    /// the budget is still admitted — alone — so no request can starve.
+    pub max_batch_tokens: usize,
+    /// Request cap per micro-batch (0 = unlimited; 1 = unbatched serving).
+    pub max_batch_requests: usize,
+    /// Virtual service-time model: a micro-batch of `t` tokens occupies the
+    /// engine for `service_base_us + service_per_token_us · t`.
+    pub service_base_us: u64,
+    pub service_per_token_us: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            max_batch_tokens: 4096,
+            max_batch_requests: 0,
+            service_base_us: 200,
+            service_per_token_us: 2,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// One request per micro-batch — the no-batching reference the bench
+    /// compares continuous batching against on the same trace.
+    pub fn unbatched() -> EngineConfig {
+        EngineConfig { max_batch_requests: 1, ..EngineConfig::default() }
+    }
+}
+
+/// One served request: virtual timeline plus the model output row.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub arrival_us: u64,
+    /// Virtual start of the micro-batch that served this request.
+    pub start_us: u64,
+    /// Virtual completion time (`start + service`).
+    pub finish_us: u64,
+    /// Index into [`ServeReport::batches`].
+    pub batch_index: usize,
+    /// This request's prediction row (leading dim 1).
+    pub predictions: Tensor,
+    /// Mean log-probability of the predicted ids (serving confidence).
+    pub score: f32,
+}
+
+impl Completion {
+    /// Queueing + service latency on the virtual clock.
+    pub fn latency_us(&self) -> u64 {
+        self.finish_us - self.arrival_us
+    }
+}
+
+/// One executed micro-batch.
+#[derive(Debug, Clone)]
+pub struct BatchStat {
+    pub index: usize,
+    pub requests: usize,
+    pub tokens: usize,
+    pub start_us: u64,
+    pub finish_us: u64,
+    /// Measured wall time of the `infer` call (reporting only — never used
+    /// for scheduling).
+    pub wall_ns: f64,
+}
+
+/// Everything one trace run produced: per-request completions (trace
+/// order) and per-micro-batch stats.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub batches: Vec<BatchStat>,
+}
+
+impl ServeReport {
+    pub fn latencies_us(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.latency_us() as f64).collect()
+    }
+
+    pub fn p50_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us(), 50.0)
+    }
+
+    pub fn p99_latency_us(&self) -> f64 {
+        percentile(&self.latencies_us(), 99.0)
+    }
+
+    /// Tokens executed across all micro-batches.
+    pub fn total_tokens(&self) -> usize {
+        self.batches.iter().map(|b| b.tokens).sum()
+    }
+
+    /// Total measured execution wall time across micro-batches.
+    pub fn exec_wall_ns(&self) -> f64 {
+        self.batches.iter().map(|b| b.wall_ns).sum()
+    }
+
+    /// Measured execution throughput: tokens per second of `infer` wall
+    /// time (the batched-vs-unbatched comparison number).
+    pub fn tokens_per_s(&self) -> f64 {
+        let wall = self.exec_wall_ns();
+        if wall > 0.0 {
+            self.total_tokens() as f64 * 1e9 / wall
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Token cost of one request against the batch budget: the tokens one
+/// example pushes through the towers (`enc_len + dec_len` for LM entries,
+/// the patch count for vision).
+pub fn tokens_per_request(entry: &ModelEntry) -> usize {
+    let c = &entry.config;
+    if entry.family == "lm" {
+        c.enc_len + c.dec_len
+    } else {
+        (c.image_size / c.patch_size.max(1)).pow(2)
+    }
+}
+
+/// Stack per-request inputs (leading dim 1 each) into one batch along the
+/// leading dim, position by position, validating shape agreement.
+pub fn stack_inputs(reqs: &[Request]) -> Result<Vec<Tensor>> {
+    let first = reqs.first().context("cannot stack an empty micro-batch")?;
+    let mut out = Vec::with_capacity(first.inputs.len());
+    for i in 0..first.inputs.len() {
+        let proto = &first.inputs[i];
+        if proto.shape.first() != Some(&1) {
+            bail!("request {} input {i} must have leading dim 1, got {:?}", first.id, proto.shape);
+        }
+        let mut shape = proto.shape.clone();
+        shape[0] = reqs.len();
+        let check = |r: &Request| -> Result<()> {
+            let t = r
+                .inputs
+                .get(i)
+                .with_context(|| format!("request {} is missing input {i}", r.id))?;
+            if t.shape != proto.shape || t.dtype() != proto.dtype() {
+                bail!(
+                    "request {} input {i} is {:?} {:?}, batch peer has {:?} {:?}",
+                    r.id,
+                    t.dtype(),
+                    t.shape,
+                    proto.dtype(),
+                    proto.shape
+                );
+            }
+            Ok(())
+        };
+        match &proto.data {
+            Data::I32(_) => {
+                let mut data = Vec::with_capacity(reqs.len() * proto.numel());
+                for r in reqs {
+                    check(r)?;
+                    data.extend_from_slice(r.inputs[i].i32s()?);
+                }
+                out.push(Tensor::from_i32(&shape, data));
+            }
+            Data::F32(_) => {
+                let mut data = Vec::with_capacity(reqs.len() * proto.numel());
+                for r in reqs {
+                    check(r)?;
+                    data.extend_from_slice(r.inputs[i].f32s()?);
+                }
+                out.push(Tensor::from_f32(&shape, data));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Row `row` of a batched prediction tensor, as a leading-dim-1 tensor.
+fn prediction_row(t: &Tensor, row: usize) -> Result<Tensor> {
+    let b = *t.shape.first().context("prediction tensor has no batch dim")?;
+    if row >= b {
+        bail!("prediction row {row} out of range {b}");
+    }
+    let per = t.numel() / b;
+    let mut shape = t.shape.clone();
+    shape[0] = 1;
+    Ok(Tensor::from_i32(&shape, t.i32s()?[row * per..(row + 1) * per].to_vec()))
+}
+
+/// A deterministic synthetic arrival trace: `n` single-example requests
+/// drawn from the model's synthetic data pipeline (seeded), arriving
+/// `gap_us` apart on average with deterministic ±50% jitter (`gap_us = 0`
+/// is a burst: everything arrives at t = 0).
+pub fn synthetic_trace(entry: &ModelEntry, n: usize, seed: u64, gap_us: u64) -> Vec<Request> {
+    let mut rng = Rng::with_stream(seed, 0x5e7e);
+    let mut arrival = 0u64;
+    let mut out = Vec::with_capacity(n);
+    let k = entry.infer_batch().len();
+    if entry.family == "lm" {
+        let mut pipe = crate::data::text::TextPipeline::new(
+            crate::data::text::HmmCorpus::new(
+                crate::data::text::HmmSpec {
+                    vocab_size: entry.config.vocab_size,
+                    ..Default::default()
+                },
+                seed,
+            ),
+            1,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            seed,
+            0,
+        );
+        for id in 0..n {
+            let inputs: Vec<Tensor> = pipe.next_batch().into_iter().take(k).collect();
+            out.push(Request { id: id as u64, arrival_us: arrival, inputs });
+            if gap_us > 0 {
+                arrival += gap_us / 2 + rng.below(gap_us as usize + 1) as u64;
+            }
+        }
+    } else {
+        let spec = crate::data::vision::VisionSpec {
+            image_size: entry.config.image_size,
+            ..Default::default()
+        };
+        let mut pipe = crate::data::vision::VisionPipeline::new(spec, 1, seed, 0);
+        for id in 0..n {
+            let inputs: Vec<Tensor> = pipe.next_batch().0.into_iter().take(k).collect();
+            out.push(Request { id: id as u64, arrival_us: arrival, inputs });
+            if gap_us > 0 {
+                arrival += gap_us / 2 + rng.below(gap_us as usize + 1) as u64;
+            }
+        }
+    }
+    out
+}
+
+/// The inference engine: owns the scheduling policy, borrows the loaded
+/// model and its (trained) parameters. See the module docs for semantics.
+pub struct Engine<'m> {
+    model: &'m LoadedModel,
+    params: &'m [Tensor],
+    cfg: EngineConfig,
+}
+
+impl<'m> Engine<'m> {
+    pub fn new(
+        model: &'m LoadedModel,
+        params: &'m [Tensor],
+        cfg: EngineConfig,
+    ) -> Result<Engine<'m>> {
+        if cfg.max_batch_tokens == 0 {
+            bail!("max_batch_tokens must be >= 1");
+        }
+        Ok(Engine { model, params, cfg })
+    }
+
+    /// Play `trace` through the engine: a producer thread delivers requests
+    /// in arrival order while this thread schedules and executes
+    /// micro-batches. Returns one completion per request (trace order).
+    /// An empty trace returns an empty report.
+    pub fn run_trace(&self, trace: Vec<Request>) -> Result<ServeReport> {
+        if trace.windows(2).any(|w| w[0].arrival_us > w[1].arrival_us) {
+            bail!("trace arrivals must be nondecreasing");
+        }
+        let arrivals: Vec<u64> = trace.iter().map(|r| r.arrival_us).collect();
+        let n = arrivals.len();
+        if n == 0 {
+            return Ok(ServeReport { completions: Vec::new(), batches: Vec::new() });
+        }
+        let tpr = tokens_per_request(&self.model.entry).max(1);
+        let queue: Mutex<VecDeque<Request>> = Mutex::new(VecDeque::new());
+        let delivered = Condvar::new();
+
+        std::thread::scope(|scope| -> Result<ServeReport> {
+            // Producer: deliver requests in trace order. It never blocks,
+            // so a scheduler-side error can never deadlock the scope.
+            scope.spawn(|| {
+                for req in trace {
+                    queue.lock().expect("serve queue").push_back(req);
+                    delivered.notify_all();
+                }
+            });
+
+            // Scheduler: virtual clock + continuous admission.
+            let mut pending: VecDeque<Request> = VecDeque::new();
+            let mut taken = 0usize; // pulled off the shared queue
+            let mut admitted = 0usize; // dispatched into micro-batches
+            let mut v_now = 0u64;
+            let mut completions = Vec::with_capacity(n);
+            let mut batches = Vec::new();
+            while admitted < n {
+                // Idle: jump the virtual clock to the next arrival.
+                if arrivals[admitted] > v_now {
+                    v_now = arrivals[admitted];
+                }
+                // Everything that has virtually arrived must be in hand
+                // before composing the batch (determinism: composition
+                // depends on the trace, not on thread timing).
+                let due = arrivals.partition_point(|&a| a <= v_now);
+                while taken < due {
+                    let mut q = queue.lock().expect("serve queue");
+                    while q.is_empty() {
+                        q = delivered.wait(q).expect("serve queue");
+                    }
+                    while let Some(r) = q.pop_front() {
+                        pending.push_back(r);
+                        taken += 1;
+                    }
+                }
+                // Admit FIFO up to the token budget / request cap. The
+                // first request always fits: an oversized request runs as a
+                // batch of one rather than starving.
+                let mut batch_reqs: Vec<Request> = Vec::new();
+                let mut tokens = 0usize;
+                while let Some(front) = pending.front() {
+                    if front.arrival_us > v_now {
+                        break;
+                    }
+                    let full = tokens + tpr > self.cfg.max_batch_tokens
+                        || (self.cfg.max_batch_requests > 0
+                            && batch_reqs.len() >= self.cfg.max_batch_requests);
+                    if !batch_reqs.is_empty() && full {
+                        break;
+                    }
+                    batch_reqs.push(pending.pop_front().expect("front checked"));
+                    tokens += tpr;
+                }
+                debug_assert!(!batch_reqs.is_empty());
+
+                let inputs = stack_inputs(&batch_reqs)?;
+                let t0 = Instant::now();
+                let out = self.model.infer(self.params, &inputs)?;
+                let wall_ns = t0.elapsed().as_nanos() as f64;
+                let service =
+                    self.cfg.service_base_us + self.cfg.service_per_token_us * tokens as u64;
+                let (start, finish) = (v_now, v_now + service);
+                v_now = finish;
+                let index = batches.len();
+                for (row, req) in batch_reqs.iter().enumerate() {
+                    completions.push(Completion {
+                        id: req.id,
+                        arrival_us: req.arrival_us,
+                        start_us: start,
+                        finish_us: finish,
+                        batch_index: index,
+                        predictions: prediction_row(&out.predictions, row)?,
+                        score: out.scores[row],
+                    });
+                }
+                batches.push(BatchStat {
+                    index,
+                    requests: batch_reqs.len(),
+                    tokens,
+                    start_us: start,
+                    finish_us: finish,
+                    wall_ns,
+                });
+                admitted += batch_reqs.len();
+            }
+            Ok(ServeReport { completions, batches })
+        })
+    }
+}
+
+/// EP-sharded inference on one batch: shard `inputs` into `ep` contiguous
+/// example shards (one expert-parallel rank thread each, like a `1xE`
+/// mesh), run each shard's forward with the expert weights sharded
+/// round-robin over the group ([`EpRankExchange`]) and token buffers
+/// moving through real all-to-all collectives, then concatenate the
+/// per-rank outputs in rank order.
+///
+/// Determinism: bitwise-identical to running the same shards serially with
+/// every expert local (each rank's rows see exactly the arithmetic the
+/// local path performs — forward is row-independent and nothing about an
+/// expert's computation depends on *where* it runs). Asserted by this
+/// module's tests.
+pub fn mesh_infer(
+    model: &LoadedModel,
+    params: &[Tensor],
+    inputs: &[Tensor],
+    ep: usize,
+) -> Result<InferOutput> {
+    let ep = ep.max(1);
+    if ep == 1 {
+        return model.infer(params, inputs);
+    }
+    let shards = shard_batch(inputs, ep)?;
+    let group: Arc<EpGroup<EpPayload>> = Arc::new(EpGroup::new(ep));
+    let results: Vec<Result<InferOutput>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ep);
+        for (rank, shard) in shards.iter().enumerate() {
+            let group = group.clone();
+            handles.push(s.spawn(move || {
+                let body = || -> Result<InferOutput> {
+                    crate::util::serial_compute(|| {
+                        let mut exch =
+                            EpRankExchange::new(&model.entry, params, rank, group.clone())?;
+                        model.infer_ep(params, shard, &mut exch)
+                    })
+                };
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+                match out {
+                    Ok(res) => {
+                        if res.is_err() {
+                            group.abort();
+                        }
+                        res
+                    }
+                    Err(_) => {
+                        group.abort();
+                        Err(anyhow!("inference rank panicked"))
+                    }
+                }
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("inference rank thread died"))))
+            .collect()
+    });
+    // Prefer the root cause over "collective aborted" echoes from peers.
+    let mut outs = Vec::with_capacity(ep);
+    let mut root_cause: Option<anyhow::Error> = None;
+    let mut first_abort: Option<anyhow::Error> = None;
+    for (r, res) in results.into_iter().enumerate() {
+        match res {
+            Ok(v) => outs.push(v),
+            Err(e) => {
+                let e = e.context(format!("inference rank {r} of {ep}"));
+                if format!("{e:#}").contains(EP_ABORTED_MSG) {
+                    if first_abort.is_none() {
+                        first_abort = Some(e);
+                    }
+                } else if root_cause.is_none() {
+                    root_cause = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = root_cause.or(first_abort) {
+        return Err(e);
+    }
+    let mut shape = outs[0].predictions.shape.clone();
+    shape[0] = outs.iter().map(|o| o.predictions.shape[0]).sum();
+    let mut data = Vec::new();
+    let mut scores = Vec::new();
+    for o in &outs {
+        data.extend_from_slice(o.predictions.i32s()?);
+        scores.extend_from_slice(&o.scores);
+    }
+    Ok(InferOutput { predictions: Tensor::from_i32(&shape, data), scores })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::init::init_params;
+    use crate::manifest::Manifest;
+    use crate::runtime::{tensors_from_checkpoint, Runtime};
+
+    fn setup(name: &str) -> (ModelEntry, LoadedModel, Vec<Tensor>) {
+        let manifest = Manifest::native();
+        let runtime = Runtime::new().unwrap();
+        let entry = manifest.model(name).unwrap().clone();
+        let model = runtime.load_model(&manifest, name, &["eval"]).unwrap();
+        let params =
+            tensors_from_checkpoint(&init_params(&entry, 5).unwrap(), &entry.params).unwrap();
+        (entry, model, params)
+    }
+
+    /// An empty trace terminates immediately with an empty report — the
+    /// scheduler must not block waiting for arrivals that never come.
+    #[test]
+    fn empty_trace_completes_empty() {
+        let (_entry, model, params) = setup("lm_tiny_dense");
+        let engine = Engine::new(&model, &params, EngineConfig::default()).unwrap();
+        let report = engine.run_trace(Vec::new()).unwrap();
+        assert!(report.completions.is_empty());
+        assert!(report.batches.is_empty());
+        assert_eq!(report.tokens_per_s(), 0.0);
+    }
+
+    /// A request costing more than the whole token budget still runs —
+    /// alone — instead of starving the queue behind it.
+    #[test]
+    fn oversized_request_is_admitted_alone() {
+        let (entry, model, params) = setup("lm_tiny_dense");
+        let cfg = EngineConfig { max_batch_tokens: 1, ..EngineConfig::default() };
+        assert!(tokens_per_request(&entry) > 1);
+        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let report = engine.run_trace(synthetic_trace(&entry, 3, 1, 0)).unwrap();
+        assert_eq!(report.completions.len(), 3);
+        assert_eq!(report.batches.len(), 3, "every oversized request runs as a batch of one");
+        assert!(report.batches.iter().all(|b| b.requests == 1));
+    }
+
+    /// Saturation: a burst far deeper than the budget drains FIFO in
+    /// budget-sized micro-batches, and queueing delay accumulates.
+    #[test]
+    fn saturated_queue_drains_fifo_within_budget() {
+        let (entry, model, params) = setup("lm_tiny_dense");
+        let tpr = tokens_per_request(&entry);
+        let cfg = EngineConfig { max_batch_tokens: 2 * tpr, ..EngineConfig::default() };
+        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let report = engine.run_trace(synthetic_trace(&entry, 9, 2, 0)).unwrap();
+        assert_eq!(report.completions.len(), 9);
+        assert_eq!(report.batches.len(), 5, "9 requests / budget 2 = 5 micro-batches");
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..9).collect::<Vec<_>>(), "FIFO admission");
+        // Later arrivals wait longer: latency is nondecreasing in a burst.
+        let lat: Vec<u64> = report.completions.iter().map(|c| c.latency_us()).collect();
+        assert!(lat.windows(2).all(|w| w[0] <= w[1]), "{lat:?}");
+        assert!(report.p99_latency_us() >= report.p50_latency_us());
+    }
+
+    /// Requests arriving while a batch is in service join the *next*
+    /// micro-batch (continuous batching), and composition follows the
+    /// virtual clock exactly.
+    #[test]
+    fn late_arrivals_join_the_next_batch() {
+        let (entry, model, params) = setup("lm_tiny_dense");
+        let mut trace = synthetic_trace(&entry, 3, 3, 0);
+        trace[1].arrival_us = 10;
+        trace[2].arrival_us = 20;
+        let cfg = EngineConfig {
+            max_batch_tokens: 100 * tokens_per_request(&entry),
+            service_base_us: 100,
+            service_per_token_us: 0,
+            ..EngineConfig::default()
+        };
+        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let report = engine.run_trace(trace).unwrap();
+        // t=0: only request 0 has arrived → batch [0], finishes at 100.
+        // t=100: requests 1 and 2 arrived during service → batch [1, 2].
+        assert_eq!(report.batches.len(), 2);
+        assert_eq!(report.batches[0].requests, 1);
+        assert_eq!(report.batches[1].requests, 2);
+        assert_eq!(report.batches[1].start_us, 100);
+        let by_batch: Vec<usize> = report.completions.iter().map(|c| c.batch_index).collect();
+        assert_eq!(by_batch, vec![0, 1, 1]);
+    }
+
+    /// The whole run is deterministic given the trace: identical batch
+    /// composition, virtual timestamps, and bitwise-identical predictions.
+    #[test]
+    fn run_is_deterministic_given_the_trace() {
+        let (entry, model, params) = setup("lm_tiny_moe_e8_c2");
+        let tpr = tokens_per_request(&entry);
+        let cfg = EngineConfig { max_batch_tokens: 4 * tpr, ..EngineConfig::default() };
+        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let a = engine.run_trace(synthetic_trace(&entry, 8, 11, 500)).unwrap();
+        let b = engine.run_trace(synthetic_trace(&entry, 8, 11, 500)).unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            let xa = (x.id, x.start_us, x.finish_us, x.batch_index);
+            let ya = (y.id, y.start_us, y.finish_us, y.batch_index);
+            assert_eq!(xa, ya, "virtual timeline must be deterministic");
+            assert_eq!(x.predictions, y.predictions, "request {} output must be bitwise", x.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        // Out-of-order traces are rejected loudly.
+        let mut bad = synthetic_trace(&entry, 2, 1, 100);
+        bad[0].arrival_us = bad[1].arrival_us + 1;
+        assert!(engine.run_trace(bad).is_err());
+    }
+
+    /// EP-sharded inference (2 rank threads, sharded expert weights, real
+    /// all-to-all) is bitwise-identical to the same shards run serially
+    /// with all experts local — the serving side of the mesh contract.
+    #[test]
+    fn mesh_infer_matches_serial_shards_bitwise() {
+        let (entry, model, params) = setup("lm_tiny_moe_e8_c2");
+        let trace = synthetic_trace(&entry, 4, 13, 0);
+        let inputs = stack_inputs(&trace).unwrap();
+        let ep_out = mesh_infer(&model, &params, &inputs, 2).unwrap();
+        let shards = shard_batch(&inputs, 2).unwrap();
+        let mut preds = Vec::new();
+        let mut scores = Vec::new();
+        for shard in &shards {
+            let o = model.infer(&params, shard).unwrap();
+            preds.extend_from_slice(o.predictions.i32s().unwrap());
+            scores.extend_from_slice(&o.scores);
+        }
+        assert_eq!(ep_out.predictions.i32s().unwrap(), &preds[..]);
+        assert_eq!(ep_out.scores, scores);
+        assert_eq!(ep_out.predictions.shape[0], 4);
+    }
+}

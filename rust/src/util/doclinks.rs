@@ -1,0 +1,160 @@
+//! Relative-link checker for the repo's markdown docs, behind `upcycle
+//! check-docs` (mirrored by `make docs` and the blocking CI docs job).
+//!
+//! Scans markdown files for inline links and images — `[text](target)` —
+//! and verifies that every *relative* target resolves to an existing file
+//! or directory next to the document. External schemes (`http://`,
+//! `https://`, `mailto:`) and pure in-page anchors (`#…`) are skipped; a
+//! `path#anchor` target is checked for its file part only. Fenced code
+//! blocks are ignored so `arr[i](x)`-shaped code in examples cannot
+//! false-positive.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One broken link: the document it appears in, the raw target, and the
+/// path it resolved to (which does not exist).
+#[derive(Debug)]
+pub struct DeadLink {
+    pub file: PathBuf,
+    pub target: String,
+    pub resolved: PathBuf,
+}
+
+fn is_external(target: &str) -> bool {
+    target.starts_with("http://")
+        || target.starts_with("https://")
+        || target.starts_with("mailto:")
+        || target.starts_with('#')
+}
+
+/// Inline markdown link targets of `text`, in order, skipping fenced code
+/// blocks. A ` "title"` suffix inside the parentheses is dropped.
+pub fn link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence {
+            continue;
+        }
+        let bytes = line.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b']' && bytes[i + 1] == b'(' {
+                let start = i + 2;
+                if let Some(len) = line[start..].find(')') {
+                    let target = line[start..start + len].split_whitespace().next().unwrap_or("");
+                    if !target.is_empty() {
+                        out.push(target.to_string());
+                    }
+                    i = start + len + 1;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Check every relative link in `files`, returning the dead ones (an empty
+/// vec means the doc set is link-clean).
+pub fn check_files(files: &[PathBuf]) -> Result<Vec<DeadLink>> {
+    let mut dead = Vec::new();
+    for f in files {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f:?}"))?;
+        let dir = f.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+        for target in link_targets(&text) {
+            if is_external(&target) {
+                continue;
+            }
+            let file_part = target.split('#').next().unwrap_or("");
+            if file_part.is_empty() {
+                continue;
+            }
+            let resolved = dir.join(file_part);
+            if !resolved.exists() {
+                dead.push(DeadLink { file: f.clone(), target: target.clone(), resolved });
+            }
+        }
+    }
+    Ok(dead)
+}
+
+/// The repo's checked documentation set: `README.md` plus every
+/// `docs/*.md` under `root`, sorted for stable reporting.
+pub fn doc_files(root: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+    let root = root.as_ref();
+    let mut files = Vec::new();
+    let readme = root.join("README.md");
+    if readme.exists() {
+        files.push(readme);
+    }
+    let docs = root.join("docs");
+    if docs.is_dir() {
+        let mut md: Vec<PathBuf> = std::fs::read_dir(&docs)
+            .with_context(|| format!("reading {docs:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|x| x == "md").unwrap_or(false))
+            .collect();
+        md.sort();
+        files.extend(md);
+    }
+    if files.is_empty() {
+        bail!("no markdown docs found under {root:?} (need README.md or docs/*.md)");
+    }
+    Ok(files)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_targets_outside_fences() {
+        let md = "\
+see [a](docs/a.md) and ![img](img.png \"title\")\n\
+```\nlet x = v[i](j); // not a link\n```\n\
+[anchor](#section) [ext](https://example.com) [both](b.md#top)\n";
+        let targets = link_targets(md);
+        let want = vec!["docs/a.md", "img.png", "#section", "https://example.com", "b.md#top"];
+        assert_eq!(targets, want);
+    }
+
+    #[test]
+    fn flags_dead_relative_links_only() {
+        let dir = std::env::temp_dir().join("supc_doclinks");
+        std::fs::create_dir_all(dir.join("docs")).unwrap();
+        std::fs::write(dir.join("docs/real.md"), "present").unwrap();
+        let f = dir.join("README.md");
+        let body = "[ok](docs/real.md) [anchor ok](docs/real.md#x) [http](https://x.y) \
+                    [gone](docs/missing.md)";
+        std::fs::write(&f, body).unwrap();
+        let dead = check_files(&[f.clone()]).unwrap();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].target, "docs/missing.md");
+        assert_eq!(dead[0].file, f);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn doc_files_finds_readme_and_docs() {
+        let dir = std::env::temp_dir().join("supc_doclinks_set");
+        std::fs::create_dir_all(dir.join("docs")).unwrap();
+        std::fs::write(dir.join("README.md"), "").unwrap();
+        std::fs::write(dir.join("docs/B.md"), "").unwrap();
+        std::fs::write(dir.join("docs/A.md"), "").unwrap();
+        std::fs::write(dir.join("docs/notes.txt"), "").unwrap();
+        let files = doc_files(&dir).unwrap();
+        let names: Vec<String> =
+            files.iter().map(|p| p.file_name().unwrap().to_string_lossy().into_owned()).collect();
+        assert_eq!(names, vec!["README.md", "A.md", "B.md"]);
+        assert!(doc_files(std::env::temp_dir().join("supc_doclinks_none")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,9 +1,10 @@
 //! In-tree utility substrates (this environment has no network registry, so
-//! JSON, RNG, CLI parsing, the bench harness and the scoped-thread map are
-//! implemented here).
+//! JSON, RNG, CLI parsing, the bench harness, the markdown link checker and
+//! the scoped-thread map are implemented here).
 
 pub mod bench;
 pub mod cli;
+pub mod doclinks;
 pub mod json;
 pub mod rng;
 

@@ -1,5 +1,5 @@
 //! Integration tests: the full stack — manifest → backend → surgery →
-//! train/eval.
+//! train/eval → save → serve.
 //!
 //! The default build exercises the **native CPU backend** end-to-end on the
 //! built-in model zoo: dense pretraining, checkpoint round-trip, upcycling
@@ -252,6 +252,68 @@ fn native_vision_stack() {
     let feats = model.features(&state.params, &batch[0]).unwrap();
     assert_eq!(feats.shape, vec![entry.config.batch_size, entry.config.d_model]);
     assert!(feats.f32s().unwrap().iter().all(|v| v.is_finite()));
+}
+
+/// The full train → save → serve loop (the CLI's `upcycle train --save ck
+/// && upcycle serve --load ck` path): train a sparse model briefly,
+/// persist the trained state as a one-file bundle, reload it, and serve —
+/// with the reloaded parameters producing bitwise-identical predictions
+/// to the live ones, locally and through the continuous-batching engine.
+#[test]
+fn native_train_save_serve_stack() {
+    use sparse_upcycle::serve::{
+        stack_inputs, synthetic_trace, tokens_per_request, Engine, EngineConfig,
+    };
+    let manifest = Manifest::native();
+    let runtime = Runtime::new().unwrap();
+    let entry = manifest.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let model = runtime.load_model(&manifest, "lm_tiny_moe_e8_c2", &["train", "eval"]).unwrap();
+    let mut state = TrainState::from_checkpoints(
+        &entry,
+        &init_params(&entry, 21).unwrap(),
+        &init_opt_state(&entry).unwrap(),
+    )
+    .unwrap();
+    let mut pipe = lm_pipeline(&entry, 7);
+    for i in 1..=3u64 {
+        let b = pipe.next_batch();
+        let out = model
+            .train_step(
+                std::mem::take(&mut state.params),
+                std::mem::take(&mut state.opt_state),
+                &b,
+                1e-3,
+                0.0,
+                i,
+            )
+            .unwrap();
+        state.params = out.params;
+        state.opt_state = out.opt_state;
+        state.step = i;
+    }
+    let path = std::env::temp_dir().join("supc_integration").join("served.supc");
+    state.save(&entry, &path, "integration").unwrap();
+    let loaded = TrainState::load(&entry, &path).unwrap();
+    assert_eq!(loaded.step, 3, "bundle must carry the step counter");
+
+    // Live and reloaded parameters answer identically.
+    let trace = synthetic_trace(&entry, 4, 5, 0);
+    let inputs = stack_inputs(&trace).unwrap();
+    let live = model.infer(&state.params, &inputs).unwrap();
+    let warm = model.infer(&loaded.params, &inputs).unwrap();
+    assert_eq!(live, warm, "reloaded checkpoint must serve bitwise-identical outputs");
+
+    // And the engine serves a trace off the reloaded state end to end.
+    let cfg = EngineConfig {
+        max_batch_tokens: 2 * tokens_per_request(&entry),
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(&model, &loaded.params, cfg).unwrap();
+    let report = engine.run_trace(synthetic_trace(&entry, 6, 5, 200)).unwrap();
+    assert_eq!(report.completions.len(), 6);
+    assert!(report.tokens_per_s() > 0.0);
+    assert!(report.p99_latency_us() >= report.p50_latency_us());
+    std::fs::remove_file(&path).ok();
 }
 
 /// The PJRT variant of the full stack. Requires `--features pjrt` AND real
