@@ -3,17 +3,23 @@
 # `make verify` mirrors .github/workflows/ci.yml exactly: if it is green
 # here, CI is green.
 
-.PHONY: verify build test docs bench-compile bench-json bench-gate bench-baseline \
-        check-features fmt fmt-check clippy quickstart mesh-smoke serve-smoke artifacts clean
+.PHONY: verify build test test-release docs bench-compile bench-json bench-gate bench-baseline \
+        check-features fmt fmt-check clippy quickstart mesh-smoke serve-smoke chaos-smoke \
+        artifacts clean
 
-verify: build test fmt-check clippy docs bench-compile bench-json bench-gate check-features \
-        quickstart mesh-smoke serve-smoke
+verify: build test test-release fmt-check clippy docs bench-compile bench-json bench-gate \
+        check-features quickstart mesh-smoke serve-smoke chaos-smoke
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Release-profile tests: the chaos fault sweep (tests/chaos.rs) is
+# debug-ignored and runs here, under the same profile as the bench gate.
+test-release:
+	cargo test --release -q
 
 bench-compile:
 	cargo bench --no-run
@@ -62,6 +68,15 @@ docs:
 # End-to-end expert parallelism: 2x2 mesh, experts sharded across EP ranks.
 mesh-smoke:
 	cargo run --release -- train --model lm_tiny_moe_e8_c2 --mesh 2x2 --steps 10
+
+# Fault tolerance: the elastic CLI path end-to-end — snapshot rotation,
+# injected mid-step rank kill, rollback + replay (docs/RESILIENCE.md; exits
+# nonzero if no recovery happened). The bitwise-recovery *assertion*
+# (tests/chaos.rs) already runs under `make test-release`, so this target
+# does not repeat it.
+chaos-smoke:
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --mesh 1x2 --steps 6 \
+	  --snapshot-every 2 --inject-fault 1:4:expert_mlp
 
 # End-to-end serving: train → one-file checkpoint bundle → continuous-
 # batching inference engine (docs/SERVING.md).

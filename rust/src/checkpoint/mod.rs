@@ -52,6 +52,36 @@ use crate::util::json::{arr, num, obj, s, Json};
 const MAGIC: &[u8; 4] = b"SUPC";
 const VERSION: u32 = 1;
 
+/// FNV-1a 64-bit running hash: the integrity checksum of a SUPC bundle.
+///
+/// Covers the model name, the step counter, and — per tensor, in order —
+/// the tensor's name, shape dims (u64 LE), dtype tag and payload bytes.
+/// Stored in the JSON header as the hex `integrity` field — an *additive*
+/// header field, so version-1 readers and files without it stay
+/// compatible. Covering the per-tensor metadata matters: a header flip
+/// that transposes a shape or renames a tensor preserves the payload byte
+/// stream, so a payload-only digest would pass it. It is what turns a
+/// flipped payload or header bit into a named load error instead of a
+/// silently-wrong checkpoint (fuzz-asserted by `tests/supc_fuzz.rs`).
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
     pub model: String,
@@ -96,6 +126,11 @@ impl Checkpoint {
         }
         let mut entries = Vec::new();
         let mut offset = 0u64;
+        // Integrity pass: hash model + step + every payload byte in write
+        // order, so the header can carry the checksum ahead of the data.
+        let mut integ = Fnv64::new();
+        integ.update(self.model.as_bytes());
+        integ.update(&self.step.to_le_bytes());
         for (name, t) in &self.tensors {
             let len = (t.numel() * t.dtype().size_bytes()) as u64;
             entries.push(obj(vec![
@@ -106,8 +141,26 @@ impl Checkpoint {
                 ("len_bytes", num(len as f64)),
             ]));
             offset += len;
+            integ.update(name.as_bytes());
+            for &d in &t.shape {
+                integ.update(&(d as u64).to_le_bytes());
+            }
+            integ.update(t.dtype().as_str().as_bytes());
+            match &t.data {
+                Data::F32(v) => {
+                    for x in v {
+                        integ.update(&x.to_le_bytes());
+                    }
+                }
+                Data::I32(v) => {
+                    for x in v {
+                        integ.update(&x.to_le_bytes());
+                    }
+                }
+            }
         }
         let header = obj(vec![
+            ("integrity", s(&integ.hex())),
             ("model", s(&self.model)),
             ("step", num(self.step as f64)),
             ("provenance", s(&self.provenance)),
@@ -146,9 +199,13 @@ impl Checkpoint {
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let path = path.as_ref();
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-        );
+        let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        // Every length parsed out of the file is bounded against the bytes
+        // actually on disk *before* any allocation: a corrupt or bit-flipped
+        // length field must produce a named error, never an absurd
+        // allocation or a panic (asserted by `tests/supc_fuzz.rs`).
+        let file_len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let mut f = std::io::BufReader::new(file);
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic).with_context(|| format!("{path:?}: truncated magic"))?;
         if &magic != MAGIC {
@@ -165,18 +222,34 @@ impl Checkpoint {
         }
         let mut l8 = [0u8; 8];
         f.read_exact(&mut l8).with_context(|| format!("{path:?}: truncated header length"))?;
-        let hlen = u64::from_le_bytes(l8) as usize;
+        let hlen = u64::from_le_bytes(l8);
+        let preamble = (MAGIC.len() + 4 + 8) as u64;
+        if hlen > file_len.saturating_sub(preamble) {
+            bail!(
+                "{path:?}: header length {hlen} exceeds the {file_len}-byte file \
+                 (corrupt header length)"
+            );
+        }
+        let hlen = hlen as usize;
         let mut hbuf = vec![0u8; hlen];
         f.read_exact(&mut hbuf)
             .with_context(|| format!("{path:?}: truncated header ({hlen} bytes expected)"))?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .with_context(|| format!("{path:?}: malformed checkpoint header"))?;
+        let header = Json::parse(
+            std::str::from_utf8(&hbuf)
+                .with_context(|| format!("{path:?}: checkpoint header is not UTF-8"))?,
+        )
+        .with_context(|| format!("{path:?}: malformed checkpoint header"))?;
 
         let mut ck = Checkpoint::new(
             header.get("model")?.as_str()?,
             header.get("step")?.as_f64()? as u64,
             header.get("provenance")?.as_str()?,
         );
+        // Bytes left for tensor payloads after the header.
+        let mut data_left = file_len - preamble - hlen as u64;
+        let mut integ = Fnv64::new();
+        integ.update(ck.model.as_bytes());
+        integ.update(&ck.step.to_le_bytes());
         for e in header.get("tensors")?.as_arr()? {
             let name = e.get("name")?.as_str()?.to_string();
             let shape: Vec<usize> = e
@@ -186,14 +259,35 @@ impl Checkpoint {
                 .map(|d| d.as_usize())
                 .collect::<Result<_>>()?;
             let dtype = DType::from_str(e.get("dtype")?.as_str()?)?;
-            let n = numel(&shape);
-            let mut raw = vec![0u8; n * 4];
+            let n = shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .with_context(|| {
+                    format!("{path:?}: tensor `{name}` shape {shape:?} overflows")
+                })?;
+            let bytes = n.checked_mul(4).with_context(|| {
+                format!("{path:?}: tensor `{name}` byte size overflows ({n} elements)")
+            })?;
+            if bytes as u64 > data_left {
+                bail!(
+                    "{path:?}: truncated payload reading tensor `{name}` ({bytes} bytes \
+                     expected, {data_left} left in the file)"
+                );
+            }
+            data_left -= bytes as u64;
+            let mut raw = vec![0u8; bytes];
             f.read_exact(&mut raw).with_context(|| {
                 format!(
-                    "{path:?}: truncated payload reading tensor `{name}` ({} bytes expected)",
-                    n * 4
+                    "{path:?}: truncated payload reading tensor `{name}` ({bytes} bytes expected)"
                 )
             })?;
+            integ.update(name.as_bytes());
+            for &d in &shape {
+                integ.update(&(d as u64).to_le_bytes());
+            }
+            integ.update(dtype.as_str().as_bytes());
+            integ.update(&raw);
+            debug_assert_eq!(n, numel(&shape));
             let t = match dtype {
                 DType::F32 => Tensor::from_f32(
                     &shape,
@@ -209,6 +303,18 @@ impl Checkpoint {
                 ),
             };
             ck.tensors.insert(name, t);
+        }
+        // Optional integrity verification: files written by this build
+        // carry the checksum; older version-1 files without it still load.
+        if let Some(want) = header.opt("integrity") {
+            let want = want.as_str()?;
+            let got = integ.hex();
+            if want != got {
+                bail!(
+                    "{path:?}: integrity checksum mismatch (header says {want}, content \
+                     hashes to {got}) — the file is corrupt"
+                );
+            }
         }
         Ok(ck)
     }
@@ -313,8 +419,118 @@ pub fn load_train_state(
     entry: &ModelEntry,
 ) -> Result<(Vec<Tensor>, Vec<Tensor>, u64)> {
     let path = path.as_ref();
-    let ck = Checkpoint::load(path)?;
+    let ck = Checkpoint::load(path)
+        .with_context(|| format!("loading train state from {path:?}"))?;
     bind_train_state(&ck, entry).with_context(|| format!("loading train state from {path:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot rotation (elastic training's rollback targets)
+// ---------------------------------------------------------------------------
+
+/// File-name prefix of rotated snapshots: `snap_<step:012>.supc`.
+pub const SNAPSHOT_PREFIX: &str = "snap_";
+
+/// Path of the rotated snapshot for `step` under `dir`.
+pub fn snapshot_path(dir: impl AsRef<Path>, step: u64) -> std::path::PathBuf {
+    dir.as_ref().join(format!("{SNAPSHOT_PREFIX}{step:012}.supc"))
+}
+
+/// Write one rotated train-state snapshot and prune the rotation to the
+/// `keep` newest. The write is crash-consistent: [`Checkpoint::save`]
+/// writes to a temp file and atomically renames it into place, so a
+/// process killed mid-save leaves the previous snapshot untouched and
+/// loadable (the chaos suite asserts this). Pruning runs *after* the new
+/// snapshot is durable, so the rotation never drops below `keep` loadable
+/// files on any crash schedule.
+pub fn save_snapshot(
+    dir: impl AsRef<Path>,
+    entry: &ModelEntry,
+    params: &[Tensor],
+    opt_state: &[Tensor],
+    step: u64,
+    keep: usize,
+) -> Result<std::path::PathBuf> {
+    let dir = dir.as_ref();
+    let path = snapshot_path(dir, step);
+    save_train_state(&path, entry, params, opt_state, step, "elastic snapshot")
+        .with_context(|| format!("writing snapshot {path:?}"))?;
+    let keep = keep.max(1);
+    let snaps = list_snapshots(dir)?;
+    if snaps.len() > keep {
+        for (_, old) in &snaps[..snaps.len() - keep] {
+            // Best-effort: a prune failure must never fail the training
+            // step that triggered it (the snapshot itself is durable).
+            let _ = std::fs::remove_file(old);
+        }
+    }
+    Ok(path)
+}
+
+/// All rotated snapshots under `dir`, ascending by step. A missing
+/// directory is an empty rotation, not an error; files that do not parse
+/// as `snap_<step>.supc` (including in-flight `.tmp` writes) are ignored.
+pub fn list_snapshots(dir: impl AsRef<Path>) -> Result<Vec<(u64, std::path::PathBuf)>> {
+    let dir = dir.as_ref();
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("listing snapshots in {dir:?}")),
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(step) = name
+            .strip_prefix(SNAPSHOT_PREFIX)
+            .and_then(|r| r.strip_suffix(".supc"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        out.push((step, entry.path()));
+    }
+    out.sort_by_key(|(s, _)| *s);
+    Ok(out)
+}
+
+/// Load the newest *loadable* snapshot of the rotation — the elastic
+/// trainer's rollback target. A corrupt newest snapshot (e.g. a machine
+/// died mid-write in a way that beat the atomic rename) falls back to the
+/// next older one instead of failing the recovery; only an empty or fully
+/// corrupt rotation errors, naming every attempt.
+pub fn load_latest_snapshot(
+    dir: impl AsRef<Path>,
+    entry: &ModelEntry,
+) -> Result<(Vec<Tensor>, Vec<Tensor>, u64, std::path::PathBuf)> {
+    let dir = dir.as_ref();
+    let snaps = list_snapshots(dir)?;
+    if snaps.is_empty() {
+        bail!("no snapshots in {dir:?} to recover from");
+    }
+    let mut attempts = Vec::new();
+    for (step, path) in snaps.iter().rev() {
+        match load_train_state(path, entry) {
+            Ok((params, opt, loaded_step)) => {
+                if loaded_step != *step {
+                    // A mis-named file (hand-restored copy?) is just another
+                    // failed candidate — keep falling back, per the contract.
+                    attempts.push(format!(
+                        "{path:?}: named step {step} but contains step {loaded_step}"
+                    ));
+                    continue;
+                }
+                return Ok((params, opt, loaded_step, path.clone()));
+            }
+            Err(e) => attempts.push(format!("{path:?}: {e:#}")),
+        }
+    }
+    bail!(
+        "no loadable snapshot among {} candidate(s) in {dir:?}:\n  {}",
+        attempts.len(),
+        attempts.join("\n  ")
+    )
 }
 
 #[cfg(test)]
@@ -413,6 +629,137 @@ mod tests {
         assert!(err.contains("train-state"), "{err}");
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&ppath).ok();
+    }
+
+    fn tiny_state(entry: &ModelEntry, salt: f32) -> (Vec<Tensor>, Vec<Tensor>) {
+        let params: Vec<Tensor> = entry
+            .params
+            .iter()
+            .map(|s| {
+                let n: usize = s.shape.iter().product();
+                Tensor::from_f32(&s.shape, (0..n).map(|j| salt + j as f32 * 0.5).collect())
+            })
+            .collect();
+        let opt: Vec<Tensor> = entry.opt_state.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+        (params, opt)
+    }
+
+    /// The rotation keeps exactly the newest `keep` snapshots, the listing
+    /// is step-ordered, and the latest loadable snapshot wins.
+    #[test]
+    fn snapshot_rotation_prunes_and_loads_latest() {
+        let m = crate::manifest::Manifest::native();
+        let entry = m.model("lm_tiny_dense").unwrap();
+        let dir = std::env::temp_dir().join("supc_test_rotation");
+        std::fs::remove_dir_all(&dir).ok();
+        let (params, opt) = tiny_state(entry, 1.0);
+        for step in [2u64, 4, 6, 8] {
+            save_snapshot(&dir, entry, &params, &opt, step, 2).unwrap();
+        }
+        let snaps = list_snapshots(&dir).unwrap();
+        assert_eq!(
+            snaps.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![6, 8],
+            "keep=2 retains only the two newest"
+        );
+        let (p, o, step, path) = load_latest_snapshot(&dir, entry).unwrap();
+        assert_eq!(step, 8);
+        assert_eq!(path, snapshot_path(&dir, 8));
+        assert_eq!(p, params, "snapshot params must round-trip bitwise");
+        assert_eq!(o, opt);
+        // An empty rotation errors by name.
+        let empty = std::env::temp_dir().join("supc_test_rotation_empty");
+        std::fs::remove_dir_all(&empty).ok();
+        assert!(list_snapshots(&empty).unwrap().is_empty());
+        let err = format!("{:#}", load_latest_snapshot(&empty, entry).unwrap_err());
+        assert!(err.contains("no snapshots"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Crash consistency: a snapshot save killed mid-write (simulated by a
+    /// leftover temp file and a truncated newest snapshot) must leave the
+    /// previous snapshot loadable — `load_latest_snapshot` falls back past
+    /// the corrupt file instead of failing the recovery.
+    #[test]
+    fn corrupt_newest_snapshot_falls_back_to_previous() {
+        let m = crate::manifest::Manifest::native();
+        let entry = m.model("lm_tiny_dense").unwrap();
+        let dir = std::env::temp_dir().join("supc_test_fallback");
+        std::fs::remove_dir_all(&dir).ok();
+        let (params, opt) = tiny_state(entry, 2.0);
+        save_snapshot(&dir, entry, &params, &opt, 10, 3).unwrap();
+        save_snapshot(&dir, entry, &params, &opt, 20, 3).unwrap();
+        // Corrupt the newest in place (a torn write that beat the rename).
+        let newest = snapshot_path(&dir, 20);
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 3]).unwrap();
+        // Leave an in-flight temp file lying around too; it must be ignored.
+        std::fs::write(dir.join("snap_000000000030.tmp"), b"partial").unwrap();
+        let (p, _, step, path) = load_latest_snapshot(&dir, entry).unwrap();
+        assert_eq!(step, 10, "recovery must fall back to the loadable snapshot");
+        assert_eq!(path, snapshot_path(&dir, 10));
+        assert_eq!(p, params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A flipped payload bit is a *named* integrity error, never a
+    /// silently different checkpoint.
+    #[test]
+    fn payload_bitflip_fails_the_integrity_check() {
+        let dir = std::env::temp_dir().join("supc_test");
+        let path = dir.join("bitflip.supc");
+        let mut ck = Checkpoint::new("m", 9, "integrity");
+        ck.insert("w", Tensor::from_f32(&[32], (0..32).map(|i| i as f32).collect()));
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 5;
+        bytes[last] ^= 0x10; // flip one payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("integrity checksum mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Header-metadata corruption that preserves the payload byte stream
+    /// (here: a transposed shape) must still fail integrity — the digest
+    /// covers per-tensor names/shapes/dtypes, not just payload bytes.
+    #[test]
+    fn header_shape_transposition_fails_the_integrity_check() {
+        let dir = std::env::temp_dir().join("supc_test");
+        let path = dir.join("shapeflip.supc");
+        let mut ck = Checkpoint::new("m", 2, "integrity");
+        ck.insert("w", Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let needle = b"\"shape\":[2,3]";
+        let at = bytes
+            .windows(needle.len())
+            .position(|w| w == needle)
+            .expect("test assumes compact header serialization");
+        // Transpose the dims in place: same header length, same payload.
+        bytes[at..at + needle.len()].copy_from_slice(b"\"shape\":[3,2]");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("integrity checksum mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A corrupt header-length field must produce a named error, not a
+    /// multi-gigabyte allocation (the byte-level guard behind the fuzz
+    /// suite in `tests/supc_fuzz.rs`).
+    #[test]
+    fn absurd_header_length_is_rejected() {
+        let dir = std::env::temp_dir().join("supc_test");
+        let path = dir.join("hugehdr.supc");
+        let mut ck = Checkpoint::new("m", 1, "");
+        ck.insert("a", Tensor::scalar_f32(1.0));
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(err.contains("header length"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod trainer;
 
 pub use schedule::{Schedule, ScheduleKind};
 pub use trainer::{
-    dp_train_step, mesh_train_step, shard_batch, train, train_dp, train_mesh, BatchSource,
-    DpConfig, Evaluator, MeshConfig, TrainConfig, TrainState,
+    dp_train_step, mesh_train_step, mesh_train_step_faulted, shard_batch, train, train_dp,
+    train_mesh, train_mesh_elastic, BatchSource, DpConfig, Evaluator, MeshConfig, TrainConfig,
+    TrainState,
 };

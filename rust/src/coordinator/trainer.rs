@@ -66,12 +66,14 @@ use crate::costmodel::Cost;
 use crate::manifest::ModelEntry;
 use crate::metrics::Series;
 use crate::parallel::collectives::{reduce_sum_ordered, EpGroup, EP_ABORTED_MSG};
+use crate::resilience::{self, ElasticConfig, ElasticReport, FaultPlan, RecoveryEvent};
 use crate::runtime::ep::{EpPayload, EpRankExchange};
 use crate::runtime::{
     adam_update, checkpoint_from_tensors, tensors_from_checkpoint, LoadedModel, Metrics,
     StepOutput,
 };
 use crate::tensor::{Data, Tensor};
+use crate::util::bench::phase;
 use crate::util::par_map_workers;
 
 use super::schedule::Schedule;
@@ -333,7 +335,10 @@ pub fn dp_train_step(
         grads.push(g);
     }
     // Single optimizer update on the replicated state.
-    adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
+    {
+        let _ph = phase("optimizer");
+        adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
+    }
     let metrics = metric_sums.into_iter().map(|(k, v)| (k, v / r as f64)).collect();
     Ok(StepOutput { params, opt_state, metrics })
 }
@@ -390,15 +395,34 @@ impl MeshConfig {
     }
 }
 
+/// Text of a caught panic payload (rank threads die with `String`/`&str`
+/// payloads — injected faults always do).
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        "mesh rank panicked".to_string()
+    }
+}
+
 /// Per-rank shard gradients of the parallel mesh path: one thread per rank,
 /// expert weights sharded over each DP group's EP ranks, token buffers
 /// exchanged through the group's collectives. Results arrive in rank order
 /// `(dp_group · ep + ep_rank)`.
+///
+/// `fault` is the elastic trainer's injection seam: when the plan names a
+/// rank of this step, that rank's thread arms the thread-local trigger
+/// right after spawn, and dies (by panic) at the planned phase entry — the
+/// surviving ranks detect it through the aborted collectives exactly as
+/// they would a real crash.
 fn mesh_rank_grads(
     model: &LoadedModel,
     params: &[Tensor],
     shards: &[Vec<Tensor>],
     mesh: &MeshConfig,
+    fault: Option<FaultPlan>,
 ) -> Result<Vec<(Metrics, Vec<Vec<f32>>)>> {
     let dp = mesh.dp.max(1);
     let ep = mesh.ep.max(1);
@@ -412,6 +436,15 @@ fn mesh_rank_grads(
             let shard = &shards[r];
             handles.push(s.spawn(move || {
                 let rank = r % ep;
+                // The fault-injection seam in the rank spawn path: arm the
+                // doomed rank before it takes its first step. The guard
+                // disarms on unwind, so nothing leaks past this thread.
+                let _fault_guard = match fault {
+                    Some(f) if f.rank == r && !f.phase.on_coordinator() => {
+                        Some(resilience::arm_fault(f.phase))
+                    }
+                    _ => None,
+                };
                 let body = || -> Result<(Metrics, Vec<Vec<f32>>)> {
                     // Rank threads force nested kernel/expert threading
                     // serial, exactly like DP replica workers.
@@ -428,14 +461,17 @@ fn mesh_rank_grads(
                     Ok(res) => {
                         // A failed rank must release peers blocked on the
                         // group's collectives before reporting.
-                        if res.is_err() {
-                            group.abort();
+                        if let Err(e) = &res {
+                            group.abort_with(&format!("{e:#}"));
                         }
                         res
                     }
-                    Err(_) => {
-                        group.abort();
-                        Err(anyhow!("mesh rank panicked"))
+                    Err(p) => {
+                        // A dead rank: release the peers *with* the root
+                        // cause, then report it as this rank's error.
+                        let msg = panic_text(p);
+                        group.abort_with(&msg);
+                        Err(anyhow!("{msg}"))
                     }
                 }
             }));
@@ -480,6 +516,27 @@ fn mesh_rank_grads(
 #[allow(clippy::too_many_arguments)]
 pub fn mesh_train_step(
     model: &LoadedModel,
+    params: Vec<Tensor>,
+    opt_state: Vec<Tensor>,
+    batch: &[Tensor],
+    lr: f64,
+    wd: f64,
+    step: u64,
+    mesh: &MeshConfig,
+) -> Result<StepOutput> {
+    mesh_train_step_faulted(model, params, opt_state, batch, lr, wd, step, mesh, None)
+}
+
+/// [`mesh_train_step`] with an optional injected fault — the elastic
+/// trainer's step executor. Rank-phase faults arm the named rank's thread
+/// (or the shard's serial execution under `parallel: false`);
+/// coordinator-phase faults (`optimizer`) arm this thread around the Adam
+/// update. The injected death propagates exactly like a real one: as an
+/// error for rank faults, as a panic for coordinator faults (the elastic
+/// loop catches both).
+#[allow(clippy::too_many_arguments)]
+pub fn mesh_train_step_faulted(
+    model: &LoadedModel,
     mut params: Vec<Tensor>,
     mut opt_state: Vec<Tensor>,
     batch: &[Tensor],
@@ -487,16 +544,25 @@ pub fn mesh_train_step(
     wd: f64,
     step: u64,
     mesh: &MeshConfig,
+    fault: Option<FaultPlan>,
 ) -> Result<StepOutput> {
     let ranks = mesh.ranks();
     let shards = shard_batch(batch, ranks)?;
     let results: Vec<(Metrics, Vec<Vec<f32>>)> = if mesh.parallel && ranks > 1 {
-        mesh_rank_grads(model, &params, &shards, mesh)?
+        mesh_rank_grads(model, &params, &shards, mesh, fault)?
     } else {
         // 1-worker reference: every token shard steps with the full expert
-        // set local; only the reduction below is mesh-shaped.
+        // set local; only the reduction below is mesh-shaped. Rank faults
+        // arm around the doomed shard's serial execution, so even the
+        // reference path is chaos-testable.
         let mut out = Vec::with_capacity(ranks);
         for (r, shard) in shards.iter().enumerate() {
+            let _fault_guard = match fault {
+                Some(f) if f.rank == r && !f.phase.on_coordinator() => {
+                    Some(resilience::arm_fault(f.phase))
+                }
+                _ => None,
+            };
             let (m, g) = model
                 .grads(&params, shard)
                 .with_context(|| format!("mesh rank {r} (serial) gradient computation"))?;
@@ -530,7 +596,21 @@ pub fn mesh_train_step(
         }
         grads.push(g);
     }
-    adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
+    {
+        // The optimizer is its own fault phase. The injected kill lands at
+        // phase *entry* (before the in-place Adam update mutates anything);
+        // a real crash could additionally tear the update halfway, but the
+        // recovery path cannot tell the difference by construction — the
+        // failed attempt's tensors are dropped wholesale and state reloads
+        // from the snapshot, so their content (torn or pristine) is never
+        // read again.
+        let _fault_guard = match fault {
+            Some(f) if f.phase.on_coordinator() => Some(resilience::arm_fault(f.phase)),
+            _ => None,
+        };
+        let _ph = phase("optimizer");
+        adam_update(&mut params, &mut opt_state, &grads, lr, wd, step)?;
+    }
     let metrics = metric_sums.into_iter().map(|(k, v)| (k, v / ranks as f64)).collect();
     Ok(StepOutput { params, opt_state, metrics })
 }
@@ -541,6 +621,12 @@ pub fn mesh_train_step(
 
 /// Shared step loop behind [`train`] and [`train_dp`]: schedules, evals,
 /// logging, series bookkeeping; `step_fn` performs one optimizer step.
+///
+/// NOTE: [`train_mesh_elastic`] reimplements this bookkeeping (initial /
+/// cadence / final eval pushes, log lines) because its rollback-and-replay
+/// control flow cannot be expressed through `step_fn`. Changes to the
+/// series semantics here must be mirrored there, or elastic series stop
+/// being comparable to plain ones.
 fn run_loop<F>(
     model: &LoadedModel,
     state: &mut TrainState,
@@ -640,6 +726,221 @@ pub fn train_mesh(
     run_loop(model, state, data, evaluator, cfg, series_name, |p, o, b, lr, step| {
         mesh_train_step(model, p, o, b, lr, cfg.weight_decay, step, mesh)
     })
+}
+
+/// [`train_mesh`] with elasticity: periodic SUPC snapshots (atomic rotation
+/// with retention, `checkpoint::save_snapshot`), detection of mid-step rank
+/// failures (real or injected via [`ElasticConfig::faults`]), and automatic
+/// step-boundary rollback + replay from the last snapshot.
+///
+/// **The bitwise-recovery contract.** The final state — and the final
+/// snapshot bundle this function always writes — is bitwise-identical to
+/// the uninterrupted run at the same step, for *any* fault schedule:
+///
+/// * a failed step never publishes state (its in-flight tensors are
+///   discarded whole; nothing torn survives into the retry);
+/// * rollback restores the last snapshot bitwise
+///   (`checkpoint::load_train_state`'s round-trip guarantee);
+/// * the rolled-back steps replay with the *exact* original batches — the
+///   driver keeps every batch since the last snapshot in memory (bounded
+///   by `snapshot_every`) instead of assuming the data source can rewind;
+/// * the step executor is a pure function of `(params, opt_state, batch,
+///   lr, step)` and the LR schedule / Adam bias correction key off the
+///   absolute step, which the snapshot carries.
+///
+/// Asserted per fault point across the steps × phases grid by
+/// `tests/chaos.rs`. Evaluation points ride on the same cadence as
+/// [`train_mesh`] (and are never duplicated by a replay), so the returned
+/// [`Series`] is comparable; the [`ElasticReport`] records every snapshot
+/// and recovery.
+///
+/// Error contract: when recovery is abandoned (max recoveries, lost
+/// rollback target), `state` is first rolled back to the newest loadable
+/// snapshot, so the caller never sees the failed attempt's consumed
+/// tensors. Only if no snapshot loads at all is `state` left unspecified
+/// (the error chain says so).
+#[allow(clippy::too_many_arguments)]
+pub fn train_mesh_elastic(
+    model: &LoadedModel,
+    state: &mut TrainState,
+    data: &mut dyn BatchSource,
+    evaluator: &Evaluator,
+    cfg: &TrainConfig,
+    mesh: &MeshConfig,
+    ecfg: &ElasticConfig,
+    series_name: &str,
+) -> Result<(Series, ElasticReport)> {
+    ecfg.validate()?;
+    let entry = &model.entry;
+    let mut faults = ecfg.faults.clone();
+    let mut report = ElasticReport::default();
+    let mut series = Series::new(series_name);
+    let start_step = state.step;
+    let flops_per_step = entry.flops.train_step;
+
+    let m0 = evaluator.eval(model, state)?;
+    series.push(state.step, 0.0, m0.into_iter().collect());
+
+    // This run owns the rotation directory: snapshots left by a previous
+    // run are a different lineage — the retention prune would evict this
+    // run's rollback targets in favor of stale files, and a rollback could
+    // silently load another run's weights. Clear them before snapshot 0.
+    for (_, stale) in crate::checkpoint::list_snapshots(&ecfg.dir)? {
+        std::fs::remove_file(&stale)
+            .with_context(|| format!("clearing stale snapshot {stale:?}"))?;
+    }
+    // Snapshot the branch point before stepping: rollback is possible from
+    // the very first step.
+    crate::checkpoint::save_snapshot(
+        &ecfg.dir,
+        entry,
+        &state.params,
+        &state.opt_state,
+        state.step,
+        ecfg.snapshot_keep,
+    )?;
+    report.snapshots_written += 1;
+    let mut snap_step = state.step;
+    // Batches for steps `snap_step + 1 ..= pulled`, in order — the replay
+    // buffer. Bounded: drained at every snapshot.
+    let mut batch_cache: Vec<Vec<Tensor>> = Vec::new();
+
+    let mut last_train_loss = f64::NAN;
+    // High-water mark of eval points already pushed: replayed steps after a
+    // rollback must not re-push (or re-run) evaluations the series already
+    // has, or the faulted run's series would diverge from the
+    // uninterrupted one despite the bitwise-state contract.
+    let mut evaluated_through: u64 = 0;
+    let mut i: u64 = 1;
+    while i <= cfg.steps {
+        let step = start_step + i;
+        let cache_idx = (step - snap_step - 1) as usize;
+        while batch_cache.len() <= cache_idx {
+            batch_cache.push(data.next());
+        }
+        let lr = cfg.schedule.lr(step);
+        let fault = faults.take_for_step(i);
+        let params = std::mem::take(&mut state.params);
+        let opt = std::mem::take(&mut state.opt_state);
+        let batch = &batch_cache[cache_idx];
+        // Coordinator-phase faults surface as panics; catch them here like
+        // the rank spawn sites catch rank-thread deaths.
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            mesh_train_step_faulted(
+                model,
+                params,
+                opt,
+                batch,
+                lr,
+                cfg.weight_decay,
+                step,
+                mesh,
+                fault,
+            )
+        }));
+        let res = match attempt {
+            Ok(r) => r,
+            Err(p) => Err(anyhow!("{}", panic_text(p))),
+        };
+        match res {
+            Ok(out) => {
+                state.params = out.params;
+                state.opt_state = out.opt_state;
+                state.step = step;
+                last_train_loss = *out.metrics.get("loss").unwrap_or(&f64::NAN);
+                if cfg.log_every > 0 && i % cfg.log_every == 0 {
+                    println!(
+                        "    [{series_name}] step {step} lr={lr:.5} \
+                         train_loss={last_train_loss:.4}"
+                    );
+                }
+                if cfg.eval_every > 0
+                    && i % cfg.eval_every == 0
+                    && i != cfg.steps
+                    && i > evaluated_through
+                {
+                    let mut m = evaluator.eval(model, state)?;
+                    m.insert("train_loss".into(), last_train_loss);
+                    series.push(step, flops_per_step * i as f64, m.into_iter().collect());
+                    evaluated_through = i;
+                }
+                if i % ecfg.snapshot_every == 0 {
+                    crate::checkpoint::save_snapshot(
+                        &ecfg.dir,
+                        entry,
+                        &state.params,
+                        &state.opt_state,
+                        state.step,
+                        ecfg.snapshot_keep,
+                    )?;
+                    report.snapshots_written += 1;
+                    snap_step = step;
+                    batch_cache.drain(..=cache_idx);
+                }
+                i += 1;
+            }
+            Err(e) => {
+                let cause = format!("{e:#}");
+                let injected = resilience::is_injected_fault(&cause);
+                // Restore a valid state from the rotation *before* deciding
+                // whether to keep going: the failed attempt consumed the
+                // caller's tensors, and even a give-up return must not hand
+                // back a gutted TrainState.
+                let (p, o, loaded_step, _path) =
+                    crate::checkpoint::load_latest_snapshot(&ecfg.dir, entry)
+                        .context("recovering after a failed step")?;
+                state.params = p;
+                state.opt_state = o;
+                state.step = loaded_step;
+                if report.recoveries.len() >= ecfg.max_recoveries {
+                    return Err(e.context(format!(
+                        "step {step} failed after {} recoveries (max_recoveries reached); \
+                         state rolled back to step {loaded_step}",
+                        report.recoveries.len()
+                    )));
+                }
+                if loaded_step != snap_step {
+                    bail!(
+                        "snapshot rotation lost the rollback target: wanted step {snap_step}, \
+                         newest loadable snapshot is step {loaded_step} (state rolled back \
+                         there)"
+                    );
+                }
+                if cfg.log_every > 0 {
+                    println!(
+                        "    [{series_name}] step {step} FAILED ({}), rolled back to step \
+                         {loaded_step}, replaying",
+                        if injected { "injected fault" } else { "rank failure" }
+                    );
+                }
+                report.recoveries.push(RecoveryEvent {
+                    failed_step: step,
+                    rolled_back_to: loaded_step,
+                    cause,
+                    injected,
+                });
+                i = loaded_step - start_step + 1;
+            }
+        }
+    }
+    // The final snapshot is the run's durable artifact (the bundle the
+    // bitwise-recovery contract is asserted on); skip only if the cadence
+    // already wrote it at this exact step.
+    if snap_step != state.step {
+        crate::checkpoint::save_snapshot(
+            &ecfg.dir,
+            entry,
+            &state.params,
+            &state.opt_state,
+            state.step,
+            ecfg.snapshot_keep,
+        )?;
+        report.snapshots_written += 1;
+    }
+    let mut m = evaluator.eval(model, state)?;
+    m.insert("train_loss".into(), last_train_loss);
+    series.push(state.step, flops_per_step * cfg.steps as f64, m.into_iter().collect());
+    Ok((series, report))
 }
 
 /// Total extra cost of a finished series' final point.
@@ -935,6 +1236,220 @@ mod tests {
         assert_eq!((dp.replicas, dp.workers), (8, 1));
         // Replicated mode is additionally bounded by host parallelism.
         assert!(DpConfig::replicated(&entry, 1024).is_err());
+    }
+
+    fn make_pipe(entry: &ModelEntry, shard: u64) -> TextPipeline {
+        TextPipeline::new(
+            HmmCorpus::new(
+                HmmSpec { vocab_size: entry.config.vocab_size, ..Default::default() },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            shard,
+        )
+    }
+
+    /// Run `steps` elastic mesh steps from a fresh state with the given
+    /// fault schedule; returns (final state, report, final-snapshot bytes).
+    fn run_elastic(
+        entry: &ModelEntry,
+        model: &LoadedModel,
+        mesh: &MeshConfig,
+        steps: u64,
+        dir: &std::path::Path,
+        faults: crate::resilience::FaultSchedule,
+    ) -> (TrainState, ElasticReport, Vec<u8>) {
+        std::fs::remove_dir_all(dir).ok();
+        let mut state = fresh_state(entry);
+        let mut data = make_pipe(entry, 0);
+        let mut held = make_pipe(entry, 1000);
+        let evaluator = Evaluator::from_source(&mut held, 1);
+        let cfg = TrainConfig {
+            steps,
+            schedule: Schedule::constant(1e-3),
+            weight_decay: 0.01,
+            eval_every: 0,
+            log_every: 0,
+        };
+        let mut ecfg = ElasticConfig::new(dir);
+        ecfg.snapshot_every = 2;
+        ecfg.snapshot_keep = 2;
+        ecfg.faults = faults;
+        let (_series, report) = train_mesh_elastic(
+            model, &mut state, &mut data, &evaluator, &cfg, mesh, &ecfg, "elastic",
+        )
+        .unwrap();
+        let final_snap = crate::checkpoint::snapshot_path(dir, state.step);
+        let bytes = std::fs::read(&final_snap).expect("final snapshot written");
+        (state, report, bytes)
+    }
+
+    fn assert_states_bitwise(entry: &ModelEntry, a: &TrainState, b: &TrainState) {
+        assert_eq!(a.step, b.step);
+        for ((x, y), spec) in a.params.iter().zip(&b.params).zip(&entry.params) {
+            assert_eq!(x, y, "param `{}` must match bitwise", spec.name);
+        }
+        for ((x, y), spec) in a.opt_state.iter().zip(&b.opt_state).zip(&entry.opt_state) {
+            assert_eq!(x, y, "opt slot `{}` must match bitwise", spec.name);
+        }
+    }
+
+    /// The elastic tentpole invariant, in miniature: a 1x2 mesh run with a
+    /// rank killed mid-step recovers by rollback + replay and ends
+    /// bitwise-identical to the uninterrupted run — state *and* the final
+    /// SUPC snapshot bundle's bytes.
+    #[test]
+    fn elastic_recovery_is_bitwise_identical_to_uninterrupted() {
+        use crate::resilience::{FaultPhase, FaultSchedule};
+        let (entry, model, _) = setup();
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let base = std::env::temp_dir().join("supc_trainer_elastic");
+        let (ref_state, ref_report, ref_bytes) = run_elastic(
+            &entry,
+            &model,
+            &mesh,
+            3,
+            &base.join("ref"),
+            FaultSchedule::default(),
+        );
+        assert!(ref_report.recoveries.is_empty());
+        let plan = FaultPlan { rank: 1, step: 3, phase: FaultPhase::Combine };
+        let (f_state, f_report, f_bytes) = run_elastic(
+            &entry,
+            &model,
+            &mesh,
+            3,
+            &base.join("faulted"),
+            FaultSchedule::single(plan),
+        );
+        assert_eq!(f_report.recoveries.len(), 1, "{:?}", f_report.recoveries);
+        let ev = &f_report.recoveries[0];
+        assert!(ev.injected, "cause must carry the injected marker: {}", ev.cause);
+        assert_eq!((ev.failed_step, ev.rolled_back_to), (3, 2));
+        assert_states_bitwise(&entry, &ref_state, &f_state);
+        assert_eq!(ref_bytes, f_bytes, "final snapshot bundles must be byte-identical");
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// A coordinator-side kill entering the optimizer phase also recovers
+    /// bitwise. (The kill lands at phase entry; a genuinely torn mid-update
+    /// state would be equally unobservable because the failed attempt's
+    /// tensors are discarded wholesale and never read again.)
+    #[test]
+    fn elastic_recovers_from_optimizer_phase_fault() {
+        use crate::resilience::{FaultPhase, FaultSchedule};
+        let (entry, model, _) = setup();
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let base = std::env::temp_dir().join("supc_trainer_elastic_opt");
+        let (ref_state, _, _) = run_elastic(
+            &entry,
+            &model,
+            &mesh,
+            3,
+            &base.join("ref"),
+            FaultSchedule::default(),
+        );
+        let plan = FaultPlan { rank: 0, step: 1, phase: FaultPhase::Optimizer };
+        let (f_state, f_report, _) = run_elastic(
+            &entry,
+            &model,
+            &mesh,
+            3,
+            &base.join("faulted"),
+            FaultSchedule::single(plan),
+        );
+        assert_eq!(f_report.recoveries.len(), 1);
+        assert_eq!(f_report.recoveries[0].rolled_back_to, 0, "step 1 rolls back to the branch");
+        assert_states_bitwise(&entry, &ref_state, &f_state);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// A replay after rollback must not re-push (or re-run) eval points the
+    /// series already has: roll back past two eval points and check the
+    /// series still has exactly one point per step.
+    #[test]
+    fn elastic_replay_does_not_duplicate_eval_points() {
+        use crate::resilience::{FaultPhase, FaultSchedule};
+        let (entry, model, _) = setup();
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let dir = std::env::temp_dir().join("supc_trainer_elastic_evals");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut state = fresh_state(&entry);
+        let mut data = make_pipe(&entry, 0);
+        let mut held = make_pipe(&entry, 1000);
+        let evaluator = Evaluator::from_source(&mut held, 1);
+        let cfg = TrainConfig {
+            steps: 3,
+            schedule: Schedule::constant(1e-3),
+            weight_decay: 0.0,
+            eval_every: 1,
+            log_every: 0,
+        };
+        let mut ecfg = ElasticConfig::new(&dir);
+        // One snapshot at the branch point only: the step-3 fault rolls all
+        // the way back and replays steps 1 and 2 — whose eval points were
+        // already pushed.
+        ecfg.snapshot_every = 3;
+        ecfg.faults = FaultSchedule::single(FaultPlan {
+            rank: 1,
+            step: 3,
+            phase: FaultPhase::Backward,
+        });
+        let (series, report) = train_mesh_elastic(
+            &model, &mut state, &mut data, &evaluator, &cfg, &mesh, &ecfg, "evals",
+        )
+        .unwrap();
+        assert_eq!(report.recoveries.len(), 1);
+        assert_eq!(report.recoveries[0].rolled_back_to, 0);
+        let steps: Vec<u64> = series.points.iter().map(|p| p.step).collect();
+        assert_eq!(steps, vec![0, 1, 2, 3], "one point per step, no replay duplicates");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A fault schedule that kills the same rank on every attempt would
+    /// never converge; the one-shot schedule plus max_recoveries bounds it.
+    /// Here: an unrecoverable genuine failure (malformed batch on every
+    /// attempt) gives up after max_recoveries instead of spinning.
+    #[test]
+    fn elastic_gives_up_after_max_recoveries() {
+        let (entry, model, batches) = setup();
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let dir = std::env::temp_dir().join("supc_trainer_elastic_giveup");
+        std::fs::remove_dir_all(&dir).ok();
+        struct BadSource {
+            batch: Vec<Tensor>,
+        }
+        impl BatchSource for BadSource {
+            fn next(&mut self) -> Vec<Tensor> {
+                self.batch.clone() // truncated: rank grads always fail
+            }
+        }
+        let mut bad = batches[0].clone();
+        bad.pop();
+        let mut data = BadSource { batch: bad };
+        let mut state = fresh_state(&entry);
+        let mut held = make_pipe(&entry, 1000);
+        let evaluator = Evaluator::from_source(&mut held, 1);
+        let cfg = TrainConfig {
+            steps: 2,
+            schedule: Schedule::constant(1e-3),
+            weight_decay: 0.0,
+            eval_every: 0,
+            log_every: 0,
+        };
+        let mut ecfg = ElasticConfig::new(&dir);
+        ecfg.snapshot_every = 1;
+        ecfg.max_recoveries = 2;
+        let err = train_mesh_elastic(
+            &model, &mut state, &mut data, &evaluator, &cfg, &mesh, &ecfg, "giveup",
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("max_recoveries"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// train_dp drives the same loop as train and improves the loss.

@@ -15,8 +15,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::coordinator::{
-    train, train_dp, train_mesh, DpConfig, Evaluator, MeshConfig, Schedule, TrainConfig,
-    TrainState,
+    train, train_dp, train_mesh, train_mesh_elastic, DpConfig, Evaluator, MeshConfig, Schedule,
+    TrainConfig, TrainState,
 };
 use crate::data::text::{HmmCorpus, HmmSpec, TextPipeline};
 use crate::data::vision::{VisionPipeline, VisionSpec};
@@ -360,6 +360,41 @@ impl Ctx {
         series_name: &str,
     ) -> Result<Series> {
         self.run_branch_inner(model, state, shard, steps, BranchExec::Mesh(mesh), series_name)
+    }
+
+    /// [`Ctx::run_branch_mesh`] with elasticity: periodic SUPC snapshots,
+    /// rank-failure detection and rollback + replay recovery — optionally
+    /// with a deterministic injected fault schedule (the CLI's
+    /// `--snapshot-every` / `--inject-fault` path). See
+    /// `coordinator::trainer::train_mesh_elastic` for the bitwise-recovery
+    /// contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_branch_elastic(
+        &self,
+        model: &LoadedModel,
+        state: &mut TrainState,
+        shard: u64,
+        steps: u64,
+        mesh: &MeshConfig,
+        ecfg: &crate::resilience::ElasticConfig,
+        series_name: &str,
+    ) -> Result<(Series, crate::resilience::ElasticReport)> {
+        let entry = &model.entry;
+        let mut data = self.pipeline(entry, shard);
+        let evaluator = self.evaluator(entry);
+        let mut cfg = self.train_cfg(steps);
+        cfg.schedule = self.schedule(entry);
+        cfg.weight_decay = self.weight_decay(entry);
+        train_mesh_elastic(
+            model,
+            state,
+            data.as_mut(),
+            &evaluator,
+            &cfg,
+            mesh,
+            ecfg,
+            series_name,
+        )
     }
 
     fn run_branch_inner(

@@ -36,6 +36,7 @@ pub mod linalg;
 pub mod manifest;
 pub mod metrics;
 pub mod parallel;
+pub mod resilience;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

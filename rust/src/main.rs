@@ -6,7 +6,10 @@
 //!   list                          — experiments and models available
 //!   train      --model M          — (pre)train a model from scratch
 //!                                   (--replicas N data-parallel, --mesh DxE
-//!                                   expert-parallel, --save CK bundle)
+//!                                   expert-parallel, --save CK bundle;
+//!                                   --snapshot-every/--snapshot-keep/
+//!                                   --inject-fault run the elastic
+//!                                   fault-tolerant loop, docs/RESILIENCE.md)
 //!   serve      --load CK          — continuous-batching inference engine
 //!                                   over a trained checkpoint
 //!   infer      --load CK          — one forward-only inference pass
@@ -233,7 +236,92 @@ fn run() -> Result<()> {
             let replicas = a.usize("replicas", 1)?;
             let ctx = Ctx::new(&artifacts, &out_dir, params_from_args(&a)?, a.bool("verbose"))?;
             let (model, mut state) = ctx.branch_scratch(model_name, ctx.p.seed)?;
-            let series = if let Some(mesh_spec) = a.flags.get("mesh") {
+            let snapshot_every = a.u64("snapshot-every", 0)?;
+            let fault_spec = a.flags.get("inject-fault").cloned();
+            let elastic = snapshot_every > 0 || fault_spec.is_some();
+            // Shared by the elastic and plain mesh paths: one DxE spec +
+            // --serial-mesh selection, validated identically.
+            let build_mesh = |dp_axis: usize, ep_axis: usize| -> Result<MeshConfig> {
+                if a.bool("serial-mesh") {
+                    MeshConfig::accumulated(&model.entry, dp_axis, ep_axis)
+                } else {
+                    MeshConfig::replicated(&model.entry, dp_axis, ep_axis)
+                }
+            };
+            let series = if elastic {
+                // Elastic mesh training: periodic SUPC snapshots with
+                // rotation, failure detection and rollback + replay
+                // recovery (docs/RESILIENCE.md). `--inject-fault r:s:p`
+                // deterministically kills rank r at step s in phase p.
+                if a.flags.contains_key("replicas") {
+                    bail!(
+                        "--replicas does not combine with elastic training; use --mesh DxE \
+                         (the mesh's data axis is the replica count)"
+                    );
+                }
+                let (dp_axis, ep_axis) = match a.flags.get("mesh") {
+                    Some(spec) => MeshConfig::parse(spec)?,
+                    None => (1, 1), // single-worker elastic run
+                };
+                let mesh = build_mesh(dp_axis, ep_axis)?;
+                let mut ecfg = sparse_upcycle::resilience::ElasticConfig::new(
+                    ctx.ck_dir.join(format!("{model_name}_snapshots")),
+                );
+                ecfg.snapshot_every = snapshot_every.max(1);
+                ecfg.snapshot_keep = a.usize("snapshot-keep", 3)?;
+                if let Some(spec) = &fault_spec {
+                    let plan = sparse_upcycle::resilience::FaultPlan::parse(spec)?;
+                    // Fail fast on an unreachable fault: an out-of-range
+                    // rank would silently never fire (coordinator-side
+                    // phases ignore the rank — one optimizer per step).
+                    if !plan.phase.on_coordinator() && plan.rank >= mesh.ranks() {
+                        bail!(
+                            "--inject-fault names rank {} but the {dp_axis}x{ep_axis} mesh \
+                             has ranks 0..{}",
+                            plan.rank,
+                            mesh.ranks()
+                        );
+                    }
+                    if plan.step > steps {
+                        bail!(
+                            "--inject-fault names step {} but the run is only {steps} step(s)",
+                            plan.step
+                        );
+                    }
+                    ecfg.faults = sparse_upcycle::resilience::FaultSchedule::single(plan);
+                }
+                ecfg.validate()?;
+                println!(
+                    "elastic mesh {dp_axis}x{ep_axis}: snapshot every {} step(s) (keep {}) \
+                     under {}{}",
+                    ecfg.snapshot_every,
+                    ecfg.snapshot_keep,
+                    ecfg.dir.display(),
+                    fault_spec
+                        .as_deref()
+                        .map(|f| format!(", injecting fault {f}"))
+                        .unwrap_or_default()
+                );
+                let (series, report) = ctx.run_branch_elastic(
+                    &model, &mut state, 0, steps, &mesh, &ecfg, model_name,
+                )?;
+                println!("  {} snapshot(s) written", report.snapshots_written);
+                for ev in &report.recoveries {
+                    println!(
+                        "  recovered: step {} died ({}), rolled back to step {} and replayed",
+                        ev.failed_step,
+                        if ev.injected { "injected fault" } else { "rank failure" },
+                        ev.rolled_back_to
+                    );
+                }
+                if fault_spec.is_some() && report.recoveries.is_empty() {
+                    bail!(
+                        "--inject-fault was given but no recovery happened (is the fault's \
+                         step within --steps and its phase reachable for this model?)"
+                    );
+                }
+                series
+            } else if let Some(mesh_spec) = a.flags.get("mesh") {
                 if a.flags.contains_key("replicas") {
                     bail!(
                         "--mesh and --replicas conflict: the mesh's data axis IS the replica \
@@ -245,11 +333,7 @@ fn run() -> Result<()> {
                 // over each group's EP ranks, real all-to-all dispatch.
                 // Validated at setup (parallel::validate_mesh_exec).
                 let (dp_axis, ep_axis) = MeshConfig::parse(mesh_spec)?;
-                let mesh = if a.bool("serial-mesh") {
-                    MeshConfig::accumulated(&model.entry, dp_axis, ep_axis)?
-                } else {
-                    MeshConfig::replicated(&model.entry, dp_axis, ep_axis)?
-                };
+                let mesh = build_mesh(dp_axis, ep_axis)?;
                 println!(
                     "mesh {dp_axis}x{ep_axis}: {} rank(s), experts round-robin over {ep_axis} \
                      expert-parallel rank(s){}",
@@ -569,6 +653,8 @@ USAGE:
   upcycle train   --model <name> [--steps N] [--replicas N]   # data-parallel
                   [--mesh DxE [--serial-mesh]]   # expert-parallel DP×EP mesh
                   [--save <ck.supc>]   # one-file train-state bundle
+                  [--snapshot-every N] [--snapshot-keep K]  # elastic training
+                  [--inject-fault r:s:p]  # kill rank r at step s in phase p
   upcycle serve   --load <ck.supc> [--model <name>] [--requests N]
                   [--batch-tokens T] [--max-batch N] [--unbatched]
                   [--gap-us G] [--seed S]  # continuous-batching inference

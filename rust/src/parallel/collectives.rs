@@ -118,7 +118,10 @@ pub fn all_to_all<T>(sends: Vec<Vec<T>>) -> Result<Vec<Vec<T>>> {
 pub const EP_ABORTED_MSG: &str = "expert-parallel collective aborted by a failed rank";
 
 /// A reusable barrier whose waiters can be released with an error instead
-/// of blocking forever when a participant dies mid-protocol.
+/// of blocking forever when a participant dies mid-protocol. The abort can
+/// carry the failing rank's root cause, so survivors do not merely learn
+/// *that* the group died but *why* — the elastic trainer surfaces it in
+/// recovery logs without having to cross-reference thread results.
 struct AbortableBarrier {
     ranks: usize,
     state: Mutex<BarrierState>,
@@ -129,21 +132,35 @@ struct BarrierState {
     arrived: usize,
     generation: u64,
     aborted: bool,
+    /// Root cause recorded by the first abort (later aborts keep it).
+    abort_reason: Option<String>,
 }
 
 impl AbortableBarrier {
     fn new(ranks: usize) -> AbortableBarrier {
         AbortableBarrier {
             ranks,
-            state: Mutex::new(BarrierState { arrived: 0, generation: 0, aborted: false }),
+            state: Mutex::new(BarrierState {
+                arrived: 0,
+                generation: 0,
+                aborted: false,
+                abort_reason: None,
+            }),
             cv: Condvar::new(),
+        }
+    }
+
+    fn abort_err(g: &BarrierState) -> anyhow::Error {
+        match &g.abort_reason {
+            Some(r) => anyhow::anyhow!("{EP_ABORTED_MSG}: {r}"),
+            None => anyhow::anyhow!("{EP_ABORTED_MSG}"),
         }
     }
 
     fn wait(&self) -> Result<()> {
         let mut g = self.state.lock().expect("barrier state");
         if g.aborted {
-            bail!("{EP_ABORTED_MSG}");
+            return Err(Self::abort_err(&g));
         }
         g.arrived += 1;
         if g.arrived == self.ranks {
@@ -157,14 +174,17 @@ impl AbortableBarrier {
             g = self.cv.wait(g).expect("barrier wait");
         }
         if g.aborted {
-            bail!("{EP_ABORTED_MSG}");
+            return Err(Self::abort_err(&g));
         }
         Ok(())
     }
 
-    fn abort(&self) {
+    fn abort(&self, reason: Option<&str>) {
         let mut g = self.state.lock().expect("barrier state");
         g.aborted = true;
+        if g.abort_reason.is_none() {
+            g.abort_reason = reason.map(|r| r.to_string());
+        }
         self.cv.notify_all();
     }
 }
@@ -218,32 +238,45 @@ impl<T: Send> EpGroup<T> {
 
     /// Release every rank blocked in [`EpGroup::exchange`] with an error.
     pub fn abort(&self) {
-        self.barrier.abort();
+        self.barrier.abort(None);
+    }
+
+    /// [`EpGroup::abort`], recording the failing rank's root cause: every
+    /// peer's error reads `"<EP_ABORTED_MSG>: <reason>"` instead of the
+    /// bare abort message. The first recorded reason wins — a cascade of
+    /// secondary aborts can never overwrite the original cause.
+    pub fn abort_with(&self, reason: &str) {
+        self.barrier.abort(Some(reason));
     }
 
     /// One tagged all-to-all round; see the type docs for the contract.
     pub fn exchange(&self, rank: usize, tag: &str, send: Vec<T>) -> Result<Vec<T>> {
         if rank >= self.ranks {
             // Abort like every other early-error path: a misaddressed rank
-            // must not leave peers blocked in the barrier forever.
-            self.abort();
-            bail!("exchange `{tag}`: rank {rank} out of range for {} ranks", self.ranks);
+            // must not leave peers blocked in the barrier forever. Each
+            // abort carries its cause so survivors report it verbatim.
+            let msg =
+                format!("exchange `{tag}`: rank {rank} out of range for {} ranks", self.ranks);
+            self.abort_with(&msg);
+            bail!("{msg}");
         }
         if send.len() != self.ranks {
-            self.abort();
-            bail!(
+            let msg = format!(
                 "exchange `{tag}`: rank {rank} sends {} payloads for {} ranks",
                 send.len(),
                 self.ranks
             );
+            self.abort_with(&msg);
+            bail!("{msg}");
         }
         {
             let mut st = self.state.lock().expect("ep group state");
             for (dst, payload) in send.into_iter().enumerate() {
                 if st.slots[rank * self.ranks + dst].is_some() {
                     drop(st);
-                    self.abort();
-                    bail!("exchange `{tag}`: rank {rank} deposited into a busy slot");
+                    let msg = format!("exchange `{tag}`: rank {rank} deposited into a busy slot");
+                    self.abort_with(&msg);
+                    bail!("{msg}");
                 }
                 st.slots[rank * self.ranks + dst] = Some(payload);
             }
@@ -258,16 +291,21 @@ impl<T: Send> EpGroup<T> {
                     Some(p) => recv.push(p),
                     None => {
                         drop(st);
-                        self.abort();
-                        bail!("exchange `{tag}`: rank {rank} found no payload from {src}");
+                        let msg =
+                            format!("exchange `{tag}`: rank {rank} found no payload from {src}");
+                        self.abort_with(&msg);
+                        bail!("{msg}");
                     }
                 }
             }
             (recv, st.tags.iter().all(|t| t == tag))
         };
         if !tags_agree {
-            self.abort();
-            bail!("exchange `{tag}`: ranks disagree on the collective tag (protocol divergence)");
+            let msg = format!(
+                "exchange `{tag}`: ranks disagree on the collective tag (protocol divergence)"
+            );
+            self.abort_with(&msg);
+            bail!("{msg}");
         }
         self.barrier.wait()?; // all collects done; slots reusable
         Ok(recv)
@@ -545,6 +583,33 @@ mod tests {
             vec![h0.join().unwrap(), h1.join().unwrap()]
         });
         assert!(res.iter().all(|r| r.is_err()), "abort must release blocked ranks with Err");
+    }
+
+    /// An abort that names its cause surfaces that cause in every blocked
+    /// peer's error — and the first recorded reason wins over later ones.
+    #[test]
+    fn abort_reason_reaches_blocked_peers() {
+        let group = EpGroup::<u8>::new(2);
+        let res: Vec<Result<Vec<u8>>> = std::thread::scope(|s| {
+            let h0 = {
+                let group = &group;
+                s.spawn(move || group.exchange(0, "t", vec![0, 0]))
+            };
+            let h1 = {
+                let group = &group;
+                s.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    group.abort_with("rank 1 lost its lease");
+                    group.abort_with("a later echo that must not win");
+                    Err(anyhow::anyhow!("rank 1 lost its lease"))
+                })
+            };
+            vec![h0.join().unwrap(), h1.join().unwrap()]
+        });
+        let peer_err = format!("{:#}", res[0].as_ref().unwrap_err());
+        assert!(peer_err.contains(EP_ABORTED_MSG), "{peer_err}");
+        assert!(peer_err.contains("rank 1 lost its lease"), "{peer_err}");
+        assert!(!peer_err.contains("later echo"), "first reason must win: {peer_err}");
     }
 
     #[test]

@@ -1,0 +1,401 @@
+//! Fault-tolerant elastic training: deterministic rank-failure injection,
+//! abort-and-recover step execution, and snapshot-based auto-resume.
+//!
+//! A production training run must survive worker preemption and crashes —
+//! the paper's whole premise is reusing sunk training cost, and losing a
+//! long upcycled-MoE run to one dead rank throws that cost away. This
+//! module supplies the three pieces the elastic trainer
+//! (`coordinator::trainer::train_mesh_elastic`) composes:
+//!
+//! * **Deterministic fault injection.** A [`FaultPlan`] ("kill rank `r` at
+//!   step `s` during phase `p`") arms a thread-local trigger on the doomed
+//!   rank's thread when the elastic driver spawns it. The trigger fires
+//!   from the phase-profiler seam (`util::bench::phase` reports every
+//!   phase entry through [`on_phase`]) — the exact instrumentation points
+//!   the bench breakdown already uses, so a fault can land *inside* the
+//!   router, dispatch, expert-MLP, combine, backward or optimizer leg of a
+//!   live step. The rank dies by panicking with [`INJECTED_FAULT_MARKER`],
+//!   indistinguishable from a real mid-step crash to everything above it.
+//! * **Failure detection.** A dead rank's panic is caught at the spawn
+//!   site, which aborts the expert-parallel group
+//!   (`parallel::collectives::EpGroup::abort_with`) so every surviving
+//!   peer blocked in a collective returns an error naming the root cause
+//!   instead of hanging.
+//! * **Recovery bookkeeping.** [`ElasticConfig`] fixes the snapshot
+//!   cadence and retention (the rotation itself lives in
+//!   `checkpoint::save_snapshot`); [`ElasticReport`] records every
+//!   [`RecoveryEvent`] so tests and the CLI can assert on what happened.
+//!
+//! **The bitwise-recovery contract.** The elastic trainer's invariant —
+//! asserted for every fault point in the `tests/chaos.rs` sweep — is that
+//! a run with *any* injected fault schedule produces a final state (and
+//! final SUPC snapshot bundle) bitwise-identical to the uninterrupted run
+//! at the same step. The contract holds because every ingredient of a step
+//! is replayable: the step executor is deterministic in `(params,
+//! opt_state, batch, lr, step)`, snapshots restore state bitwise
+//! (`checkpoint::load_train_state`), and the driver replays the exact
+//! batches of the rolled-back steps from its in-memory cache. See
+//! `docs/RESILIENCE.md` for the full fault model.
+
+use std::cell::Cell;
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+/// Panic payload prefix of an injected fault. The elastic driver (and the
+/// chaos suite) match on it to distinguish injected kills from genuine
+/// bugs; everything else treats the panic like any real rank death.
+pub const INJECTED_FAULT_MARKER: &str = "injected fault";
+
+/// A phase of one training step at which a fault can be injected. The
+/// names mirror the phase-profiler buckets (`util::bench`), which is where
+/// the trigger fires from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// Router logits + softmax + routing decisions (rank-local).
+    Router,
+    /// Token → expert gather + gate computation (rank-local).
+    Dispatch,
+    /// The grouped expert MLP — under expert parallelism this is the
+    /// sharded leg *between* the two all-to-alls (`ep_expert_mlp`).
+    ExpertMlp,
+    /// Gate-weighted scatter back to token order (rank-local).
+    Combine,
+    /// The backward tower sweep.
+    Backward,
+    /// The shared Adam update (runs on the coordinator after reduction).
+    Optimizer,
+}
+
+impl FaultPhase {
+    pub const ALL: [FaultPhase; 6] = [
+        FaultPhase::Router,
+        FaultPhase::Dispatch,
+        FaultPhase::ExpertMlp,
+        FaultPhase::Combine,
+        FaultPhase::Backward,
+        FaultPhase::Optimizer,
+    ];
+
+    pub fn parse(s: &str) -> Result<FaultPhase> {
+        Ok(match s {
+            "router" => FaultPhase::Router,
+            "dispatch" => FaultPhase::Dispatch,
+            "expert_mlp" => FaultPhase::ExpertMlp,
+            "combine" => FaultPhase::Combine,
+            "backward" => FaultPhase::Backward,
+            "optimizer" => FaultPhase::Optimizer,
+            other => bail!(
+                "unknown fault phase `{other}`; one of \
+                 router|dispatch|expert_mlp|combine|backward|optimizer"
+            ),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultPhase::Router => "router",
+            FaultPhase::Dispatch => "dispatch",
+            FaultPhase::ExpertMlp => "expert_mlp",
+            FaultPhase::Combine => "combine",
+            FaultPhase::Backward => "backward",
+            FaultPhase::Optimizer => "optimizer",
+        }
+    }
+
+    /// Does a profiler phase entry named `phase_name` belong to this fault
+    /// phase? The expert-MLP leg reports as `expert_mlp` locally and
+    /// `ep_expert_mlp` under expert parallelism — one fault phase covers
+    /// both, so a plan is valid for any mesh shape.
+    fn matches(&self, phase_name: &str) -> bool {
+        match self {
+            FaultPhase::ExpertMlp => {
+                phase_name == "expert_mlp" || phase_name == "ep_expert_mlp"
+            }
+            _ => phase_name == self.as_str(),
+        }
+    }
+
+    /// Whether this phase executes on the coordinator thread (after the
+    /// rank fan-in) rather than on a rank thread.
+    pub fn on_coordinator(&self) -> bool {
+        matches!(self, FaultPhase::Optimizer)
+    }
+}
+
+impl fmt::Display for FaultPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One deterministic fault: kill global mesh rank `rank` the first time
+/// step `step` enters `phase`. Parsed from the CLI as `r:s:p`
+/// (`--inject-fault 1:3:expert_mlp`). For the coordinator-side
+/// [`FaultPhase::Optimizer`] the rank is recorded but ignored — there is
+/// exactly one optimizer update per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Global mesh rank `dp_group · ep + ep_rank`.
+    pub rank: usize,
+    /// 1-based step index *within the run* (the first stepped batch is 1).
+    pub step: u64,
+    pub phase: FaultPhase,
+}
+
+impl FaultPlan {
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let &[r, s, p] = parts.as_slice() else {
+            bail!("fault spec `{spec}` must be rank:step:phase (e.g. 1:3:expert_mlp)");
+        };
+        Ok(FaultPlan {
+            rank: r.parse().with_context(|| format!("bad rank in fault spec `{spec}`"))?,
+            step: s.parse().with_context(|| format!("bad step in fault spec `{spec}`"))?,
+            phase: FaultPhase::parse(p)?,
+        })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}", self.rank, self.step, self.phase)
+    }
+}
+
+/// A set of one-shot faults for one run. Each plan fires at most once —
+/// after the kill, the elastic driver rolls back and replays the step,
+/// which must then succeed (otherwise recovery could never converge).
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    plans: Vec<(FaultPlan, bool)>, // (plan, fired)
+}
+
+impl FaultSchedule {
+    pub fn new(plans: Vec<FaultPlan>) -> FaultSchedule {
+        FaultSchedule { plans: plans.into_iter().map(|p| (p, false)).collect() }
+    }
+
+    pub fn single(plan: FaultPlan) -> FaultSchedule {
+        FaultSchedule::new(vec![plan])
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// The not-yet-fired fault armed for run-step `step`, if any, marking
+    /// it fired. Called once per step *attempt*; a fault consumed here
+    /// never re-arms on the post-rollback replay.
+    pub fn take_for_step(&mut self, step: u64) -> Option<FaultPlan> {
+        for (plan, fired) in self.plans.iter_mut() {
+            if !*fired && plan.step == step {
+                *fired = true;
+                return Some(*plan);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local fault trigger (the rank-thread seam)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// The fault armed on this thread, if any: fires on the next matching
+    /// phase entry. One slot — a thread dies at its first fault.
+    static ARMED: Cell<Option<FaultPhase>> = const { Cell::new(None) };
+}
+
+/// Arm `phase` on the current thread: the next [`on_phase`] entry matching
+/// it panics with [`INJECTED_FAULT_MARKER`]. The elastic driver calls this
+/// in the rank-thread spawn path (and around the optimizer update for
+/// coordinator-side faults); returns a guard that disarms on drop so a
+/// fault armed on a long-lived thread can never leak into later steps.
+pub fn arm_fault(phase: FaultPhase) -> FaultArmGuard {
+    ARMED.with(|a| a.set(Some(phase)));
+    FaultArmGuard { _priv: () }
+}
+
+/// Disarms the current thread's fault trigger on drop (see [`arm_fault`]).
+pub struct FaultArmGuard {
+    _priv: (),
+}
+
+impl Drop for FaultArmGuard {
+    fn drop(&mut self) {
+        ARMED.with(|a| a.set(None));
+    }
+}
+
+/// Phase-entry hook, called by `util::bench::phase` for every profiled
+/// phase. Costs one thread-local read when nothing is armed (the universal
+/// case); when the armed fault matches, the thread dies by panic — the
+/// deterministic stand-in for a preempted or crashed worker.
+#[inline]
+pub fn on_phase(phase_name: &'static str) {
+    ARMED.with(|a| {
+        if let Some(armed) = a.get() {
+            if armed.matches(phase_name) {
+                a.set(None);
+                panic!("{INJECTED_FAULT_MARKER}: killed during phase `{phase_name}`");
+            }
+        }
+    });
+}
+
+/// Does a panic payload (downcast to text by the catch site) or an error
+/// chain describe an injected fault rather than a genuine bug?
+pub fn is_injected_fault(msg: &str) -> bool {
+    msg.contains(INJECTED_FAULT_MARKER)
+}
+
+// ---------------------------------------------------------------------------
+// Elastic-run configuration and reporting
+// ---------------------------------------------------------------------------
+
+/// Shape of one elastic training run: snapshot cadence + retention, the
+/// snapshot directory, and the (possibly empty) injected fault schedule.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Write a SUPC snapshot every `snapshot_every` successful steps
+    /// (must be >= 1; the run start is always snapshot 0).
+    pub snapshot_every: u64,
+    /// Retention: how many rotated snapshots to keep on disk (>= 1).
+    pub snapshot_keep: usize,
+    /// Directory the rotation writes `snap_<step>.supc` files into.
+    pub dir: std::path::PathBuf,
+    /// Deterministic faults to inject (empty = plain resilient run).
+    pub faults: FaultSchedule,
+    /// Give up after this many recoveries (a real cluster pages a human
+    /// at some point; the default of 8 is far above any injected plan).
+    pub max_recoveries: usize,
+}
+
+impl ElasticConfig {
+    pub fn new(dir: impl Into<std::path::PathBuf>) -> ElasticConfig {
+        ElasticConfig {
+            snapshot_every: 10,
+            snapshot_keep: 3,
+            dir: dir.into(),
+            faults: FaultSchedule::default(),
+            max_recoveries: 8,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.snapshot_every == 0 {
+            bail!("elastic training needs snapshot_every >= 1 (0 would never snapshot)");
+        }
+        if self.snapshot_keep == 0 {
+            bail!("snapshot retention must keep >= 1 file (0 would delete the rollback target)");
+        }
+        Ok(())
+    }
+}
+
+/// One detected failure and the rollback that recovered from it.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// The run step whose attempt failed.
+    pub failed_step: u64,
+    /// The snapshot step the run rolled back to.
+    pub rolled_back_to: u64,
+    /// Root-cause description (the injected fault's marker, or the real
+    /// error chain).
+    pub cause: String,
+    /// Whether the cause carried the injected-fault marker.
+    pub injected: bool,
+}
+
+/// What one elastic run did besides training: snapshots written and
+/// recoveries performed, in order.
+#[derive(Debug, Clone, Default)]
+pub struct ElasticReport {
+    pub snapshots_written: usize,
+    pub recoveries: Vec<RecoveryEvent>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_and_displays() {
+        let p = FaultPlan::parse("1:3:expert_mlp").unwrap();
+        assert_eq!(p, FaultPlan { rank: 1, step: 3, phase: FaultPhase::ExpertMlp });
+        assert_eq!(p.to_string(), "1:3:expert_mlp");
+        for ph in FaultPhase::ALL {
+            let spec = format!("0:1:{ph}");
+            assert_eq!(FaultPlan::parse(&spec).unwrap().phase, ph);
+        }
+        assert!(FaultPlan::parse("1:2").is_err());
+        assert!(FaultPlan::parse("a:2:router").is_err());
+        assert!(FaultPlan::parse("1:b:router").is_err());
+        assert!(FaultPlan::parse("1:2:warp_drive").is_err());
+        assert!(FaultPlan::parse("1:2:router:extra").is_err());
+    }
+
+    #[test]
+    fn expert_mlp_phase_covers_local_and_ep_names() {
+        assert!(FaultPhase::ExpertMlp.matches("expert_mlp"));
+        assert!(FaultPhase::ExpertMlp.matches("ep_expert_mlp"));
+        assert!(!FaultPhase::ExpertMlp.matches("ep_alltoall"));
+        assert!(FaultPhase::Router.matches("router"));
+        assert!(!FaultPhase::Router.matches("backward"));
+        assert!(FaultPhase::Optimizer.on_coordinator());
+        assert!(!FaultPhase::Backward.on_coordinator());
+    }
+
+    #[test]
+    fn schedule_fires_each_plan_once() {
+        let mut s = FaultSchedule::new(vec![
+            FaultPlan { rank: 0, step: 2, phase: FaultPhase::Router },
+            FaultPlan { rank: 1, step: 2, phase: FaultPhase::Combine },
+        ]);
+        assert!(s.take_for_step(1).is_none());
+        let first = s.take_for_step(2).unwrap();
+        assert_eq!(first.phase, FaultPhase::Router);
+        let second = s.take_for_step(2).unwrap();
+        assert_eq!(second.phase, FaultPhase::Combine);
+        assert!(s.take_for_step(2).is_none(), "each plan fires at most once");
+        assert!(FaultSchedule::default().is_empty());
+    }
+
+    #[test]
+    fn armed_fault_trips_on_matching_phase_only() {
+        // Not armed: phases are free.
+        on_phase("router");
+        {
+            let _guard = arm_fault(FaultPhase::Combine);
+            on_phase("router"); // wrong phase — survives
+            let hit = std::panic::catch_unwind(|| on_phase("combine"));
+            let msg = *hit.unwrap_err().downcast::<String>().unwrap();
+            assert!(is_injected_fault(&msg), "{msg}");
+            // The trigger is one-shot: the same phase no longer trips.
+            on_phase("combine");
+        }
+        // Guard dropped: nothing armed.
+        on_phase("combine");
+    }
+
+    #[test]
+    fn arm_guard_disarms_on_drop() {
+        {
+            let _guard = arm_fault(FaultPhase::Router);
+        }
+        on_phase("router"); // must not panic
+    }
+
+    #[test]
+    fn elastic_config_validates() {
+        let mut c = ElasticConfig::new(std::env::temp_dir());
+        c.validate().unwrap();
+        c.snapshot_every = 0;
+        assert!(c.validate().is_err());
+        c.snapshot_every = 5;
+        c.snapshot_keep = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -170,6 +170,26 @@ impl EpRankExchange {
     fn bound_gemm(&self) -> Result<GemmKernels> {
         self.gemm.context("exchange not bound to a kernel family (bind() not called)")
     }
+
+    /// Recoverable teardown: drop every forward cache this exchange holds.
+    ///
+    /// An aborted step can leave caches behind — `forward` ran for some MoE
+    /// blocks before a peer died, so their `backward` never consumed the
+    /// cached activations. The elastic trainer rebuilds exchanges per step
+    /// attempt, so nothing in the product reuses a torn exchange today;
+    /// this stays `pub(crate)` as the teardown contract for any future
+    /// in-crate path that does (a stale cache paired with a replayed
+    /// forward would feed the backward pass the aborted attempt's
+    /// activations), asserted by this module's kill-mid-exchange test.
+    pub(crate) fn reset(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Whether any forward cache is pending a backward (used by teardown
+    /// assertions: a cleanly-finished step leaves none).
+    pub(crate) fn has_pending_cache(&self) -> bool {
+        !self.cache.is_empty()
+    }
 }
 
 impl ExpertExchange for EpRankExchange {
@@ -465,6 +485,96 @@ mod tests {
         let mut exch = EpRankExchange::new(&entry, &params, 0, group).unwrap();
         let ep = model.infer_ep(&params, &batch[..2], &mut exch).unwrap();
         assert_eq!(local, ep, "{name}: EP inference must match local bitwise");
+    }
+
+    /// A rank killed mid-step (via the injected-fault seam) must release
+    /// its peers from the group's collectives with the root cause attached
+    /// — the detection half of the elastic-recovery loop — and the
+    /// survivor's torn exchange must tear down recoverably (pending caches
+    /// clearable via `reset`, no hangs, no panics on drop).
+    #[test]
+    fn killed_rank_releases_peers_with_root_cause() {
+        use crate::parallel::collectives::EP_ABORTED_MSG;
+        use crate::resilience::{arm_fault, FaultPhase, INJECTED_FAULT_MARKER};
+        let manifest = Manifest::native();
+        let runtime = Runtime::new().unwrap();
+        let name = "lm_tiny_moe_e8_c2";
+        let entry = manifest.model(name).unwrap().clone();
+        let model = runtime.load_model(&manifest, name, &["train"]).unwrap();
+        let params = crate::runtime::tensors_from_checkpoint(
+            &crate::init::init_params(&entry, 3).unwrap(),
+            &entry.params,
+        )
+        .unwrap();
+        let batch = crate::data::text::TextPipeline::new(
+            crate::data::text::HmmCorpus::new(
+                crate::data::text::HmmSpec {
+                    vocab_size: entry.config.vocab_size,
+                    ..Default::default()
+                },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            0,
+        )
+        .next_batch();
+        let group: Arc<EpGroup<EpPayload>> = Arc::new(EpGroup::new(2));
+        let shards = crate::coordinator::shard_batch(&batch, 2).unwrap();
+        let results: Vec<(usize, Result<()>, bool)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|rank| {
+                    let group = group.clone();
+                    let shard = &shards[rank];
+                    let model = &model;
+                    let params = &params;
+                    let entry = &entry;
+                    s.spawn(move || {
+                        let _arm = (rank == 1).then(|| arm_fault(FaultPhase::ExpertMlp));
+                        let mut exch =
+                            EpRankExchange::new(entry, params, rank, group.clone()).unwrap();
+                        let body = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || model.grads_ep(params, shard, &mut exch).map(|_| ()),
+                        ));
+                        let res = match body {
+                            Ok(r) => r,
+                            Err(p) => {
+                                let msg = p
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .unwrap_or_else(|| "rank panicked".into());
+                                group.abort_with(&msg);
+                                Err(anyhow::anyhow!("{msg}"))
+                            }
+                        };
+                        // Survivor-side teardown: stale forward caches from
+                        // the aborted step must be clearable.
+                        let had_pending = exch.has_pending_cache();
+                        exch.reset();
+                        assert!(!exch.has_pending_cache());
+                        (rank, res, had_pending)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, res, had_pending) in &results {
+            let err = format!("{:#}", res.as_ref().unwrap_err());
+            if *rank == 1 {
+                assert!(err.contains(INJECTED_FAULT_MARKER), "rank 1: {err}");
+            } else {
+                // The survivor sees the aborted collective *with* the dead
+                // rank's root cause, not a bare abort.
+                assert!(err.contains(EP_ABORTED_MSG), "rank 0: {err}");
+                assert!(err.contains(INJECTED_FAULT_MARKER), "rank 0: {err}");
+                assert!(
+                    had_pending,
+                    "the survivor aborted after at least one cached forward block"
+                );
+            }
+        }
     }
 
     #[test]

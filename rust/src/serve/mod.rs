@@ -656,6 +656,90 @@ mod tests {
         assert!(engine.run_trace(bad).is_err());
     }
 
+    /// Scheduler property test: for *random* arrival traces and engine
+    /// configs (not hand-picked edge cases), the admission invariants hold
+    /// on every run —
+    ///
+    /// 1. FIFO admission order is preserved (completions in arrival order,
+    ///    batch indices nondecreasing);
+    /// 2. the token budget is never exceeded, except by a single oversized
+    ///    request admitted alone (and the request cap always holds);
+    /// 3. every request appears in exactly one micro-batch;
+    /// 4. micro-batches never overlap on the virtual clock and never start
+    ///    before their members arrived;
+    /// 5. a rerun of the same trace is bitwise-deterministic.
+    #[test]
+    fn scheduler_invariants_hold_on_random_traces() {
+        let (entry, model, params) = setup("lm_tiny_dense");
+        let tpr = tokens_per_request(&entry);
+        let mut rng = Rng::new(0xb00b1e5);
+        for case in 0..12u64 {
+            let n = 1 + rng.below(9);
+            let gap = [0u64, 40, 400, 2500][rng.below(4)];
+            let budget_requests = 1 + rng.below(5);
+            let cfg = EngineConfig {
+                max_batch_tokens: budget_requests * tpr,
+                max_batch_requests: if rng.below(3) == 0 { 1 + rng.below(4) } else { 0 },
+                ..EngineConfig::default()
+            };
+            let trace = synthetic_trace(&entry, n, 1000 + case, gap);
+            let engine = Engine::new(&model, &params, cfg).unwrap();
+            let a = engine.run_trace(trace.clone()).unwrap();
+
+            // (3) exactly-once: n completions, ids unique, batch sizes sum
+            // to n and every completion points into a real batch.
+            assert_eq!(a.completions.len(), n, "case {case}");
+            let ids: Vec<u64> = a.completions.iter().map(|c| c.id).collect();
+            assert_eq!(
+                ids,
+                (0..n as u64).collect::<Vec<_>>(),
+                "case {case}: FIFO admission must preserve arrival order"
+            );
+            assert_eq!(a.batches.iter().map(|b| b.requests).sum::<usize>(), n, "case {case}");
+
+            // (1) batch indices follow admission order.
+            let order: Vec<usize> = a.completions.iter().map(|c| c.batch_index).collect();
+            assert!(order.windows(2).all(|w| w[0] <= w[1]), "case {case}: {order:?}");
+
+            // (2) budgets.
+            for b in &a.batches {
+                assert_eq!(b.tokens, b.requests * tpr, "case {case}");
+                assert!(
+                    b.tokens <= cfg.max_batch_tokens || b.requests == 1,
+                    "case {case}: batch {} blew the token budget with {} requests",
+                    b.index,
+                    b.requests
+                );
+                if cfg.max_batch_requests > 0 {
+                    assert!(b.requests <= cfg.max_batch_requests, "case {case}");
+                }
+            }
+
+            // (4) virtual-clock sanity.
+            for w in a.batches.windows(2) {
+                assert!(w[0].finish_us <= w[1].start_us, "case {case}: batches overlap");
+            }
+            for c in &a.completions {
+                assert!(c.start_us >= c.arrival_us, "case {case}: served before arrival");
+                let b = &a.batches[c.batch_index];
+                assert_eq!((c.start_us, c.finish_us), (b.start_us, b.finish_us), "case {case}");
+            }
+
+            // (5) bitwise-deterministic rerun.
+            let b2 = engine.run_trace(trace).unwrap();
+            assert_eq!(a.batches.len(), b2.batches.len(), "case {case}");
+            for (x, y) in a.completions.iter().zip(&b2.completions) {
+                assert_eq!(
+                    (x.id, x.start_us, x.finish_us, x.batch_index),
+                    (y.id, y.start_us, y.finish_us, y.batch_index),
+                    "case {case}: virtual timeline must be reproducible"
+                );
+                assert_eq!(x.predictions, y.predictions, "case {case}");
+                assert_eq!(x.score.to_bits(), y.score.to_bits(), "case {case}");
+            }
+        }
+    }
+
     /// EP-sharded inference (2 rank threads, sharded expert weights, real
     /// all-to-all) is bitwise-identical to the same shards run serially
     /// with all experts local — the serving side of the mesh contract.

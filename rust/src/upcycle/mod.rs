@@ -64,7 +64,11 @@ pub fn upcycle_params(
                 let src = dense
                     .get(&dense_name)
                     .with_context(|| format!("dense parent lacks `{dense_name}`"))?;
-                replicate_experts(src, spec.shape[0], opts.expert_noise, &mut sub)?
+                if opts.expert_noise > 0.0 {
+                    replicate_experts_noisy(src, spec.shape[0], opts.expert_noise, &mut sub)?
+                } else {
+                    replicate_experts(src, spec.shape[0])?
+                }
             } else {
                 // Appendix B.5: random expert init, same fan-in scaling the
                 // from-scratch model would use.
@@ -109,7 +113,10 @@ pub fn upcycle_opt_state(
             let src = dense_opt
                 .get(&dense_name)
                 .with_context(|| format!("dense opt state lacks `{dense_name}`"))?;
-            replicate_experts(src, spec.shape[0], 0.0, &mut Rng::new(0))?
+            // Accumulator broadcast is a pure tiling — deterministic and
+            // noise-free *by construction*: the no-noise replicate takes no
+            // RNG, so no code path can ever perturb optimizer state.
+            replicate_experts(src, spec.shape[0])?
         } else {
             dense_opt
                 .get(name)
@@ -121,22 +128,33 @@ pub fn upcycle_opt_state(
     Ok(out)
 }
 
-/// Tile a tensor E times along a new leading axis, optionally adding
-/// independent Gaussian noise to every copy.
-fn replicate_experts(src: &Tensor, e: usize, noise: f32, rng: &mut Rng) -> Result<Tensor> {
+/// Tile a tensor E times along a new leading axis — exact copies, no RNG.
+///
+/// This is the paper's default surgery (and the *only* path optimizer
+/// state ever takes): taking no randomness source makes "noise-free" a
+/// property of the signature rather than of a parameter value.
+fn replicate_experts(src: &Tensor, e: usize) -> Result<Tensor> {
     let data = src.f32s()?;
     let mut out = Vec::with_capacity(e * data.len());
     for _ in 0..e {
         out.extend_from_slice(data);
     }
-    if noise > 0.0 {
-        for x in &mut out {
-            *x += rng.normal() * noise;
-        }
-    }
     let mut shape = vec![e];
     shape.extend_from_slice(&src.shape);
     Ok(Tensor::from_f32(&shape, out))
+}
+
+/// [`replicate_experts`] plus independent Gaussian noise on every copy
+/// (Appendix B.9's expert-diversification ablation). Only parameter
+/// surgery with `expert_noise > 0` comes through here.
+fn replicate_experts_noisy(src: &Tensor, e: usize, noise: f32, rng: &mut Rng) -> Result<Tensor> {
+    let mut t = replicate_experts(src, e)?;
+    if noise > 0.0 {
+        for x in t.f32s_mut()? {
+            *x += rng.normal() * noise;
+        }
+    }
+    Ok(t)
 }
 
 // ---------------------------------------------------------------------------
@@ -196,7 +214,7 @@ mod tests {
     #[test]
     fn replicate_is_exact_copies() {
         let src = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let t = replicate_experts(&src, 4, 0.0, &mut Rng::new(0)).unwrap();
+        let t = replicate_experts(&src, 4).unwrap();
         assert_eq!(t.shape, vec![4, 2, 3]);
         let d = t.f32s().unwrap();
         for e in 0..4 {
@@ -207,10 +225,13 @@ mod tests {
     #[test]
     fn replicate_noise_diversifies() {
         let src = Tensor::from_f32(&[8], vec![0.0; 8]);
-        let t = replicate_experts(&src, 2, 0.1, &mut Rng::new(1)).unwrap();
+        let t = replicate_experts_noisy(&src, 2, 0.1, &mut Rng::new(1)).unwrap();
         let d = t.f32s().unwrap();
         assert_ne!(&d[0..8], &d[8..16], "noise must differ per expert");
         assert!(d.iter().all(|x| x.abs() < 1.0));
+        // noise = 0 through the noisy path degrades to exact copies.
+        let z = replicate_experts_noisy(&src, 2, 0.0, &mut Rng::new(1)).unwrap();
+        assert_eq!(z.f32s().unwrap(), &vec![0.0; 16][..]);
     }
 
     #[test]

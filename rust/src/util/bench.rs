@@ -155,7 +155,14 @@ impl Drop for PhaseGuard {
 
 /// Start timing a phase; the returned guard records on drop. See the module
 /// docs for the phase names used by the native backend.
+///
+/// Every phase entry also reports to `resilience::on_phase` — the seam the
+/// fault-injection harness uses to kill a rank thread deterministically
+/// *inside* a chosen phase of a chosen step. When no fault is armed on the
+/// calling thread (always, outside chaos tests and `--inject-fault` runs)
+/// that hook is a single thread-local read.
 pub fn phase(name: &'static str) -> PhaseGuard {
+    crate::resilience::on_phase(name);
     let enabled = PHASES_ENABLED.load(Ordering::Relaxed);
     PhaseGuard { name, start: if enabled { Some(Instant::now()) } else { None } }
 }

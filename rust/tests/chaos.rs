@@ -1,0 +1,281 @@
+//! Chaos suite: the elastic trainer's bitwise-recovery contract under a
+//! deterministic fault sweep.
+//!
+//! Every test here runs `coordinator::trainer::train_mesh_elastic` on a
+//! real DP×EP mesh (rank threads, sharded expert weights, live all-to-all
+//! collectives) with a `resilience::FaultPlan` that kills one rank at one
+//! step inside one phase, and asserts that the run recovers — rollback to
+//! the last SUPC snapshot, replay of the rolled-back steps — to a final
+//! state **bitwise-identical** to the uninterrupted run, down to the bytes
+//! of the final snapshot bundle on disk.
+//!
+//! * [`chaos_smoke`] is one mid-step kill — the blocking CI job.
+//! * [`chaos_sweep_all_phases_and_steps`] sweeps the full steps × phases
+//!   grid (router / dispatch / expert_mlp / combine / backward /
+//!   optimizer). It runs under `cargo test --release` (the same profile as
+//!   the bench gate) and is `#[ignore]`d in debug builds, where the
+//!   18-point grid would dominate the test wall time.
+//! * [`snapshot_save_crash_leaves_previous_loadable`] is the
+//!   crash-consistency half: a kill *during* a snapshot save must leave
+//!   the previous snapshot loadable.
+
+use std::path::Path;
+
+use sparse_upcycle::checkpoint;
+use sparse_upcycle::coordinator::{
+    train_mesh_elastic, Evaluator, MeshConfig, Schedule, TrainConfig, TrainState,
+};
+use sparse_upcycle::data::text::{HmmCorpus, HmmSpec, TextPipeline};
+use sparse_upcycle::init::{init_opt_state, init_params};
+use sparse_upcycle::manifest::{Manifest, ModelEntry};
+use sparse_upcycle::resilience::{
+    ElasticConfig, ElasticReport, FaultPhase, FaultPlan, FaultSchedule,
+};
+use sparse_upcycle::runtime::{LoadedModel, Runtime};
+
+const MODEL: &str = "lm_tiny_moe_e8_c2";
+const STEPS: u64 = 3;
+const SNAPSHOT_EVERY: u64 = 2;
+
+fn setup() -> (ModelEntry, LoadedModel) {
+    let manifest = Manifest::native();
+    let runtime = Runtime::new().unwrap();
+    let entry = manifest.model(MODEL).unwrap().clone();
+    let model = runtime.load_model(&manifest, MODEL, &["train", "eval"]).unwrap();
+    (entry, model)
+}
+
+fn pipeline(entry: &ModelEntry, shard: u64) -> TextPipeline {
+    TextPipeline::new(
+        HmmCorpus::new(
+            HmmSpec { vocab_size: entry.config.vocab_size, ..Default::default() },
+            1,
+        ),
+        entry.config.batch_size,
+        entry.config.enc_len,
+        entry.config.dec_len,
+        1,
+        shard,
+    )
+}
+
+/// One elastic run from a fixed fresh state; returns the final state, the
+/// report, and the bytes of the final snapshot bundle.
+fn run(
+    entry: &ModelEntry,
+    model: &LoadedModel,
+    mesh: &MeshConfig,
+    dir: &Path,
+    faults: FaultSchedule,
+) -> (TrainState, ElasticReport, Vec<u8>) {
+    std::fs::remove_dir_all(dir).ok();
+    let mut state = TrainState::from_checkpoints(
+        entry,
+        &init_params(entry, 7).unwrap(),
+        &init_opt_state(entry).unwrap(),
+    )
+    .unwrap();
+    let mut data = pipeline(entry, 0);
+    let mut held = pipeline(entry, 1000);
+    let evaluator = Evaluator::from_source(&mut held, 1);
+    let cfg = TrainConfig {
+        steps: STEPS,
+        schedule: Schedule::t5_pretrain(0.01, 2),
+        weight_decay: 0.01,
+        eval_every: 0,
+        log_every: 0,
+    };
+    let mut ecfg = ElasticConfig::new(dir);
+    ecfg.snapshot_every = SNAPSHOT_EVERY;
+    ecfg.snapshot_keep = 2;
+    ecfg.faults = faults;
+    let (_series, report) = train_mesh_elastic(
+        model, &mut state, &mut data, &evaluator, &cfg, mesh, &ecfg, "chaos",
+    )
+    .unwrap();
+    let final_snap = checkpoint::snapshot_path(dir, state.step);
+    let bytes = std::fs::read(&final_snap).expect("final snapshot must exist");
+    (state, report, bytes)
+}
+
+fn assert_bitwise(entry: &ModelEntry, a: &TrainState, b: &TrainState, what: &str) {
+    assert_eq!(a.step, b.step, "{what}: final step");
+    for ((x, y), spec) in a.params.iter().zip(&b.params).zip(&entry.params) {
+        assert_eq!(x, y, "{what}: param `{}` must match bitwise", spec.name);
+    }
+    for ((x, y), spec) in a.opt_state.iter().zip(&b.opt_state).zip(&entry.opt_state) {
+        assert_eq!(x, y, "{what}: opt slot `{}` must match bitwise", spec.name);
+    }
+}
+
+/// One injected mid-step kill on a live 1x2 mesh recovers bitwise — the
+/// blocking CI chaos-smoke check.
+#[test]
+fn chaos_smoke() {
+    let (entry, model) = setup();
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let base = std::env::temp_dir().join("supc_chaos_smoke");
+    let (ref_state, ref_report, ref_bytes) =
+        run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
+    assert!(ref_report.recoveries.is_empty());
+
+    let plan = FaultPlan { rank: 1, step: 3, phase: FaultPhase::ExpertMlp };
+    let (state, report, bytes) =
+        run(&entry, &model, &mesh, &base.join("fault"), FaultSchedule::single(plan));
+    assert_eq!(report.recoveries.len(), 1, "{:?}", report.recoveries);
+    let ev = &report.recoveries[0];
+    assert!(ev.injected, "{}", ev.cause);
+    assert_eq!((ev.failed_step, ev.rolled_back_to), (3, 2));
+    assert_bitwise(&entry, &ref_state, &state, "smoke");
+    assert_eq!(ref_bytes, bytes, "final SUPC bundles must be byte-identical");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The full grid: for every phase in the step pipeline and every step of
+/// the run, kill a rank there and assert bitwise recovery. Rank-side
+/// phases kill EP rank 1 of the 1x2 mesh; the optimizer phase kills the
+/// coordinator mid-update (the torn-state case). Release-profile only —
+/// CI runs it via `cargo test --release` next to the bench gate.
+#[cfg_attr(debug_assertions, ignore = "18-point grid; runs in the release test pass")]
+#[test]
+fn chaos_sweep_all_phases_and_steps() {
+    let (entry, model) = setup();
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let base = std::env::temp_dir().join("supc_chaos_sweep");
+    let (ref_state, _, ref_bytes) =
+        run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
+
+    for phase in FaultPhase::ALL {
+        for step in 1..=STEPS {
+            let rank = if phase.on_coordinator() { 0 } else { 1 };
+            let plan = FaultPlan { rank, step, phase };
+            let dir = base.join(format!("fault_{phase}_{step}"));
+            let (state, report, bytes) =
+                run(&entry, &model, &mesh, &dir, FaultSchedule::single(plan));
+            let what = format!("fault {plan}");
+            assert_eq!(report.recoveries.len(), 1, "{what}: {:?}", report.recoveries);
+            let ev = &report.recoveries[0];
+            assert!(ev.injected, "{what}: {}", ev.cause);
+            assert_eq!(ev.failed_step, step, "{what}");
+            // Rollback lands on the last snapshot at or before step-1.
+            let expect_rollback = (step - 1) / SNAPSHOT_EVERY * SNAPSHOT_EVERY;
+            assert_eq!(ev.rolled_back_to, expect_rollback, "{what}");
+            assert_bitwise(&entry, &ref_state, &state, &what);
+            assert_eq!(ref_bytes, bytes, "{what}: final SUPC bundle bytes");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Faults must also recover on a 2x2 mesh (two DP groups — the failure is
+/// in one group; the other blocks on gradient fan-in and must be released
+/// cleanly by the scope teardown, not deadlock).
+#[cfg_attr(debug_assertions, ignore = "runs in the release test pass")]
+#[test]
+fn chaos_recovers_on_2x2_mesh() {
+    let (entry, model) = setup();
+    let mesh = MeshConfig { dp: 2, ep: 2, parallel: true };
+    let base = std::env::temp_dir().join("supc_chaos_2x2");
+    let (ref_state, _, ref_bytes) =
+        run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
+    // Global rank 2 = DP group 1, EP rank 0.
+    let plan = FaultPlan { rank: 2, step: 2, phase: FaultPhase::Backward };
+    let (state, report, bytes) =
+        run(&entry, &model, &mesh, &base.join("fault"), FaultSchedule::single(plan));
+    assert_eq!(report.recoveries.len(), 1);
+    assert_bitwise(&entry, &ref_state, &state, "2x2");
+    assert_eq!(ref_bytes, bytes);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Two faults in one run (different steps) both recover.
+#[cfg_attr(debug_assertions, ignore = "runs in the release test pass")]
+#[test]
+fn chaos_recovers_from_multiple_faults() {
+    let (entry, model) = setup();
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let base = std::env::temp_dir().join("supc_chaos_multi");
+    let (ref_state, _, ref_bytes) =
+        run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
+    let faults = FaultSchedule::new(vec![
+        FaultPlan { rank: 0, step: 1, phase: FaultPhase::Router },
+        FaultPlan { rank: 1, step: 3, phase: FaultPhase::Optimizer },
+    ]);
+    let (state, report, bytes) = run(&entry, &model, &mesh, &base.join("fault"), faults);
+    assert_eq!(report.recoveries.len(), 2, "{:?}", report.recoveries);
+    assert_bitwise(&entry, &ref_state, &state, "multi");
+    assert_eq!(ref_bytes, bytes);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Crash consistency of the snapshot rotation: a process killed mid-save
+/// (simulated byte-exactly: the temp file exists, the target either does
+/// not exist yet or holds a torn write) leaves the *previous* snapshot
+/// loadable, and recovery proceeds from it.
+#[test]
+fn snapshot_save_crash_leaves_previous_loadable() {
+    let (entry, _model) = setup();
+    let dir = std::env::temp_dir().join("supc_chaos_crashsave");
+    std::fs::remove_dir_all(&dir).ok();
+    let state = TrainState::from_checkpoints(
+        &entry,
+        &init_params(&entry, 7).unwrap(),
+        &init_opt_state(&entry).unwrap(),
+    )
+    .unwrap();
+    checkpoint::save_snapshot(&dir, &entry, &state.params, &state.opt_state, 4, 3).unwrap();
+
+    // Crash schedule A: killed before the rename — only the temp exists.
+    std::fs::write(dir.join("snap_000000000006.tmp"), b"half a snapshot").unwrap();
+    let (_, _, step, _) = checkpoint::load_latest_snapshot(&dir, &entry).unwrap();
+    assert_eq!(step, 4, "an in-flight temp file must be invisible to recovery");
+
+    // Crash schedule B: the newest snapshot is torn (truncated mid-write).
+    let good = std::fs::read(checkpoint::snapshot_path(&dir, 4)).unwrap();
+    std::fs::write(checkpoint::snapshot_path(&dir, 6), &good[..good.len() / 2]).unwrap();
+    let (params, opt, step, path) = checkpoint::load_latest_snapshot(&dir, &entry).unwrap();
+    assert_eq!(step, 4, "a torn newest snapshot must fall back to the previous one");
+    assert_eq!(path, checkpoint::snapshot_path(&dir, 4));
+    for (t, spec) in params.iter().zip(&entry.params) {
+        assert_eq!(t.shape, spec.shape);
+    }
+    assert_eq!(opt.len(), entry.opt_state.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The injected fault's root cause travels to the surviving ranks: a
+/// surviving peer's "collective aborted" error names the injected kill,
+/// so operators (and the recovery log) see *why* the group died.
+#[test]
+fn surviving_ranks_report_the_root_cause() {
+    use sparse_upcycle::coordinator::mesh_train_step_faulted;
+    let (entry, model) = setup();
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let mut data = pipeline(&entry, 0);
+    let state = TrainState::from_checkpoints(
+        &entry,
+        &init_params(&entry, 7).unwrap(),
+        &init_opt_state(&entry).unwrap(),
+    )
+    .unwrap();
+    let batch = sparse_upcycle::coordinator::BatchSource::next(&mut data);
+    let plan = FaultPlan { rank: 0, step: 1, phase: FaultPhase::Dispatch };
+    let err = mesh_train_step_faulted(
+        &model,
+        state.params,
+        state.opt_state,
+        &batch,
+        1e-3,
+        0.0,
+        1,
+        &mesh,
+        Some(plan),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        sparse_upcycle::resilience::is_injected_fault(&msg),
+        "the step error must surface the injected root cause, got: {msg}"
+    );
+}

@@ -1,0 +1,142 @@
+//! Fuzz-style loader hardening: `checkpoint::load_train_state` fed
+//! randomly truncated and bit-flipped SUPC bundles (seeded, reproducible)
+//! must yield a **named error** for every corruption it can detect, and
+//! must **never** panic, over-allocate on a corrupt length field, or hand
+//! back a silently-wrong checkpoint.
+//!
+//! "Never silently wrong" is checkable because the format carries an
+//! integrity checksum (FNV-1a over model + step + payload, in the header):
+//! the only mutations allowed to load successfully are those that leave
+//! the bound state — params, optimizer state, step — bitwise-identical to
+//! the original (e.g. a flip inside the free-form provenance string).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use sparse_upcycle::checkpoint::{load_train_state, save_train_state};
+use sparse_upcycle::manifest::Manifest;
+use sparse_upcycle::tensor::Tensor;
+use sparse_upcycle::util::rng::Rng;
+
+/// 64 truncations + 64 bit flips + 16 double-flips = 144 seeded cases.
+const TRUNCATIONS: usize = 64;
+const BITFLIPS: usize = 64;
+const DOUBLE_FLIPS: usize = 16;
+
+#[test]
+fn corrupt_bundles_never_panic_and_never_load_wrong() {
+    let manifest = Manifest::native();
+    let entry = manifest.model("lm_tiny_dense").unwrap();
+    // A valid reference bundle with distinctive values.
+    let params: Vec<Tensor> = entry
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let n: usize = s.shape.iter().product();
+            Tensor::from_f32(&s.shape, (0..n).map(|j| (i * 37 + j) as f32 * 0.01 - 2.0).collect())
+        })
+        .collect();
+    let opt: Vec<Tensor> = entry
+        .opt_state
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let n: usize = s.shape.iter().product();
+            Tensor::from_f32(&s.shape, (0..n).map(|j| (i + j) as f32 * 1e-4).collect())
+        })
+        .collect();
+    let dir = std::env::temp_dir().join("supc_fuzz");
+    std::fs::create_dir_all(&dir).unwrap();
+    let good_path = dir.join("good.supc");
+    save_train_state(&good_path, entry, &params, &opt, 123, "fuzz reference").unwrap();
+    let good = std::fs::read(&good_path).unwrap();
+    // Sanity: the untouched bundle loads and round-trips bitwise.
+    let (p0, o0, s0) = load_train_state(&good_path, entry).unwrap();
+    assert_eq!((s0, &p0, &o0), (123, &params, &opt));
+
+    let mutated_path = dir.join("mutated.supc");
+    let mut rng = Rng::new(0xfa57);
+    let mut named_errors = 0usize;
+    let mut benign_loads = 0usize;
+    let mut case = |bytes: &[u8], what: &str| {
+        std::fs::write(&mutated_path, bytes).unwrap();
+        let out = catch_unwind(AssertUnwindSafe(|| load_train_state(&mutated_path, entry)));
+        match out {
+            Err(_) => panic!("{what}: the loader PANICKED on corrupt input"),
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    !msg.trim().is_empty() && msg.contains("supc"),
+                    "{what}: error must name the file: {msg}"
+                );
+                named_errors += 1;
+            }
+            Ok(Ok((p, o, step))) => {
+                // Loading is only acceptable if the *state* is untouched
+                // (the mutation landed in cosmetic metadata).
+                assert_eq!(step, 123, "{what}: loaded a silently-wrong step");
+                assert_eq!(p, params, "{what}: loaded silently-wrong params");
+                assert_eq!(o, opt, "{what}: loaded silently-wrong optimizer state");
+                benign_loads += 1;
+            }
+        }
+    };
+
+    // Random truncations, including length 0 and cuts inside the preamble,
+    // the header and the payload.
+    for _ in 0..TRUNCATIONS {
+        let cut = rng.below(good.len());
+        case(&good[..cut], &format!("truncate to {cut} bytes"));
+    }
+    // Single bit flips anywhere in the file.
+    for _ in 0..BITFLIPS {
+        let mut b = good.clone();
+        let at = rng.below(b.len());
+        let bit = rng.below(8) as u8;
+        b[at] ^= 1 << bit;
+        case(&b, &format!("flip bit {bit} of byte {at}"));
+    }
+    // Double flips (corruption rarely comes alone).
+    for _ in 0..DOUBLE_FLIPS {
+        let mut b = good.clone();
+        for _ in 0..2 {
+            let at = rng.below(b.len());
+            b[at] ^= 1 << (rng.below(8) as u8);
+        }
+        case(&b, "double bit flip");
+    }
+    assert_eq!(named_errors + benign_loads, TRUNCATIONS + BITFLIPS + DOUBLE_FLIPS);
+    assert!(
+        named_errors > (TRUNCATIONS + BITFLIPS + DOUBLE_FLIPS) / 2,
+        "most corruptions must be detected ({named_errors} named errors, \
+         {benign_loads} benign loads)"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Adversarial length fields: every u64/u32 length position rewritten to
+/// extreme values must error by name — never allocate absurd buffers.
+#[test]
+fn hostile_length_fields_are_rejected() {
+    let manifest = Manifest::native();
+    let entry = manifest.model("lm_tiny_dense").unwrap();
+    let params: Vec<Tensor> =
+        entry.params.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let opt: Vec<Tensor> =
+        entry.opt_state.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let dir = std::env::temp_dir().join("supc_fuzz_len");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("len.supc");
+    save_train_state(&path, entry, &params, &opt, 7, "len").unwrap();
+    let good = std::fs::read(&path).unwrap();
+    for hostile in [u64::MAX, u64::MAX / 2, good.len() as u64 + 1, 1 << 40] {
+        let mut b = good.clone();
+        b[8..16].copy_from_slice(&hostile.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        let out = catch_unwind(AssertUnwindSafe(|| load_train_state(&path, entry)));
+        let err = out.expect("must not panic").expect_err("hostile header length must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("header length"), "{msg}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

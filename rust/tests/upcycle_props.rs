@@ -1,0 +1,263 @@
+//! Property tests for the upcycling surgery: the paper's Figure-1
+//! identity-at-init claim, and the optimizer-state broadcast/zeroing
+//! invariants of Appendix B.6.
+//!
+//! **Identity at init.** With `expert_noise = 0` and combine-weight
+//! renormalization on, every expert of a freshly-upcycled MoE block
+//! computes the dense parent's MLP, and each routed token's combine
+//! weights sum to 1 — so as long as every token is kept by at least one
+//! expert (`coverage == 1`), the upcycled forward *is* the dense forward.
+//! For top-1 routing the renormalized gate is exactly `1.0`, so the match
+//! is bitwise; for top-2 and Expert Choice the gate-weighted sum of
+//! identical outputs reintroduces ~1-ulp float rounding, so those assert a
+//! tight tolerance instead. The sweep covers E ∈ {2, 4, 8, 16} and all
+//! three router families by rewriting zoo entries in a cloned manifest
+//! (renormalize on; EC capacity raised to E so no token can be dropped).
+
+use sparse_upcycle::checkpoint::Checkpoint;
+use sparse_upcycle::init::init_params;
+use sparse_upcycle::manifest::Manifest;
+use sparse_upcycle::runtime::{tensors_from_checkpoint, Runtime};
+use sparse_upcycle::tensor::Tensor;
+use sparse_upcycle::upcycle::{upcycle_opt_state, upcycle_params, UpcycleOptions};
+
+/// Rewrite a sparse zoo entry's routing: force combine-weight
+/// renormalization, optionally change the router family, optionally raise
+/// the capacity factor (EC with C = E keeps every token by construction).
+fn rewrite_routing(
+    manifest: &mut Manifest,
+    name: &str,
+    router: Option<&str>,
+    capacity: Option<f64>,
+) {
+    let e = manifest.models.get_mut(name).expect("zoo entry");
+    for moe in [e.config.enc_moe.as_mut(), e.config.dec_moe.as_mut()]
+        .into_iter()
+        .flatten()
+    {
+        moe.renormalize = true;
+        if let Some(r) = router {
+            moe.router_type = r.to_string();
+        }
+        if let Some(c) = capacity {
+            moe.capacity_factor = c;
+        }
+    }
+}
+
+fn lm_batch(entry: &sparse_upcycle::manifest::ModelEntry, seed: u64) -> Vec<Tensor> {
+    sparse_upcycle::data::text::TextPipeline::new(
+        sparse_upcycle::data::text::HmmCorpus::new(
+            sparse_upcycle::data::text::HmmSpec {
+                vocab_size: entry.config.vocab_size,
+                ..Default::default()
+            },
+            seed,
+        ),
+        entry.config.batch_size,
+        entry.config.enc_len,
+        entry.config.dec_len,
+        seed,
+        0,
+    )
+    .next_batch()
+}
+
+/// The identity-at-init sweep: upcycled (noise-free, renorm on) ==
+/// dense parent forward, across expert counts and router families.
+#[test]
+fn upcycled_forward_matches_dense_parent_at_init() {
+    // (sparse zoo entry, router override, capacity override, bitwise?)
+    let cases: &[(&str, Option<&str>, Option<f64>, bool)] = &[
+        // Expert Choice with C = E: every expert keeps every token.
+        ("lm_tiny_moe_e2_c2", None, Some(2.0), false),
+        ("lm_tiny_moe_e8_c2", None, Some(8.0), false),
+        // Top-1: the renormalized gate is exactly 1.0 → bitwise identity.
+        ("lm_tiny_moe_e8_c2_top1", None, None, true),
+        ("lm_tiny_moe_e4_c2", Some("top1"), None, true),
+        // Top-2: two identical outputs, gates summing to 1 → ~ulp rounding.
+        ("lm_tiny_moe_e8_c2_top2", None, None, false),
+        ("lm_tiny_moe_e16_c2", Some("top2"), None, false),
+    ];
+    let runtime = Runtime::new().unwrap();
+    for seed in [3u64, 11] {
+        let mut manifest = Manifest::native();
+        for &(name, router, capacity, _) in cases {
+            rewrite_routing(&mut manifest, name, router, capacity);
+        }
+        let dense_entry = manifest.model("lm_tiny_dense").unwrap().clone();
+        let dense_model =
+            runtime.load_model(&manifest, "lm_tiny_dense", &["eval"]).unwrap();
+        let dense_ck = init_params(&dense_entry, seed).unwrap();
+        let dense_params =
+            tensors_from_checkpoint(&dense_ck, &dense_entry.params).unwrap();
+        let batch = lm_batch(&dense_entry, seed);
+        let dense_m = dense_model.eval_step(&dense_params, &batch).unwrap();
+
+        for &(name, _, _, bitwise) in cases {
+            let entry = manifest.model(name).unwrap().clone();
+            let model = runtime.load_model(&manifest, name, &["eval"]).unwrap();
+            let opts = UpcycleOptions { expert_noise: 0.0, seed, ..Default::default() };
+            let sparse_ck = upcycle_params(&dense_ck, &entry, &opts).unwrap();
+            let sparse_params = tensors_from_checkpoint(&sparse_ck, &entry.params).unwrap();
+            let m = model.eval_step(&sparse_params, &batch).unwrap();
+            let tag = format!("{name} seed {seed}");
+            assert_eq!(
+                m["coverage"], 1.0,
+                "{tag}: the identity claim needs every token kept by >= 1 expert"
+            );
+            if bitwise {
+                assert_eq!(
+                    m["loss"].to_bits(),
+                    dense_m["loss"].to_bits(),
+                    "{tag}: top-1 + renorm must preserve the dense function bitwise \
+                     ({} vs {})",
+                    m["loss"],
+                    dense_m["loss"]
+                );
+                assert_eq!(m["accuracy"].to_bits(), dense_m["accuracy"].to_bits(), "{tag}");
+                // The forward-only serving path agrees too.
+                let d_out = dense_model.infer(&dense_params, &batch[..2]).unwrap();
+                let s_out = model.infer(&sparse_params, &batch[..2]).unwrap();
+                assert_eq!(d_out.predictions, s_out.predictions, "{tag}: infer predictions");
+            } else {
+                let dl = (m["loss"] - dense_m["loss"]).abs();
+                assert!(
+                    dl < 1e-3,
+                    "{tag}: loss must match the dense parent (|Δ| = {dl}, {} vs {})",
+                    m["loss"],
+                    dense_m["loss"]
+                );
+                assert!((m["accuracy"] - dense_m["accuracy"]).abs() < 0.02, "{tag}");
+            }
+        }
+    }
+}
+
+/// The vision side of the same property: the paper's ViT recipe (Expert
+/// Choice + renormalized combine weights, §3.1) preserves the dense
+/// function at init when capacity covers every token.
+#[test]
+fn upcycled_vit_forward_matches_dense_parent_at_init() {
+    let mut manifest = Manifest::native();
+    rewrite_routing(&mut manifest, "vit_tiny_moe_e8_c2", None, Some(8.0));
+    let runtime = Runtime::new().unwrap();
+    let dense_entry = manifest.model("vit_tiny_dense").unwrap().clone();
+    let dense_model = runtime.load_model(&manifest, "vit_tiny_dense", &["eval"]).unwrap();
+    let dense_ck = init_params(&dense_entry, 5).unwrap();
+    let dense_params = tensors_from_checkpoint(&dense_ck, &dense_entry.params).unwrap();
+    let batch = sparse_upcycle::data::vision::VisionPipeline::new(
+        sparse_upcycle::data::vision::VisionSpec {
+            image_size: dense_entry.config.image_size,
+            ..Default::default()
+        },
+        dense_entry.config.batch_size,
+        5,
+        0,
+    )
+    .next_batch()
+    .0;
+    let dense_m = dense_model.eval_step(&dense_params, &batch).unwrap();
+
+    let entry = manifest.model("vit_tiny_moe_e8_c2").unwrap().clone();
+    let model = runtime.load_model(&manifest, "vit_tiny_moe_e8_c2", &["eval"]).unwrap();
+    let ck = upcycle_params(&dense_ck, &entry, &UpcycleOptions::default()).unwrap();
+    let params = tensors_from_checkpoint(&ck, &entry.params).unwrap();
+    let m = model.eval_step(&params, &batch).unwrap();
+    assert_eq!(m["coverage"], 1.0);
+    let dl = (m["loss"] - dense_m["loss"]).abs();
+    assert!(dl < 1e-3, "vit: |Δloss| = {dl} ({} vs {})", m["loss"], dense_m["loss"]);
+    assert!((m["accuracy"] - dense_m["accuracy"]).abs() < 0.02, "vit accuracy");
+}
+
+/// The property is *about* renormalization: without it, the same surgery
+/// visibly moves the function (each token's output is scaled by its
+/// sub-unit router probability) — the Fig. 15 initial drop.
+#[test]
+fn no_renorm_breaks_the_identity() {
+    let manifest = Manifest::native();
+    let runtime = Runtime::new().unwrap();
+    let dense_entry = manifest.model("lm_tiny_dense").unwrap().clone();
+    let dense_model = runtime.load_model(&manifest, "lm_tiny_dense", &["eval"]).unwrap();
+    let dense_ck = init_params(&dense_entry, 3).unwrap();
+    let dense_params = tensors_from_checkpoint(&dense_ck, &dense_entry.params).unwrap();
+    let batch = lm_batch(&dense_entry, 3);
+    let dense_loss = dense_model.eval_step(&dense_params, &batch).unwrap()["loss"];
+
+    // lm_tiny_moe_e8_c2 ships with renormalize = false.
+    let entry = manifest.model("lm_tiny_moe_e8_c2").unwrap().clone();
+    let model = runtime.load_model(&manifest, "lm_tiny_moe_e8_c2", &["eval"]).unwrap();
+    let ck = upcycle_params(&dense_ck, &entry, &UpcycleOptions::default()).unwrap();
+    let params = tensors_from_checkpoint(&ck, &entry.params).unwrap();
+    let loss = model.eval_step(&params, &batch).unwrap()["loss"];
+    assert!(
+        (loss - dense_loss).abs() > 1e-3,
+        "without renorm the initial drop must be visible: {loss} vs {dense_loss}"
+    );
+}
+
+/// Optimizer-state upcycling invariants (Appendix B.6): zeroing when the
+/// optimizer is not carried over; dense-accumulator broadcast across
+/// experts (exact copies) + router zeroing when it is; and determinism —
+/// noise-free *by construction* now that the no-noise replication path
+/// takes no RNG at all (the `upcycle_opt_state` regression).
+#[test]
+fn opt_state_upcycling_broadcast_and_zeroing_invariants() {
+    let m = Manifest::native();
+    let dense = m.model("lm_tiny_dense").unwrap();
+    let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+    // A dense optimizer checkpoint with distinctive nonzero accumulators.
+    let mut dense_opt = Checkpoint::new("lm_tiny_dense", 40, "props");
+    for (i, spec) in dense.opt_state.iter().enumerate() {
+        let n: usize = spec.shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|j| (i * 131 + j) as f32 * 1e-3 + 0.25).collect();
+        dense_opt.insert(&spec.name, Tensor::from_f32(&spec.shape, data));
+    }
+
+    // load_optimizer = false (the language recipe): everything zeroed.
+    let zeroed = upcycle_opt_state(&dense_opt, sparse, false).unwrap();
+    for spec in &sparse.opt_state {
+        let t = zeroed.get(&spec.name).unwrap();
+        assert!(t.f32s().unwrap().iter().all(|&x| x == 0.0), "`{}` must be zero", spec.name);
+    }
+
+    // load_optimizer = true (the vision recipe): broadcast + router zeroing.
+    let carried = upcycle_opt_state(&dense_opt, sparse, true).unwrap();
+    for spec in &sparse.opt_state {
+        let t = carried.get(&spec.name).unwrap();
+        assert_eq!(t.shape, spec.shape, "`{}`", spec.name);
+        if spec.name.contains("/moe/router/") {
+            assert!(
+                t.f32s().unwrap().iter().all(|&x| x == 0.0),
+                "`{}`: routers have nothing to resume",
+                spec.name
+            );
+        } else if spec.name.contains("/moe/wi/") || spec.name.contains("/moe/wo/") {
+            let src = dense_opt.get(&spec.name.replace("/moe/", "/mlp/")).unwrap();
+            let (data, src_data) = (t.f32s().unwrap(), src.f32s().unwrap());
+            let e = spec.shape[0];
+            assert_eq!(data.len(), e * src_data.len());
+            for x in 0..e {
+                assert_eq!(
+                    &data[x * src_data.len()..(x + 1) * src_data.len()],
+                    src_data,
+                    "`{}` expert {x} must be an exact broadcast copy",
+                    spec.name
+                );
+            }
+        } else {
+            assert_eq!(t, dense_opt.get(&spec.name).unwrap(), "`{}`", spec.name);
+        }
+    }
+
+    // Deterministic by construction: a second run is bitwise-identical.
+    let again = upcycle_opt_state(&dense_opt, sparse, true).unwrap();
+    for spec in &sparse.opt_state {
+        assert_eq!(
+            carried.get(&spec.name).unwrap(),
+            again.get(&spec.name).unwrap(),
+            "`{}`: opt-state upcycling must be deterministic",
+            spec.name
+        );
+    }
+}
