@@ -59,24 +59,29 @@ quickstart:
 	cargo run --release -- quickstart --pretrain-steps 30 --extra-steps 5
 
 # Blocking docs gate (mirrors the CI docs job): rustdoc must be
-# warning-clean and every relative markdown link in README + docs/*.md
-# must resolve.
+# warning-clean, every relative markdown link in README + docs/*.md must
+# resolve, and no fenced example may use a deprecated CLI flag.
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p sparse-upcycle --lib
 	cargo run --release -- check-docs
 
-# End-to-end expert parallelism: 2x2 mesh, experts sharded across EP ranks.
+# End-to-end expert parallelism: 2x2 mesh, experts sharded across EP
+# ranks, all-to-all overlapped with expert compute (2 microbatches).
 mesh-smoke:
-	cargo run --release -- train --model lm_tiny_moe_e8_c2 --mesh 2x2 --steps 10
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 \
+	  --topology dp=2,ep=2 --microbatches 2 --steps 10
 
 # Fault tolerance: the elastic CLI path end-to-end — snapshot rotation,
 # injected mid-step rank kill, rollback + replay (docs/RESILIENCE.md; exits
 # nonzero if no recovery happened). The bitwise-recovery *assertion*
 # (tests/chaos.rs) already runs under `make test-release`, so this target
 # does not repeat it.
+# The fault lands in the `exchange` phase — inside the split-phase
+# all-to-all window — with the overlapped (2-microbatch) pipeline active.
 chaos-smoke:
-	cargo run --release -- train --model lm_tiny_moe_e8_c2 --mesh 1x2 --steps 6 \
-	  --snapshot-every 2 --inject-fault 1:4:expert_mlp
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 \
+	  --topology dp=1,ep=2 --microbatches 2 --steps 6 \
+	  --snapshot-every 2 --inject-fault 1:4:exchange
 
 # End-to-end serving: train → one-file checkpoint bundle → continuous-
 # batching inference engine (docs/SERVING.md).

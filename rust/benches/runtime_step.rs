@@ -22,6 +22,10 @@
 //!   serial-vs-threaded mesh step time, the dispatch/alltoall/expert_mlp
 //!   phase split, and the measured all-to-all exchange time against the
 //!   `Interconnect::shared_memory` cost model,
+//! * the overlap sweep: the same mesh step at microbatch counts 1/2/4,
+//!   recording the *exposed* `ep_alltoall` window (blocking
+//!   `finish_exchange` legs only) as the split-phase pipeline hides more
+//!   of the exchange behind expert compute,
 //! * forward-only inference (`runtime::Executable::infer`): a batch-size
 //!   sweep (latency percentiles, tokens/s) and the serve engine's
 //!   continuous-batching throughput against unbatched serving on the same
@@ -234,7 +238,7 @@ fn expert_parallel_section(
         if entry.config.batch_size % (dp * ep) != 0 {
             continue;
         }
-        let mesh = MeshConfig { dp, ep, parallel };
+        let mesh = MeshConfig { dp, ep, parallel, microbatches: 1 };
         let label = format!(
             "mesh_train_step {name} {dp}x{ep}{}",
             if parallel { "" } else { " [serial ref]" }
@@ -316,6 +320,95 @@ fn expert_parallel_section(
         ("tokens_per_step", num(tokens)),
         ("moe_blocks", num(entry.moe_block_tags().len() as f64)),
         ("plans", arr(entries)),
+    ])
+}
+
+/// Overlap sweep: the same 1×2 mesh step at microbatch counts 1/2/4. The
+/// `ep_alltoall` phase only times the *blocking* `finish_exchange` legs of
+/// the split-phase pipeline — the exposed communication window — so as the
+/// microbatch count grows and microbatch k's exchange rides behind
+/// microbatch k−1's expert compute, that window should shrink while the
+/// step stays bitwise-identical to the fused (`microbatches = 1`) run.
+fn overlap_section(manifest: &Manifest, runtime: &Runtime, target_ms: u64) -> Json {
+    println!("== overlap: exposed all-to-all window vs microbatch count ==");
+    let name = "lm_tiny_moe_e8_c2";
+    let entry = manifest.model(name).unwrap().clone();
+    let model = runtime.load_model(manifest, name, &["train", "eval"]).unwrap();
+    let mut pipe = pipeline(&entry);
+    let batch = pipe.next();
+    let tokens = tokens_per_step(&entry);
+
+    let mut entries = Vec::new();
+    let mut fused_alltoall_ns = 0.0;
+    for m in [1usize, 2, 4] {
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: m };
+        let mut state = fresh_state(&entry);
+        let mut step = 0u64;
+        let r = bench(&format!("mesh_train_step {name} 1x2 mb{m}"), target_ms, || {
+            step += 1;
+            let params = std::mem::take(&mut state.params);
+            let opt = std::mem::take(&mut state.opt_state);
+            let out =
+                mesh_train_step(&model, params, opt, &batch, 1e-3, 0.0, step, &mesh).unwrap();
+            state.params = out.params;
+            state.opt_state = out.opt_state;
+        });
+
+        // Exposed-window attribution over a few profiled steps.
+        let mut alltoall_ns = 0.0;
+        let mut ep_mlp_ns = 0.0;
+        let profiled_steps = 3u64;
+        phases_reset();
+        phases_enable(true);
+        for i in 1..=profiled_steps {
+            let params = std::mem::take(&mut state.params);
+            let opt = std::mem::take(&mut state.opt_state);
+            let out =
+                mesh_train_step(&model, params, opt, &batch, 1e-3, 0.0, 700 + i, &mesh).unwrap();
+            state.params = out.params;
+            state.opt_state = out.opt_state;
+        }
+        phases_enable(false);
+        for (phase, total_ns, _calls) in phases_snapshot() {
+            if phase == "ep_alltoall" {
+                alltoall_ns = total_ns / profiled_steps as f64;
+            } else if phase == "ep_expert_mlp" {
+                ep_mlp_ns = total_ns / profiled_steps as f64;
+            }
+        }
+        phases_reset();
+        if m == 1 {
+            fused_alltoall_ns = alltoall_ns;
+        }
+        let hidden = if fused_alltoall_ns > 0.0 {
+            1.0 - alltoall_ns / fused_alltoall_ns
+        } else {
+            0.0
+        };
+        println!(
+            "  ↳ mb={m}: exposed alltoall {:.1} µs/step ({:.0}% hidden vs fused), \
+             expert_mlp {:.1} µs/step",
+            alltoall_ns / 1e3,
+            hidden * 100.0,
+            ep_mlp_ns / 1e3
+        );
+        entries.push(obj(vec![
+            ("microbatches", num(m as f64)),
+            ("mean_ns", num(r.mean_ns)),
+            ("p50_ns", num(r.p50_ns)),
+            ("steps_per_s", num(1e9 / r.mean_ns)),
+            ("tokens_per_s", num(tokens * 1e9 / r.mean_ns)),
+            ("exposed_alltoall_ns_per_step", num(alltoall_ns)),
+            ("expert_mlp_ns_per_step", num(ep_mlp_ns)),
+            ("hidden_fraction_vs_fused", num(hidden)),
+        ]));
+    }
+    println!();
+    obj(vec![
+        ("model", s(name)),
+        ("mesh", s("dp=1,ep=2")),
+        ("tokens_per_step", num(tokens)),
+        ("sweep", arr(entries)),
     ])
 }
 
@@ -439,6 +532,7 @@ fn main() {
 
     let kernels = kernel_section(t_kern);
     let expert_parallel = expert_parallel_section(&manifest, &runtime, t_eval, full);
+    let overlap = overlap_section(&manifest, &runtime, t_eval);
     let inference = inference_section(&manifest, &runtime, t_eval);
 
     let mut model_entries = Vec::new();
@@ -583,6 +677,7 @@ fn main() {
         ("full", Json::Bool(full)),
         ("kernels", kernels),
         ("expert_parallel", expert_parallel),
+        ("overlap", overlap),
         ("inference", inference),
         ("models", arr(model_entries)),
     ]);

@@ -30,8 +30,9 @@
 //!
 //! Replica counts are validated against the model's batch geometry and the
 //! host's parallelism when a [`DpConfig`] is constructed
-//! (`parallel::validate_replicas`) — misconfiguration fails at setup time
-//! with an actionable message, not deep inside the step loop.
+//! (`parallel::MeshSpec::validate` in data-parallel mode) —
+//! misconfiguration fails at setup time with an actionable message, not
+//! deep inside the step loop.
 //!
 //! **Expert parallelism (DP×EP mesh).** [`mesh_train_step`] shards the
 //! global batch into `dp·ep` token shards and runs one rank thread per
@@ -234,7 +235,8 @@ impl DpConfig {
     /// N worker replicas, one shard each. Validates `replicas` against the
     /// model's batch geometry *and* the host's available parallelism.
     pub fn replicated(entry: &ModelEntry, replicas: usize) -> Result<DpConfig> {
-        crate::parallel::validate_replicas(entry, replicas, None)?;
+        crate::parallel::MeshSpec::data_parallel_only(replicas)
+            .validate(entry, crate::parallel::MeshMode::DataParallel { max_workers: None })?;
         Ok(DpConfig { replicas, workers: replicas })
     }
 
@@ -242,7 +244,10 @@ impl DpConfig {
     /// arithmetic as [`DpConfig::replicated`] with `replicas ==
     /// microbatches`, without needing that many hardware threads.
     pub fn accumulated(entry: &ModelEntry, microbatches: usize) -> Result<DpConfig> {
-        crate::parallel::validate_replicas(entry, microbatches, Some(usize::MAX))?;
+        crate::parallel::MeshSpec::data_parallel_only(microbatches).validate(
+            entry,
+            crate::parallel::MeshMode::DataParallel { max_workers: Some(usize::MAX) },
+        )?;
         Ok(DpConfig { replicas: microbatches, workers: 1 })
     }
 }
@@ -361,10 +366,17 @@ pub struct MeshConfig {
     /// stepped serially by this thread with the full expert set local —
     /// the 1-worker reference arithmetic. Bitwise-identical by contract.
     pub parallel: bool,
+    /// Microbatch chunks per MoE block traversal on each rank's exchange
+    /// pipeline (>= 1; 1 = the fused schedule). Higher values overlap more
+    /// all-to-all behind expert compute; the step arithmetic is
+    /// bitwise-identical for every value by the exchange contract.
+    pub microbatches: usize,
 }
 
 impl MeshConfig {
-    /// Parse a `DxE` mesh spec ("2x2" → dp 2, ep 2).
+    /// Parse a `DxE` mesh spec ("2x2" → dp 2, ep 2). Deprecated alias
+    /// syntax of the `--mesh` flag; `--topology dp=D,ep=E` and
+    /// [`parallel::MeshSpec::parse`] are the front door.
     pub fn parse(spec: &str) -> Result<(usize, usize)> {
         let (d, e) = spec
             .split_once('x')
@@ -376,17 +388,39 @@ impl MeshConfig {
         Ok((dp, ep))
     }
 
+    /// Validated mesh from one parsed topology plan — the single
+    /// [`parallel::MeshSpec`] front door shared by `train`,
+    /// [`train_mesh_elastic`] and `serve::mesh_infer`. `parallel` picks
+    /// threaded ranks vs. the serial 1-worker reference.
+    pub fn from_topology(
+        entry: &ModelEntry,
+        topo: &crate::parallel::MeshSpec,
+        parallel: bool,
+    ) -> Result<MeshConfig> {
+        topo.validate(entry, crate::parallel::MeshMode::Exec)?;
+        Ok(MeshConfig {
+            dp: topo.data_parallel,
+            ep: topo.expert_parallel,
+            parallel,
+            microbatches: 1,
+        })
+    }
+
     /// Validated mesh with one worker thread per rank.
     pub fn replicated(entry: &ModelEntry, dp: usize, ep: usize) -> Result<MeshConfig> {
-        crate::parallel::validate_mesh_exec(entry, dp, ep)?;
-        Ok(MeshConfig { dp, ep, parallel: true })
+        MeshConfig::from_topology(entry, &crate::parallel::MeshSpec::new(dp, ep), true)
     }
 
     /// The same mesh arithmetic executed serially by the calling thread
     /// (the 1-worker baseline of the bitwise-identity contract).
     pub fn accumulated(entry: &ModelEntry, dp: usize, ep: usize) -> Result<MeshConfig> {
-        crate::parallel::validate_mesh_exec(entry, dp, ep)?;
-        Ok(MeshConfig { dp, ep, parallel: false })
+        MeshConfig::from_topology(entry, &crate::parallel::MeshSpec::new(dp, ep), false)
+    }
+
+    /// Set the exchange pipeline depth (clamped to >= 1).
+    pub fn with_microbatches(mut self, m: usize) -> MeshConfig {
+        self.microbatches = m.max(1);
+        self
     }
 
     /// Total ranks (= token shards) on the mesh.
@@ -450,7 +484,8 @@ fn mesh_rank_grads(
                     // serial, exactly like DP replica workers.
                     crate::util::serial_compute(|| {
                         let mut exch =
-                            EpRankExchange::new(&model.entry, params, rank, group.clone())?;
+                            EpRankExchange::new(&model.entry, params, rank, group.clone())?
+                                .with_microbatches(mesh.microbatches);
                         let (m, g) = model.grads_ep(params, shard, &mut exch)?;
                         let g = g.into_iter().map(Tensor::into_f32s).collect::<Result<Vec<_>>>()?;
                         Ok((m, g))
@@ -1112,8 +1147,8 @@ mod tests {
     #[test]
     fn mesh_2x2_is_bitwise_identical_to_one_worker() {
         let (entry, model, batches) = setup();
-        let parallel = MeshConfig { dp: 2, ep: 2, parallel: true };
-        let serial = MeshConfig { dp: 2, ep: 2, parallel: false };
+        let parallel = MeshConfig { dp: 2, ep: 2, parallel: true, microbatches: 1 };
+        let serial = MeshConfig { dp: 2, ep: 2, parallel: false, microbatches: 1 };
         let (p_par, o_par, l_par) = run_mesh(&entry, &model, &batches, &parallel);
         let (p_ser, o_ser, l_ser) = run_mesh(&entry, &model, &batches, &serial);
         assert_eq!(l_par, l_ser, "per-step loss must match exactly");
@@ -1126,6 +1161,33 @@ mod tests {
         assert!(l_par.iter().all(|l| l.is_finite()));
     }
 
+    /// The overlap property: the double-buffered microbatch pipeline is
+    /// bitwise-identical to the serial 1-worker reference for every
+    /// microbatch count × mesh shape. The chunked forward/backward halves
+    /// are row-exact and the weight grads defer to one fused GEMM per
+    /// (expert, source), so the float arithmetic never depends on the
+    /// pipeline depth — only the all-to-all / compute overlap does.
+    #[test]
+    fn overlapped_pipeline_is_bitwise_serial_for_all_microbatch_counts() {
+        let (entry, model, batches) = setup();
+        let batches = &batches[..batches.len().min(2)];
+        for (dp, ep) in [(1usize, 1usize), (1, 2), (2, 2)] {
+            let serial = MeshConfig { dp, ep, parallel: false, microbatches: 1 };
+            let (p_ser, o_ser, l_ser) = run_mesh(&entry, &model, batches, &serial);
+            for m in [1usize, 2, 4] {
+                let mesh = MeshConfig { dp, ep, parallel: true, microbatches: m };
+                let (p_par, o_par, l_par) = run_mesh(&entry, &model, batches, &mesh);
+                assert_eq!(l_par, l_ser, "{dp}x{ep} m={m}: per-step loss must match exactly");
+                for ((a, b), spec) in p_par.iter().zip(&p_ser).zip(&entry.params) {
+                    assert_eq!(a, b, "{dp}x{ep} m={m}: param `{}` mismatch", spec.name);
+                }
+                for ((a, b), spec) in o_par.iter().zip(&o_ser).zip(&entry.opt_state) {
+                    assert_eq!(a, b, "{dp}x{ep} m={m}: opt slot `{}` mismatch", spec.name);
+                }
+            }
+        }
+    }
+
     /// With one DP group the hierarchical reduction collapses to the flat
     /// one, so a 1xE mesh must also be bitwise-identical to plain DP
     /// gradient accumulation over E shards — tying the expert-parallel
@@ -1133,7 +1195,7 @@ mod tests {
     #[test]
     fn mesh_1x2_matches_dp_accumulation_bitwise() {
         let (entry, model, batches) = setup();
-        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
         let (p_mesh, o_mesh, l_mesh) = run_mesh(&entry, &model, &batches, &mesh);
         let dp = DpConfig { replicas: 2, workers: 1 };
         let mut st = fresh_state(&entry);
@@ -1183,7 +1245,7 @@ mod tests {
     #[test]
     fn mesh_step_fails_loudly_on_bad_batch() {
         let (entry, model, batches) = setup();
-        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
         // Truncate one batch tensor so shard 1 is malformed.
         let mut bad = batches[0].clone();
         bad.pop();
@@ -1305,7 +1367,7 @@ mod tests {
     fn elastic_recovery_is_bitwise_identical_to_uninterrupted() {
         use crate::resilience::{FaultPhase, FaultSchedule};
         let (entry, model, _) = setup();
-        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
         let base = std::env::temp_dir().join("supc_trainer_elastic");
         let (ref_state, ref_report, ref_bytes) = run_elastic(
             &entry,
@@ -1342,7 +1404,7 @@ mod tests {
     fn elastic_recovers_from_optimizer_phase_fault() {
         use crate::resilience::{FaultPhase, FaultSchedule};
         let (entry, model, _) = setup();
-        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
         let base = std::env::temp_dir().join("supc_trainer_elastic_opt");
         let (ref_state, _, _) = run_elastic(
             &entry,
@@ -1374,7 +1436,7 @@ mod tests {
     fn elastic_replay_does_not_duplicate_eval_points() {
         use crate::resilience::{FaultPhase, FaultSchedule};
         let (entry, model, _) = setup();
-        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
         let dir = std::env::temp_dir().join("supc_trainer_elastic_evals");
         std::fs::remove_dir_all(&dir).ok();
         let mut state = fresh_state(&entry);
@@ -1416,7 +1478,7 @@ mod tests {
     #[test]
     fn elastic_gives_up_after_max_recoveries() {
         let (entry, model, batches) = setup();
-        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+        let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
         let dir = std::env::temp_dir().join("supc_trainer_elastic_giveup");
         std::fs::remove_dir_all(&dir).ok();
         struct BadSource {

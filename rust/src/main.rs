@@ -5,15 +5,17 @@
 //!                                   surgery → continued MoE training)
 //!   list                          — experiments and models available
 //!   train      --model M          — (pre)train a model from scratch
-//!                                   (--replicas N data-parallel, --mesh DxE
-//!                                   expert-parallel, --save CK bundle;
+//!                                   (--topology dp=D,ep=E[,tp=T] picks the
+//!                                   parallel plan, --microbatches M overlaps
+//!                                   the all-to-all, --save CK bundle;
 //!                                   --snapshot-every/--snapshot-keep/
 //!                                   --inject-fault run the elastic
 //!                                   fault-tolerant loop, docs/RESILIENCE.md)
 //!   serve      --load CK          — continuous-batching inference engine
 //!                                   over a trained checkpoint
 //!   infer      --load CK          — one forward-only inference pass
-//!                                   (--ep N shards experts over rank threads)
+//!                                   (--topology dp=1,ep=E shards experts
+//!                                   over rank threads)
 //!   bench-gate --baseline B --current C — CI bench regression gate
 //!   check-docs                    — markdown relative-link check (CI docs job)
 //!   upcycle    --dense CK --model M — run checkpoint surgery, save sparse CK
@@ -90,6 +92,60 @@ fn load_serving_params(
             }
         }
     }
+}
+
+/// Resolve the training parallel plan: the canonical
+/// `--topology dp=D,ep=E[,tp=T]` flag, with the deprecated `--replicas N`
+/// and `--mesh DxE` aliases desugaring onto the same [`MeshSpec`] (and
+/// printing a pointer to the replacement). Returns `None` when no
+/// topology flag was given at all (single-worker training).
+fn topology_from_args(a: &Args) -> Result<Option<MeshSpec>> {
+    let has_replicas = a.flags.contains_key("replicas");
+    let has_mesh = a.flags.contains_key("mesh");
+    if let Some(spec) = a.flags.get("topology") {
+        if has_replicas || has_mesh {
+            bail!("--topology replaces --replicas/--mesh; give only --topology");
+        }
+        return Ok(Some(MeshSpec::parse(spec)?));
+    }
+    if has_replicas && has_mesh {
+        bail!(
+            "--mesh and --replicas conflict: the mesh's data axis IS the replica count; \
+             use --topology dp=D,ep=E"
+        );
+    }
+    if has_replicas {
+        let replicas = a.usize("replicas", 1)?;
+        eprintln!("warning: --replicas is deprecated; use --topology dp={replicas},ep=1");
+        return Ok(Some(MeshSpec::data_parallel_only(replicas)));
+    }
+    if has_mesh {
+        let (dp, ep) = MeshConfig::parse(a.flags.get("mesh").unwrap())?;
+        eprintln!("warning: --mesh is deprecated; use --topology dp={dp},ep={ep}");
+        return Ok(Some(MeshSpec::new(dp, ep)));
+    }
+    Ok(None)
+}
+
+/// Topology for the placement/comms simulators (`upcycle mesh`, `upcycle
+/// comms`): the canonical `--topology` flag, with the old per-axis
+/// `--dp/--ep/--mp` flags as deprecated aliases (defaults dp=2, ep=4).
+fn sim_topology_from_args(a: &Args) -> Result<MeshSpec> {
+    let has_axis_flags = ["dp", "ep", "mp"].iter().any(|k| a.flags.contains_key(*k));
+    if let Some(spec) = a.flags.get("topology") {
+        if has_axis_flags {
+            bail!("--topology replaces --dp/--ep/--mp; give only --topology");
+        }
+        return MeshSpec::parse(spec);
+    }
+    if has_axis_flags {
+        eprintln!("warning: --dp/--ep/--mp are deprecated; use --topology dp=D,ep=E[,tp=T]");
+    }
+    Ok(MeshSpec {
+        data_parallel: a.usize("dp", 2)?,
+        expert_parallel: a.usize("ep", 4)?,
+        model_parallel: a.usize("mp", 1)?,
+    })
 }
 
 fn run() -> Result<()> {
@@ -233,37 +289,30 @@ fn run() -> Result<()> {
         "train" => {
             let model_name = a.req("model")?;
             let steps = a.u64("steps", 400)?;
-            let replicas = a.usize("replicas", 1)?;
+            // One parallel plan for every engine: `--topology` (or a
+            // deprecated alias) resolves to a MeshSpec up front; the
+            // elastic, mesh and data-parallel paths below all consume it.
+            let topo = topology_from_args(&a)?;
+            let microbatches = a.usize("microbatches", 1)?.max(1);
             let ctx = Ctx::new(&artifacts, &out_dir, params_from_args(&a)?, a.bool("verbose"))?;
             let (model, mut state) = ctx.branch_scratch(model_name, ctx.p.seed)?;
             let snapshot_every = a.u64("snapshot-every", 0)?;
             let fault_spec = a.flags.get("inject-fault").cloned();
             let elastic = snapshot_every > 0 || fault_spec.is_some();
-            // Shared by the elastic and plain mesh paths: one DxE spec +
-            // --serial-mesh selection, validated identically.
-            let build_mesh = |dp_axis: usize, ep_axis: usize| -> Result<MeshConfig> {
-                if a.bool("serial-mesh") {
-                    MeshConfig::accumulated(&model.entry, dp_axis, ep_axis)
-                } else {
-                    MeshConfig::replicated(&model.entry, dp_axis, ep_axis)
-                }
+            // Shared by the elastic and plain mesh paths: one validated
+            // plan (`MeshConfig::from_topology` runs `MeshSpec::validate`
+            // in exec mode) + `--serial-mesh` engine selection.
+            let build_mesh = |topo: &MeshSpec| -> Result<MeshConfig> {
+                Ok(MeshConfig::from_topology(&model.entry, topo, !a.bool("serial-mesh"))?
+                    .with_microbatches(microbatches))
             };
             let series = if elastic {
                 // Elastic mesh training: periodic SUPC snapshots with
                 // rotation, failure detection and rollback + replay
                 // recovery (docs/RESILIENCE.md). `--inject-fault r:s:p`
                 // deterministically kills rank r at step s in phase p.
-                if a.flags.contains_key("replicas") {
-                    bail!(
-                        "--replicas does not combine with elastic training; use --mesh DxE \
-                         (the mesh's data axis is the replica count)"
-                    );
-                }
-                let (dp_axis, ep_axis) = match a.flags.get("mesh") {
-                    Some(spec) => MeshConfig::parse(spec)?,
-                    None => (1, 1), // single-worker elastic run
-                };
-                let mesh = build_mesh(dp_axis, ep_axis)?;
+                let topo = topo.unwrap_or_else(|| MeshSpec::new(1, 1)); // single-worker run
+                let mesh = build_mesh(&topo)?;
                 let mut ecfg = sparse_upcycle::resilience::ElasticConfig::new(
                     ctx.ck_dir.join(format!("{model_name}_snapshots")),
                 );
@@ -276,9 +325,11 @@ fn run() -> Result<()> {
                     // phases ignore the rank — one optimizer per step).
                     if !plan.phase.on_coordinator() && plan.rank >= mesh.ranks() {
                         bail!(
-                            "--inject-fault names rank {} but the {dp_axis}x{ep_axis} mesh \
+                            "--inject-fault names rank {} but the {}x{} mesh \
                              has ranks 0..{}",
                             plan.rank,
+                            mesh.dp,
+                            mesh.ep,
                             mesh.ranks()
                         );
                     }
@@ -292,8 +343,10 @@ fn run() -> Result<()> {
                 }
                 ecfg.validate()?;
                 println!(
-                    "elastic mesh {dp_axis}x{ep_axis}: snapshot every {} step(s) (keep {}) \
+                    "elastic mesh {}x{}: snapshot every {} step(s) (keep {}) \
                      under {}{}",
+                    mesh.dp,
+                    mesh.ep,
                     ecfg.snapshot_every,
                     ecfg.snapshot_keep,
                     ecfg.dir.display(),
@@ -321,30 +374,29 @@ fn run() -> Result<()> {
                     );
                 }
                 series
-            } else if let Some(mesh_spec) = a.flags.get("mesh") {
-                if a.flags.contains_key("replicas") {
-                    bail!(
-                        "--mesh and --replicas conflict: the mesh's data axis IS the replica \
-                         count (use --mesh {}x<E> instead of --replicas {replicas})",
-                        replicas
-                    );
-                }
+            } else if let Some(topo) =
+                topo.filter(|t| t.expert_parallel > 1 || t.model_parallel > 1)
+            {
                 // DP×EP mesh: token shards per rank, expert weights sharded
-                // over each group's EP ranks, real all-to-all dispatch.
-                // Validated at setup (parallel::validate_mesh_exec).
-                let (dp_axis, ep_axis) = MeshConfig::parse(mesh_spec)?;
-                let mesh = build_mesh(dp_axis, ep_axis)?;
+                // over each group's EP ranks, real split-phase all-to-all
+                // dispatch overlapping `--microbatches` pipeline slots.
+                let mesh = build_mesh(&topo)?;
                 println!(
-                    "mesh {dp_axis}x{ep_axis}: {} rank(s), experts round-robin over {ep_axis} \
-                     expert-parallel rank(s){}",
+                    "mesh {}x{}: {} rank(s), experts round-robin over {} \
+                     expert-parallel rank(s), {} microbatch(es){}",
+                    mesh.dp,
+                    mesh.ep,
                     mesh.ranks(),
+                    mesh.ep,
+                    mesh.microbatches,
                     if mesh.parallel { "" } else { " (serial 1-worker reference)" }
                 );
                 ctx.run_branch_mesh(&model, &mut state, 0, steps, &mesh, model_name)?
-            } else if replicas > 1 {
-                // Validated at setup: bad replica counts fail here, not
-                // mid-run (see parallel::validate_replicas).
-                let dp = DpConfig::replicated(&model.entry, replicas)?;
+            } else if let Some(topo) = topo.filter(|t| t.data_parallel > 1) {
+                // A dp-only plan runs plain data parallelism over worker
+                // threads (validated at setup: bad replica counts fail
+                // here, not mid-run — `MeshSpec::validate`).
+                let dp = DpConfig::replicated(&model.entry, topo.data_parallel)?;
                 ctx.run_branch_dp(&model, &mut state, 0, steps, &dp, model_name)?
             } else {
                 ctx.run_branch(&model, &mut state, 0, steps, model_name)?
@@ -377,10 +429,26 @@ fn run() -> Result<()> {
             let model = runtime.load_model(&manifest, &model_name, &["eval"])?;
             let (params, step) = load_serving_params(&header, &entry)?;
             let n = a.usize("requests", 4)?.max(1);
-            let ep = a.usize("ep", 1)?.max(1);
+            let topo = match a.flags.get("topology") {
+                Some(spec) => {
+                    if a.flags.contains_key("ep") {
+                        bail!("--topology replaces --ep; give only --topology");
+                    }
+                    MeshSpec::parse(spec)?
+                }
+                None => {
+                    let ep = a.usize("ep", 1)?.max(1);
+                    if a.flags.contains_key("ep") {
+                        eprintln!("warning: --ep is deprecated; use --topology dp=1,ep={ep}");
+                    }
+                    MeshSpec::new(1, ep)
+                }
+            };
+            let ep = topo.expert_parallel.max(1);
+            let microbatches = a.usize("microbatches", 1)?.max(1);
             let trace = serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, 0);
             let inputs = serve::stack_inputs(&trace)?;
-            let out = serve::mesh_infer(&model, &params, &inputs, ep)?;
+            let out = serve::mesh_infer(&model, &params, &inputs, &topo, microbatches)?;
             println!(
                 "{model_name} @ step {step}: {n} example(s){}",
                 if ep > 1 {
@@ -457,10 +525,30 @@ fn run() -> Result<()> {
                     d.resolved.display()
                 );
             }
-            if !dead.is_empty() {
-                bail!("{} dead relative link(s) across {} doc file(s)", dead.len(), files.len());
+            let stale = sparse_upcycle::util::doclinks::check_deprecated_flags(&files)?;
+            for sf in &stale {
+                eprintln!(
+                    "deprecated flag `{}` in a fenced example, {}:{}: {}",
+                    sf.flag,
+                    sf.file.display(),
+                    sf.line,
+                    sf.text
+                );
             }
-            println!("doc links ok: {} file(s) checked, 0 dead relative links", files.len());
+            if !dead.is_empty() || !stale.is_empty() {
+                bail!(
+                    "{} dead relative link(s), {} deprecated flag(s) in fenced examples \
+                     across {} doc file(s) (use --topology dp=D,ep=E[,tp=T])",
+                    dead.len(),
+                    stale.len(),
+                    files.len()
+                );
+            }
+            println!(
+                "docs ok: {} file(s) checked, 0 dead relative links, \
+                 0 deprecated flags in examples",
+                files.len()
+            );
             Ok(())
         }
         "upcycle" => {
@@ -599,12 +687,8 @@ fn run() -> Result<()> {
             let model_name = a.req("model")?;
             let manifest = Manifest::load_or_native(&artifacts)?;
             let entry = manifest.model(model_name)?;
-            let mesh = MeshSpec {
-                data_parallel: a.usize("dp", 2)?,
-                expert_parallel: a.usize("ep", 4)?,
-                model_parallel: a.usize("mp", 1)?,
-            };
-            sparse_upcycle::parallel::validate_mesh(entry, &mesh)?;
+            let mesh = sim_topology_from_args(&a)?;
+            mesh.validate(entry, sparse_upcycle::parallel::MeshMode::Sim)?;
             let net = sparse_upcycle::parallel::collectives::Interconnect::tpu_like(
                 mesh.devices());
             let tokens = a.usize("tokens-per-device", 4096)?;
@@ -623,12 +707,8 @@ fn run() -> Result<()> {
             let model_name = a.req("model")?;
             let manifest = Manifest::load_or_native(&artifacts)?;
             let entry = manifest.model(model_name)?;
-            let mesh = MeshSpec {
-                data_parallel: a.usize("dp", 2)?,
-                expert_parallel: a.usize("ep", 4)?,
-                model_parallel: a.usize("mp", 1)?,
-            };
-            sparse_upcycle::parallel::validate_mesh(entry, &mesh)?;
+            let mesh = sim_topology_from_args(&a)?;
+            mesh.validate(entry, sparse_upcycle::parallel::MeshMode::Sim)?;
             let rep = place(entry, &mesh);
             println!("{model_name} on {} devices (dp={} ep={} mp={}):",
                      rep.devices, mesh.data_parallel, mesh.expert_parallel, mesh.model_parallel);
@@ -650,21 +730,24 @@ USAGE:
   upcycle quickstart [--pretrain-steps N] [--extra-steps N]   # native demo
   upcycle list
   upcycle experiment <id>|all [--pretrain-steps N] [--extra-steps N] [--seed S]
-  upcycle train   --model <name> [--steps N] [--replicas N]   # data-parallel
-                  [--mesh DxE [--serial-mesh]]   # expert-parallel DP×EP mesh
-                  [--save <ck.supc>]   # one-file train-state bundle
+  upcycle train   --model <name> [--steps N]
+                  [--topology dp=D,ep=E[,tp=T]]  # one validated parallel plan
+                  [--microbatches M]  # overlap all-to-all with expert compute
+                  [--serial-mesh]     # serial 1-worker mesh reference
+                  [--save <ck.supc>]  # one-file train-state bundle
                   [--snapshot-every N] [--snapshot-keep K]  # elastic training
                   [--inject-fault r:s:p]  # kill rank r at step s in phase p
   upcycle serve   --load <ck.supc> [--model <name>] [--requests N]
                   [--batch-tokens T] [--max-batch N] [--unbatched]
                   [--gap-us G] [--seed S]  # continuous-batching inference
-  upcycle infer   --load <ck.supc> [--model <name>] [--requests N] [--ep N]
+  upcycle infer   --load <ck.supc> [--model <name>] [--requests N]
+                  [--topology dp=1,ep=E] [--microbatches M]
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]
                   [--expert-noise σ] [--dense-opt <ck>] [--load-optimizer]
   upcycle eval    --model <name> --params <ck.supc>
   upcycle fewshot --model <vit-name> --params <ck.supc> [--shots K]
-  upcycle mesh    --model <name> [--dp N] [--ep N] [--mp N]
-  upcycle comms   --model <name> [--dp N] [--ep N] [--mp N] [--imbalance X]
+  upcycle mesh    --model <name> [--topology dp=D,ep=E[,tp=T]]
+  upcycle comms   --model <name> [--topology dp=D,ep=E[,tp=T]] [--imbalance X]
   upcycle bench-gate --baseline <json> --current <json> [--tolerance-pct N]
                   [--update-baseline]  # fail on perf regression vs baseline
   upcycle check-docs [--root DIR]     # markdown relative-link check

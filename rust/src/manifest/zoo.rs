@@ -457,7 +457,11 @@ mod tests {
         for (name, e) in &native_models() {
             e.validate().unwrap_or_else(|err| panic!("{name}: {err}"));
             for r in [1usize, 2, 4, 8] {
-                crate::parallel::validate_replicas(e, r, Some(64))
+                crate::parallel::MeshSpec::data_parallel_only(r)
+                    .validate(
+                        e,
+                        crate::parallel::MeshMode::DataParallel { max_workers: Some(64) },
+                    )
                     .unwrap_or_else(|err| panic!("{name} x{r} replicas: {err}"));
             }
         }

@@ -15,14 +15,21 @@
 //! it, **in ascending source order** — same discipline, applied to payload
 //! placement instead of addition.
 //!
-//! **Thread rendezvous.** [`EpGroup`] is the blocking counterpart of
+//! **Thread rendezvous.** [`EpGroup`] is the split-phase counterpart of
 //! [`all_to_all`] for expert-parallel rank *threads*
-//! (`coordinator::trainer::mesh_train_step`): each rank deposits its send
-//! row, an abortable barrier synchronizes the group, and each rank collects
-//! its receive column in source order. Payload placement is a pure function
-//! of rank indices, so thread scheduling can never reorder data. A rank
-//! that fails mid-protocol aborts the group instead of leaving its peers
-//! blocked on the barrier forever.
+//! (`coordinator::trainer::mesh_train_step`): [`EpGroup::start_exchange`]
+//! posts a rank's send row without blocking (per-channel FIFO queues, one
+//! per `(src, dst)` pair), and [`EpGroup::finish_exchange`] later blocks
+//! until every source's payload for that round has arrived, collecting the
+//! receive column in ascending source order. The split is what lets the
+//! overlapped runtime (`runtime::ep`) post microbatch `k+1`'s all-to-all
+//! before computing microbatch `k` — the exposed wait shrinks to pipeline
+//! fill/drain. [`EpGroup::exchange`] composes the two legs back into the
+//! fused blocking call. Payload placement is a pure function of rank
+//! indices and FIFO round order, so thread scheduling can never reorder
+//! data; per-payload tags catch protocol divergence at collection time. A
+//! rank that fails mid-protocol aborts the group instead of leaving its
+//! peers blocked in a completion wait forever.
 //!
 //! **Cost model.** The paper composes data / expert / model parallelism;
 //! the communication patterns behind them are all-to-all (MoE dispatch +
@@ -117,106 +124,53 @@ pub fn all_to_all<T>(sends: Vec<Vec<T>>) -> Result<Vec<Vec<T>>> {
 /// through this constant.
 pub const EP_ABORTED_MSG: &str = "expert-parallel collective aborted by a failed rank";
 
-/// A reusable barrier whose waiters can be released with an error instead
-/// of blocking forever when a participant dies mid-protocol. The abort can
-/// carry the failing rank's root cause, so survivors do not merely learn
-/// *that* the group died but *why* — the elastic trainer surfaces it in
-/// recovery logs without having to cross-reference thread results.
-struct AbortableBarrier {
+/// Split-phase all-to-all rendezvous for `R` expert-parallel rank threads —
+/// the threaded counterpart of [`all_to_all`].
+///
+/// A round has two legs. [`EpGroup::start_exchange`] posts the rank's send
+/// row (`send[dst]` = payload for rank `dst`) onto per-channel FIFO queues
+/// and returns immediately — nothing blocks on peers. A later
+/// [`EpGroup::finish_exchange`] with the same `tag` blocks until every
+/// source's payload for this rank's head-of-queue round has arrived and
+/// returns the receive column (`recv[src]` = payload from rank `src`,
+/// ascending source order). Multiple rounds may be in flight per rank —
+/// that is the point: the overlapped expert-parallel runtime posts
+/// microbatch `k+1`'s dispatch before computing microbatch `k`, so by the
+/// time it calls the matching `finish_exchange`, peers (which post before
+/// they compute too) have usually already delivered. [`EpGroup::exchange`]
+/// is the fused form (`start` + `finish` back to back) for callers that
+/// want the old blocking semantics.
+///
+/// Determinism: payload placement depends only on `(src, dst)` indices and
+/// FIFO round order — thread scheduling affects *when* a payload moves,
+/// never *where*. Every payload carries its round's tag, and
+/// `finish_exchange` verifies the tag of each payload it pops: two ranks
+/// disagreeing on the protocol position (a routing divergence bug, or
+/// mismatched microbatch counts across the group) fail loudly instead of
+/// silently swapping tensors. Any rank erroring mid-step should call
+/// [`EpGroup::abort`] so blocked peers return an error instead of hanging.
+pub struct EpGroup<T> {
     ranks: usize,
-    state: Mutex<BarrierState>,
+    state: Mutex<EpGroupState<T>>,
     cv: Condvar,
 }
 
-struct BarrierState {
-    arrived: usize,
-    generation: u64,
+struct EpGroupState<T> {
+    /// `queues[src * ranks + dst]`: tagged payloads in flight from `src` to
+    /// `dst`, FIFO per channel (front = oldest posted round).
+    queues: Vec<std::collections::VecDeque<(String, T)>>,
     aborted: bool,
     /// Root cause recorded by the first abort (later aborts keep it).
     abort_reason: Option<String>,
 }
 
-impl AbortableBarrier {
-    fn new(ranks: usize) -> AbortableBarrier {
-        AbortableBarrier {
-            ranks,
-            state: Mutex::new(BarrierState {
-                arrived: 0,
-                generation: 0,
-                aborted: false,
-                abort_reason: None,
-            }),
-            cv: Condvar::new(),
-        }
-    }
-
-    fn abort_err(g: &BarrierState) -> anyhow::Error {
-        match &g.abort_reason {
+impl<T> EpGroupState<T> {
+    fn abort_err(&self) -> anyhow::Error {
+        match &self.abort_reason {
             Some(r) => anyhow::anyhow!("{EP_ABORTED_MSG}: {r}"),
             None => anyhow::anyhow!("{EP_ABORTED_MSG}"),
         }
     }
-
-    fn wait(&self) -> Result<()> {
-        let mut g = self.state.lock().expect("barrier state");
-        if g.aborted {
-            return Err(Self::abort_err(&g));
-        }
-        g.arrived += 1;
-        if g.arrived == self.ranks {
-            g.arrived = 0;
-            g.generation = g.generation.wrapping_add(1);
-            self.cv.notify_all();
-            return Ok(());
-        }
-        let gen = g.generation;
-        while g.generation == gen && !g.aborted {
-            g = self.cv.wait(g).expect("barrier wait");
-        }
-        if g.aborted {
-            return Err(Self::abort_err(&g));
-        }
-        Ok(())
-    }
-
-    fn abort(&self, reason: Option<&str>) {
-        let mut g = self.state.lock().expect("barrier state");
-        g.aborted = true;
-        if g.abort_reason.is_none() {
-            g.abort_reason = reason.map(|r| r.to_string());
-        }
-        self.cv.notify_all();
-    }
-}
-
-/// Blocking all-to-all rendezvous for `R` expert-parallel rank threads —
-/// the threaded counterpart of [`all_to_all`].
-///
-/// Every rank calls [`EpGroup::exchange`] with the same `tag` and its send
-/// row (`send[dst]` = payload for rank `dst`); the call blocks until the
-/// whole group arrives and returns the rank's receive column (`recv[src]` =
-/// payload from rank `src`, ascending source order). Two barrier phases
-/// bound each exchange: deposits all land before any collect, and all
-/// collects finish before any rank can start the next exchange, so slots
-/// are never clobbered across rounds.
-///
-/// Determinism: payload placement depends only on `(src, dst)` indices —
-/// thread scheduling affects *when* a payload moves, never *where*. Tags
-/// are verified across the group, so two ranks disagreeing on the protocol
-/// position (a routing divergence bug) fail loudly instead of silently
-/// swapping tensors. Any rank erroring mid-step should call
-/// [`EpGroup::abort`] so blocked peers return an error instead of hanging.
-pub struct EpGroup<T> {
-    ranks: usize,
-    state: Mutex<EpGroupState<T>>,
-    barrier: AbortableBarrier,
-}
-
-struct EpGroupState<T> {
-    /// `slots[src * ranks + dst]`: payload in flight from `src` to `dst`.
-    slots: Vec<Option<T>>,
-    /// Tag each rank passed to the current exchange (verified to agree).
-    tags: Vec<String>,
 }
 
 impl<T: Send> EpGroup<T> {
@@ -225,10 +179,11 @@ impl<T: Send> EpGroup<T> {
         EpGroup {
             ranks,
             state: Mutex::new(EpGroupState {
-                slots: (0..ranks * ranks).map(|_| None).collect(),
-                tags: vec![String::new(); ranks],
+                queues: (0..ranks * ranks).map(|_| std::collections::VecDeque::new()).collect(),
+                aborted: false,
+                abort_reason: None,
             }),
-            barrier: AbortableBarrier::new(ranks),
+            cv: Condvar::new(),
         }
     }
 
@@ -236,9 +191,10 @@ impl<T: Send> EpGroup<T> {
         self.ranks
     }
 
-    /// Release every rank blocked in [`EpGroup::exchange`] with an error.
+    /// Release every rank blocked in a completion wait with an error, and
+    /// fail all subsequent starts/finishes on this group.
     pub fn abort(&self) {
-        self.barrier.abort(None);
+        self.abort_inner(None);
     }
 
     /// [`EpGroup::abort`], recording the failing rank's root cause: every
@@ -246,15 +202,26 @@ impl<T: Send> EpGroup<T> {
     /// bare abort message. The first recorded reason wins — a cascade of
     /// secondary aborts can never overwrite the original cause.
     pub fn abort_with(&self, reason: &str) {
-        self.barrier.abort(Some(reason));
+        self.abort_inner(Some(reason));
     }
 
-    /// One tagged all-to-all round; see the type docs for the contract.
-    pub fn exchange(&self, rank: usize, tag: &str, send: Vec<T>) -> Result<Vec<T>> {
+    fn abort_inner(&self, reason: Option<&str>) {
+        let mut st = self.state.lock().expect("ep group state");
+        st.aborted = true;
+        if st.abort_reason.is_none() {
+            st.abort_reason = reason.map(|r| r.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking send leg: post this rank's send row for round `tag`.
+    /// Returns as soon as the payloads are queued; peers observe them from
+    /// their matching [`EpGroup::finish_exchange`]. Malformed sends abort
+    /// the group (a misaddressed rank must not leave peers blocked in a
+    /// completion wait forever), carrying their cause so survivors report
+    /// it verbatim.
+    pub fn start_exchange(&self, rank: usize, tag: &str, send: Vec<T>) -> Result<()> {
         if rank >= self.ranks {
-            // Abort like every other early-error path: a misaddressed rank
-            // must not leave peers blocked in the barrier forever. Each
-            // abort carries its cause so survivors report it verbatim.
             let msg =
                 format!("exchange `{tag}`: rank {rank} out of range for {} ranks", self.ranks);
             self.abort_with(&msg);
@@ -269,46 +236,60 @@ impl<T: Send> EpGroup<T> {
             self.abort_with(&msg);
             bail!("{msg}");
         }
-        {
-            let mut st = self.state.lock().expect("ep group state");
-            for (dst, payload) in send.into_iter().enumerate() {
-                if st.slots[rank * self.ranks + dst].is_some() {
-                    drop(st);
-                    let msg = format!("exchange `{tag}`: rank {rank} deposited into a busy slot");
-                    self.abort_with(&msg);
-                    bail!("{msg}");
-                }
-                st.slots[rank * self.ranks + dst] = Some(payload);
-            }
-            st.tags[rank] = tag.to_string();
+        let mut st = self.state.lock().expect("ep group state");
+        if st.aborted {
+            return Err(st.abort_err());
         }
-        self.barrier.wait()?; // all deposits visible
-        let (recv, tags_agree) = {
-            let mut st = self.state.lock().expect("ep group state");
-            let mut recv = Vec::with_capacity(self.ranks);
-            for src in 0..self.ranks {
-                match st.slots[src * self.ranks + rank].take() {
-                    Some(p) => recv.push(p),
-                    None => {
-                        drop(st);
-                        let msg =
-                            format!("exchange `{tag}`: rank {rank} found no payload from {src}");
-                        self.abort_with(&msg);
-                        bail!("{msg}");
-                    }
-                }
-            }
-            (recv, st.tags.iter().all(|t| t == tag))
-        };
-        if !tags_agree {
-            let msg = format!(
-                "exchange `{tag}`: ranks disagree on the collective tag (protocol divergence)"
-            );
+        for (dst, payload) in send.into_iter().enumerate() {
+            st.queues[rank * self.ranks + dst].push_back((tag.to_string(), payload));
+        }
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking completion leg: collect the receive column of the oldest
+    /// outstanding round, verifying it is the round `tag` names. Blocks per
+    /// source channel until that source's payload arrives; a popped payload
+    /// whose tag differs from `tag` is protocol divergence and aborts the
+    /// group. Rounds complete in the FIFO order they were started.
+    pub fn finish_exchange(&self, rank: usize, tag: &str) -> Result<Vec<T>> {
+        if rank >= self.ranks {
+            let msg =
+                format!("exchange `{tag}`: rank {rank} out of range for {} ranks", self.ranks);
             self.abort_with(&msg);
             bail!("{msg}");
         }
-        self.barrier.wait()?; // all collects done; slots reusable
+        let mut recv = Vec::with_capacity(self.ranks);
+        let mut st = self.state.lock().expect("ep group state");
+        for src in 0..self.ranks {
+            loop {
+                if st.aborted {
+                    return Err(st.abort_err());
+                }
+                if let Some((got, payload)) = st.queues[src * self.ranks + rank].pop_front() {
+                    if got != tag {
+                        drop(st);
+                        let msg = format!(
+                            "exchange `{tag}`: rank {rank} popped round `{got}` from {src} \
+                             (protocol divergence)"
+                        );
+                        self.abort_with(&msg);
+                        bail!("{msg}");
+                    }
+                    recv.push(payload);
+                    break;
+                }
+                st = self.cv.wait(st).expect("ep group wait");
+            }
+        }
         Ok(recv)
+    }
+
+    /// One fused tagged all-to-all round: [`EpGroup::start_exchange`]
+    /// immediately followed by [`EpGroup::finish_exchange`].
+    pub fn exchange(&self, rank: usize, tag: &str, send: Vec<T>) -> Result<Vec<T>> {
+        self.start_exchange(rank, tag, send)?;
+        self.finish_exchange(rank, tag)
     }
 }
 
@@ -618,5 +599,101 @@ mod tests {
         // Wrong payload count fails immediately (and aborts the group).
         assert!(group.exchange(0, "bad", vec![1]).is_err());
         assert!(group.exchange(5, "bad", vec![1, 2]).is_err());
+    }
+
+    /// The split-phase contract: a rank may post several rounds before
+    /// completing any of them, and completions drain in FIFO round order
+    /// with every payload routed by `(src, dst)` — the shape of the
+    /// double-buffered microbatch pipeline.
+    #[test]
+    fn split_phase_rounds_pipeline_in_fifo_order() {
+        let ranks = 2;
+        let group = EpGroup::<(usize, usize, u64)>::new(ranks);
+        let out: Vec<Vec<Vec<(usize, usize, u64)>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..ranks)
+                .map(|r| {
+                    let group = &group;
+                    s.spawn(move || {
+                        // Post all three rounds up front, then drain.
+                        for round in 0..3u64 {
+                            let send: Vec<_> = (0..ranks).map(|dst| (r, dst, round)).collect();
+                            group.start_exchange(r, &format!("mb{round}"), send).unwrap();
+                        }
+                        (0..3u64)
+                            .map(|round| group.finish_exchange(r, &format!("mb{round}")).unwrap())
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (dst, rounds) in out.iter().enumerate() {
+            for (round, recv) in rounds.iter().enumerate() {
+                for (src, &(s_, d_, m_)) in recv.iter().enumerate() {
+                    assert_eq!((s_, d_, m_), (src, dst, round as u64), "payload routed wrong");
+                }
+            }
+        }
+    }
+
+    /// Ranks that disagree on the round tag (protocol divergence, e.g.
+    /// mismatched microbatch counts across the group) fail loudly at the
+    /// completion leg instead of silently swapping tensors.
+    #[test]
+    fn split_phase_detects_tag_divergence() {
+        let group = EpGroup::<u8>::new(2);
+        let res: Vec<Result<Vec<u8>>> = std::thread::scope(|s| {
+            let h0 = {
+                let group = &group;
+                s.spawn(move || {
+                    group.start_exchange(0, "mb0", vec![0, 0])?;
+                    group.finish_exchange(0, "mb0")
+                })
+            };
+            let h1 = {
+                let group = &group;
+                s.spawn(move || {
+                    group.start_exchange(1, "mb-other", vec![1, 1])?;
+                    group.finish_exchange(1, "mb-other")
+                })
+            };
+            vec![h0.join().unwrap(), h1.join().unwrap()]
+        });
+        assert!(res.iter().all(|r| r.is_err()), "divergent tags must fail both ranks");
+        let msgs: Vec<String> =
+            res.iter().map(|r| format!("{:#}", r.as_ref().unwrap_err())).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("protocol divergence")),
+            "one rank must name the divergence: {msgs:?}"
+        );
+    }
+
+    /// An abort landing between a rank's `start_exchange` and
+    /// `finish_exchange` — the window the overlapped pipeline keeps open —
+    /// must release the blocked completion leg with the root cause, and
+    /// fail any later start on the torn group.
+    #[test]
+    fn abort_lands_between_start_and_finish() {
+        let group = EpGroup::<u8>::new(2);
+        let res: Result<Vec<u8>> = std::thread::scope(|s| {
+            let h0 = {
+                let group = &group;
+                s.spawn(move || {
+                    group.start_exchange(0, "mb0", vec![0, 0])?;
+                    // Rank 1 dies while our round is in flight.
+                    group.finish_exchange(0, "mb0")
+                })
+            };
+            let group = &group;
+            s.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                group.abort_with("rank 1 killed mid-exchange");
+            });
+            h0.join().unwrap()
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains(EP_ABORTED_MSG), "{err}");
+        assert!(err.contains("killed mid-exchange"), "{err}");
+        assert!(group.start_exchange(0, "mb1", vec![0, 0]).is_err(), "torn group must not post");
     }
 }

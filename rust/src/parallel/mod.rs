@@ -18,15 +18,17 @@
 //! and per-device parameter memory. The `routing_sim` bench sweeps these
 //! against E / C / device count.
 //!
-//! [`validate_replicas`], [`validate_mesh`] and [`validate_mesh_exec`] are
-//! the front door: they check a requested replica count / mesh against the
-//! model entry and the host *at configuration time*, so a bad replica
-//! count fails with an actionable message when the run is set up instead
-//! of deep inside the trainer's step loop.
+//! [`MeshSpec`] is the single parallel plan: parsed from one `--topology
+//! dp=D,ep=E[,tp=T]` string ([`MeshSpec::parse`]) and checked by one
+//! mode-aware validator ([`MeshSpec::validate`]) against the model entry
+//! and the host *at configuration time* — so a bad topology fails with an
+//! actionable message when the run is set up instead of deep inside the
+//! trainer's step loop. The trainer, the elastic mesh trainer and mesh
+//! serving all consume the same validated plan.
 
 pub mod collectives;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::manifest::{ModelEntry, MoeSpec};
 use crate::util::rng::Rng;
@@ -36,150 +38,28 @@ fn divisors(n: usize) -> Vec<usize> {
     (1..=n).filter(|d| n % d == 0).collect()
 }
 
-/// Validate a data-parallel replica count for `entry` at configuration
-/// time. `max_workers` bounds the worker threads the host can usefully run
-/// (defaults to `std::thread::available_parallelism`); pass an explicit
-/// value to allow deliberate oversubscription.
-///
-/// Errors are actionable: they name the model, the offending number and the
-/// valid choices, instead of letting the trainer fail mid-run on a
-/// malformed batch shard.
-pub fn validate_replicas(
-    entry: &ModelEntry,
-    replicas: usize,
-    max_workers: Option<usize>,
-) -> Result<()> {
-    let b = entry.config.batch_size;
-    if replicas == 0 {
-        bail!("model `{}`: data-parallel replica count must be >= 1 (got 0)", entry.name);
-    }
-    if b == 0 {
-        bail!("model `{}`: batch_size is 0; nothing to shard across replicas", entry.name);
-    }
-    if b % replicas != 0 {
-        bail!(
-            "model `{}`: batch_size {} does not split into {} equal replica shards; \
-             valid replica counts for this model: {:?}",
-            entry.name,
-            b,
-            replicas,
-            divisors(b)
-        );
-    }
-    let avail = max_workers
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1));
-    if replicas > avail {
-        bail!(
-            "model `{}`: {} replicas exceed the available parallelism of {} worker thread(s); \
-             use <= {} replicas, or run single-replica gradient accumulation over {} \
-             microbatches (DpConfig::accumulated) for the same arithmetic",
-            entry.name,
-            replicas,
-            avail,
-            avail,
-            replicas
-        );
-    }
-    Ok(())
-}
-
-/// Validate a simulated mesh against a model entry: each axis must be
-/// satisfiable by the model's geometry. Zero-sized axes are legal (they
-/// normalize to 1, see [`MeshSpec::devices`]).
-pub fn validate_mesh(entry: &ModelEntry, mesh: &MeshSpec) -> Result<()> {
-    let num_experts = entry
-        .config
-        .enc_moe
-        .as_ref()
-        .or(entry.config.dec_moe.as_ref())
-        .map(|m| m.num_experts)
-        .unwrap_or(0);
-    let ep = mesh.expert_parallel.max(1);
-    // A dense entry simply has no expert placement (see `place`); an expert
-    // axis on it is a no-op, not an error. Only a sparse model with more
-    // expert-parallel devices than experts is unsatisfiable.
-    if num_experts > 0 && ep > num_experts {
-        bail!(
-            "model `{}`: {} expert-parallel devices but only {} experts; \
-             use expert_parallel <= {}",
-            entry.name,
-            ep,
-            num_experts,
-            num_experts
-        );
-    }
-    let dp = mesh.data_parallel.max(1);
-    let b = entry.config.batch_size;
-    if b > 0 && (dp > b || b % dp != 0) {
-        bail!(
-            "model `{}`: batch_size {} does not shard evenly over {} data-parallel devices; \
-             valid data_parallel values: {:?}",
-            entry.name,
-            b,
-            dp,
-            divisors(b)
-        );
-    }
-    let mp = mesh.model_parallel.max(1);
-    if mp > entry.config.d_model.max(1) {
-        bail!(
-            "model `{}`: model_parallel {} exceeds d_model {}; weight shards would be empty",
-            entry.name,
-            mp,
-            entry.config.d_model
-        );
-    }
-    Ok(())
-}
-
-/// Validate a DP×EP mesh for *real* execution
-/// (`coordinator::trainer::mesh_train_step`): the batch must shard evenly
-/// into `dp·ep` token shards and a sparse model must have at least one
-/// expert per EP rank. Unlike [`validate_replicas`], the rank count is
-/// deliberately *not* bounded by the host's parallelism: EP ranks spend
-/// much of a step blocked on collectives, so moderate thread
-/// oversubscription is normal (a 2×2 mesh runs fine on a 2-core host).
-pub fn validate_mesh_exec(entry: &ModelEntry, dp: usize, ep: usize) -> Result<()> {
-    if dp == 0 || ep == 0 {
-        bail!("model `{}`: mesh axes must be >= 1 (got {dp}x{ep})", entry.name);
-    }
-    // Every sharded tower must satisfy the expert axis — bound by the
-    // *smallest* MoE block, not just the encoder's (an artifact manifest
-    // may give the towers different expert counts).
-    let num_experts = [entry.config.enc_moe.as_ref(), entry.config.dec_moe.as_ref()]
-        .into_iter()
-        .flatten()
-        .map(|m| m.num_experts)
-        .min()
-        .unwrap_or(0);
-    if ep > 1 && num_experts == 0 {
-        bail!(
-            "model `{}` is dense: no experts to shard across {ep} expert-parallel ranks; \
-             use --replicas for plain data parallelism",
-            entry.name
-        );
-    }
-    if num_experts > 0 && ep > num_experts {
-        bail!(
-            "model `{}`: {ep} expert-parallel ranks but only {num_experts} experts in its \
-             smallest MoE block; use an expert axis <= {num_experts}",
-            entry.name
-        );
-    }
-    let ranks = dp * ep;
-    let b = entry.config.batch_size;
-    if b == 0 {
-        bail!("model `{}`: batch_size is 0; nothing to shard over the mesh", entry.name);
-    }
-    if b % ranks != 0 {
-        bail!(
-            "model `{}`: batch_size {b} does not shard into {dp}x{ep} = {ranks} mesh token \
-             shards; valid rank counts: {:?}",
-            entry.name,
-            divisors(b)
-        );
-    }
-    Ok(())
+/// How a [`MeshSpec`] will be consumed — picks which constraints
+/// [`MeshSpec::validate`] enforces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeshMode {
+    /// Placement / routing / comms *simulation* (`upcycle mesh`,
+    /// `upcycle comms`): geometric satisfiability only. Zero axes are
+    /// legal (they normalize to 1) and a dense entry ignores the expert
+    /// axis.
+    Sim,
+    /// Real DP×EP execution (the mesh trainer and mesh serving): the batch
+    /// must shard evenly into `dp·ep` token shards and a sparse model
+    /// needs at least one expert per EP rank. The rank count is
+    /// deliberately *not* bounded by the host's parallelism: EP ranks
+    /// spend much of a step blocked on collectives, so moderate thread
+    /// oversubscription is normal (a 2×2 mesh runs fine on a 2-core
+    /// host). `tp` is validated against `d_model` but executes serially.
+    Exec,
+    /// Plain data parallelism over worker threads (`dp` only).
+    /// `max_workers` bounds the threads the host can usefully run (`None`
+    /// = `std::thread::available_parallelism`); pass an explicit value to
+    /// allow deliberate oversubscription.
+    DataParallel { max_workers: Option<usize> },
 }
 
 /// The prescriptive expert↔rank mapping of a sharded MoE block: expert `x`
@@ -200,6 +80,12 @@ impl ExpertPlacement {
         ExpertPlacement { num_experts, ranks: ranks.max(1) }
     }
 
+    /// Topology-aware constructor: the placement an executing mesh implies
+    /// (experts shard over the `ep` axis only; `dp` rows replicate it).
+    pub fn for_mesh(num_experts: usize, mesh: &MeshSpec) -> ExpertPlacement {
+        ExpertPlacement::new(num_experts, mesh.expert_parallel)
+    }
+
     /// The rank that owns expert `x`.
     pub fn owner(&self, expert: usize) -> usize {
         expert % self.ranks
@@ -211,19 +97,229 @@ impl ExpertPlacement {
     }
 }
 
+/// One parallel plan: the `dp × ep × tp` device mesh every parallel
+/// consumer (the trainer, the elastic mesh trainer, mesh serving, the
+/// placement and comms simulators) is configured with. Parsed from a
+/// single `--topology` string ([`MeshSpec::parse`]) and checked by
+/// [`MeshSpec::validate`].
 #[derive(Debug, Clone, Copy)]
 pub struct MeshSpec {
     pub data_parallel: usize,
     pub expert_parallel: usize,
+    /// Tensor/model-parallel axis: validated (weight shards must be
+    /// non-empty) but executed serially in this repo.
     pub model_parallel: usize,
 }
 
 impl MeshSpec {
+    /// A `dp × ep` plan with no tensor-parallel axis.
+    pub fn new(dp: usize, ep: usize) -> MeshSpec {
+        MeshSpec { data_parallel: dp, expert_parallel: ep, model_parallel: 1 }
+    }
+
+    /// The plan plain data parallelism desugars to (`--replicas N`).
+    pub fn data_parallel_only(replicas: usize) -> MeshSpec {
+        MeshSpec::new(replicas, 1)
+    }
+
+    /// Parse a `--topology` string: comma-separated `axis=N` pairs with
+    /// axes `dp` (data parallel), `ep` (expert parallel) and optionally
+    /// `tp` (tensor parallel, validated but serial; defaults to 1). `dp`
+    /// and `ep` are required; order is free; an axis may appear once.
+    pub fn parse(s: &str) -> Result<MeshSpec> {
+        let (mut dp, mut ep, mut tp) = (None, None, None);
+        for part in s.split(',') {
+            let part = part.trim();
+            let (axis, val) = part
+                .split_once('=')
+                .with_context(|| format!("topology `{s}`: expected `axis=N`, got `{part}`"))?;
+            let axis = axis.trim();
+            let n: usize = val.trim().parse().with_context(|| {
+                format!("topology `{s}`: axis `{axis}` wants a number, got `{}`", val.trim())
+            })?;
+            let slot = match axis {
+                "dp" => &mut dp,
+                "ep" => &mut ep,
+                "tp" => &mut tp,
+                other => bail!("topology `{s}`: unknown axis `{other}` (use dp, ep, tp)"),
+            };
+            if slot.replace(n).is_some() {
+                bail!("topology `{s}`: axis `{axis}` given twice");
+            }
+        }
+        Ok(MeshSpec {
+            data_parallel: dp.with_context(|| format!("topology `{s}`: missing `dp=N`"))?,
+            expert_parallel: ep.with_context(|| format!("topology `{s}`: missing `ep=N`"))?,
+            model_parallel: tp.unwrap_or(1),
+        })
+    }
+
     /// Total devices. A zero-sized axis (e.g. `expert_parallel = 0` for a
     /// dense entry with no expert sharding) counts as one device on that
     /// axis — a mesh can never have zero devices.
     pub fn devices(&self) -> usize {
         self.data_parallel.max(1) * self.expert_parallel.max(1) * self.model_parallel.max(1)
+    }
+
+    /// Executing worker ranks: `dp·ep` (the `tp` axis runs serially).
+    pub fn ranks(&self) -> usize {
+        self.data_parallel.max(1) * self.expert_parallel.max(1)
+    }
+
+    /// The one mesh validator: checks this plan against `entry` (and, for
+    /// [`MeshMode::DataParallel`], the host) under the constraints of how
+    /// it will be consumed. Replaces the former
+    /// `validate_replicas` / `validate_mesh` / `validate_mesh_exec` trio.
+    ///
+    /// Errors are actionable: they name the model, the offending axis and
+    /// the valid choices, instead of letting the trainer fail mid-run on a
+    /// malformed batch shard.
+    pub fn validate(&self, entry: &ModelEntry, mode: MeshMode) -> Result<()> {
+        match mode {
+            MeshMode::Sim => self.validate_sim(entry),
+            MeshMode::Exec => self.validate_exec(entry),
+            MeshMode::DataParallel { max_workers } => self.validate_dp(entry, max_workers),
+        }
+    }
+
+    fn validate_sim(&self, entry: &ModelEntry) -> Result<()> {
+        let num_experts = entry
+            .config
+            .enc_moe
+            .as_ref()
+            .or(entry.config.dec_moe.as_ref())
+            .map(|m| m.num_experts)
+            .unwrap_or(0);
+        let ep = self.expert_parallel.max(1);
+        // A dense entry simply has no expert placement (see `place`); an
+        // expert axis on it is a no-op, not an error. Only a sparse model
+        // with more expert-parallel devices than experts is unsatisfiable.
+        if num_experts > 0 && ep > num_experts {
+            bail!(
+                "model `{}`: {} expert-parallel devices but only {} experts; \
+                 use expert_parallel <= {}",
+                entry.name,
+                ep,
+                num_experts,
+                num_experts
+            );
+        }
+        let dp = self.data_parallel.max(1);
+        let b = entry.config.batch_size;
+        if b > 0 && (dp > b || b % dp != 0) {
+            bail!(
+                "model `{}`: batch_size {} does not shard evenly over {} data-parallel devices; \
+                 valid data_parallel values: {:?}",
+                entry.name,
+                b,
+                dp,
+                divisors(b)
+            );
+        }
+        self.validate_tp(entry)
+    }
+
+    fn validate_exec(&self, entry: &ModelEntry) -> Result<()> {
+        let (dp, ep) = (self.data_parallel, self.expert_parallel);
+        if dp == 0 || ep == 0 {
+            bail!("model `{}`: mesh axes must be >= 1 (got {dp}x{ep})", entry.name);
+        }
+        // Every sharded tower must satisfy the expert axis — bound by the
+        // *smallest* MoE block, not just the encoder's (an artifact
+        // manifest may give the towers different expert counts).
+        let num_experts = [entry.config.enc_moe.as_ref(), entry.config.dec_moe.as_ref()]
+            .into_iter()
+            .flatten()
+            .map(|m| m.num_experts)
+            .min()
+            .unwrap_or(0);
+        if ep > 1 && num_experts == 0 {
+            bail!(
+                "model `{}` is dense: no experts to shard across {ep} expert-parallel ranks; \
+                 use a dp-only topology (ep=1) for plain data parallelism",
+                entry.name
+            );
+        }
+        if num_experts > 0 && ep > num_experts {
+            bail!(
+                "model `{}`: {ep} expert-parallel ranks but only {num_experts} experts in its \
+                 smallest MoE block; use an expert axis <= {num_experts}",
+                entry.name
+            );
+        }
+        let ranks = dp * ep;
+        let b = entry.config.batch_size;
+        if b == 0 {
+            bail!("model `{}`: batch_size is 0; nothing to shard over the mesh", entry.name);
+        }
+        if b % ranks != 0 {
+            bail!(
+                "model `{}`: batch_size {b} does not shard into {dp}x{ep} = {ranks} mesh token \
+                 shards; valid rank counts: {:?}",
+                entry.name,
+                divisors(b)
+            );
+        }
+        self.validate_tp(entry)
+    }
+
+    fn validate_dp(&self, entry: &ModelEntry, max_workers: Option<usize>) -> Result<()> {
+        if self.expert_parallel.max(1) != 1 || self.model_parallel.max(1) != 1 {
+            bail!(
+                "model `{}`: plain data parallelism takes a dp-only topology \
+                 (got dp={} ep={} tp={})",
+                entry.name,
+                self.data_parallel,
+                self.expert_parallel,
+                self.model_parallel
+            );
+        }
+        let replicas = self.data_parallel;
+        let b = entry.config.batch_size;
+        if replicas == 0 {
+            bail!("model `{}`: data-parallel replica count must be >= 1 (got 0)", entry.name);
+        }
+        if b == 0 {
+            bail!("model `{}`: batch_size is 0; nothing to shard across replicas", entry.name);
+        }
+        if b % replicas != 0 {
+            bail!(
+                "model `{}`: batch_size {} does not split into {} equal replica shards; \
+                 valid replica counts for this model: {:?}",
+                entry.name,
+                b,
+                replicas,
+                divisors(b)
+            );
+        }
+        let avail = max_workers
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1));
+        if replicas > avail {
+            bail!(
+                "model `{}`: {} replicas exceed the available parallelism of {} worker \
+                 thread(s); use <= {} replicas, or run single-replica gradient accumulation \
+                 over {} microbatches (DpConfig::accumulated) for the same arithmetic",
+                entry.name,
+                replicas,
+                avail,
+                avail,
+                replicas
+            );
+        }
+        Ok(())
+    }
+
+    fn validate_tp(&self, entry: &ModelEntry) -> Result<()> {
+        let tp = self.model_parallel.max(1);
+        if tp > entry.config.d_model.max(1) {
+            bail!(
+                "model `{}`: model_parallel {} exceeds d_model {}; weight shards would be empty",
+                entry.name,
+                tp,
+                entry.config.d_model
+            );
+        }
+        Ok(())
     }
 }
 
@@ -427,20 +523,45 @@ mod tests {
     }
 
     #[test]
+    fn topology_parse_accepts_axes_in_any_order() {
+        let t = MeshSpec::parse("dp=2,ep=4").unwrap();
+        assert_eq!((t.data_parallel, t.expert_parallel, t.model_parallel), (2, 4, 1));
+        let t = MeshSpec::parse("tp=2, ep=1, dp=8").unwrap();
+        assert_eq!((t.data_parallel, t.expert_parallel, t.model_parallel), (8, 1, 2));
+        assert_eq!(t.ranks(), 8, "tp does not add executing ranks");
+        // Malformed strings fail with the axis named.
+        for bad in ["", "dp=2", "ep=2", "dp=2,ep=x", "dp=2,ep=2,zz=1", "dp=2,dp=2,ep=1", "2x2"] {
+            let err = MeshSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("topology"), "`{bad}`: {err}");
+        }
+    }
+
+    #[test]
     fn replica_validation_is_actionable_at_config_time() {
         let m = crate::manifest::Manifest::native();
         let entry = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let dp_mode = MeshMode::DataParallel { max_workers: Some(64) };
         // batch_size 8: divisors are valid (given enough workers), 3 is not.
         for r in [1usize, 2, 4, 8] {
-            validate_replicas(entry, r, Some(64)).unwrap();
+            MeshSpec::data_parallel_only(r).validate(entry, dp_mode).unwrap();
         }
-        let err = validate_replicas(entry, 3, Some(64)).unwrap_err().to_string();
+        let err =
+            MeshSpec::data_parallel_only(3).validate(entry, dp_mode).unwrap_err().to_string();
         assert!(err.contains("lm_tiny_moe_e8_c2") && err.contains("[1, 2, 4, 8]"), "{err}");
-        assert!(validate_replicas(entry, 0, Some(64)).is_err());
-        assert!(validate_replicas(entry, 16, Some(64)).is_err(), "16 > batch 8 must fail");
+        assert!(MeshSpec::data_parallel_only(0).validate(entry, dp_mode).is_err());
+        assert!(
+            MeshSpec::data_parallel_only(16).validate(entry, dp_mode).is_err(),
+            "16 > batch 8 must fail"
+        );
         // Exceeding the host's worker budget is rejected with a hint.
-        let err = validate_replicas(entry, 8, Some(2)).unwrap_err().to_string();
+        let err = MeshSpec::data_parallel_only(8)
+            .validate(entry, MeshMode::DataParallel { max_workers: Some(2) })
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("available parallelism") && err.contains("accumulated"), "{err}");
+        // Data-parallel mode refuses a plan with real ep/tp axes.
+        let err = MeshSpec::new(2, 2).validate(entry, dp_mode).unwrap_err().to_string();
+        assert!(err.contains("dp-only"), "{err}");
     }
 
     #[test]
@@ -449,20 +570,25 @@ mod tests {
         let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
         let dense = m.model("lm_tiny_dense").unwrap();
         let ok = MeshSpec { data_parallel: 2, expert_parallel: 4, model_parallel: 1 };
-        validate_mesh(sparse, &ok).unwrap();
+        ok.validate(sparse, MeshMode::Sim).unwrap();
         // More expert-parallel devices than experts.
         let bad = MeshSpec { data_parallel: 1, expert_parallel: 16, model_parallel: 1 };
-        let err = validate_mesh(sparse, &bad).unwrap_err().to_string();
+        let err = bad.validate(sparse, MeshMode::Sim).unwrap_err().to_string();
         assert!(err.contains("8 experts"), "{err}");
         // A dense model ignores the expert axis (the CLI default mesh has
         // ep=4; `upcycle mesh` on a dense entry must keep working).
-        validate_mesh(dense, &ok).unwrap();
+        ok.validate(dense, MeshMode::Sim).unwrap();
         // Batch that does not shard over the data axis.
         let bad = MeshSpec { data_parallel: 3, expert_parallel: 1, model_parallel: 1 };
-        assert!(validate_mesh(dense, &bad).is_err());
+        assert!(bad.validate(dense, MeshMode::Sim).is_err());
         // Zero axes normalize instead of erroring.
         let zeroes = MeshSpec { data_parallel: 0, expert_parallel: 0, model_parallel: 0 };
-        validate_mesh(sparse, &zeroes).unwrap();
+        zeroes.validate(sparse, MeshMode::Sim).unwrap();
+        // The tp axis is bounded by d_model in every mode.
+        let fat_tp = MeshSpec { data_parallel: 1, expert_parallel: 1, model_parallel: 1 << 20 };
+        let err = fat_tp.validate(sparse, MeshMode::Sim).unwrap_err().to_string();
+        assert!(err.contains("d_model"), "{err}");
+        assert!(fat_tp.validate(sparse, MeshMode::Exec).is_err());
     }
 
     #[test]
@@ -503,19 +629,19 @@ mod tests {
         let dense = m.model("lm_tiny_dense").unwrap();
         // batch 8, E=8: 2x2 / 1x2 / 2x4 / 1x8 all shard cleanly.
         for (dp, ep) in [(1usize, 1usize), (1, 2), (2, 2), (2, 4), (1, 8)] {
-            validate_mesh_exec(sparse, dp, ep).unwrap();
+            MeshSpec::new(dp, ep).validate(sparse, MeshMode::Exec).unwrap();
         }
         // Zero axes and indivisible rank counts fail with named errors.
-        assert!(validate_mesh_exec(sparse, 0, 2).is_err());
-        let err = validate_mesh_exec(sparse, 3, 1).unwrap_err().to_string();
+        assert!(MeshSpec::new(0, 2).validate(sparse, MeshMode::Exec).is_err());
+        let err = MeshSpec::new(3, 1).validate(sparse, MeshMode::Exec).unwrap_err().to_string();
         assert!(err.contains("batch_size 8") && err.contains("3x1"), "{err}");
         // More EP ranks than experts.
-        let err = validate_mesh_exec(sparse, 1, 16).unwrap_err().to_string();
+        let err = MeshSpec::new(1, 16).validate(sparse, MeshMode::Exec).unwrap_err().to_string();
         assert!(err.contains("8 experts"), "{err}");
         // A dense model has nothing to shard on the expert axis.
-        let err = validate_mesh_exec(dense, 1, 2).unwrap_err().to_string();
+        let err = MeshSpec::new(1, 2).validate(dense, MeshMode::Exec).unwrap_err().to_string();
         assert!(err.contains("dense"), "{err}");
-        validate_mesh_exec(dense, 2, 1).unwrap();
+        MeshSpec::new(2, 1).validate(dense, MeshMode::Exec).unwrap();
     }
 
     #[test]

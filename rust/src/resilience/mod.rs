@@ -59,6 +59,12 @@ pub enum FaultPhase {
     /// The grouped expert MLP — under expert parallelism this is the
     /// sharded leg *between* the two all-to-alls (`ep_expert_mlp`).
     ExpertMlp,
+    /// The completion leg of a split-phase expert all-to-all
+    /// (`ep_alltoall`): the fault lands *between* `start_exchange` and
+    /// `finish_exchange`, with the rank's sends already posted to its
+    /// peers' queues. Expert-parallel meshes only — no local phase maps
+    /// here.
+    Exchange,
     /// Gate-weighted scatter back to token order (rank-local).
     Combine,
     /// The backward tower sweep.
@@ -68,10 +74,11 @@ pub enum FaultPhase {
 }
 
 impl FaultPhase {
-    pub const ALL: [FaultPhase; 6] = [
+    pub const ALL: [FaultPhase; 7] = [
         FaultPhase::Router,
         FaultPhase::Dispatch,
         FaultPhase::ExpertMlp,
+        FaultPhase::Exchange,
         FaultPhase::Combine,
         FaultPhase::Backward,
         FaultPhase::Optimizer,
@@ -82,12 +89,13 @@ impl FaultPhase {
             "router" => FaultPhase::Router,
             "dispatch" => FaultPhase::Dispatch,
             "expert_mlp" => FaultPhase::ExpertMlp,
+            "exchange" => FaultPhase::Exchange,
             "combine" => FaultPhase::Combine,
             "backward" => FaultPhase::Backward,
             "optimizer" => FaultPhase::Optimizer,
             other => bail!(
                 "unknown fault phase `{other}`; one of \
-                 router|dispatch|expert_mlp|combine|backward|optimizer"
+                 router|dispatch|expert_mlp|exchange|combine|backward|optimizer"
             ),
         })
     }
@@ -97,6 +105,7 @@ impl FaultPhase {
             FaultPhase::Router => "router",
             FaultPhase::Dispatch => "dispatch",
             FaultPhase::ExpertMlp => "expert_mlp",
+            FaultPhase::Exchange => "exchange",
             FaultPhase::Combine => "combine",
             FaultPhase::Backward => "backward",
             FaultPhase::Optimizer => "optimizer",
@@ -106,12 +115,16 @@ impl FaultPhase {
     /// Does a profiler phase entry named `phase_name` belong to this fault
     /// phase? The expert-MLP leg reports as `expert_mlp` locally and
     /// `ep_expert_mlp` under expert parallelism — one fault phase covers
-    /// both, so a plan is valid for any mesh shape.
+    /// both, so a plan is valid for any mesh shape. The exchange phase maps
+    /// to `ep_alltoall`, the profiler bucket wrapping every
+    /// `finish_exchange` completion wait — entered with the rank's own
+    /// sends already posted, i.e. mid split-phase window.
     fn matches(&self, phase_name: &str) -> bool {
         match self {
             FaultPhase::ExpertMlp => {
                 phase_name == "expert_mlp" || phase_name == "ep_expert_mlp"
             }
+            FaultPhase::Exchange => phase_name == "ep_alltoall",
             _ => phase_name == self.as_str(),
         }
     }
@@ -342,6 +355,9 @@ mod tests {
         assert!(FaultPhase::ExpertMlp.matches("expert_mlp"));
         assert!(FaultPhase::ExpertMlp.matches("ep_expert_mlp"));
         assert!(!FaultPhase::ExpertMlp.matches("ep_alltoall"));
+        assert!(FaultPhase::Exchange.matches("ep_alltoall"));
+        assert!(!FaultPhase::Exchange.matches("exchange"), "no local phase maps to exchange");
+        assert!(!FaultPhase::Exchange.on_coordinator());
         assert!(FaultPhase::Router.matches("router"));
         assert!(!FaultPhase::Router.matches("backward"));
         assert!(FaultPhase::Optimizer.on_coordinator());

@@ -1,33 +1,45 @@
 //! Expert-parallel execution: weight shards, dispatch packing, and the
-//! rank exchange that ships token buffers between EP workers.
+//! overlapped rank exchange that pipelines token buffers between EP
+//! workers.
 //!
 //! One expert-parallel rank is a thread stepping its own token shard
 //! through the full model (`coordinator::trainer::mesh_train_step`); at
-//! every MoE block its [`EpRankExchange`] takes over the expert-MLP leg:
+//! every MoE block its [`EpRankExchange`] takes over the expert-MLP leg,
+//! running the [`ExpertExchange`] split-phase lifecycle over microbatch
+//! row chunks:
 //!
-//! 1. **Dispatch** — the rank's per-expert input buffers are packed by
-//!    owner ([`pack_dispatch`], round-robin `parallel::ExpertPlacement`)
-//!    and exchanged through `parallel::collectives::EpGroup`, so every
-//!    rank receives the token rows routed to the experts *it* owns.
+//! 1. **Dispatch (split-phase)** — each microbatch's per-expert input
+//!    chunks are packed by owner ([`pack_dispatch`], round-robin
+//!    `parallel::ExpertPlacement`) and *posted* through
+//!    `parallel::collectives::EpGroup::start_exchange` without blocking;
+//!    the matching `finish_exchange` completes when every source's chunk
+//!    has arrived. The default pipeline drivers post chunk `k+1` before
+//!    computing chunk `k`, so the all-to-all of one microbatch overlaps
+//!    the expert compute of another.
 //! 2. **Shard compute** — the owner runs
-//!    `runtime::native::expert_mlp_forward` on **its weight shard only**
-//!    (sliced out of the replicated params at step start; unowned expert
-//!    weights are never touched), one call per `(expert, source rank)`
-//!    buffer. The gathered inputs and pre-ReLU activations stay cached at
-//!    the owner for the backward pass.
-//! 3. **Combine return** — outputs travel back through a second all-to-all
-//!    and are reassembled into per-expert buffers ([`unpack_combine`]) for
-//!    the rank's local gate-weighted combine.
+//!    `runtime::native::expert_mlp_forward` (or the row-independent
+//!    backward half, `expert_mlp_backward_rows`) on **its weight shard
+//!    only** (sliced out of the replicated params at step start; unowned
+//!    expert weights are never touched), one call per `(expert, source
+//!    rank)` chunk. The gathered inputs and pre-ReLU activations stay
+//!    cached at the owner, per microbatch, for the backward pass.
+//! 3. **Combine return (split-phase)** — outputs are posted back as soon
+//!    as a chunk is computed and the completions drain only after every
+//!    chunk, then reassemble into per-expert buffers ([`unpack_combine`],
+//!    chunk concatenation in microbatch order).
 //!
-//! Backward mirrors the same two exchanges with gated output grads going
-//! out and input grads coming back; expert *weight* grads accumulate at
-//! the owner, per source rank **in ascending source order** — the
-//! `reduce_sum_ordered` discipline, which keeps every number
-//! bitwise-identical to the serial 1-worker execution of the same mesh
-//! (each `(expert, source)` buffer sees exactly the GEMM the source shard
-//! would have run locally; forward is row-independent, and the ordered
-//! partial sums match the ordered per-shard reduction).
+//! **Bitwise contract.** Overlapped N-rank execution is bitwise-identical
+//! to serial execution for *every* microbatch count: forward and the
+//! `dr`/`dxg` backward half are row-independent (chunking is exact), and
+//! the row-*reducing* expert weight-grad GEMMs are deferred — each
+//! `(owned expert, source)` pair's operand chunks are concatenated across
+//! microbatches and `expert_mlp_weight_grads` runs once on the full
+//! buffers, per source **in ascending source order** (the
+//! `reduce_sum_ordered` discipline), exactly the GEMMs the fused serial
+//! path runs. Asserted by this module's tests and the trainer's
+//! microbatch × rank property test.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -40,8 +52,10 @@ use crate::parallel::ExpertPlacement;
 use crate::tensor::Tensor;
 use crate::util::bench::phase;
 
-use super::native::{accumulate, expert_mlp_backward, expert_mlp_forward};
-use super::ExpertExchange;
+use super::native::{
+    accumulate, expert_mlp_backward_rows, expert_mlp_forward, expert_mlp_weight_grads,
+};
+use super::{ExchangeLeg, ExpertExchange};
 
 /// One expert's token buffer crossing the EP interconnect: `rows` rows of
 /// a fixed width (d_model), row-major, in assignment order.
@@ -104,8 +118,51 @@ struct BlockShard {
 }
 
 /// Per-block forward cache: for each owned expert (shard order), for each
-/// source rank (ascending), the gathered inputs and pre-ReLU hidden.
-type FwdCache = Vec<Vec<(Vec<f32>, Vec<f32>)>>;
+/// source rank (ascending), the per-microbatch `(gathered input chunk,
+/// pre-ReLU hidden chunk)` pairs in microbatch order.
+type FwdCache = Vec<Vec<Vec<(Vec<f32>, Vec<f32>)>>>;
+
+/// Per-block deferred backward operands, same indexing as [`FwdCache`]:
+/// per-microbatch `(masked hidden grad chunk, gated output grad chunk)` —
+/// what `expert_mlp_weight_grads` needs beyond the forward cache.
+type BwdParts = Vec<Vec<Vec<(Vec<f32>, Vec<f32>)>>>;
+
+/// Collective round tag of one microbatch's dispatch leg.
+fn round_tag(tag: &str, leg: ExchangeLeg, mb: usize) -> String {
+    format!("{tag}/{}/mb{mb}", leg.wire())
+}
+
+/// Collective round tag of one microbatch's combine (return) leg.
+fn return_tag(tag: &str, leg: ExchangeLeg, mb: usize) -> String {
+    format!("{tag}/{}_ret/mb{mb}", leg.wire())
+}
+
+/// Concatenate microbatch chunks into the full per-`(expert, source)`
+/// operand buffer. Borrows at `m == 1` (the fused schedule stays
+/// copy-free); the chunk order is microbatch order, so the result is
+/// bitwise the buffer the fused path would have seen.
+fn concat_chunks<'a>(chunks: impl Iterator<Item = &'a [f32]>) -> Cow<'a, [f32]> {
+    let parts: Vec<&[f32]> = chunks.collect();
+    if parts.len() == 1 {
+        Cow::Borrowed(parts[0])
+    } else {
+        Cow::Owned(parts.concat())
+    }
+}
+
+/// Free-function shard lookup so callers can keep disjoint `&mut` borrows
+/// of the exchange's other per-block maps.
+fn shard_for<'a>(
+    shards: &'a BTreeMap<String, BlockShard>,
+    tag: &str,
+    e_cnt: usize,
+) -> Result<&'a BlockShard> {
+    let shard = shards.get(tag).with_context(|| format!("no expert shard for `{tag}`"))?;
+    if shard.num_experts != e_cnt {
+        bail!("shard for `{tag}` has {} experts, spec says {e_cnt}", shard.num_experts);
+    }
+    Ok(shard)
+}
 
 /// The [`ExpertExchange`] of one expert-parallel rank; see the module docs
 /// for the protocol and the determinism contract.
@@ -114,9 +171,14 @@ pub struct EpRankExchange {
     group: Arc<EpGroup<EpPayload>>,
     d: usize,
     ff: usize,
+    microbatches: usize,
     gemm: Option<GemmKernels>,
     shards: BTreeMap<String, BlockShard>,
     cache: BTreeMap<String, FwdCache>,
+    bwd: BTreeMap<String, BwdParts>,
+    /// Computed payloads staged between `finish_dispatch` and
+    /// `start_combine`, keyed by return round tag.
+    staged: BTreeMap<String, Vec<EpPayload>>,
 }
 
 impl EpRankExchange {
@@ -164,31 +226,31 @@ impl EpRankExchange {
             }
             shards.insert(tag, BlockShard { num_experts: e_cnt, experts });
         }
-        Ok(EpRankExchange { rank, group, d, ff, gemm: None, shards, cache: BTreeMap::new() })
+        Ok(EpRankExchange {
+            rank,
+            group,
+            d,
+            ff,
+            microbatches: 1,
+            gemm: None,
+            shards,
+            cache: BTreeMap::new(),
+            bwd: BTreeMap::new(),
+            staged: BTreeMap::new(),
+        })
+    }
+
+    /// Set how many microbatch chunks the pipeline drivers split every
+    /// block's buffers into (>= 1; 1 = the fused schedule). Bitwise
+    /// results are identical for every value — only the overlap of
+    /// all-to-all and expert compute changes.
+    pub fn with_microbatches(mut self, m: usize) -> EpRankExchange {
+        self.microbatches = m.max(1);
+        self
     }
 
     fn bound_gemm(&self) -> Result<GemmKernels> {
         self.gemm.context("exchange not bound to a kernel family (bind() not called)")
-    }
-
-    /// Recoverable teardown: drop every forward cache this exchange holds.
-    ///
-    /// An aborted step can leave caches behind — `forward` ran for some MoE
-    /// blocks before a peer died, so their `backward` never consumed the
-    /// cached activations. The elastic trainer rebuilds exchanges per step
-    /// attempt, so nothing in the product reuses a torn exchange today;
-    /// this stays `pub(crate)` as the teardown contract for any future
-    /// in-crate path that does (a stale cache paired with a replayed
-    /// forward would feed the backward pass the aborted attempt's
-    /// activations), asserted by this module's kill-mid-exchange test.
-    pub(crate) fn reset(&mut self) {
-        self.cache.clear();
-    }
-
-    /// Whether any forward cache is pending a backward (used by teardown
-    /// assertions: a cleanly-finished step leaves none).
-    pub(crate) fn has_pending_cache(&self) -> bool {
-        !self.cache.is_empty()
     }
 }
 
@@ -198,169 +260,301 @@ impl ExpertExchange for EpRankExchange {
         Ok(())
     }
 
-    fn forward(
+    fn microbatches(&self) -> usize {
+        self.microbatches.max(1)
+    }
+
+    fn d_model(&self) -> usize {
+        self.d
+    }
+
+    fn plan(&mut self, tag: &str, spec: &MoeSpec, leg: ExchangeLeg, m: usize) -> Result<()> {
+        self.bound_gemm()?;
+        if m != self.microbatches.max(1) {
+            bail!("plan `{tag}`: {m} microbatches, exchange configured for {}", self.microbatches);
+        }
+        let shard = shard_for(&self.shards, tag, spec.num_experts)?;
+        let n_owned = shard.experts.len();
+        let ranks = self.group.ranks();
+        match leg {
+            ExchangeLeg::Forward { want_cache } => {
+                // A replayed forward drops any stale cache for the block; a
+                // fresh one is staged only when a backward will consume it.
+                self.cache.remove(tag);
+                if want_cache {
+                    let fresh: FwdCache =
+                        (0..n_owned).map(|_| (0..ranks).map(|_| Vec::new()).collect()).collect();
+                    self.cache.insert(tag.to_string(), fresh);
+                }
+            }
+            ExchangeLeg::Backward => {
+                let cache = self
+                    .cache
+                    .get(tag)
+                    .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
+                if cache.len() != n_owned {
+                    bail!(
+                        "backward `{tag}`: cache has {} experts, shard owns {n_owned}",
+                        cache.len()
+                    );
+                }
+                // Both legs must chunk identically: a backward chunk consumes
+                // the forward chunk's cached activations at the owner.
+                for per_src in cache {
+                    for chunks in per_src {
+                        if chunks.len() != m {
+                            bail!(
+                                "backward `{tag}`: forward cached {} microbatches, backward \
+                                 plans {m}",
+                                chunks.len()
+                            );
+                        }
+                    }
+                }
+                let fresh: BwdParts =
+                    (0..n_owned).map(|_| (0..ranks).map(|_| Vec::new()).collect()).collect();
+                self.bwd.insert(tag.to_string(), fresh);
+            }
+        }
+        Ok(())
+    }
+
+    fn start_dispatch(
         &mut self,
         tag: &str,
         spec: &MoeSpec,
-        xg: Vec<Vec<f32>>,
-        want_cache: bool,
-    ) -> Result<Vec<Vec<f32>>> {
+        leg: ExchangeLeg,
+        mb: usize,
+        chunk: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let e_cnt = spec.num_experts;
+        if chunk.len() != e_cnt {
+            bail!(
+                "{} `{tag}`: microbatch {mb} has {} expert chunks for {e_cnt} experts",
+                leg.wire(),
+                chunk.len()
+            );
+        }
+        // Dispatch all-to-all: every expert chunk's rows go to its owner.
+        // Posting is non-blocking — the matching wait lives in
+        // `finish_dispatch`, so the chunk is in flight while this rank
+        // computes another.
+        let placement = ExpertPlacement::new(e_cnt, self.group.ranks());
+        let send = pack_dispatch(chunk, &placement, self.d);
+        self.group.start_exchange(self.rank, &round_tag(tag, leg, mb), send)
+    }
+
+    fn finish_dispatch(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        leg: ExchangeLeg,
+        mb: usize,
+    ) -> Result<()> {
         let gemm = self.bound_gemm()?;
         let (d, ff) = (self.d, self.ff);
-        let e_cnt = spec.num_experts;
-        if xg.len() != e_cnt {
-            bail!("forward `{tag}`: {} expert buffers for {e_cnt} experts", xg.len());
-        }
-        let ranks = self.group.ranks();
-        let placement = ExpertPlacement::new(e_cnt, ranks);
-
-        // Dispatch all-to-all: every expert's rows go to its owner.
-        let send = pack_dispatch(xg, &placement, d);
+        // `ep_alltoall` wraps only the *blocking* completion leg: this is
+        // the exposed all-to-all window the bench's `overlap` section
+        // measures, and the seam where a `FaultPhase::Exchange` injection
+        // lands — after the round's sends were posted, before its receives
+        // complete.
         let recv = {
             let _ph = phase("ep_alltoall");
-            self.group.exchange(self.rank, &format!("{tag}/fwd"), send)?
+            self.group.finish_exchange(self.rank, &round_tag(tag, leg, mb))?
         };
-
-        let shard =
-            self.shards.get(tag).with_context(|| format!("no expert shard for `{tag}`"))?;
-        if shard.num_experts != e_cnt {
-            bail!("shard for `{tag}` has {} experts, spec says {e_cnt}", shard.num_experts);
-        }
+        let shard = shard_for(&self.shards, tag, spec.num_experts)?;
         let n_owned = shard.experts.len();
-        let mut cache: FwdCache = (0..n_owned).map(|_| Vec::with_capacity(ranks)).collect();
+        let ranks = self.group.ranks();
         let mut ret: Vec<EpPayload> = (0..ranks).map(|_| Vec::with_capacity(n_owned)).collect();
-        {
-            let _ph = phase("ep_expert_mlp");
-            for (src, payload) in recv.into_iter().enumerate() {
-                if payload.len() != n_owned {
-                    bail!(
-                        "forward `{tag}`: rank {src} sent {} buffers, own {n_owned} experts",
-                        payload.len()
-                    );
-                }
-                for (oi, buf) in payload.into_iter().enumerate() {
-                    let (x, wi_e, wo_e) = &shard.experts[oi];
-                    if buf.expert != *x || buf.data.len() != buf.rows * d {
+        let _ph = phase("ep_expert_mlp");
+        match leg {
+            ExchangeLeg::Forward { want_cache } => {
+                let mut cache = if want_cache {
+                    Some(self.cache.get_mut(tag).with_context(|| {
+                        format!("forward `{tag}`: microbatch {mb} dispatched before plan")
+                    })?)
+                } else {
+                    None
+                };
+                for (src, payload) in recv.into_iter().enumerate() {
+                    if payload.len() != n_owned {
                         bail!(
-                            "forward `{tag}`: malformed buffer from rank {src} (expert {}, {} \
-                             values, {} rows)",
-                            buf.expert,
-                            buf.data.len(),
-                            buf.rows
+                            "forward `{tag}`: rank {src} sent {} buffers, own {n_owned} experts",
+                            payload.len()
                         );
                     }
-                    let (u, y) = expert_mlp_forward(gemm, wi_e, wo_e, &buf.data, d, ff);
-                    ret[src].push(ExpertBuf { expert: *x, rows: buf.rows, data: y });
-                    if want_cache {
-                        cache[oi].push((buf.data, u));
+                    for (oi, buf) in payload.into_iter().enumerate() {
+                        let (x, wi_e, wo_e) = &shard.experts[oi];
+                        if buf.expert != *x || buf.data.len() != buf.rows * d {
+                            bail!(
+                                "forward `{tag}`: malformed buffer from rank {src} (expert {}, \
+                                 {} values, {} rows)",
+                                buf.expert,
+                                buf.data.len(),
+                                buf.rows
+                            );
+                        }
+                        let (u, y) = expert_mlp_forward(gemm, wi_e, wo_e, &buf.data, d, ff);
+                        ret[src].push(ExpertBuf { expert: *x, rows: buf.rows, data: y });
+                        if let Some(cache) = cache.as_mut() {
+                            cache[oi][src].push((buf.data, u));
+                        }
+                    }
+                }
+            }
+            ExchangeLeg::Backward => {
+                let cache = self
+                    .cache
+                    .get(tag)
+                    .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
+                let parts = self.bwd.get_mut(tag).with_context(|| {
+                    format!("backward `{tag}`: microbatch {mb} dispatched before plan")
+                })?;
+                for (src, payload) in recv.into_iter().enumerate() {
+                    if payload.len() != n_owned {
+                        bail!(
+                            "backward `{tag}`: rank {src} sent {} buffers, own {n_owned} experts",
+                            payload.len()
+                        );
+                    }
+                    for (oi, buf) in payload.into_iter().enumerate() {
+                        let (x, wi_e, wo_e) = &shard.experts[oi];
+                        let (xg, u) = cache[oi][src].get(mb).with_context(|| {
+                            format!(
+                                "backward `{tag}`: expert {x} has no cached microbatch {mb} \
+                                 from rank {src}"
+                            )
+                        })?;
+                        if buf.expert != *x
+                            || buf.data.len() != buf.rows * d
+                            || xg.len() != buf.data.len()
+                        {
+                            bail!(
+                                "backward `{tag}`: malformed buffer from rank {src} (expert {}, \
+                                 {} values, {} rows)",
+                                buf.expert,
+                                buf.data.len(),
+                                buf.rows
+                            );
+                        }
+                        // Row-independent half only; the row-reducing weight
+                        // grads wait for `finish_weight_grads`.
+                        let (dr, dxg) =
+                            expert_mlp_backward_rows(gemm, wi_e, wo_e, u, &buf.data, d, ff);
+                        ret[src].push(ExpertBuf { expert: *x, rows: buf.rows, data: dxg });
+                        parts[oi][src].push((dr, buf.data));
                     }
                 }
             }
         }
-        if want_cache {
-            self.cache.insert(tag.to_string(), cache);
-        }
-
-        // Combine all-to-all: outputs travel back to the token sources.
-        let back = {
-            let _ph = phase("ep_alltoall");
-            self.group.exchange(self.rank, &format!("{tag}/fwd_ret"), ret)?
-        };
-        unpack_combine(back, e_cnt)
+        self.staged.insert(return_tag(tag, leg, mb), ret);
+        Ok(())
     }
 
-    fn backward(
+    fn start_combine(
         &mut self,
         tag: &str,
         spec: &MoeSpec,
-        dye: Vec<Vec<f32>>,
+        leg: ExchangeLeg,
+        mb: usize,
+    ) -> Result<()> {
+        let _ = spec;
+        // Each staged ret[src] was pushed per owned expert outer, source
+        // inner, so it is already ascending in `oi` — the order the
+        // sources' unpack expects.
+        let key = return_tag(tag, leg, mb);
+        let ret = self.staged.remove(&key).with_context(|| {
+            format!("{} `{tag}`: combine of microbatch {mb} before its dispatch finished",
+                leg.wire())
+        })?;
+        self.group.start_exchange(self.rank, &key, ret)
+    }
+
+    fn finish_combine(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        leg: ExchangeLeg,
+        mb: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let back = {
+            let _ph = phase("ep_alltoall");
+            self.group.finish_exchange(self.rank, &return_tag(tag, leg, mb))?
+        };
+        unpack_combine(back, spec.num_experts)
+    }
+
+    fn finish_weight_grads(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
         dwi: &mut [f32],
         dwo: &mut [f32],
-    ) -> Result<Vec<Vec<f32>>> {
+    ) -> Result<()> {
         let gemm = self.bound_gemm()?;
         let (d, ff) = (self.d, self.ff);
         let e_cnt = spec.num_experts;
-        if dye.len() != e_cnt {
-            bail!("backward `{tag}`: {} expert grad buffers for {e_cnt} experts", dye.len());
-        }
         if dwi.len() != e_cnt * d * ff || dwo.len() != e_cnt * ff * d {
             bail!("backward `{tag}`: weight grad buffers do not match [E={e_cnt}, d={d}, ff={ff}]");
         }
-        let ranks = self.group.ranks();
-        let placement = ExpertPlacement::new(e_cnt, ranks);
-
-        // Ship the gated output grads to the expert owners.
-        let send = pack_dispatch(dye, &placement, d);
-        let recv = {
-            let _ph = phase("ep_alltoall");
-            self.group.exchange(self.rank, &format!("{tag}/bwd"), send)?
-        };
-
         let cache = self
             .cache
             .remove(tag)
             .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
-        let shard =
-            self.shards.get(tag).with_context(|| format!("no expert shard for `{tag}`"))?;
-        let n_owned = shard.experts.len();
-        if cache.len() != n_owned {
-            bail!("backward `{tag}`: cache has {} experts, shard owns {n_owned}", cache.len());
-        }
-        for (src, payload) in recv.iter().enumerate() {
-            if payload.len() != n_owned {
+        let parts = self.bwd.remove(tag).with_context(|| {
+            format!("backward `{tag}`: weight grads before any microbatch dispatched")
+        })?;
+        let shard = shard_for(&self.shards, tag, e_cnt)?;
+        let ranks = self.group.ranks();
+        let _ph = phase("ep_expert_mlp");
+        for (oi, (x, _, _)) in shard.experts.iter().enumerate() {
+            if cache[oi].len() != ranks || parts[oi].len() != ranks {
                 bail!(
-                    "backward `{tag}`: rank {src} sent {} buffers, own {n_owned} experts",
-                    payload.len()
+                    "backward `{tag}`: expert {x} cached {} sources, want {ranks}",
+                    cache[oi].len()
                 );
             }
-        }
-        let mut ret: Vec<EpPayload> = (0..ranks).map(|_| Vec::with_capacity(n_owned)).collect();
-        {
-            let _ph = phase("ep_expert_mlp");
-            for (oi, (x, wi_e, wo_e)) in shard.experts.iter().enumerate() {
-                if cache[oi].len() != ranks {
+            let dwi_slice = &mut dwi[x * d * ff..(x + 1) * d * ff];
+            let dwo_slice = &mut dwo[x * ff * d..(x + 1) * ff * d];
+            // Ascending source order — the reduce_sum_ordered discipline
+            // that keeps the group-summed weight grads bitwise-identical to
+            // the serial per-shard reduction — and ONE fused GEMM per
+            // (expert, source) over the concatenated microbatch chunks, so
+            // the float association never depends on the microbatch count.
+            for src in 0..ranks {
+                if parts[oi][src].len() != cache[oi][src].len() {
                     bail!(
-                        "backward `{tag}`: expert {x} cached {} sources, want {ranks}",
-                        cache[oi].len()
+                        "backward `{tag}`: expert {x} has {} backward chunks for {} cached \
+                         chunks from rank {src}",
+                        parts[oi][src].len(),
+                        cache[oi][src].len()
                     );
                 }
-                let dwi_slice = &mut dwi[x * d * ff..(x + 1) * d * ff];
-                let dwo_slice = &mut dwo[x * ff * d..(x + 1) * ff * d];
-                // Ascending source order — the reduce_sum_ordered discipline
-                // that keeps the group-summed weight grads bitwise-identical
-                // to the serial per-shard reduction.
-                for (src, payload) in recv.iter().enumerate() {
-                    let buf = &payload[oi];
-                    let (xg, u) = &cache[oi][src];
-                    if buf.expert != *x
-                        || buf.data.len() != buf.rows * d
-                        || xg.len() != buf.data.len()
-                    {
-                        bail!(
-                            "backward `{tag}`: malformed buffer from rank {src} (expert {}, {} \
-                             values, {} rows)",
-                            buf.expert,
-                            buf.data.len(),
-                            buf.rows
-                        );
-                    }
-                    let (dwi_p, dwo_p, dxg) =
-                        expert_mlp_backward(gemm, wi_e, wo_e, xg, u, &buf.data, d, ff);
-                    accumulate(dwi_slice, &dwi_p);
-                    accumulate(dwo_slice, &dwo_p);
-                    ret[src].push(ExpertBuf { expert: *x, rows: buf.rows, data: dxg });
-                }
+                let xg = concat_chunks(cache[oi][src].iter().map(|(xg, _)| xg.as_slice()));
+                let u = concat_chunks(cache[oi][src].iter().map(|(_, u)| u.as_slice()));
+                let dr = concat_chunks(parts[oi][src].iter().map(|(dr, _)| dr.as_slice()));
+                let dye = concat_chunks(parts[oi][src].iter().map(|(_, dye)| dye.as_slice()));
+                let (dwi_p, dwo_p) = expert_mlp_weight_grads(gemm, &xg, &u, &dr, &dye, d, ff);
+                accumulate(dwi_slice, &dwi_p);
+                accumulate(dwo_slice, &dwo_p);
             }
         }
-        // Rebuild per-source payloads in ascending expert order: the loop
-        // above pushed per owned expert outer, source inner, so each
-        // ret[src] is already ascending in `oi` — the order the sources'
-        // unpack expects.
-        let back = {
-            let _ph = phase("ep_alltoall");
-            self.group.exchange(self.rank, &format!("{tag}/bwd_ret"), ret)?
-        };
-        unpack_combine(back, e_cnt)
+        Ok(())
+    }
+
+    /// Recoverable teardown: an aborted step can strand forward caches,
+    /// deferred backward operands, and staged combine payloads (their
+    /// consuming calls never ran); the elastic trainer rebuilds exchanges
+    /// per attempt, but any future in-crate reuse of a torn exchange must
+    /// drop them first — asserted by this module's kill-mid-exchange test.
+    fn reset(&mut self) {
+        self.cache.clear();
+        self.bwd.clear();
+        self.staged.clear();
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.cache.is_empty() || !self.bwd.is_empty() || !self.staged.is_empty()
     }
 }
 
@@ -421,6 +615,52 @@ mod tests {
             for ((a, b), spec) in g_local.iter().zip(&g_ep).zip(&entry.params) {
                 assert_eq!(a, b, "{name}: grad `{}` must match bitwise", spec.name);
             }
+        }
+    }
+
+    /// The microbatched pipeline must be bitwise the fused schedule: the
+    /// forward/backward row halves are chunk-exact and the weight grads
+    /// run as one deferred GEMM per (expert, source) on the concatenated
+    /// chunks. A 1-rank group keeps this thread-free; odd row counts per
+    /// expert exercise the uneven `microbatch_ranges` splits.
+    #[test]
+    fn microbatched_pipeline_matches_fused_grads_bitwise() {
+        let manifest = Manifest::native();
+        let runtime = Runtime::new().unwrap();
+        let name = "lm_tiny_moe_e8_c2";
+        let entry = manifest.model(name).unwrap().clone();
+        let model = runtime.load_model(&manifest, name, &["train", "eval"]).unwrap();
+        let params = crate::runtime::tensors_from_checkpoint(
+            &crate::init::init_params(&entry, 11).unwrap(),
+            &entry.params,
+        )
+        .unwrap();
+        let batch = crate::data::text::TextPipeline::new(
+            crate::data::text::HmmCorpus::new(
+                crate::data::text::HmmSpec {
+                    vocab_size: entry.config.vocab_size,
+                    ..Default::default()
+                },
+                1,
+            ),
+            entry.config.batch_size,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            1,
+            0,
+        )
+        .next_batch();
+        let (m_local, g_local) = model.grads(&params, &batch).unwrap();
+        for m in [1usize, 2, 3, 4] {
+            let group = Arc::new(EpGroup::new(1));
+            let mut exch =
+                EpRankExchange::new(&entry, &params, 0, group).unwrap().with_microbatches(m);
+            let (m_ep, g_ep) = model.grads_ep(&params, &batch, &mut exch).unwrap();
+            assert_eq!(m_local, m_ep, "m={m}: metrics must match bitwise");
+            for ((a, b), spec) in g_local.iter().zip(&g_ep).zip(&entry.params) {
+                assert_eq!(a, b, "m={m}: grad `{}` must match bitwise", spec.name);
+            }
+            assert!(!exch.has_pending(), "m={m}: a clean step leaves no staged state");
         }
     }
 
@@ -549,11 +789,12 @@ mod tests {
                                 Err(anyhow::anyhow!("{msg}"))
                             }
                         };
-                        // Survivor-side teardown: stale forward caches from
-                        // the aborted step must be clearable.
-                        let had_pending = exch.has_pending_cache();
+                        // Survivor-side teardown: stale forward caches and
+                        // staged payloads from the aborted step must be
+                        // clearable.
+                        let had_pending = exch.has_pending();
                         exch.reset();
-                        assert!(!exch.has_pending_cache());
+                        assert!(!exch.has_pending());
                         (rank, res, had_pending)
                     })
                 })

@@ -52,46 +52,181 @@ pub struct InferOutput {
     pub scores: Vec<f32>,
 }
 
-/// Where the grouped expert MLP of a MoE block executes.
+/// Which traversal of a MoE block an exchange lifecycle call belongs to.
+///
+/// The same `plan → start_dispatch → finish_dispatch → start_combine →
+/// finish_combine` lifecycle runs the forward and the backward leg of a
+/// block; the leg picks what the owner computes in `finish_dispatch`
+/// (expert MLP forward vs. masked hidden/input grads) and what
+/// `finish_combine` returns (expert outputs vs. input grads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeLeg {
+    /// The forward traversal; `want_cache` asks the owner to retain the
+    /// gathered inputs and pre-ReLU activations for a later backward.
+    Forward { want_cache: bool },
+    /// The backward traversal (gated output grads out, input grads back).
+    Backward,
+}
+
+impl ExchangeLeg {
+    /// Wire name, part of every collective round tag (`{tag}/{wire}/mb{k}`).
+    pub fn wire(&self) -> &'static str {
+        match self {
+            ExchangeLeg::Forward { .. } => "fwd",
+            ExchangeLeg::Backward => "bwd",
+        }
+    }
+}
+
+/// Row ranges of the `m` microbatch chunks of an `rows`-row buffer: chunk
+/// `k` covers rows `[k·rows/m, (k+1)·rows/m)`. Deterministic, balanced to
+/// within one row, and order-preserving — concatenating the chunks back in
+/// index order is the identity. Both exchange legs split with this same
+/// function, so a backward chunk always aligns with the forward chunk
+/// whose activations it consumes.
+pub fn microbatch_ranges(rows: usize, m: usize) -> Vec<(usize, usize)> {
+    let m = m.max(1);
+    (0..m).map(|k| (k * rows / m, (k + 1) * rows / m)).collect()
+}
+
+/// Where (and how) the grouped expert MLP of a MoE block executes.
 ///
 /// The native backend splits every sparse block into router → dispatch →
 /// **expert MLP** → combine; this trait owns the expert-MLP leg. The
 /// default (`runtime::native`'s local exchange) runs all experts in
-/// process; the expert-parallel exchange (`runtime::ep::EpRankExchange`)
-/// routes each expert's token buffers to the rank that owns that expert's
-/// weight shard, computes there, and routes the outputs back — real
+/// process with every split-phase call completing immediately; the
+/// expert-parallel exchange (`runtime::ep::EpRankExchange`) routes each
+/// expert's token buffers to the rank that owns that expert's weight
+/// shard, computes there, and routes the outputs back — real split-phase
 /// all-to-all dispatch/combine over `parallel::collectives::EpGroup`.
 ///
-/// Contract (what keeps N-rank execution bitwise-identical to local):
-/// * `forward` consumes per-expert gathered inputs `xg[x]` (`[a_x, d]`
-///   rows in assignment order) and returns per-expert raw outputs `y[x]`
-///   (`[a_x, d]`, same row order). Forward is row-independent, so *where*
-///   an expert's rows are computed can never change their values.
-/// * `backward` consumes per-expert output grads `dye[x]` (`[a_x, d]`) and
-///   returns per-expert input grads `dxg[x]`; expert weight grads are
-///   accumulated into the full-size `dwi` (`[E·d·ff]`) / `dwo`
-///   (`[E·ff·d]`) buffers. A sharded exchange writes only the slices of
-///   the experts the rank owns, accumulating per-source partials in
-///   ascending source order (the `reduce_sum_ordered` discipline).
+/// **Lifecycle.** One block traversal is `plan` (validate + stage state),
+/// then per microbatch `k`: `start_dispatch` (post chunk `k`'s all-to-all
+/// without blocking) → `finish_dispatch` (complete the receive, run the
+/// owner-side compute) → `start_combine` (post the results back) →
+/// `finish_combine` (complete the return receive). The provided
+/// [`ExpertExchange::forward`] / [`ExpertExchange::backward`] drivers run
+/// this schedule double-buffered: microbatch `k+1`'s dispatch is posted
+/// *before* microbatch `k` is computed, and the combine completions drain
+/// only after every chunk's compute — so the all-to-all of one chunk
+/// overlaps the expert compute of another, and the exposed `ep_alltoall`
+/// wait shrinks to pipeline fill/drain (the bench's `overlap` section
+/// measures exactly this window against the microbatch count).
+///
+/// Contract (what keeps overlapped N-rank execution bitwise-identical to
+/// serial, for every microbatch count):
+/// * Forward and the `dr`/`dxg` half of backward are row-independent
+///   (`native::expert_mlp_forward`, `native::expert_mlp_backward_rows`),
+///   so computing row chunks separately and concatenating in microbatch
+///   order ([`microbatch_ranges`] preserves row order) is exact.
+/// * The weight-grad GEMMs *reduce* over rows, so chunked partial sums
+///   would change the float association. They are deferred instead:
+///   `finish_weight_grads` runs once per block after the last microbatch,
+///   on the concatenated full buffers, per `(expert, source)` in ascending
+///   source order — exactly the fused path's GEMMs and the
+///   `reduce_sum_ordered` discipline. A sharded exchange writes only the
+///   `dwi` (`[E·d·ff]`) / `dwo` (`[E·ff·d]`) slices of experts it owns.
 /// * `bind` hands the exchange the executing backend's GEMM kernel family
 ///   before the step, so sharded expert compute runs on exactly the same
 ///   kernels as local compute.
 ///
-/// Exchanges are stateful across one forward/backward pair: `forward` with
-/// `want_cache` retains whatever `backward` needs (inputs and pre-ReLU
+/// Exchanges are stateful across one forward/backward pair: a forward leg
+/// with `want_cache` retains whatever backward needs (inputs and pre-ReLU
 /// activations stay *at the rank that computed them* — they never cross
-/// the interconnect twice).
+/// the interconnect twice). `reset` is the recoverable teardown: an
+/// aborted step can strand staged state (caches whose backward never ran),
+/// which `reset` drops; `has_pending` reports whether any such state is
+/// staged (a cleanly-finished step leaves none).
 pub trait ExpertExchange {
     fn bind(&mut self, gemm: GemmKernels) -> Result<()>;
 
+    /// How many microbatches the pipeline drivers split each block's
+    /// buffers into (>= 1; 1 = the fused schedule).
+    fn microbatches(&self) -> usize {
+        1
+    }
+
+    /// Token-vector width `d` of the buffers this exchange moves (the
+    /// drivers need it to split rows).
+    fn d_model(&self) -> usize;
+
+    /// Validate the traversal and stage per-block state for `m` microbatch
+    /// rounds of `leg` over block `tag`.
+    fn plan(&mut self, tag: &str, spec: &MoeSpec, leg: ExchangeLeg, m: usize) -> Result<()>;
+
+    /// Post microbatch `mb`'s dispatch all-to-all (per-expert row chunks,
+    /// `chunk[x]` = `[rows_k, d]`) without blocking on peers.
+    fn start_dispatch(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        leg: ExchangeLeg,
+        mb: usize,
+        chunk: Vec<Vec<f32>>,
+    ) -> Result<()>;
+
+    /// Complete microbatch `mb`'s dispatch receive and run the owner-side
+    /// compute for the received rows (expert MLP forward, or the
+    /// row-independent backward half), staging the results for
+    /// `start_combine`.
+    fn finish_dispatch(&mut self, tag: &str, spec: &MoeSpec, leg: ExchangeLeg, mb: usize)
+        -> Result<()>;
+
+    /// Post microbatch `mb`'s combine all-to-all (results back to the
+    /// token sources) without blocking on peers.
+    fn start_combine(&mut self, tag: &str, spec: &MoeSpec, leg: ExchangeLeg, mb: usize)
+        -> Result<()>;
+
+    /// Complete microbatch `mb`'s combine receive: per-expert row chunks
+    /// (`[rows_k, d]`, assignment order) — expert outputs on the forward
+    /// leg, input grads on the backward leg.
+    fn finish_combine(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        leg: ExchangeLeg,
+        mb: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Fold the deferred weight-grad GEMMs of block `tag` into `dwi` /
+    /// `dwo` (backward leg only; called once, after the last microbatch's
+    /// `finish_dispatch`). Consumes the block's staged forward cache.
+    fn finish_weight_grads(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        dwi: &mut [f32],
+        dwo: &mut [f32],
+    ) -> Result<()>;
+
+    /// Recoverable teardown: drop all staged per-block state (forward
+    /// caches, in-flight chunks) left behind by an aborted step.
+    fn reset(&mut self);
+
+    /// Whether any staged state is pending (a cleanly-finished step leaves
+    /// none; used by teardown assertions).
+    fn has_pending(&self) -> bool;
+
+    /// One forward traversal of block `tag`: per-expert gathered inputs
+    /// `xg[x]` (`[a_x, d]`, assignment order) → per-expert raw outputs
+    /// (same shape and row order). Provided: runs the double-buffered
+    /// microbatch pipeline over the lifecycle methods.
     fn forward(
         &mut self,
         tag: &str,
         spec: &MoeSpec,
         xg: Vec<Vec<f32>>,
         want_cache: bool,
-    ) -> Result<Vec<Vec<f32>>>;
+    ) -> Result<Vec<Vec<f32>>> {
+        let leg = ExchangeLeg::Forward { want_cache };
+        let out = drive_pipeline(self, tag, spec, leg, xg)?;
+        Ok(out)
+    }
 
+    /// One backward traversal of block `tag`: per-expert gated output
+    /// grads `dye[x]` → per-expert input grads, with the experts' weight
+    /// grads folded into `dwi` / `dwo`. Provided: the same pipeline as
+    /// `forward` plus the deferred weight-grad fold.
     fn backward(
         &mut self,
         tag: &str,
@@ -99,7 +234,113 @@ pub trait ExpertExchange {
         dye: Vec<Vec<f32>>,
         dwi: &mut [f32],
         dwo: &mut [f32],
-    ) -> Result<Vec<Vec<f32>>>;
+    ) -> Result<Vec<Vec<f32>>> {
+        let leg = ExchangeLeg::Backward;
+        let out = drive_pipeline_backward(self, tag, spec, leg, dye, dwi, dwo)?;
+        Ok(out)
+    }
+}
+
+/// Split per-expert buffers into `m` per-microbatch chunk sets. `m == 1`
+/// is the fused fast path (no copies).
+fn split_microbatches(bufs: Vec<Vec<f32>>, d: usize, m: usize) -> Vec<Vec<Vec<f32>>> {
+    if m <= 1 {
+        return vec![bufs];
+    }
+    let mut chunks: Vec<Vec<Vec<f32>>> = (0..m).map(|_| Vec::with_capacity(bufs.len())).collect();
+    for data in &bufs {
+        let rows = if d == 0 { 0 } else { data.len() / d };
+        for (k, (lo, hi)) in microbatch_ranges(rows, m).into_iter().enumerate() {
+            chunks[k].push(data[lo * d..hi * d].to_vec());
+        }
+    }
+    chunks
+}
+
+/// Stitch per-microbatch, per-expert chunk results back into full
+/// per-expert buffers (chunk concatenation in microbatch order).
+fn stitch_microbatches(parts: Vec<Vec<Vec<f32>>>, e_cnt: usize) -> Result<Vec<Vec<f32>>> {
+    let mut out: Vec<Vec<f32>> = (0..e_cnt).map(|_| Vec::new()).collect();
+    for (k, part) in parts.into_iter().enumerate() {
+        if part.len() != e_cnt {
+            bail!("microbatch {k} returned {} expert buffers, want {e_cnt}", part.len());
+        }
+        for (x, mut c) in part.into_iter().enumerate() {
+            out[x].append(&mut c);
+        }
+    }
+    Ok(out)
+}
+
+/// The double-buffered schedule shared by both provided drivers: post
+/// chunk `k+1`'s dispatch before computing chunk `k`, post each chunk's
+/// combine as soon as it is computed, and only then drain the combine
+/// completions — so a rank never blocks on a peer's compute between its
+/// own chunks.
+fn drive_pipeline<E: ExpertExchange + ?Sized>(
+    ex: &mut E,
+    tag: &str,
+    spec: &MoeSpec,
+    leg: ExchangeLeg,
+    bufs: Vec<Vec<f32>>,
+) -> Result<Vec<Vec<f32>>> {
+    let e_cnt = spec.num_experts;
+    if bufs.len() != e_cnt {
+        bail!("{} `{tag}`: {} expert buffers for {e_cnt} experts", leg.wire(), bufs.len());
+    }
+    let m = ex.microbatches().max(1);
+    ex.plan(tag, spec, leg, m)?;
+    let mut chunks = split_microbatches(bufs, ex.d_model(), m).into_iter();
+    let first = chunks.next().expect("m >= 1 chunk");
+    ex.start_dispatch(tag, spec, leg, 0, first)?;
+    for k in 0..m {
+        if let Some(next) = chunks.next() {
+            ex.start_dispatch(tag, spec, leg, k + 1, next)?;
+        }
+        ex.finish_dispatch(tag, spec, leg, k)?;
+        ex.start_combine(tag, spec, leg, k)?;
+    }
+    let mut parts = Vec::with_capacity(m);
+    for k in 0..m {
+        parts.push(ex.finish_combine(tag, spec, leg, k)?);
+    }
+    stitch_microbatches(parts, e_cnt)
+}
+
+/// [`drive_pipeline`] plus the backward-only deferred weight-grad fold,
+/// run after every chunk's compute but before the combine drain (it is
+/// rank-local, so it overlaps the peers' remaining compute).
+fn drive_pipeline_backward<E: ExpertExchange + ?Sized>(
+    ex: &mut E,
+    tag: &str,
+    spec: &MoeSpec,
+    leg: ExchangeLeg,
+    dye: Vec<Vec<f32>>,
+    dwi: &mut [f32],
+    dwo: &mut [f32],
+) -> Result<Vec<Vec<f32>>> {
+    let e_cnt = spec.num_experts;
+    if dye.len() != e_cnt {
+        bail!("{} `{tag}`: {} expert grad buffers for {e_cnt} experts", leg.wire(), dye.len());
+    }
+    let m = ex.microbatches().max(1);
+    ex.plan(tag, spec, leg, m)?;
+    let mut chunks = split_microbatches(dye, ex.d_model(), m).into_iter();
+    let first = chunks.next().expect("m >= 1 chunk");
+    ex.start_dispatch(tag, spec, leg, 0, first)?;
+    for k in 0..m {
+        if let Some(next) = chunks.next() {
+            ex.start_dispatch(tag, spec, leg, k + 1, next)?;
+        }
+        ex.finish_dispatch(tag, spec, leg, k)?;
+        ex.start_combine(tag, spec, leg, k)?;
+    }
+    ex.finish_weight_grads(tag, spec, dwi, dwo)?;
+    let mut parts = Vec::with_capacity(m);
+    for k in 0..m {
+        parts.push(ex.finish_combine(tag, spec, leg, k)?);
+    }
+    stitch_microbatches(parts, e_cnt)
 }
 
 /// One model's executable surface, produced by a [`Backend`].

@@ -67,8 +67,8 @@ use crate::util::bench::phase;
 use crate::util::par_map;
 
 use super::{
-    adam_update, Backend, Executable, ExpertExchange, InferOutput, LoadedModel, Metrics,
-    StepOutput,
+    adam_update, Backend, ExchangeLeg, Executable, ExpertExchange, InferOutput, LoadedModel,
+    Metrics, StepOutput,
 };
 
 /// Coefficient on the auxiliary load-balance loss (token-choice routers).
@@ -316,11 +316,27 @@ pub fn expert_mlp_backward(
     d: usize,
     ff: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (dr, dxg) = expert_mlp_backward_rows(gemm, wi_e, wo_e, u, dye, d, ff);
+    let (dwi, dwo) = expert_mlp_weight_grads(gemm, xg, u, &dr, dye, d, ff);
+    (dwi, dwo, dxg)
+}
+
+/// The row-independent half of [`expert_mlp_backward`]: masked hidden grads
+/// `dr` `[a, ff]` and input grads `dxg` `[a, d]` from cached pre-ReLU
+/// hidden `u` and output grads `dye`. Every output row depends on its input
+/// row and the weights only, so the overlapped pipeline computes this per
+/// microbatch chunk and concatenating the chunks is bitwise-identical to
+/// one fused call.
+pub fn expert_mlp_backward_rows(
+    gemm: GemmKernels,
+    wi_e: &[f32],
+    wo_e: &[f32],
+    u: &[f32],
+    dye: &[f32],
+    d: usize,
+    ff: usize,
+) -> (Vec<f32>, Vec<f32>) {
     let a = if d == 0 { 0 } else { dye.len() / d };
-    let mut r = u.to_vec();
-    relu_inplace(&mut r);
-    let mut dwo = vec![0f32; ff * d];
-    gemm.mm_tn(&r, dye, a, ff, d, &mut dwo);
     let mut dr = vec![0f32; a * ff];
     gemm.mm_nt(dye, wo_e, a, d, ff, &mut dr);
     for j in 0..a * ff {
@@ -328,11 +344,36 @@ pub fn expert_mlp_backward(
             dr[j] = 0.0;
         }
     }
-    let mut dwi = vec![0f32; d * ff];
-    gemm.mm_tn(xg, &dr, a, d, ff, &mut dwi);
     let mut dxg = vec![0f32; a * d];
     gemm.mm_nt(&dr, wi_e, a, ff, d, &mut dxg);
-    (dwi, dwo, dxg)
+    (dr, dxg)
+}
+
+/// The row-*reducing* half of [`expert_mlp_backward`]: weight grads
+/// `(dwi [d·ff], dwo [ff·d])` from the full gathered inputs `xg`, pre-ReLU
+/// hidden `u`, masked hidden grads `dr` and output grads `dye` of one
+/// `(expert, source)` buffer. These GEMMs reduce over the `a` rows, so
+/// their float association depends on the row count — the overlapped
+/// pipeline therefore *defers* them: it concatenates the per-microbatch
+/// chunks of each operand and runs this once per `(expert, source)` on the
+/// full buffers, exactly the call the fused path makes.
+pub fn expert_mlp_weight_grads(
+    gemm: GemmKernels,
+    xg: &[f32],
+    u: &[f32],
+    dr: &[f32],
+    dye: &[f32],
+    d: usize,
+    ff: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let a = if d == 0 { 0 } else { dye.len() / d };
+    let mut r = u.to_vec();
+    relu_inplace(&mut r);
+    let mut dwo = vec![0f32; ff * d];
+    gemm.mm_tn(&r, dye, a, ff, d, &mut dwo);
+    let mut dwi = vec![0f32; d * ff];
+    gemm.mm_tn(xg, dr, a, d, ff, &mut dwi);
+    (dwi, dwo)
 }
 
 /// Two distinct mutable elements of a slice (for the wi/wo grad buffers).
@@ -347,21 +388,45 @@ fn two_mut(v: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Vec<f
     }
 }
 
+/// Round key for the local exchange's immediate-completion mailboxes
+/// (same shape as the EP collective round tags, for debuggability).
+fn round_key(tag: &str, leg: ExchangeLeg, mb: usize) -> String {
+    format!("{tag}/{}/mb{mb}", leg.wire())
+}
+
 /// The default [`ExpertExchange`]: every expert computes in process, fanned
 /// out over scoped threads (`par_map`), weights read straight from the
-/// replicated `params`. This is exactly the fused PR 2 arithmetic — the
-/// expert-parallel exchange must stay bitwise-identical to it.
+/// replicated `params`. Split-phase calls complete immediately —
+/// `start_dispatch` stages the chunk, `finish_dispatch` computes, the
+/// combine legs hand the staged results back — and `plan` pins the fused
+/// single-microbatch schedule, so this is exactly the fused PR 2
+/// arithmetic: the overlapped expert-parallel exchange must stay
+/// bitwise-identical to it.
 struct LocalExchange<'a> {
     exec: &'a NativeExec,
     params: &'a [Tensor],
     /// Per-block forward cache: for each expert, (gathered inputs, pre-ReLU
-    /// hidden).
+    /// hidden). Retained until `finish_weight_grads` consumes it.
     cache: BTreeMap<String, Vec<(Vec<f32>, Vec<f32>)>>,
+    /// Chunks staged by `start_dispatch`, keyed by round.
+    inbox: BTreeMap<String, Vec<Vec<f32>>>,
+    /// Results staged by `finish_dispatch` for the combine legs.
+    outbox: BTreeMap<String, Vec<Vec<f32>>>,
+    /// Deferred weight-grad operands per block: for each expert,
+    /// (masked hidden grads `dr`, gated output grads `dye`).
+    wgrads: BTreeMap<String, Vec<(Vec<f32>, Vec<f32>)>>,
 }
 
 impl<'a> LocalExchange<'a> {
     fn new(exec: &'a NativeExec, params: &'a [Tensor]) -> LocalExchange<'a> {
-        LocalExchange { exec, params, cache: BTreeMap::new() }
+        LocalExchange {
+            exec,
+            params,
+            cache: BTreeMap::new(),
+            inbox: BTreeMap::new(),
+            outbox: BTreeMap::new(),
+            wgrads: BTreeMap::new(),
+        }
     }
 }
 
@@ -370,68 +435,183 @@ impl ExpertExchange for LocalExchange<'_> {
         Ok(()) // always runs on the owning executable's kernels
     }
 
-    fn forward(
+    fn d_model(&self) -> usize {
+        self.exec.entry.config.d_model
+    }
+
+    fn plan(&mut self, tag: &str, _spec: &MoeSpec, leg: ExchangeLeg, m: usize) -> Result<()> {
+        if m != 1 {
+            bail!("local exchange runs the fused schedule: {m} microbatches requested for `{tag}`");
+        }
+        if matches!(leg, ExchangeLeg::Forward { .. }) {
+            self.cache.remove(tag);
+        }
+        Ok(())
+    }
+
+    fn start_dispatch(
         &mut self,
         tag: &str,
         spec: &MoeSpec,
-        xg: Vec<Vec<f32>>,
-        want_cache: bool,
-    ) -> Result<Vec<Vec<f32>>> {
+        leg: ExchangeLeg,
+        mb: usize,
+        chunk: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        if chunk.len() != spec.num_experts {
+            bail!(
+                "{} `{tag}`: {} expert chunks for {} experts",
+                leg.wire(),
+                chunk.len(),
+                spec.num_experts
+            );
+        }
+        self.inbox.insert(round_key(tag, leg, mb), chunk);
+        Ok(())
+    }
+
+    fn finish_dispatch(
+        &mut self,
+        tag: &str,
+        spec: &MoeSpec,
+        leg: ExchangeLeg,
+        mb: usize,
+    ) -> Result<()> {
+        let key = round_key(tag, leg, mb);
+        let bufs = self
+            .inbox
+            .remove(&key)
+            .with_context(|| format!("`{key}`: dispatch finished before it started"))?;
         let d = self.exec.entry.config.d_model;
         let ff = self.exec.entry.config.d_ff;
         let wi = self.exec.pslice(self.params, &format!("{tag}/moe/wi"))?;
         let wo = self.exec.pslice(self.params, &format!("{tag}/moe/wo"))?;
         let gemm = self.exec.gemm;
-        let per_expert: Vec<(Vec<f32>, Vec<f32>)> = {
-            let _ph = phase("expert_mlp");
-            par_map(spec.num_experts, |x| {
-                let wi_e = &wi[x * d * ff..(x + 1) * d * ff];
-                let wo_e = &wo[x * ff * d..(x + 1) * ff * d];
-                expert_mlp_forward(gemm, wi_e, wo_e, &xg[x], d, ff)
-            })
-        };
-        let mut us = Vec::with_capacity(per_expert.len());
-        let mut ys = Vec::with_capacity(per_expert.len());
-        for (u, y) in per_expert {
-            us.push(u);
-            ys.push(y);
+        match leg {
+            ExchangeLeg::Forward { want_cache } => {
+                let per_expert: Vec<(Vec<f32>, Vec<f32>)> = {
+                    let _ph = phase("expert_mlp");
+                    par_map(spec.num_experts, |x| {
+                        let wi_e = &wi[x * d * ff..(x + 1) * d * ff];
+                        let wo_e = &wo[x * ff * d..(x + 1) * ff * d];
+                        expert_mlp_forward(gemm, wi_e, wo_e, &bufs[x], d, ff)
+                    })
+                };
+                let mut us = Vec::with_capacity(per_expert.len());
+                let mut ys = Vec::with_capacity(per_expert.len());
+                for (u, y) in per_expert {
+                    us.push(u);
+                    ys.push(y);
+                }
+                if want_cache {
+                    self.cache.insert(tag.to_string(), bufs.into_iter().zip(us).collect());
+                }
+                self.outbox.insert(key, ys);
+            }
+            ExchangeLeg::Backward => {
+                let cache = self
+                    .cache
+                    .get(tag)
+                    .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
+                if cache.len() != spec.num_experts {
+                    bail!(
+                        "backward `{tag}`: cache has {} experts, spec says {}",
+                        cache.len(),
+                        spec.num_experts
+                    );
+                }
+                // Row-independent half only; the row-reducing weight grads
+                // wait for `finish_weight_grads` (same GEMM split as the
+                // expert-parallel exchange, so both stay bitwise-fused).
+                let per_expert: Vec<(Vec<f32>, Vec<f32>)> = par_map(spec.num_experts, |x| {
+                    let wi_e = &wi[x * d * ff..(x + 1) * d * ff];
+                    let wo_e = &wo[x * ff * d..(x + 1) * ff * d];
+                    let (_, u) = &cache[x];
+                    expert_mlp_backward_rows(gemm, wi_e, wo_e, u, &bufs[x], d, ff)
+                });
+                let mut drs = Vec::with_capacity(per_expert.len());
+                let mut dxgs = Vec::with_capacity(per_expert.len());
+                for (dr, dxg) in per_expert {
+                    drs.push(dr);
+                    dxgs.push(dxg);
+                }
+                self.wgrads.insert(tag.to_string(), drs.into_iter().zip(bufs).collect());
+                self.outbox.insert(key, dxgs);
+            }
         }
-        if want_cache {
-            self.cache.insert(tag.to_string(), xg.into_iter().zip(us).collect());
-        }
-        Ok(ys)
+        Ok(())
     }
 
-    fn backward(
+    fn start_combine(
+        &mut self,
+        _tag: &str,
+        _spec: &MoeSpec,
+        _leg: ExchangeLeg,
+        _mb: usize,
+    ) -> Result<()> {
+        Ok(()) // nothing crosses an interconnect; results sit in the outbox
+    }
+
+    fn finish_combine(
+        &mut self,
+        tag: &str,
+        _spec: &MoeSpec,
+        leg: ExchangeLeg,
+        mb: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let key = round_key(tag, leg, mb);
+        self.outbox
+            .remove(&key)
+            .with_context(|| format!("`{key}`: combine finished before its dispatch"))
+    }
+
+    fn finish_weight_grads(
         &mut self,
         tag: &str,
         spec: &MoeSpec,
-        dye: Vec<Vec<f32>>,
         dwi: &mut [f32],
         dwo: &mut [f32],
-    ) -> Result<Vec<Vec<f32>>> {
+    ) -> Result<()> {
         let d = self.exec.entry.config.d_model;
         let ff = self.exec.entry.config.d_ff;
+        let e_cnt = spec.num_experts;
+        if dwi.len() != e_cnt * d * ff || dwo.len() != e_cnt * ff * d {
+            bail!("backward `{tag}`: weight grad buffers do not match [E={e_cnt}, d={d}, ff={ff}]");
+        }
         let cache = self
             .cache
             .remove(tag)
             .with_context(|| format!("no forward cache for MoE block `{tag}`"))?;
-        let wi = self.exec.pslice(self.params, &format!("{tag}/moe/wi"))?;
-        let wo = self.exec.pslice(self.params, &format!("{tag}/moe/wo"))?;
+        let ops = self.wgrads.remove(tag).with_context(|| {
+            format!("backward `{tag}`: weight grads before any dispatch finished")
+        })?;
+        if cache.len() != e_cnt || ops.len() != e_cnt {
+            bail!("backward `{tag}`: staged {} experts, spec says {e_cnt}", ops.len());
+        }
         let gemm = self.exec.gemm;
-        let per_expert: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = par_map(spec.num_experts, |x| {
-            let wi_e = &wi[x * d * ff..(x + 1) * d * ff];
-            let wo_e = &wo[x * ff * d..(x + 1) * ff * d];
+        let per_expert: Vec<(Vec<f32>, Vec<f32>)> = par_map(e_cnt, |x| {
             let (xg, u) = &cache[x];
-            expert_mlp_backward(gemm, wi_e, wo_e, xg, u, &dye[x], d, ff)
+            let (dr, dye) = &ops[x];
+            expert_mlp_weight_grads(gemm, xg, u, dr, dye, d, ff)
         });
-        let mut dxgs = Vec::with_capacity(per_expert.len());
-        for (x, (dwi_e, dwo_e, dxg)) in per_expert.into_iter().enumerate() {
+        for (x, (dwi_e, dwo_e)) in per_expert.into_iter().enumerate() {
             accumulate(&mut dwi[x * d * ff..(x + 1) * d * ff], &dwi_e);
             accumulate(&mut dwo[x * ff * d..(x + 1) * ff * d], &dwo_e);
-            dxgs.push(dxg);
         }
-        Ok(dxgs)
+        Ok(())
+    }
+
+    fn reset(&mut self) {
+        self.cache.clear();
+        self.inbox.clear();
+        self.outbox.clear();
+        self.wgrads.clear();
+    }
+
+    fn has_pending(&self) -> bool {
+        !self.cache.is_empty()
+            || !self.inbox.is_empty()
+            || !self.outbox.is_empty()
+            || !self.wgrads.is_empty()
     }
 }
 

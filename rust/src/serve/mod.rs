@@ -454,25 +454,42 @@ impl<'m> Engine<'m> {
     }
 }
 
-/// EP-sharded inference on one batch: shard `inputs` into `ep` contiguous
-/// example shards (one expert-parallel rank thread each, like a `1xE`
-/// mesh), run each shard's forward with the expert weights sharded
-/// round-robin over the group ([`EpRankExchange`]) and token buffers
-/// moving through real all-to-all collectives, then concatenate the
-/// per-rank outputs in rank order.
+/// EP-sharded inference on one batch, consuming the same
+/// [`crate::parallel::MeshSpec`] plan as the trainers: shard `inputs` into
+/// `ep` contiguous example shards (one expert-parallel rank thread each,
+/// like a `1xE` mesh), run each shard's forward with the expert weights
+/// sharded round-robin over the group ([`EpRankExchange`]) and token
+/// buffers moving through real all-to-all collectives (split-phase, with
+/// `microbatches` overlapping pipeline slots per exchange), then
+/// concatenate the per-rank outputs in rank order.
+///
+/// One `mesh_infer` call serves one batch, so the plan's `dp` axis must be
+/// 1 — data parallelism in serving is running concurrent engine replicas,
+/// not splitting a single call.
 ///
 /// Determinism: bitwise-identical to running the same shards serially with
-/// every expert local (each rank's rows see exactly the arithmetic the
-/// local path performs — forward is row-independent and nothing about an
-/// expert's computation depends on *where* it runs). Asserted by this
-/// module's tests.
+/// every expert local, for every microbatch count (each rank's rows see
+/// exactly the arithmetic the local path performs — forward is
+/// row-independent and nothing about an expert's computation depends on
+/// *where* or in *which pipeline slot* it runs). Asserted by this module's
+/// tests.
 pub fn mesh_infer(
     model: &LoadedModel,
     params: &[Tensor],
     inputs: &[Tensor],
-    ep: usize,
+    topo: &crate::parallel::MeshSpec,
+    microbatches: usize,
 ) -> Result<InferOutput> {
-    let ep = ep.max(1);
+    topo.validate(&model.entry, crate::parallel::MeshMode::Sim)?;
+    if topo.data_parallel.max(1) != 1 {
+        bail!(
+            "mesh_infer serves one batch on a 1xE plan; got dp={} — run concurrent engine \
+             replicas for data parallelism",
+            topo.data_parallel
+        );
+    }
+    let ep = topo.expert_parallel.max(1);
+    let microbatches = microbatches.max(1);
     if ep == 1 {
         return model.infer(params, inputs);
     }
@@ -486,7 +503,8 @@ pub fn mesh_infer(
                 let body = || -> Result<InferOutput> {
                     crate::util::serial_compute(|| {
                         let mut exch =
-                            EpRankExchange::new(&model.entry, params, rank, group.clone())?;
+                            EpRankExchange::new(&model.entry, params, rank, group.clone())?
+                                .with_microbatches(microbatches);
                         model.infer_ep(params, shard, &mut exch)
                     })
                 };
@@ -742,13 +760,13 @@ mod tests {
 
     /// EP-sharded inference (2 rank threads, sharded expert weights, real
     /// all-to-all) is bitwise-identical to the same shards run serially
-    /// with all experts local — the serving side of the mesh contract.
+    /// with all experts local — the serving side of the mesh contract —
+    /// for every microbatch count of the overlapped pipeline.
     #[test]
     fn mesh_infer_matches_serial_shards_bitwise() {
         let (entry, model, params) = setup("lm_tiny_moe_e8_c2");
         let trace = synthetic_trace(&entry, 4, 13, 0);
         let inputs = stack_inputs(&trace).unwrap();
-        let ep_out = mesh_infer(&model, &params, &inputs, 2).unwrap();
         let shards = shard_batch(&inputs, 2).unwrap();
         let mut preds = Vec::new();
         let mut scores = Vec::new();
@@ -757,8 +775,18 @@ mod tests {
             preds.extend_from_slice(o.predictions.i32s().unwrap());
             scores.extend_from_slice(&o.scores);
         }
-        assert_eq!(ep_out.predictions.i32s().unwrap(), &preds[..]);
-        assert_eq!(ep_out.scores, scores);
-        assert_eq!(ep_out.predictions.shape[0], 4);
+        let topo = crate::parallel::MeshSpec::new(1, 2);
+        for m in [1usize, 2, 4] {
+            let ep_out = mesh_infer(&model, &params, &inputs, &topo, m).unwrap();
+            assert_eq!(ep_out.predictions.i32s().unwrap(), &preds[..], "microbatches {m}");
+            assert_eq!(ep_out.scores, scores, "microbatches {m}");
+            assert_eq!(ep_out.predictions.shape[0], 4);
+        }
+
+        // The unified plan is validated: a dp axis on a single serve call
+        // is rejected up front.
+        let err = mesh_infer(&model, &params, &inputs, &crate::parallel::MeshSpec::new(2, 2), 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("dp=2"), "{err:#}");
     }
 }

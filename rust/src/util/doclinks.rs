@@ -1,13 +1,20 @@
-//! Relative-link checker for the repo's markdown docs, behind `upcycle
+//! Doc hygiene checks for the repo's markdown docs, behind `upcycle
 //! check-docs` (mirrored by `make docs` and the blocking CI docs job).
 //!
-//! Scans markdown files for inline links and images — `[text](target)` —
-//! and verifies that every *relative* target resolves to an existing file
-//! or directory next to the document. External schemes (`http://`,
-//! `https://`, `mailto:`) and pure in-page anchors (`#…`) are skipped; a
-//! `path#anchor` target is checked for its file part only. Fenced code
-//! blocks are ignored so `arr[i](x)`-shaped code in examples cannot
-//! false-positive.
+//! Two checks:
+//!
+//! * **Relative links** — scans markdown files for inline links and
+//!   images — `[text](target)` — and verifies that every *relative*
+//!   target resolves to an existing file or directory next to the
+//!   document. External schemes (`http://`, `https://`, `mailto:`) and
+//!   pure in-page anchors (`#…`) are skipped; a `path#anchor` target is
+//!   checked for its file part only. Fenced code blocks are ignored so
+//!   `arr[i](x)`-shaped code in examples cannot false-positive.
+//! * **Deprecated CLI flags** — flags retired by the unified `--topology`
+//!   plan ([`DEPRECATED_FLAGS`]) must not appear inside fenced code
+//!   blocks: examples are what readers copy, so a doc example carrying
+//!   `--replicas`/`--mesh` would keep teaching the dead API. Prose (the
+//!   deprecation table in `docs/CLI.md`) mentions them freely.
 
 use std::path::{Path, PathBuf};
 
@@ -86,6 +93,62 @@ pub fn check_files(files: &[PathBuf]) -> Result<Vec<DeadLink>> {
     Ok(dead)
 }
 
+/// CLI flags retired by the unified `--topology dp=D,ep=E[,tp=T]` plan
+/// (see docs/CLI.md's deprecation table). They still parse — with a
+/// printed warning — but doc examples must show the replacement.
+pub const DEPRECATED_FLAGS: &[&str] = &["--replicas", "--mesh", "--ep", "--dp", "--mp"];
+
+/// One deprecated flag sighting inside a fenced code block.
+#[derive(Debug)]
+pub struct StaleFlag {
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    pub flag: &'static str,
+    /// The offending line, trimmed.
+    pub text: String,
+}
+
+/// Deprecated-flag hits inside fenced code blocks of `text`:
+/// `(1-based line, flag, trimmed line)`. A boundary check keeps prefixes
+/// honest (`--epochs` is not `--ep`, `--mesh-foo` is not `--mesh`).
+pub fn deprecated_flag_hits(text: &str) -> Vec<(usize, &'static str, String)> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if !in_fence {
+            continue;
+        }
+        for flag in DEPRECATED_FLAGS {
+            let hit = line.match_indices(flag).any(|(pos, _)| {
+                let after = line[pos + flag.len()..].chars().next();
+                !after.map(|c| c.is_alphanumeric() || c == '-' || c == '_').unwrap_or(false)
+            });
+            if hit {
+                out.push((idx + 1, *flag, line.trim().to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// Scan `files` for deprecated CLI flags in fenced examples, returning
+/// every sighting (an empty vec means the examples teach the live API).
+pub fn check_deprecated_flags(files: &[PathBuf]) -> Result<Vec<StaleFlag>> {
+    let mut stale = Vec::new();
+    for f in files {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f:?}"))?;
+        for (line, flag, text) in deprecated_flag_hits(&text) {
+            stale.push(StaleFlag { file: f.clone(), line, flag, text });
+        }
+    }
+    Ok(stale)
+}
+
 /// The repo's checked documentation set: `README.md` plus every
 /// `docs/*.md` under `root`, sorted for stable reporting.
 pub fn doc_files(root: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
@@ -140,6 +203,25 @@ see [a](docs/a.md) and ![img](img.png \"title\")\n\
         assert_eq!(dead[0].target, "docs/missing.md");
         assert_eq!(dead[0].file, f);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deprecated_flags_gate_fenced_examples_only() {
+        let md = "\
+Use `--topology dp=2,ep=2`; the old `--mesh 2x2` spelling is deprecated.\n\
+```sh\nupcycle train --model m --topology dp=2,ep=2 --microbatches 2\n```\n";
+        assert!(deprecated_flag_hits(md).is_empty(), "prose mentions are fine");
+
+        let bad = "\
+```sh\nupcycle train --model m --mesh 2x2\nupcycle train --model m --replicas 4\n```\n";
+        let hits = deprecated_flag_hits(bad);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert_eq!((hits[0].0, hits[0].1), (2, "--mesh"));
+        assert_eq!((hits[1].0, hits[1].1), (3, "--replicas"));
+
+        // Boundary check: flag-shaped prefixes of longer flags don't trip.
+        let near_miss = "```sh\nupcycle train --epochs 3 --mesh-style x --dperf 1\n```\n";
+        assert!(deprecated_flag_hits(near_miss).is_empty());
     }
 
     #[test]

@@ -11,10 +11,10 @@
 //!
 //! * [`chaos_smoke`] is one mid-step kill — the blocking CI job.
 //! * [`chaos_sweep_all_phases_and_steps`] sweeps the full steps × phases
-//!   grid (router / dispatch / expert_mlp / combine / backward /
-//!   optimizer). It runs under `cargo test --release` (the same profile as
-//!   the bench gate) and is `#[ignore]`d in debug builds, where the
-//!   18-point grid would dominate the test wall time.
+//!   grid (router / dispatch / exchange / expert_mlp / combine / backward
+//!   / optimizer). It runs under `cargo test --release` (the same profile
+//!   as the bench gate) and is `#[ignore]`d in debug builds, where the
+//!   21-point grid would dominate the test wall time.
 //! * [`snapshot_save_crash_leaves_previous_loadable`] is the
 //!   crash-consistency half: a kill *during* a snapshot save must leave
 //!   the previous snapshot loadable.
@@ -113,7 +113,7 @@ fn assert_bitwise(entry: &ModelEntry, a: &TrainState, b: &TrainState, what: &str
 #[test]
 fn chaos_smoke() {
     let (entry, model) = setup();
-    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
     let base = std::env::temp_dir().join("supc_chaos_smoke");
     let (ref_state, ref_report, ref_bytes) =
         run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
@@ -136,11 +136,11 @@ fn chaos_smoke() {
 /// phases kill EP rank 1 of the 1x2 mesh; the optimizer phase kills the
 /// coordinator mid-update (the torn-state case). Release-profile only —
 /// CI runs it via `cargo test --release` next to the bench gate.
-#[cfg_attr(debug_assertions, ignore = "18-point grid; runs in the release test pass")]
+#[cfg_attr(debug_assertions, ignore = "21-point grid; runs in the release test pass")]
 #[test]
 fn chaos_sweep_all_phases_and_steps() {
     let (entry, model) = setup();
-    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
     let base = std::env::temp_dir().join("supc_chaos_sweep");
     let (ref_state, _, ref_bytes) =
         run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
@@ -175,7 +175,7 @@ fn chaos_sweep_all_phases_and_steps() {
 #[test]
 fn chaos_recovers_on_2x2_mesh() {
     let (entry, model) = setup();
-    let mesh = MeshConfig { dp: 2, ep: 2, parallel: true };
+    let mesh = MeshConfig { dp: 2, ep: 2, parallel: true, microbatches: 1 };
     let base = std::env::temp_dir().join("supc_chaos_2x2");
     let (ref_state, _, ref_bytes) =
         run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
@@ -194,7 +194,7 @@ fn chaos_recovers_on_2x2_mesh() {
 #[test]
 fn chaos_recovers_from_multiple_faults() {
     let (entry, model) = setup();
-    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
     let base = std::env::temp_dir().join("supc_chaos_multi");
     let (ref_state, _, ref_bytes) =
         run(&entry, &model, &mesh, &base.join("ref"), FaultSchedule::default());
@@ -206,6 +206,39 @@ fn chaos_recovers_from_multiple_faults() {
     assert_eq!(report.recoveries.len(), 2, "{:?}", report.recoveries);
     assert_bitwise(&entry, &ref_state, &state, "multi");
     assert_eq!(ref_bytes, bytes);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A rank killed inside the split-phase all-to-all window — after
+/// `start_exchange` posted its sends, before `finish_exchange` drained the
+/// receives — recovers bitwise, with the pipeline overlapping microbatches
+/// (`microbatches: 2`). The clean reference runs the fused single-slot
+/// schedule (`microbatches: 1`), so this test also re-asserts the
+/// overlapped ≡ fused bitwise contract under fault recovery.
+#[test]
+fn chaos_fault_inside_split_phase_exchange_window() {
+    let (entry, model) = setup();
+    let fused = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
+    let overlapped = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 2 };
+    let base = std::env::temp_dir().join("supc_chaos_exchange");
+    let (ref_state, ref_report, ref_bytes) =
+        run(&entry, &model, &fused, &base.join("ref"), FaultSchedule::default());
+    assert!(ref_report.recoveries.is_empty());
+
+    let plan = FaultPlan { rank: 1, step: 2, phase: FaultPhase::Exchange };
+    let (state, report, bytes) = run(
+        &entry,
+        &model,
+        &overlapped,
+        &base.join("fault"),
+        FaultSchedule::single(plan),
+    );
+    assert_eq!(report.recoveries.len(), 1, "{:?}", report.recoveries);
+    let ev = &report.recoveries[0];
+    assert!(ev.injected, "{}", ev.cause);
+    assert_eq!((ev.failed_step, ev.rolled_back_to), (2, 0));
+    assert_bitwise(&entry, &ref_state, &state, "exchange-window fault");
+    assert_eq!(ref_bytes, bytes, "final SUPC bundles must be byte-identical");
     std::fs::remove_dir_all(&base).ok();
 }
 
@@ -251,7 +284,7 @@ fn snapshot_save_crash_leaves_previous_loadable() {
 fn surviving_ranks_report_the_root_cause() {
     use sparse_upcycle::coordinator::mesh_train_step_faulted;
     let (entry, model) = setup();
-    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true };
+    let mesh = MeshConfig { dp: 1, ep: 2, parallel: true, microbatches: 1 };
     let mut data = pipeline(&entry, 0);
     let state = TrainState::from_checkpoints(
         &entry,
