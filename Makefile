@@ -5,10 +5,10 @@
 
 .PHONY: verify build test test-release docs bench-compile bench-json bench-gate bench-baseline \
         check-features fmt fmt-check clippy quickstart mesh-smoke serve-smoke chaos-smoke \
-        artifacts clean
+        strategy-smoke artifacts clean
 
 verify: build test test-release fmt-check clippy docs bench-compile bench-json bench-gate \
-        check-features quickstart mesh-smoke serve-smoke chaos-smoke
+        check-features quickstart mesh-smoke serve-smoke chaos-smoke strategy-smoke
 
 build:
 	cargo build --release
@@ -82,6 +82,37 @@ chaos-smoke:
 	cargo run --release -- train --model lm_tiny_moe_e8_c2 \
 	  --topology dp=1,ep=2 --microbatches 2 --steps 6 \
 	  --snapshot-every 2 --inject-fault 1:4:exchange
+
+# Strategy-matrix smoke: two differently-seeded dense parents → one
+# surgery per upcycle strategy (replicate / drop-upcycle / split /
+# multi-checkpoint) → 2 continued-training steps each under expert
+# parallelism. `train` exits nonzero on a non-finite final loss, so every
+# leg is a real assertion (docs/UPCYCLING.md).
+strategy-smoke:
+	cargo run --release -- train --model lm_tiny_dense --steps 10 \
+	  --save results/checkpoints/smoke_parent_a.supc
+	cargo run --release -- train --model lm_tiny_dense --steps 10 --seed 21 \
+	  --save results/checkpoints/smoke_parent_b.supc
+	cargo run --release -- upcycle --dense results/checkpoints/smoke_parent_a.supc \
+	  --model lm_tiny_moe_e8_c2 --out-ck results/checkpoints/smoke_replicate.supc
+	cargo run --release -- upcycle --dense results/checkpoints/smoke_parent_a.supc \
+	  --model lm_tiny_moe_e8_c2 --strategy drop-upcycle --reinit-fraction 0.25 \
+	  --diversity --out-ck results/checkpoints/smoke_drop.supc
+	cargo run --release -- upcycle --dense results/checkpoints/smoke_parent_a.supc \
+	  --model lm_tiny_moe_split_g2e8 --strategy split --granularity 2 --expansion 4 \
+	  --out-ck results/checkpoints/smoke_split.supc
+	cargo run --release -- upcycle --dense results/checkpoints/smoke_parent_a.supc \
+	  --model lm_tiny_moe_e8_c2 --strategy multi-checkpoint \
+	  --checkpoints results/checkpoints/smoke_parent_b.supc --shared average \
+	  --diversity --out-ck results/checkpoints/smoke_multi.supc
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --steps 2 \
+	  --topology dp=1,ep=2 --load results/checkpoints/smoke_replicate.supc
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --steps 2 \
+	  --topology dp=1,ep=2 --load results/checkpoints/smoke_drop.supc
+	cargo run --release -- train --model lm_tiny_moe_split_g2e8 --steps 2 \
+	  --topology dp=1,ep=2 --load results/checkpoints/smoke_split.supc
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --steps 2 \
+	  --topology dp=1,ep=2 --load results/checkpoints/smoke_multi.supc
 
 # End-to-end serving: train → one-file checkpoint bundle → continuous-
 # batching inference engine (docs/SERVING.md).

@@ -9,7 +9,9 @@
 use sparse_upcycle::checkpoint::Checkpoint;
 use sparse_upcycle::init::{init_opt_state, init_params};
 use sparse_upcycle::manifest::Manifest;
-use sparse_upcycle::upcycle::{depth_tile_params, upcycle_opt_state, upcycle_params, UpcycleOptions};
+use sparse_upcycle::upcycle::{
+    depth_tile_params, upcycle_opt_state, upcycle_params, UpcycleOptions, UpcycleStrategy,
+};
 use sparse_upcycle::util::bench::bench;
 
 fn main() {
@@ -41,7 +43,25 @@ fn main() {
         std::hint::black_box(upcycle_params(&dense, &sparse, &opts).unwrap());
     });
     bench("upcycle_opt_state (load_optimizer=true)", 300, || {
-        std::hint::black_box(upcycle_opt_state(&dense_opt, &sparse, true).unwrap());
+        std::hint::black_box(
+            upcycle_opt_state(&dense_opt, &sparse, true, &UpcycleStrategy::Replicate).unwrap(),
+        );
+    });
+
+    bench("upcycle_params (drop-upcycle, fraction 0.5)", 300, || {
+        let opts = UpcycleOptions {
+            strategy: UpcycleStrategy::DropUpcycle { reinit_fraction: 0.5, seed: 1 },
+            ..Default::default()
+        };
+        std::hint::black_box(upcycle_params(&dense, &sparse, &opts).unwrap());
+    });
+    let split_target = manifest.model("lm_tiny_moe_split_g2e8").unwrap().clone();
+    bench("upcycle_params (split g=2, x=4)", 300, || {
+        let opts = UpcycleOptions {
+            strategy: UpcycleStrategy::Split { granularity: 2, expansion: 4 },
+            ..Default::default()
+        };
+        std::hint::black_box(upcycle_params(&dense, &split_target, &opts).unwrap());
     });
 
     let tiled = manifest.model("lm_tiny_dense_tiled").unwrap().clone();

@@ -9,6 +9,7 @@
 //! are exact under this model because all branches share the constant.
 
 use crate::manifest::ModelEntry;
+use crate::upcycle::{drop_reinit_units, UpcycleStrategy};
 
 /// Effective sustained FLOP/s per TPU core used for the core-day conversion:
 /// TPUv3 peak 61.5 TFLOP/s (bf16, per chip = 2 cores → 30.75e12/core) at the
@@ -59,6 +60,69 @@ pub fn step_cost_ratio(a: &ModelEntry, b: &ModelEntry) -> f64 {
     a.flops.train_step / b.flops.train_step
 }
 
+/// One-shot cost of the checkpoint surgery itself, per strategy.
+///
+/// Surgery is cheap next to training, but the strategies are *not* equally
+/// cheap: multi-checkpoint reads S dense bundles and (under `Average`)
+/// reduces every shared tensor; Drop-Upcycling redraws the dropped units.
+/// Pricing it here keeps `upcycle --strategy` honest about the difference
+/// (printed by the CLI next to the param expansion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SurgeryCost {
+    /// Bytes copied from source checkpoints into the sparse target (f32).
+    pub bytes_copied: u64,
+    /// Values drawn fresh from an RNG (routers + Drop-Upcycling re-init).
+    pub values_reinitialized: u64,
+    /// Dense source bundles read (1, or 1 + extra multi-checkpoint paths).
+    pub sources_loaded: u64,
+    /// FLOPs of shared-parameter reduction (`SharedInit::Average`): one add
+    /// per extra source per shared value.
+    pub reduce_flops: u64,
+}
+
+/// Price `strategy`'s surgery onto `sparse` from its param specs alone —
+/// no tensors are touched. Mirrors the actual surgery in `upcycle::
+/// upcycle_params`, sharing [`drop_reinit_units`] so a priced and a
+/// performed Drop-Upcycling can never disagree on the re-init count.
+pub fn surgery_cost(sparse: &ModelEntry, strategy: &UpcycleStrategy) -> SurgeryCost {
+    let mut cost = SurgeryCost { sources_loaded: 1, ..Default::default() };
+    let extra_sources = match strategy {
+        UpcycleStrategy::MultiCheckpoint { checkpoint_paths, .. } => {
+            cost.sources_loaded += checkpoint_paths.len() as u64;
+            checkpoint_paths.len() as u64
+        }
+        _ => 0,
+    };
+    let average = matches!(
+        strategy,
+        UpcycleStrategy::MultiCheckpoint { shared: crate::upcycle::SharedInit::Average, .. }
+    );
+    for spec in &sparse.params {
+        let numel: usize = spec.shape.iter().product();
+        if spec.name.contains("/moe/router") {
+            cost.values_reinitialized += numel as u64;
+        } else if spec.name.contains("/moe/wi") || spec.name.contains("/moe/wo") {
+            // Every strategy materializes the full [E, ...] expert tensor
+            // from dense data (replicated, sliced, or round-robined).
+            cost.bytes_copied += 4 * numel as u64;
+            if let UpcycleStrategy::DropUpcycle { reinit_fraction, .. } = strategy {
+                let (e, a, b) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+                let is_wi = spec.name.contains("/moe/wi");
+                let f = if is_wi { b } else { a };
+                let per_unit = if is_wi { a } else { b };
+                let k = drop_reinit_units(f, *reinit_fraction);
+                cost.values_reinitialized += (e * k * per_unit) as u64;
+            }
+        } else {
+            cost.bytes_copied += 4 * numel as u64;
+            if average {
+                cost.reduce_flops += numel as u64 * extra_sources;
+            }
+        }
+    }
+    cost
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +151,76 @@ mod tests {
         assert!(step_cost_ratio(c1, dense) < 1.5);
         assert!(step_cost_ratio(c2, c1) > 1.0);
         assert!(step_cost_ratio(c3, c2) > 1.0);
+    }
+
+    #[test]
+    fn surgery_cost_prices_the_strategies_apart() {
+        use crate::upcycle::SharedInit;
+        let m = Manifest::native();
+        let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let replicate = surgery_cost(sparse, &UpcycleStrategy::Replicate);
+        assert!(replicate.bytes_copied > 0);
+        assert_eq!(replicate.sources_loaded, 1);
+        assert_eq!(replicate.reduce_flops, 0);
+        // Replicate's only fresh values are the routers.
+        let router_numel: u64 = sparse
+            .params
+            .iter()
+            .filter(|s| s.name.contains("/moe/router"))
+            .map(|s| s.shape.iter().product::<usize>() as u64)
+            .sum();
+        assert_eq!(replicate.values_reinitialized, router_numel);
+
+        // Split moves exactly as many bytes as Replicate (slices, not
+        // copies of the whole wide FFN) and redraws nothing extra.
+        let split_target = m.model("lm_tiny_moe_split_g2e8").unwrap();
+        let split =
+            surgery_cost(split_target, &UpcycleStrategy::Split { granularity: 2, expansion: 4 });
+        let split_rep = surgery_cost(split_target, &UpcycleStrategy::Replicate);
+        assert_eq!(split.bytes_copied, split_rep.bytes_copied);
+        assert_eq!(split.values_reinitialized, split_rep.values_reinitialized);
+
+        // Drop-Upcycling: re-init count is 0 at fraction 0 (== Replicate),
+        // strictly monotone in the fraction, and covers every expert FFN
+        // value at fraction 1.
+        let frac = |f: f32| {
+            surgery_cost(
+                sparse,
+                &UpcycleStrategy::DropUpcycle { reinit_fraction: f, seed: 0 },
+            )
+        };
+        assert_eq!(frac(0.0), replicate);
+        let (q, h, full) = (frac(0.25), frac(0.5), frac(1.0));
+        assert!(replicate.values_reinitialized < q.values_reinitialized);
+        assert!(q.values_reinitialized < h.values_reinitialized);
+        assert!(h.values_reinitialized < full.values_reinitialized);
+        let expert_numel: u64 = sparse
+            .params
+            .iter()
+            .filter(|s| s.name.contains("/moe/wi") || s.name.contains("/moe/wo"))
+            .map(|s| s.shape.iter().product::<usize>() as u64)
+            .sum();
+        assert_eq!(full.values_reinitialized, router_numel + expert_numel);
+
+        // Multi-checkpoint: prices the extra source loads, and `Average`
+        // additionally prices one add per extra source per shared value.
+        let multi = |paths: usize, shared: SharedInit| {
+            surgery_cost(
+                sparse,
+                &UpcycleStrategy::MultiCheckpoint {
+                    checkpoint_paths: (0..paths).map(|i| format!("p{i}.supc")).collect(),
+                    shared,
+                },
+            )
+        };
+        let primary = multi(3, SharedInit::Primary);
+        assert_eq!(primary.sources_loaded, 4);
+        assert_eq!(primary.reduce_flops, 0);
+        assert_eq!(primary.bytes_copied, replicate.bytes_copied);
+        let avg1 = multi(1, SharedInit::Average);
+        let avg3 = multi(3, SharedInit::Average);
+        assert!(avg1.reduce_flops > 0);
+        assert_eq!(avg3.reduce_flops, 3 * avg1.reduce_flops);
     }
 
     #[test]

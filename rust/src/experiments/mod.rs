@@ -29,6 +29,7 @@ mod ablations;
 mod core_figs;
 mod initial;
 mod tables;
+mod zoo;
 
 /// Scale-dependent experiment knobs.
 #[derive(Debug, Clone)]
@@ -301,7 +302,7 @@ impl Ctx {
         let model = self.load(sparse_name, kinds)?;
         let params = upcycle_params(&parent.0, &entry, opts)
             .with_context(|| format!("upcycling into {sparse_name}"))?;
-        let opt = upcycle_opt_state(&parent.1, &entry, load_optimizer)?;
+        let opt = upcycle_opt_state(&parent.1, &entry, load_optimizer, &opts.strategy)?;
         let state = TrainState::from_checkpoints(&entry, &params, &opt)?;
         Ok((model, state))
     }
@@ -503,6 +504,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, Runner)> {
         ("fig18", "number of experts vs initial drop", initial::fig18),
         ("tab4", "selected vision results with cost accounting", tables::tab4),
         ("tab5", "selected language results with cost accounting", tables::tab5),
+        (
+            "zoo",
+            "upcycle strategy zoo: replicate vs drop-upcycle vs split vs multi-checkpoint",
+            zoo::strategy_zoo,
+        ),
     ]
 }
 

@@ -1,0 +1,108 @@
+//! Strategy zoo: every [`UpcycleStrategy`] on one dense parent, side by
+//! side — initial quality, inter-expert diversity at init, surgery cost,
+//! and a short continued-training run per branch.
+//!
+//! This is not a paper figure: the paper only studies replication
+//! (Figure 1). The zoo places the follow-up surgery families —
+//! Drop-Upcycling's partial re-init (arXiv 2502.19261), FFN splitting
+//! ("Llama 3 Meets MoE"), and multi-checkpoint merging — on the same
+//! footing so their trade-offs (identity preservation vs expert
+//! diversity) are measurable on the tiny testbed.
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::TrainState;
+use crate::costmodel::surgery_cost;
+use crate::metrics::{map, Report, Series};
+use crate::upcycle::diversity::expert_diversity;
+use crate::upcycle::{
+    upcycle_opt_state, upcycle_params, SharedInit, UpcycleOptions, UpcycleStrategy,
+};
+
+use super::Ctx;
+
+/// The `zoo` experiment: one row per strategy.
+pub fn strategy_zoo(ctx: &Ctx) -> Result<Report> {
+    let mut rep = Report::new("zoo", "Upcycle strategy zoo");
+    let parent = ctx.dense_parent("lm_tiny_dense", ctx.p.pretrain_steps)?;
+
+    // A differently-seeded dense sibling on disk: the extra source the
+    // multi-checkpoint merge round-robins experts from.
+    let second_path = ctx.ck_dir.join("strategy_zoo_second_parent.params.supc");
+    let dense_entry = ctx.entry("lm_tiny_dense")?.clone();
+    crate::init::init_params(&dense_entry, ctx.p.seed + 1)?.save(&second_path)?;
+
+    let branches: Vec<(&str, &str, UpcycleStrategy)> = vec![
+        ("replicate", "lm_tiny_moe_e8_c2", UpcycleStrategy::Replicate),
+        (
+            "drop_0.25",
+            "lm_tiny_moe_e8_c2",
+            UpcycleStrategy::DropUpcycle { reinit_fraction: 0.25, seed: ctx.p.seed },
+        ),
+        (
+            "split_g1x8",
+            "lm_tiny_moe_e8_c2",
+            UpcycleStrategy::Split { granularity: 1, expansion: 8 },
+        ),
+        (
+            "split_g2x4",
+            "lm_tiny_moe_split_g2e8",
+            UpcycleStrategy::Split { granularity: 2, expansion: 4 },
+        ),
+        (
+            "multi_avg",
+            "lm_tiny_moe_e8_c2",
+            UpcycleStrategy::MultiCheckpoint {
+                checkpoint_paths: vec![second_path.to_string_lossy().into_owned()],
+                shared: SharedInit::Average,
+            },
+        ),
+    ];
+
+    let mut summary = Series::new("strategy_summary");
+    for (i, (label, target, strategy)) in branches.iter().enumerate() {
+        let entry = ctx.entry(target)?.clone();
+        let opts =
+            UpcycleOptions { strategy: strategy.clone(), seed: ctx.p.seed, ..Default::default() };
+        // Surgery by hand (not `branch_upcycle`) so the upcycled params
+        // checkpoint is still around for the diversity report.
+        let params: Checkpoint = upcycle_params(&parent.0, &entry, &opts)?;
+        let diversity = expert_diversity(&params, &entry)?;
+        let opt = upcycle_opt_state(&parent.1, &entry, false, strategy)?;
+        let model = ctx.load(target, &["train", "eval"])?;
+        let mut state = TrainState::from_checkpoints(&entry, &params, &opt)?;
+        let init = ctx.evaluator(&entry).eval(&model, &state)?;
+        let series = ctx.run_branch(&model, &mut state, 29, ctx.p.extra_steps, label)?;
+        let final_loss =
+            series.last().and_then(|p| p.values.get("loss").copied()).unwrap_or(f64::NAN);
+        let cost = surgery_cost(&entry, strategy);
+        println!(
+            "  {label}: init loss {:.4}, final loss {final_loss:.4}, \
+             mean cosine diversity {:.6}",
+            init.get("loss").copied().unwrap_or(f64::NAN),
+            diversity.mean_cosine_distance()
+        );
+        summary.push(
+            i as u64,
+            0.0,
+            map(&[
+                ("init_loss", init.get("loss").copied().unwrap_or(f64::NAN)),
+                ("final_loss", final_loss),
+                ("mean_cosine_diversity", diversity.mean_cosine_distance()),
+                ("mean_l2_diversity", diversity.mean_l2_distance()),
+                ("surgery_bytes_copied", cost.bytes_copied as f64),
+                ("surgery_values_reinitialized", cost.values_reinitialized as f64),
+            ]),
+        );
+        rep.add(series);
+    }
+    rep.add(summary);
+    rep.note(
+        "step axis of strategy_summary = branch index (replicate, drop_0.25, \
+         split_g1x8, split_g2x4, multi_avg); replicate and split_g1x8 have \
+         exactly zero inter-expert diversity at init, drop/multi trade \
+         identity for diversity (docs/UPCYCLING.md)",
+    );
+    Ok(rep)
+}

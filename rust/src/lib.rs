@@ -43,6 +43,11 @@ pub mod tensor;
 pub mod upcycle;
 pub mod util;
 
+/// `surgery` is an alias for [`upcycle`]: the checkpoint-surgery strategy
+/// zoo plus the [`surgery::diversity`](upcycle::diversity) metrics live
+/// under either path (`docs/UPCYCLING.md`).
+pub use crate::upcycle as surgery;
+
 /// Default artifacts directory (relative to the repo root / CWD).
 pub const ARTIFACTS_DIR: &str = "artifacts";
 /// Default experiment-output directory.

@@ -37,7 +37,9 @@ use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::parallel::{place, MeshSpec};
 use sparse_upcycle::runtime::Runtime;
 use sparse_upcycle::serve;
-use sparse_upcycle::upcycle::{upcycle_opt_state, upcycle_params, UpcycleOptions};
+use sparse_upcycle::upcycle::{
+    router_init_from_args, strategy_from_args, upcycle_opt_state, upcycle_params, UpcycleOptions,
+};
 use sparse_upcycle::util::cli::Args;
 
 fn main() {
@@ -295,7 +297,39 @@ fn run() -> Result<()> {
             let topo = topology_from_args(&a)?;
             let microbatches = a.usize("microbatches", 1)?.max(1);
             let ctx = Ctx::new(&artifacts, &out_dir, params_from_args(&a)?, a.bool("verbose"))?;
-            let (model, mut state) = ctx.branch_scratch(model_name, ctx.p.seed)?;
+            let (model, mut state) = if let Some(load) = a.flags.get("load").cloned() {
+                // Continue training from a checkpoint: a one-file
+                // train-state bundle resumes bitwise; a params-only
+                // checkpoint (e.g. `upcycle upcycle --out-ck`) starts with
+                // fresh optimizer state — the upcycling recipe's language
+                // setting.
+                let entry = ctx.entry(model_name)?.clone();
+                let model = ctx.load(model_name, &["train", "eval"])?;
+                let ck = Checkpoint::load(&load)?;
+                let state = match sparse_upcycle::checkpoint::bind_train_state(&ck, &entry) {
+                    Ok((params, opt_state, step)) => TrainState { params, opt_state, step },
+                    Err(bundle_err) => {
+                        let params = sparse_upcycle::runtime::tensors_from_checkpoint(
+                            &ck,
+                            &entry.params,
+                        )
+                        .map_err(|params_err| {
+                            bundle_err.context(format!(
+                                "not loadable as a params-only checkpoint either ({params_err:#})"
+                            ))
+                        })?;
+                        let opt_state = sparse_upcycle::runtime::tensors_from_checkpoint(
+                            &sparse_upcycle::init::init_opt_state(&entry)?,
+                            &entry.opt_state,
+                        )?;
+                        TrainState { params, opt_state, step: ck.step }
+                    }
+                };
+                println!("loaded {model_name} @ step {} from {load}", state.step);
+                (model, state)
+            } else {
+                ctx.branch_scratch(model_name, ctx.p.seed)?
+            };
             let snapshot_every = a.u64("snapshot-every", 0)?;
             let fault_spec = a.flags.get("inject-fault").cloned();
             let elastic = snapshot_every > 0 || fault_spec.is_some();
@@ -403,6 +437,11 @@ fn run() -> Result<()> {
             };
             if let Some(p) = series.last() {
                 println!("final: {:?}", p.values);
+                if let Some(&loss) = p.values.get("loss") {
+                    if !loss.is_finite() {
+                        bail!("training diverged: final loss is {loss}");
+                    }
+                }
             }
             let (p, o) = state.to_checkpoints(&model.entry, "cli train")?;
             let pp = ctx.ck_dir.join(format!("{model_name}_cli.params.supc"));
@@ -557,13 +596,29 @@ fn run() -> Result<()> {
             let manifest = Manifest::load_or_native(&artifacts)?;
             let entry = manifest.model(sparse_name)?;
             let dense = Checkpoint::load(dense_path)?;
+            let seed = a.u64("seed", 0)?;
             let opts = UpcycleOptions {
+                strategy: strategy_from_args(&a, seed)?,
+                router_init: router_init_from_args(&a)?,
                 load_experts: !a.bool("random-experts"),
                 expert_noise: a.f64("expert-noise", 0.0)? as f32,
                 router_stddev: a.f64("router-stddev", 0.02)? as f32,
-                seed: a.u64("seed", 0)?,
+                seed,
             };
+            let cost = sparse_upcycle::costmodel::surgery_cost(entry, &opts.strategy);
+            println!(
+                "surgery `{}`: {:.2} MB copied, {} value(s) re-initialized, \
+                 {} source bundle(s), {} reduce FLOPs",
+                opts.strategy.name(),
+                cost.bytes_copied as f64 / 1e6,
+                cost.values_reinitialized,
+                cost.sources_loaded,
+                cost.reduce_flops
+            );
             let sparse = upcycle_params(&dense, entry, &opts)?;
+            if a.bool("diversity") {
+                sparse_upcycle::upcycle::diversity::expert_diversity(&sparse, entry)?.print();
+            }
             let default_out =
                 format!("{}/checkpoints/{sparse_name}_upcycled.params.supc", out_dir);
             let out = a.str("out-ck", &default_out);
@@ -578,7 +633,8 @@ fn run() -> Result<()> {
             );
             if let Some(opt_path) = a.flags.get("dense-opt") {
                 let dense_opt = Checkpoint::load(opt_path)?;
-                let sp_opt = upcycle_opt_state(&dense_opt, entry, a.bool("load-optimizer"))?;
+                let sp_opt =
+                    upcycle_opt_state(&dense_opt, entry, a.bool("load-optimizer"), &opts.strategy)?;
                 let out_o = out.replace(".params.", ".opt.");
                 sp_opt.save(&out_o)?;
                 println!("optimizer state -> {out_o}");
@@ -731,6 +787,7 @@ USAGE:
   upcycle list
   upcycle experiment <id>|all [--pretrain-steps N] [--extra-steps N] [--seed S]
   upcycle train   --model <name> [--steps N]
+                  [--load <ck.supc>]  # continue from a bundle or upcycled params
                   [--topology dp=D,ep=E[,tp=T]]  # one validated parallel plan
                   [--microbatches M]  # overlap all-to-all with expert compute
                   [--serial-mesh]     # serial 1-worker mesh reference
@@ -743,6 +800,12 @@ USAGE:
   upcycle infer   --load <ck.supc> [--model <name>] [--requests N]
                   [--topology dp=1,ep=E] [--microbatches M]
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]
+                  [--strategy replicate|drop-upcycle|split|multi-checkpoint]
+                  [--reinit-fraction F] [--strategy-seed S]  # drop-upcycle
+                  [--granularity G] [--expansion X]          # split
+                  [--checkpoints a.supc,b.supc] [--shared primary|average]
+                  [--router-init normal|virtual-groups] [--router-groups N]
+                  [--diversity]       # print per-layer inter-expert diversity
                   [--expert-noise σ] [--dense-opt <ck>] [--load-optimizer]
   upcycle eval    --model <name> --params <ck.supc>
   upcycle fewshot --model <vit-name> --params <ck.supc> [--shots K]

@@ -371,6 +371,24 @@ pub fn native_models() -> BTreeMap<String, ModelEntry> {
         add(lm_entry(name, LM_TINY, Some(&v)));
     }
 
+    // FFN-splitting targets (docs/UPCYCLING.md): every layer is MoE and the
+    // expert FFN is *narrower* than the dense parent's (d_ff 32 vs LM_TINY's
+    // 64, granularity 2), so `upcycle --strategy split` can column-partition
+    // one wide dense FFN into several narrow experts. All layers are
+    // sparsified because the native backend derives FFN width from
+    // `config.d_ff`; a leftover dense MLP layer could not copy from the
+    // wide parent.
+    {
+        let mut narrow = LM_TINY;
+        narrow.ff = 32;
+        let mut v = MoeVariant::standard(8, 2.0);
+        v.enc_layers = vec![0, 1, 2, 3];
+        v.dec_layers = vec![0, 1];
+        add(lm_entry("lm_tiny_moe_split_g2e8", narrow, Some(&v)));
+        v.num_experts = 4;
+        add(lm_entry("lm_tiny_moe_split_g2e4", narrow, Some(&v)));
+    }
+
     // MoE layer placement variants (encoder only; decoder stays dense).
     for (layers, name) in [
         (vec![0usize, 1], "lm_tiny_moe_first2"),
@@ -481,6 +499,36 @@ mod tests {
         // Experts are ~FLOPs-neutral; capacity is not.
         let r = e16.flops.train_step / e8.flops.train_step;
         assert!(r < 1.1, "experts should be ~FLOPs-neutral, got {r}");
+    }
+
+    #[test]
+    fn split_targets_are_all_moe_and_half_width() {
+        let models = native_models();
+        let dense = &models["lm_tiny_dense"];
+        for name in ["lm_tiny_moe_split_g2e8", "lm_tiny_moe_split_g2e4"] {
+            let e = &models[name];
+            // Narrow experts: granularity 2 against the LM_TINY parent.
+            assert_eq!(dense.config.d_ff, 2 * e.config.d_ff, "{name}");
+            // Every layer sparsified: no dense MLP left to mismatch the
+            // wide parent.
+            assert!(
+                e.params.iter().all(|s| !s.name.contains("/mlp/")),
+                "{name} must not carry dense MLP layers"
+            );
+            assert_eq!(
+                e.moe_block_tags().len(),
+                e.config.num_layers + e.config.num_decoder_layers,
+                "{name}"
+            );
+            // Each expert tensor maps onto a wide dense source.
+            for s in &e.params {
+                if s.name.contains("/moe/wi") {
+                    let dense_name = s.name.replace("/moe/", "/mlp/");
+                    let src = dense.params.iter().find(|p| p.name == dense_name).unwrap();
+                    assert_eq!(src.shape[1], 2 * s.shape[2], "{name}: {dense_name}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Inter-expert diversity metrics for upcycled checkpoints.
+//!
+//! Drop-Upcycling's premise is that replicated experts start with zero
+//! diversity and the router has to break the symmetry the slow way; partial
+//! re-initialization restores diversity at init. This module measures it:
+//! for every MoE layer, each expert's FFN (`wi[e]` ++ `wo[e]` flattened) is
+//! one vector, and the layer's diversity is summarized over all expert
+//! pairs as cosine distance (`1 - cos`) and L2 parameter distance.
+//!
+//! Exactness contract (pinned by the analytic-fixture tests): bitwise-
+//! identical experts score exactly `0.0` on both metrics, and orthogonal
+//! experts score exactly `1.0` cosine distance — the pairwise accumulation
+//! is f64 and the identical-pair case is short-circuited on the L2 sum, so
+//! no `sqrt(x)*sqrt(x) != x` rounding can leak into the zero case.
+//!
+//! Reachable as `sparse_upcycle::surgery::diversity` (the `surgery` alias
+//! re-exports the upcycle module); schema documented in `docs/UPCYCLING.md`.
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::manifest::ModelEntry;
+use crate::tensor::Tensor;
+
+/// Pairwise diversity summary of one MoE layer.
+#[derive(Debug, Clone)]
+pub struct LayerDiversity {
+    /// Block tag, e.g. `enc/block_01`.
+    pub tag: String,
+    pub num_experts: usize,
+    /// Mean over expert pairs of `1 - cos(a, b)`.
+    pub mean_cosine_distance: f64,
+    pub max_cosine_distance: f64,
+    /// Mean over expert pairs of `||a - b||_2`.
+    pub mean_l2_distance: f64,
+    pub max_l2_distance: f64,
+}
+
+/// Per-layer diversity of one upcycled checkpoint.
+#[derive(Debug, Clone)]
+pub struct DiversityReport {
+    pub model: String,
+    pub layers: Vec<LayerDiversity>,
+}
+
+impl DiversityReport {
+    /// Mean cosine distance over all MoE layers (the single scalar the
+    /// experiments emit per strategy).
+    pub fn mean_cosine_distance(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.mean_cosine_distance).sum::<f64>()
+            / self.layers.len() as f64
+    }
+
+    pub fn mean_l2_distance(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.mean_l2_distance).sum::<f64>() / self.layers.len() as f64
+    }
+
+    /// One line per layer, for CLI output.
+    pub fn print(&self) {
+        for l in &self.layers {
+            println!(
+                "  diversity {:<16} E={:<3} cos mean {:.4} max {:.4}  l2 mean {:.4} max {:.4}",
+                l.tag,
+                l.num_experts,
+                l.mean_cosine_distance,
+                l.max_cosine_distance,
+                l.mean_l2_distance,
+                l.max_l2_distance
+            );
+        }
+    }
+}
+
+/// Cosine and L2 distance of one expert pair (f64 accumulation).
+///
+/// Identical vectors return exactly `(0.0, 0.0)`; a zero vector against a
+/// non-zero one has undefined angle and is scored as distance `1.0`.
+fn pair_distances(a: &[f32], b: &[f32]) -> (f64, f64) {
+    let mut dot = 0.0f64;
+    let (mut na, mut nb) = (0.0f64, 0.0f64);
+    let mut l2 = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let (x, y) = (x as f64, y as f64);
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+        let d = x - y;
+        l2 += d * d;
+    }
+    if l2 == 0.0 {
+        return (0.0, 0.0);
+    }
+    let cos_dist = if na == 0.0 || nb == 0.0 {
+        1.0
+    } else {
+        1.0 - dot / (na.sqrt() * nb.sqrt())
+    };
+    (cos_dist, l2.sqrt())
+}
+
+/// Diversity summary of one MoE layer from its stacked expert tensors
+/// `wi [E, d, f]`, `wo [E, f, d]`.
+pub fn layer_diversity(tag: &str, wi: &Tensor, wo: &Tensor) -> Result<LayerDiversity> {
+    let e = wi.shape[0];
+    anyhow::ensure!(
+        e == wo.shape[0],
+        "layer `{tag}`: wi has {e} experts but wo has {}",
+        wo.shape[0]
+    );
+    let wi_data = wi.f32s()?;
+    let wo_data = wo.f32s()?;
+    let wi_per = wi_data.len() / e.max(1);
+    let wo_per = wo_data.len() / e.max(1);
+    let expert_vec = |x: usize| -> Vec<f32> {
+        let mut v = Vec::with_capacity(wi_per + wo_per);
+        v.extend_from_slice(&wi_data[x * wi_per..(x + 1) * wi_per]);
+        v.extend_from_slice(&wo_data[x * wo_per..(x + 1) * wo_per]);
+        v
+    };
+    let vecs: Vec<Vec<f32>> = (0..e).map(expert_vec).collect();
+    let (mut cos_sum, mut cos_max) = (0.0f64, 0.0f64);
+    let (mut l2_sum, mut l2_max) = (0.0f64, 0.0f64);
+    let mut pairs = 0usize;
+    for i in 0..e {
+        for j in (i + 1)..e {
+            let (c, l) = pair_distances(&vecs[i], &vecs[j]);
+            cos_sum += c;
+            l2_sum += l;
+            cos_max = cos_max.max(c);
+            l2_max = l2_max.max(l);
+            pairs += 1;
+        }
+    }
+    let n = pairs.max(1) as f64;
+    Ok(LayerDiversity {
+        tag: tag.to_string(),
+        num_experts: e,
+        mean_cosine_distance: cos_sum / n,
+        max_cosine_distance: cos_max,
+        mean_l2_distance: l2_sum / n,
+        max_l2_distance: l2_max,
+    })
+}
+
+/// Per-layer inter-expert diversity of an upcycled (or trained) sparse
+/// checkpoint, over every MoE block the entry declares.
+pub fn expert_diversity(ck: &Checkpoint, entry: &ModelEntry) -> Result<DiversityReport> {
+    let mut layers = Vec::new();
+    for (tag, _) in entry.moe_block_tags() {
+        let wi = ck.get(&format!("{tag}/moe/wi"))?;
+        let wo = ck.get(&format!("{tag}/moe/wo"))?;
+        layers.push(layer_diversity(&tag, wi, wo)?);
+    }
+    Ok(DiversityReport { model: ck.model.clone(), layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::upcycle::{upcycle_params, UpcycleOptions, UpcycleStrategy};
+
+    #[test]
+    fn replicated_experts_score_exactly_zero() {
+        // 4 identical experts: every metric must be exactly 0.0 — not
+        // merely small — per the determinism contract in docs/UPCYCLING.md.
+        let one = Tensor::from_f32(&[2, 3], vec![0.3, -1.7, 0.0, 2.5, 0.1, -0.9]);
+        let wi = crate::upcycle::replicate_experts(&one, 4).unwrap();
+        let wo = crate::upcycle::replicate_experts(
+            &Tensor::from_f32(&[3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            4,
+        )
+        .unwrap();
+        let l = layer_diversity("enc/block_01", &wi, &wo).unwrap();
+        assert_eq!(l.mean_cosine_distance, 0.0);
+        assert_eq!(l.max_cosine_distance, 0.0);
+        assert_eq!(l.mean_l2_distance, 0.0);
+        assert_eq!(l.max_l2_distance, 0.0);
+    }
+
+    #[test]
+    fn orthogonal_experts_score_closed_form() {
+        // Expert 0 = e_0, expert 1 = e_1 (disjoint support): dot = 0 so the
+        // cosine distance is exactly 1.0 and the L2 distance is sqrt(2).
+        let wi = Tensor::from_f32(&[2, 1, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let wo = Tensor::from_f32(&[2, 2, 1], vec![0.0, 0.0, 0.0, 0.0]);
+        let l = layer_diversity("enc/block_01", &wi, &wo).unwrap();
+        assert_eq!(l.mean_cosine_distance, 1.0);
+        assert_eq!(l.max_cosine_distance, 1.0);
+        assert_eq!(l.mean_l2_distance, 2.0f64.sqrt());
+
+        // Anti-parallel experts: cos = -1 so the distance is exactly 2.
+        let wi = Tensor::from_f32(&[2, 1, 2], vec![1.0, 2.0, -1.0, -2.0]);
+        let l = layer_diversity("enc/block_01", &wi, &wo).unwrap();
+        assert_eq!(l.mean_cosine_distance, 2.0);
+    }
+
+    #[test]
+    fn zero_vs_nonzero_expert_is_max_angle() {
+        let wi = Tensor::from_f32(&[2, 1, 2], vec![0.0, 0.0, 3.0, 4.0]);
+        let wo = Tensor::from_f32(&[2, 2, 1], vec![0.0; 4]);
+        let l = layer_diversity("t", &wi, &wo).unwrap();
+        assert_eq!(l.mean_cosine_distance, 1.0);
+        assert_eq!(l.mean_l2_distance, 5.0);
+    }
+
+    #[test]
+    fn drop_upcycle_diversity_is_monotone_in_reinit_fraction() {
+        // On a seeded dense parent, more re-initialization must mean more
+        // inter-expert diversity — with exactly zero at fraction 0.
+        let m = Manifest::native();
+        let dense = crate::init::init_params(m.model("lm_tiny_dense").unwrap(), 11).unwrap();
+        let entry = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let mut last = -1.0f64;
+        for frac in [0.0f32, 0.25, 0.5, 1.0] {
+            let opts = UpcycleOptions {
+                strategy: UpcycleStrategy::DropUpcycle { reinit_fraction: frac, seed: 3 },
+                ..Default::default()
+            };
+            let ck = upcycle_params(&dense, entry, &opts).unwrap();
+            let div = expert_diversity(&ck, entry).unwrap().mean_cosine_distance();
+            if frac == 0.0 {
+                assert_eq!(div, 0.0, "fraction 0 must be exactly replicated");
+            } else {
+                assert!(
+                    div > last,
+                    "diversity must grow with reinit_fraction: {div} after {last} at {frac}"
+                );
+            }
+            last = div;
+        }
+        assert!(last > 0.1, "full re-init should be clearly diverse, got {last}");
+    }
+}

@@ -1,7 +1,9 @@
-//! **The paper's algorithm: sparse upcycling checkpoint surgery** (Figure 1).
+//! **The paper's algorithm: sparse upcycling checkpoint surgery** (Figure 1),
+//! generalized into a strategy zoo.
 //!
-//! Takes a dense checkpoint and a target sparse (MoE) model entry with the
-//! same block geometry, and produces the warm-started sparse checkpoint:
+//! The paper's recipe takes a dense checkpoint and a target sparse (MoE)
+//! model entry with the same block geometry, and produces the warm-started
+//! sparse checkpoint:
 //!
 //! * every non-MoE tensor is copied across unchanged;
 //! * each MoE layer's experts `.../moe/wi [E,d,f]`, `.../moe/wo [E,f,d]` are
@@ -12,19 +14,181 @@
 //! * optimizer state is either carried over (vision, Appendix B.6) with the
 //!   dense accumulators broadcast across experts, or zeroed (language).
 //!
+//! That recipe is [`UpcycleStrategy::Replicate`], and it is guaranteed
+//! bitwise-identical to the pre-strategy surgery (pinned by
+//! `tests/upcycle_props.rs`). The related-work strategies share the same
+//! seam (see `docs/UPCYCLING.md` for the full contract):
+//!
+//! * [`UpcycleStrategy::DropUpcycle`] — partial re-initialization of each
+//!   expert's FFN intermediate units (Drop-Upcycling, arXiv:2502.19261);
+//!   inter-expert diversity is measured by [`diversity`].
+//! * [`UpcycleStrategy::Split`] — one wide dense FFN column-partitioned
+//!   into several narrower experts (granularity/expansion, after the
+//!   levanter `upcycle_lm.py` exemplar and "Llama 3 Meets MoE").
+//! * [`UpcycleStrategy::MultiCheckpoint`] — experts round-robined across
+//!   several dense SUPC bundles, shared non-FFN params averaged or taken
+//!   from the designated primary.
+//!
+//! Router init is an orthogonal axis ([`RouterInit`]): plain Gaussian, or
+//! virtual-group tiling where experts in a group share a router column.
+//!
 //! Also implements the **dense upcycling** baseline of Fig. 5: depth-tiling
 //! a shallow dense checkpoint into a deeper dense model (Rae et al. 2021).
 
 use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::manifest::ModelEntry;
+use crate::manifest::{ModelEntry, TensorSpec};
 use crate::tensor::{numel, Tensor};
+use crate::util::cli::Args;
 use crate::util::rng::Rng;
+
+pub mod diversity;
+
+/// How shared (non-FFN, non-router) parameters are combined under
+/// [`UpcycleStrategy::MultiCheckpoint`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedInit {
+    /// Take every shared tensor from the primary source (`--dense`).
+    Primary,
+    /// Elementwise mean over all sources (primary + `checkpoint_paths`).
+    Average,
+}
+
+/// Router initialization — orthogonal to the expert strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterInit {
+    /// Fresh N(0, `router_stddev`) per logit column (paper §A.1.1).
+    #[default]
+    Normal,
+    /// Virtual-group init ("Llama 3 Meets MoE"): draw `groups` base router
+    /// columns and tile them, so the `E/groups` experts of each group start
+    /// with bitwise-identical routing logits.
+    VirtualGroups { groups: usize },
+}
+
+/// The expert-construction strategy consumed by [`upcycle_params`] and
+/// [`upcycle_opt_state`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum UpcycleStrategy {
+    /// The paper's surgery: every expert an exact copy of the dense FFN.
+    #[default]
+    Replicate,
+    /// Drop-Upcycling: replicate, then re-initialize a `reinit_fraction`
+    /// of each expert's FFN intermediate units with a seeded RNG. The
+    /// dropped unit set is sampled per (layer, expert) — shared between
+    /// `wi` columns and `wo` rows so each re-initialized unit is reset
+    /// end-to-end — and `reinit_fraction = 0` degrades to [`Self::Replicate`]
+    /// bitwise.
+    DropUpcycle { reinit_fraction: f32, seed: u64 },
+    /// FFN splitting: the dense FFN's `F` intermediate units are cut into
+    /// `granularity` contiguous column blocks of width `F/granularity`;
+    /// expert `e` takes block `e % granularity`, so the `E = granularity *
+    /// expansion` experts cover every block `expansion` times.
+    /// `granularity = 1` degrades to [`Self::Replicate`] bitwise.
+    Split { granularity: usize, expansion: usize },
+    /// Upcycle several dense SUPC bundles into one MoE: expert `e` copies
+    /// its FFN from source `e % S` (source 0 is the `--dense` primary,
+    /// sources 1.. are `checkpoint_paths` in order, `S` sources total);
+    /// shared non-FFN tensors follow `shared`.
+    MultiCheckpoint { checkpoint_paths: Vec<String>, shared: SharedInit },
+}
+
+impl UpcycleStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpcycleStrategy::Replicate => "replicate",
+            UpcycleStrategy::DropUpcycle { .. } => "drop-upcycle",
+            UpcycleStrategy::Split { .. } => "split",
+            UpcycleStrategy::MultiCheckpoint { .. } => "multi-checkpoint",
+        }
+    }
+
+    /// Fail-fast structural validation against the target entry: every
+    /// violation is a named error raised before any tensor is touched.
+    pub fn validate(&self, sparse: &ModelEntry) -> Result<()> {
+        match self {
+            UpcycleStrategy::Replicate => {}
+            UpcycleStrategy::DropUpcycle { reinit_fraction, .. } => {
+                if !reinit_fraction.is_finite() || !(0.0..=1.0).contains(reinit_fraction) {
+                    bail!(
+                        "drop-upcycle reinit_fraction must be in [0, 1], got {reinit_fraction}"
+                    );
+                }
+            }
+            UpcycleStrategy::Split { granularity, expansion } => {
+                if *granularity == 0 || *expansion == 0 {
+                    bail!("split granularity and expansion must be >= 1");
+                }
+                for (tag, moe) in sparse.moe_block_tags() {
+                    if moe.num_experts != granularity * expansion {
+                        bail!(
+                            "split surgery needs num_experts = granularity * expansion, \
+                             but `{tag}` has {} experts != {granularity} * {expansion}",
+                            moe.num_experts
+                        );
+                    }
+                }
+            }
+            UpcycleStrategy::MultiCheckpoint { checkpoint_paths, shared: _ } => {
+                if checkpoint_paths.is_empty() {
+                    bail!(
+                        "multi-checkpoint surgery needs at least one extra source in \
+                         checkpoint_paths (the --dense primary is source 0)"
+                    );
+                }
+                for (i, p) in checkpoint_paths.iter().enumerate() {
+                    if p.trim().is_empty() {
+                        bail!("multi-checkpoint source #{} is an empty path", i + 1);
+                    }
+                    if checkpoint_paths[..i].contains(p) {
+                        bail!("multi-checkpoint sources list `{p}` twice");
+                    }
+                }
+                let sources = 1 + checkpoint_paths.len();
+                for (tag, moe) in sparse.moe_block_tags() {
+                    if moe.num_experts % sources != 0 {
+                        bail!(
+                            "multi-checkpoint surgery round-robins experts over sources, \
+                             but `{tag}` has {} experts which is not divisible by \
+                             {sources} source(s)",
+                            moe.num_experts
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl RouterInit {
+    pub fn validate(&self, sparse: &ModelEntry) -> Result<()> {
+        if let RouterInit::VirtualGroups { groups } = self {
+            if *groups == 0 {
+                bail!("virtual-group router init needs groups >= 1");
+            }
+            for (tag, moe) in sparse.moe_block_tags() {
+                if moe.num_experts % groups != 0 {
+                    bail!(
+                        "virtual-group router init needs num_experts divisible by groups, \
+                         but `{tag}` has {} experts and {groups} group(s)",
+                        moe.num_experts
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Options for the surgery; defaults reproduce the paper's standard recipe.
 #[derive(Debug, Clone)]
 pub struct UpcycleOptions {
+    /// Expert-construction strategy (default: the paper's replication).
+    pub strategy: UpcycleStrategy,
+    /// Router init (default: fresh Gaussian).
+    pub router_init: RouterInit,
     /// Copy dense MLP weights into experts (false = Appendix B.5 ablation).
     pub load_experts: bool,
     /// Stddev of independent Gaussian noise added per expert (Appendix B.9).
@@ -37,8 +201,21 @@ pub struct UpcycleOptions {
 
 impl Default for UpcycleOptions {
     fn default() -> Self {
-        UpcycleOptions { load_experts: true, expert_noise: 0.0, router_stddev: 0.02, seed: 0 }
+        UpcycleOptions {
+            strategy: UpcycleStrategy::Replicate,
+            router_init: RouterInit::Normal,
+            load_experts: true,
+            expert_noise: 0.0,
+            router_stddev: 0.02,
+            seed: 0,
+        }
     }
+}
+
+/// One loaded surgery source with the label used in error messages.
+struct Source<'a> {
+    label: String,
+    ck: &'a Checkpoint,
 }
 
 /// Dense params → sparse params.
@@ -47,28 +224,45 @@ pub fn upcycle_params(
     sparse: &ModelEntry,
     opts: &UpcycleOptions,
 ) -> Result<Checkpoint> {
+    opts.strategy.validate(sparse)?;
+    opts.router_init.validate(sparse)?;
+    // Multi-checkpoint sources are loaded up front through the hardened
+    // SUPC loader: a corrupt bundle fails here, with its path named,
+    // before any surgery output exists.
+    let extra: Vec<(String, Checkpoint)> = match &opts.strategy {
+        UpcycleStrategy::MultiCheckpoint { checkpoint_paths, .. } => checkpoint_paths
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                Checkpoint::load(p)
+                    .with_context(|| format!("loading multi-checkpoint source #{} `{p}`", i + 1))
+                    .map(|ck| (p.clone(), ck))
+            })
+            .collect::<Result<_>>()?,
+        _ => Vec::new(),
+    };
+    let mut sources = vec![Source { label: "primary (--dense)".to_string(), ck: dense }];
+    for (i, (path, ck)) in extra.iter().enumerate() {
+        sources.push(Source { label: format!("source #{} (`{path}`)", i + 1), ck });
+    }
+
     let mut rng = Rng::new(opts.seed);
     let mut out = Checkpoint::new(
         &sparse.name,
         dense.step,
-        &format!("upcycled from {} @ step {}", dense.model, dense.step),
+        &format!("upcycled from {} @ step {} ({})", dense.model, dense.step, opts.strategy.name()),
     );
     for (i, spec) in sparse.params.iter().enumerate() {
         let name = &spec.name;
+        // One forked stream per spec index, consumed in the same order as
+        // the pre-strategy surgery: this is what keeps `Replicate` (and the
+        // degenerate Drop/Split cases) bitwise-unchanged.
         let mut sub = rng.fork(i as u64);
         let t = if name.contains("/moe/router") {
-            Tensor::from_f32(&spec.shape, sub.normal_vec(numel(&spec.shape), opts.router_stddev))
+            init_router(spec, opts, &mut sub)
         } else if name.contains("/moe/wi") || name.contains("/moe/wo") {
             if opts.load_experts {
-                let dense_name = name.replace("/moe/", "/mlp/");
-                let src = dense
-                    .get(&dense_name)
-                    .with_context(|| format!("dense parent lacks `{dense_name}`"))?;
-                if opts.expert_noise > 0.0 {
-                    replicate_experts_noisy(src, spec.shape[0], opts.expert_noise, &mut sub)?
-                } else {
-                    replicate_experts(src, spec.shape[0])?
-                }
+                build_experts(spec, &sources, opts, &mut sub)?
             } else {
                 // Appendix B.5: random expert init, same fan-in scaling the
                 // from-scratch model would use.
@@ -76,10 +270,7 @@ pub fn upcycle_params(
                 Tensor::from_f32(&spec.shape, sub.normal_vec(numel(&spec.shape), stddev))
             }
         } else {
-            dense
-                .get(name)
-                .with_context(|| format!("dense parent lacks `{name}`"))?
-                .clone()
+            shared_param(spec, &sources, &opts.strategy)?
         };
         if t.shape != spec.shape {
             bail!("surgery shape mismatch for `{name}`: {:?} vs {:?}", t.shape, spec.shape);
@@ -89,34 +280,195 @@ pub fn upcycle_params(
     Ok(out)
 }
 
-/// Dense optimizer state → sparse optimizer state (Appendix B.6).
+/// Router tensor `[d, E]` under the selected [`RouterInit`].
+fn init_router(spec: &TensorSpec, opts: &UpcycleOptions, sub: &mut Rng) -> Tensor {
+    match opts.router_init {
+        RouterInit::Normal => {
+            Tensor::from_f32(&spec.shape, sub.normal_vec(numel(&spec.shape), opts.router_stddev))
+        }
+        RouterInit::VirtualGroups { groups } => {
+            let (d, e) = (spec.shape[0], spec.shape[1]);
+            let per = e / groups; // divisibility validated up front
+            let base = sub.normal_vec(d * groups, opts.router_stddev);
+            let mut data = vec![0.0f32; d * e];
+            for r in 0..d {
+                for x in 0..e {
+                    data[r * e + x] = base[r * groups + x / per];
+                }
+            }
+            Tensor::from_f32(&spec.shape, data)
+        }
+    }
+}
+
+/// Expert weight tensor (`wi [E,d,f]` or `wo [E,f,d]`) under the selected
+/// strategy, plus the optional Appendix B.9 diversification noise.
+fn build_experts(
+    spec: &TensorSpec,
+    sources: &[Source<'_>],
+    opts: &UpcycleOptions,
+    sub: &mut Rng,
+) -> Result<Tensor> {
+    let dense_name = spec.name.replace("/moe/", "/mlp/");
+    let e = spec.shape[0];
+    let mut t = match &opts.strategy {
+        UpcycleStrategy::Replicate | UpcycleStrategy::DropUpcycle { .. } => {
+            let src = dense_source(&sources[0], &dense_name)?;
+            replicate_experts(src, e)?
+        }
+        UpcycleStrategy::Split { granularity, expansion } => {
+            let src = dense_source(&sources[0], &dense_name)?;
+            split_experts(src, spec, *granularity, *expansion)?
+        }
+        UpcycleStrategy::MultiCheckpoint { .. } => {
+            let expect = dense_source(&sources[0], &dense_name)?.shape.clone();
+            let mut data = Vec::with_capacity(e * numel(&expect));
+            for x in 0..e {
+                let s = &sources[x % sources.len()];
+                let src = dense_source(s, &dense_name)?;
+                if src.shape != expect {
+                    bail!(
+                        "multi-checkpoint architecture mismatch: {} has `{dense_name}` \
+                         {:?} but the primary has {:?}",
+                        s.label,
+                        src.shape,
+                        expect
+                    );
+                }
+                data.extend_from_slice(src.f32s()?);
+            }
+            let mut shape = vec![e];
+            shape.extend_from_slice(&expect);
+            Tensor::from_f32(&shape, data)
+        }
+    };
+    // Appendix B.9 noise consumes the per-spec stream exactly as the
+    // pre-strategy surgery did (noise == 0 never touches the RNG).
+    if opts.expert_noise > 0.0 {
+        for x in t.f32s_mut()? {
+            *x += sub.normal() * opts.expert_noise;
+        }
+    }
+    // Drop-Upcycling re-init comes *after* noise so `reinit_fraction = 0`
+    // matches Replicate bitwise for every (noise, seed) combination.
+    if let UpcycleStrategy::DropUpcycle { reinit_fraction, seed } = opts.strategy {
+        apply_drop_reinit(&mut t, spec, reinit_fraction, seed)?;
+    }
+    Ok(t)
+}
+
+fn dense_source<'a>(s: &'a Source<'_>, dense_name: &str) -> Result<&'a Tensor> {
+    s.ck
+        .get(dense_name)
+        .with_context(|| format!("upcycle {} lacks `{dense_name}`", s.label))
+}
+
+/// Shared (non-MoE) tensor: cloned from the primary, or averaged across all
+/// sources under `MultiCheckpoint { shared: Average }`.
+fn shared_param(
+    spec: &TensorSpec,
+    sources: &[Source<'_>],
+    strategy: &UpcycleStrategy,
+) -> Result<Tensor> {
+    let name = &spec.name;
+    let primary = sources[0]
+        .ck
+        .get(name)
+        .with_context(|| format!("dense parent lacks `{name}`"))?;
+    let average = matches!(
+        strategy,
+        UpcycleStrategy::MultiCheckpoint { shared: SharedInit::Average, .. }
+    );
+    if !average || sources.len() == 1 {
+        // MultiCheckpoint{Primary} deliberately shares this exact-clone path.
+        return Ok(primary.clone());
+    }
+    let mut acc: Vec<f64> = primary.f32s()?.iter().map(|&x| x as f64).collect();
+    for s in &sources[1..] {
+        let t = s
+            .ck
+            .get(name)
+            .with_context(|| format!("multi-checkpoint {} lacks `{name}`", s.label))?;
+        if t.shape != primary.shape {
+            bail!(
+                "multi-checkpoint architecture mismatch: {} has `{name}` {:?} but the \
+                 primary has {:?}",
+                s.label,
+                t.shape,
+                primary.shape
+            );
+        }
+        for (a, &x) in acc.iter_mut().zip(t.f32s()?) {
+            *a += x as f64;
+        }
+    }
+    let n = sources.len() as f64;
+    Ok(Tensor::from_f32(&spec.shape, acc.into_iter().map(|x| (x / n) as f32).collect()))
+}
+
+/// Dense optimizer state → sparse optimizer state (Appendix B.6), under the
+/// same strategy as the parameter surgery.
 ///
 /// `load_optimizer=false` (the paper's language setting) zeroes everything;
-/// `true` (vision) broadcasts each dense MLP accumulator across experts and
-/// zeroes router state (footnote 6: routers have nothing to resume).
+/// `true` (vision) carries accumulators over per strategy and zeroes router
+/// state (footnote 6: routers have nothing to resume):
+///
+/// * `Replicate` — dense MLP accumulators broadcast across experts
+///   (bitwise-unchanged vs the pre-strategy surgery);
+/// * `DropUpcycle` — broadcast, then the re-initialized units' accumulators
+///   are zeroed (a fresh weight has nothing to resume), using the *same*
+///   seeded unit masks as the parameter surgery;
+/// * `Split` — accumulators column-partitioned exactly like the weights;
+/// * `MultiCheckpoint` — expert accumulators zeroed (the extra sources'
+///   optimizer bundles are not part of the surgery input), shared tensors
+///   taken from the primary.
 pub fn upcycle_opt_state(
     dense_opt: &Checkpoint,
     sparse: &ModelEntry,
     load_optimizer: bool,
+    strategy: &UpcycleStrategy,
 ) -> Result<Checkpoint> {
+    strategy.validate(sparse)?;
     let mut out = Checkpoint::new(
         &sparse.name,
         dense_opt.step,
-        &format!("opt state upcycled from {} (load={load_optimizer})", dense_opt.model),
+        &format!(
+            "opt state upcycled from {} (load={load_optimizer}, {})",
+            dense_opt.model,
+            strategy.name()
+        ),
     );
     for spec in &sparse.opt_state {
-        let name = &spec.name; // e.g. "opt/enc/block_01/moe/wi/vr"
+        let name = &spec.name; // e.g. "opt/enc/block_01/moe/wi/m"
         let t = if !load_optimizer || name.contains("/moe/router/") {
             Tensor::zeros(&spec.shape)
         } else if name.contains("/moe/wi/") || name.contains("/moe/wo/") {
-            let dense_name = name.replace("/moe/", "/mlp/");
-            let src = dense_opt
-                .get(&dense_name)
-                .with_context(|| format!("dense opt state lacks `{dense_name}`"))?;
-            // Accumulator broadcast is a pure tiling — deterministic and
-            // noise-free *by construction*: the no-noise replicate takes no
-            // RNG, so no code path can ever perturb optimizer state.
-            replicate_experts(src, spec.shape[0])?
+            match strategy {
+                UpcycleStrategy::MultiCheckpoint { .. } => Tensor::zeros(&spec.shape),
+                UpcycleStrategy::Split { granularity, expansion } => {
+                    let dense_name = name.replace("/moe/", "/mlp/");
+                    let src = dense_opt
+                        .get(&dense_name)
+                        .with_context(|| format!("dense opt state lacks `{dense_name}`"))?;
+                    split_experts(src, spec, *granularity, *expansion)?
+                }
+                UpcycleStrategy::Replicate | UpcycleStrategy::DropUpcycle { .. } => {
+                    let dense_name = name.replace("/moe/", "/mlp/");
+                    let src = dense_opt
+                        .get(&dense_name)
+                        .with_context(|| format!("dense opt state lacks `{dense_name}`"))?;
+                    // Accumulator broadcast is a pure tiling — deterministic
+                    // and noise-free *by construction*: the no-noise
+                    // replicate takes no RNG, so no code path can ever
+                    // perturb optimizer state. The drop masks below are a
+                    // pure function of (seed, layer, expert), not a stream.
+                    let mut t = replicate_experts(src, spec.shape[0])?;
+                    if let UpcycleStrategy::DropUpcycle { reinit_fraction, seed } = strategy {
+                        zero_dropped_units(&mut t, spec, *reinit_fraction, *seed)?;
+                    }
+                    t
+                }
+            }
         } else {
             dense_opt
                 .get(name)
@@ -133,7 +485,7 @@ pub fn upcycle_opt_state(
 /// This is the paper's default surgery (and the *only* path optimizer
 /// state ever takes): taking no randomness source makes "noise-free" a
 /// property of the signature rather than of a parameter value.
-fn replicate_experts(src: &Tensor, e: usize) -> Result<Tensor> {
+pub(crate) fn replicate_experts(src: &Tensor, e: usize) -> Result<Tensor> {
     let data = src.f32s()?;
     let mut out = Vec::with_capacity(e * data.len());
     for _ in 0..e {
@@ -145,8 +497,9 @@ fn replicate_experts(src: &Tensor, e: usize) -> Result<Tensor> {
 }
 
 /// [`replicate_experts`] plus independent Gaussian noise on every copy
-/// (Appendix B.9's expert-diversification ablation). Only parameter
-/// surgery with `expert_noise > 0` comes through here.
+/// (Appendix B.9's expert-diversification ablation). Parameter surgery
+/// routes through [`build_experts`]; kept as the unit-test reference.
+#[allow(dead_code)]
 fn replicate_experts_noisy(src: &Tensor, e: usize, noise: f32, rng: &mut Rng) -> Result<Tensor> {
     let mut t = replicate_experts(src, e)?;
     if noise > 0.0 {
@@ -155,6 +508,280 @@ fn replicate_experts_noisy(src: &Tensor, e: usize, noise: f32, rng: &mut Rng) ->
         }
     }
     Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// FFN splitting.
+// ---------------------------------------------------------------------------
+
+/// Column-partition one wide dense FFN tensor into `E` narrower experts.
+///
+/// `wi` sources are `[d, F]` sliced along columns into `[E, d, f]`;
+/// `wo` sources are `[F, d]` sliced along rows into `[E, f, d]`; expert `e`
+/// takes contiguous block `e % granularity`, so `granularity = 1` is a
+/// bitwise replicate. Divisibility is fail-fast, mirroring the levanter
+/// exemplar's `ValueError`s.
+fn split_experts(
+    src: &Tensor,
+    spec: &TensorSpec,
+    granularity: usize,
+    expansion: usize,
+) -> Result<Tensor> {
+    let name = &spec.name;
+    let e = spec.shape[0];
+    if e != granularity * expansion {
+        bail!(
+            "split surgery for `{name}`: num_experts {e} != granularity {granularity} * \
+             expansion {expansion}"
+        );
+    }
+    let is_wi = name.contains("/moe/wi");
+    // Intermediate (FFN) width of the dense source vs one expert.
+    let big_f = if is_wi { src.shape[1] } else { src.shape[0] };
+    let f = if is_wi { spec.shape[2] } else { spec.shape[1] };
+    if f == 0 || big_f % f != 0 {
+        bail!(
+            "split surgery for `{name}`: dense d_ff {big_f} is not divisible by expert \
+             d_ff {f}"
+        );
+    }
+    if big_f / f != granularity {
+        bail!(
+            "split surgery for `{name}`: granularity {granularity} does not match dense \
+             d_ff {big_f} / expert d_ff {f} = {}",
+            big_f / f
+        );
+    }
+    let data = src.f32s()?;
+    let mut out = Vec::with_capacity(e * numel(&spec.shape[1..]));
+    for x in 0..e {
+        let p = x % granularity;
+        if is_wi {
+            // src [d, F]: columns p*f .. (p+1)*f of every row.
+            let d = src.shape[0];
+            for r in 0..d {
+                out.extend_from_slice(&data[r * big_f + p * f..r * big_f + (p + 1) * f]);
+            }
+        } else {
+            // src [F, d]: rows p*f .. (p+1)*f, contiguous.
+            let d = src.shape[1];
+            out.extend_from_slice(&data[p * f * d..(p + 1) * f * d]);
+        }
+    }
+    Ok(Tensor::from_f32(&spec.shape, out))
+}
+
+// ---------------------------------------------------------------------------
+// Drop-Upcycling.
+// ---------------------------------------------------------------------------
+
+const DROP_MASK_STREAM: u64 = 0x5eed_0000_0000_0001;
+const DROP_VALUE_STREAM: u64 = 0x5eed_0000_0000_0002;
+
+fn fnv1a64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The MoE block tag of a param or opt-slot name:
+/// `enc/block_01/moe/wi` and `opt/enc/block_01/moe/wi/m` both map to
+/// `enc/block_01`, so weights and their accumulators share one unit mask.
+fn moe_block_tag(name: &str) -> &str {
+    let name = name.strip_prefix("opt/").unwrap_or(name);
+    name.split("/moe/").next().unwrap_or(name)
+}
+
+/// The dropped FFN intermediate units of one (layer, expert): a pure,
+/// sorted function of `(seed, layer tag, expert, f, fraction)` — stream-
+/// independent so params and optimizer state always agree.
+fn dropped_units(seed: u64, tag: &str, expert: usize, f: usize, fraction: f32) -> Vec<usize> {
+    let k = drop_reinit_units(f, fraction);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut rng = Rng::with_stream(seed ^ DROP_MASK_STREAM, fnv1a64(tag)).fork(expert as u64);
+    let mut units = rng.choose_k(f, k);
+    units.sort_unstable();
+    units
+}
+
+/// How many FFN intermediate units Drop-Upcycling re-initializes per
+/// expert at width `f` — the single definition shared with
+/// [`crate::costmodel::surgery_cost`] so priced and performed surgery
+/// can never disagree.
+pub fn drop_reinit_units(f: usize, fraction: f32) -> usize {
+    ((fraction as f64 * f as f64).round() as usize).min(f)
+}
+
+/// FFN geometry of one expert tensor: `(experts, rows, cols, f, is_wi)`.
+fn expert_geom(spec: &TensorSpec) -> (usize, usize, usize, usize, bool) {
+    let (e, a, b) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+    let is_wi = spec.name.contains("/moe/wi");
+    let f = if is_wi { b } else { a };
+    (e, a, b, f, is_wi)
+}
+
+/// Re-initialize the dropped units of each expert with fresh fan-in values
+/// (`wi` columns and `wo` rows of the same unit are both reset).
+fn apply_drop_reinit(t: &mut Tensor, spec: &TensorSpec, fraction: f32, seed: u64) -> Result<()> {
+    let (e, a, b, f, is_wi) = expert_geom(spec);
+    let stddev = spec.init.as_ref().map(|i| i.stddev).unwrap_or(0.02);
+    let tag = moe_block_tag(&spec.name).to_string();
+    let data = t.f32s_mut()?;
+    for x in 0..e {
+        let units = dropped_units(seed, &tag, x, f, fraction);
+        if units.is_empty() {
+            continue;
+        }
+        let mut vrng =
+            Rng::with_stream(seed ^ DROP_VALUE_STREAM, fnv1a64(&spec.name)).fork(x as u64);
+        for &j in &units {
+            if is_wi {
+                for r in 0..a {
+                    data[x * a * b + r * b + j] = vrng.normal() * stddev;
+                }
+            } else {
+                for c in 0..b {
+                    data[x * a * b + j * b + c] = vrng.normal() * stddev;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Zero the optimizer accumulators of the dropped units (same masks as
+/// [`apply_drop_reinit`]; a freshly re-initialized weight has no momentum
+/// to resume).
+fn zero_dropped_units(t: &mut Tensor, spec: &TensorSpec, fraction: f32, seed: u64) -> Result<()> {
+    let (e, a, b, f, is_wi) = expert_geom(spec);
+    let tag = moe_block_tag(&spec.name).to_string();
+    let data = t.f32s_mut()?;
+    for x in 0..e {
+        for &j in &dropped_units(seed, &tag, x, f, fraction) {
+            if is_wi {
+                for r in 0..a {
+                    data[x * a * b + r * b + j] = 0.0;
+                }
+            } else {
+                for c in 0..b {
+                    data[x * a * b + j * b + c] = 0.0;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// CLI flag parsing (fail-fast, mirroring `--inject-fault`'s style).
+// ---------------------------------------------------------------------------
+
+/// Build the strategy from `upcycle upcycle` flags. Unknown strategy names,
+/// out-of-range fractions, zero granularity/expansion, empty or duplicate
+/// checkpoint lists, and flags that belong to a *different* strategy are
+/// all named errors raised before any checkpoint is read.
+pub fn strategy_from_args(a: &Args, default_seed: u64) -> Result<UpcycleStrategy> {
+    let name = a.str("strategy", "replicate");
+    let check_foreign = |strategy: &str, foreign: &[&str]| -> Result<()> {
+        for fl in foreign {
+            if a.flags.contains_key(*fl) {
+                bail!("--{fl} only applies to --strategy {strategy}; got --strategy {name}");
+            }
+        }
+        Ok(())
+    };
+    match name.as_str() {
+        "replicate" => {
+            check_foreign("drop", &["reinit-fraction"])?;
+            check_foreign("split", &["granularity", "expansion"])?;
+            check_foreign("multi", &["checkpoints", "shared"])?;
+            Ok(UpcycleStrategy::Replicate)
+        }
+        "drop" | "drop-upcycle" => {
+            check_foreign("split", &["granularity", "expansion"])?;
+            check_foreign("multi", &["checkpoints", "shared"])?;
+            let reinit_fraction = a.f64("reinit-fraction", 0.5)? as f32;
+            let s = UpcycleStrategy::DropUpcycle {
+                reinit_fraction,
+                seed: a.u64("strategy-seed", default_seed)?,
+            };
+            if !reinit_fraction.is_finite() || !(0.0..=1.0).contains(&reinit_fraction) {
+                bail!("--reinit-fraction must be in [0, 1], got {reinit_fraction}");
+            }
+            Ok(s)
+        }
+        "split" => {
+            check_foreign("drop", &["reinit-fraction"])?;
+            check_foreign("multi", &["checkpoints", "shared"])?;
+            let granularity = a.usize("granularity", 0)?;
+            let expansion = a.usize("expansion", 0)?;
+            if granularity == 0 || expansion == 0 {
+                bail!(
+                    "--strategy split requires --granularity G and --expansion X (both >= 1); \
+                     num_experts must equal G * X"
+                );
+            }
+            Ok(UpcycleStrategy::Split { granularity, expansion })
+        }
+        "multi" | "multi-checkpoint" => {
+            check_foreign("drop", &["reinit-fraction"])?;
+            check_foreign("split", &["granularity", "expansion"])?;
+            let list = a.req("checkpoints").map_err(|_| {
+                anyhow::anyhow!(
+                    "--strategy multi requires --checkpoints p1,p2,... (extra dense SUPC \
+                     bundles; --dense stays the primary source)"
+                )
+            })?;
+            let checkpoint_paths: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let shared = match a.str("shared", "primary").as_str() {
+                "primary" => SharedInit::Primary,
+                "average" => SharedInit::Average,
+                other => bail!("--shared must be `primary` or `average`, got `{other}`"),
+            };
+            if checkpoint_paths.is_empty() {
+                bail!("--checkpoints is empty; give at least one extra dense SUPC bundle");
+            }
+            for (i, p) in checkpoint_paths.iter().enumerate() {
+                if checkpoint_paths[..i].contains(p) {
+                    bail!("--checkpoints lists `{p}` twice");
+                }
+            }
+            Ok(UpcycleStrategy::MultiCheckpoint { checkpoint_paths, shared })
+        }
+        other => bail!(
+            "unknown --strategy `{other}`; use replicate | drop | split | multi \
+             (see docs/UPCYCLING.md)"
+        ),
+    }
+}
+
+/// Build the router init from `upcycle upcycle` flags.
+pub fn router_init_from_args(a: &Args) -> Result<RouterInit> {
+    match a.str("router-init", "normal").as_str() {
+        "normal" => {
+            if a.flags.contains_key("router-groups") {
+                bail!("--router-groups only applies to --router-init virtual-groups");
+            }
+            Ok(RouterInit::Normal)
+        }
+        "virtual-groups" | "virtual-group" => {
+            let groups = a.usize("router-groups", 0)?;
+            if groups == 0 {
+                bail!("--router-init virtual-groups requires --router-groups N (>= 1)");
+            }
+            Ok(RouterInit::VirtualGroups { groups })
+        }
+        other => bail!("unknown --router-init `{other}`; use normal | virtual-groups"),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -232,6 +859,266 @@ mod tests {
         // noise = 0 through the noisy path degrades to exact copies.
         let z = replicate_experts_noisy(&src, 2, 0.0, &mut Rng::new(1)).unwrap();
         assert_eq!(z.f32s().unwrap(), &vec![0.0; 16][..]);
+    }
+
+    fn wi_spec(e: usize, d: usize, f: usize) -> TensorSpec {
+        TensorSpec {
+            name: "enc/block_01/moe/wi".to_string(),
+            shape: vec![e, d, f],
+            dtype: crate::tensor::DType::F32,
+            init: Some(crate::manifest::InitSpec { kind: "fan_in".to_string(), stddev: 0.1 }),
+        }
+    }
+
+    fn wo_spec(e: usize, f: usize, d: usize) -> TensorSpec {
+        TensorSpec {
+            name: "enc/block_01/moe/wo".to_string(),
+            shape: vec![e, f, d],
+            dtype: crate::tensor::DType::F32,
+            init: Some(crate::manifest::InitSpec { kind: "fan_in".to_string(), stddev: 0.1 }),
+        }
+    }
+
+    #[test]
+    fn split_partitions_columns_and_rows() {
+        // wi [d=2, F=4] -> granularity 2 -> experts [4, 2, 2].
+        let src = Tensor::from_f32(&[2, 4], (0..8).map(|x| x as f32).collect());
+        let t = split_experts(&src, &wi_spec(4, 2, 2), 2, 2).unwrap();
+        let d = t.f32s().unwrap();
+        // Expert 0: columns 0..2 of each row = [0,1, 4,5]; expert 1: [2,3, 6,7].
+        assert_eq!(&d[0..4], &[0., 1., 4., 5.]);
+        assert_eq!(&d[4..8], &[2., 3., 6., 7.]);
+        // Experts 2,3 repeat the partition cycle.
+        assert_eq!(&d[8..12], &d[0..4]);
+        assert_eq!(&d[12..16], &d[4..8]);
+
+        // wo [F=4, d=2] -> rows are contiguous blocks.
+        let src = Tensor::from_f32(&[4, 2], (0..8).map(|x| x as f32).collect());
+        let t = split_experts(&src, &wo_spec(4, 2, 2), 2, 2).unwrap();
+        let d = t.f32s().unwrap();
+        assert_eq!(&d[0..4], &[0., 1., 2., 3.]);
+        assert_eq!(&d[4..8], &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn split_granularity_one_is_replicate() {
+        let src = Tensor::from_f32(&[2, 4], (0..8).map(|x| x as f32).collect());
+        let split = split_experts(&src, &wi_spec(3, 2, 4), 1, 3).unwrap();
+        let repl = replicate_experts(&src, 3).unwrap();
+        assert_eq!(split.f32s().unwrap(), repl.f32s().unwrap());
+        assert_eq!(split.shape, repl.shape);
+    }
+
+    #[test]
+    fn split_divisibility_is_fail_fast() {
+        let src = Tensor::from_f32(&[2, 4], vec![0.0; 8]);
+        // E != g * x.
+        let err = split_experts(&src, &wi_spec(4, 2, 2), 2, 3).unwrap_err();
+        assert!(err.to_string().contains("num_experts"), "{err:#}");
+        // Dense F=4 not divisible by expert f=3.
+        let err = split_experts(&src, &wi_spec(4, 2, 3), 2, 2).unwrap_err();
+        assert!(err.to_string().contains("not divisible"), "{err:#}");
+        // Granularity flag contradicts the actual width ratio.
+        let err = split_experts(&src, &wi_spec(4, 2, 2), 4, 1).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err:#}");
+    }
+
+    #[test]
+    fn drop_masks_shared_between_wi_and_wo() {
+        // Same tag + expert => same units, for every fraction.
+        for frac in [0.25f32, 0.5, 1.0] {
+            for x in 0..4 {
+                let a = dropped_units(7, "enc/block_01", x, 16, frac);
+                let b = dropped_units(7, "enc/block_01", x, 16, frac);
+                assert_eq!(a, b);
+            }
+        }
+        // Different experts (almost surely) differ; zero fraction is empty.
+        assert_ne!(
+            dropped_units(7, "enc/block_01", 0, 64, 0.5),
+            dropped_units(7, "enc/block_01", 1, 64, 0.5)
+        );
+        assert!(dropped_units(7, "enc/block_01", 0, 64, 0.0).is_empty());
+        assert_eq!(dropped_units(7, "enc/block_01", 0, 64, 1.0).len(), 64);
+    }
+
+    #[test]
+    fn opt_tag_matches_param_tag() {
+        assert_eq!(moe_block_tag("enc/block_01/moe/wi"), "enc/block_01");
+        assert_eq!(moe_block_tag("opt/enc/block_01/moe/wi/m"), "enc/block_01");
+        assert_eq!(moe_block_tag("opt/dec/block_00/moe/wo/v"), "dec/block_00");
+    }
+
+    #[test]
+    fn drop_reinit_resets_units_end_to_end() {
+        let e = 2;
+        let (d, f) = (3, 8);
+        let mut wi = replicate_experts(&Tensor::from_f32(&[d, f], vec![1.0; d * f]), e).unwrap();
+        let mut wo = replicate_experts(&Tensor::from_f32(&[f, d], vec![1.0; d * f]), e).unwrap();
+        apply_drop_reinit(&mut wi, &wi_spec(e, d, f), 0.5, 9).unwrap();
+        apply_drop_reinit(&mut wo, &wo_spec(e, f, d), 0.5, 9).unwrap();
+        let (wi, wo) = (wi.f32s().unwrap(), wo.f32s().unwrap());
+        for x in 0..e {
+            let units = dropped_units(9, "enc/block_01", x, f, 0.5);
+            assert_eq!(units.len(), 4);
+            for j in 0..f {
+                let wi_touched = (0..d).any(|r| wi[x * d * f + r * f + j] != 1.0);
+                let wo_touched = (0..d).any(|c| wo[x * d * f + j * d + c] != 1.0);
+                if units.contains(&j) {
+                    assert!(wi_touched && wo_touched, "unit {j} of expert {x} must be reset");
+                } else {
+                    assert!(!wi_touched && !wo_touched, "unit {j} of expert {x} must be kept");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_validation_names_every_failure() {
+        let m = crate::manifest::Manifest::native();
+        let e8 = m.model("lm_tiny_moe_e8_c2").unwrap();
+        let bad = [
+            (UpcycleStrategy::DropUpcycle { reinit_fraction: -0.1, seed: 0 }, "[0, 1]"),
+            (UpcycleStrategy::DropUpcycle { reinit_fraction: 1.5, seed: 0 }, "[0, 1]"),
+            (
+                UpcycleStrategy::DropUpcycle { reinit_fraction: f32::NAN, seed: 0 },
+                "[0, 1]",
+            ),
+            (UpcycleStrategy::Split { granularity: 0, expansion: 8 }, ">= 1"),
+            (UpcycleStrategy::Split { granularity: 3, expansion: 3 }, "8 experts"),
+            (
+                UpcycleStrategy::MultiCheckpoint {
+                    checkpoint_paths: vec![],
+                    shared: SharedInit::Primary,
+                },
+                "at least one",
+            ),
+            (
+                UpcycleStrategy::MultiCheckpoint {
+                    checkpoint_paths: vec!["a.supc".into(), "a.supc".into()],
+                    shared: SharedInit::Primary,
+                },
+                "twice",
+            ),
+            (
+                UpcycleStrategy::MultiCheckpoint {
+                    checkpoint_paths: vec!["a".into(), "b".into()],
+                    shared: SharedInit::Primary,
+                },
+                "not divisible",
+            ),
+        ];
+        for (s, needle) in bad {
+            let err = s.validate(e8).unwrap_err().to_string();
+            assert!(err.contains(needle), "{s:?}: `{err}` should mention `{needle}`");
+        }
+        UpcycleStrategy::Replicate.validate(e8).unwrap();
+        UpcycleStrategy::Split { granularity: 1, expansion: 8 }.validate(e8).unwrap();
+        RouterInit::VirtualGroups { groups: 4 }.validate(e8).unwrap();
+        let err = RouterInit::VirtualGroups { groups: 3 }.validate(e8).unwrap_err();
+        assert!(err.to_string().contains("divisible"), "{err:#}");
+    }
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn cli_strategy_parsing_defaults_and_happy_paths() {
+        assert_eq!(strategy_from_args(&parse(""), 0).unwrap(), UpcycleStrategy::Replicate);
+        assert_eq!(
+            strategy_from_args(&parse("--strategy drop --reinit-fraction 0.25"), 7).unwrap(),
+            UpcycleStrategy::DropUpcycle { reinit_fraction: 0.25, seed: 7 }
+        );
+        assert_eq!(
+            strategy_from_args(
+                &parse("--strategy drop --reinit-fraction 0.25 --strategy-seed 3"),
+                7
+            )
+            .unwrap(),
+            UpcycleStrategy::DropUpcycle { reinit_fraction: 0.25, seed: 3 }
+        );
+        assert_eq!(
+            strategy_from_args(&parse("--strategy split --granularity 2 --expansion 4"), 0)
+                .unwrap(),
+            UpcycleStrategy::Split { granularity: 2, expansion: 4 }
+        );
+        assert_eq!(
+            strategy_from_args(
+                &parse("--strategy multi --checkpoints a.supc,b.supc --shared average"),
+                0
+            )
+            .unwrap(),
+            UpcycleStrategy::MultiCheckpoint {
+                checkpoint_paths: vec!["a.supc".into(), "b.supc".into()],
+                shared: SharedInit::Average,
+            }
+        );
+        assert_eq!(router_init_from_args(&parse("")).unwrap(), RouterInit::Normal);
+        assert_eq!(
+            router_init_from_args(&parse("--router-init virtual-groups --router-groups 4"))
+                .unwrap(),
+            RouterInit::VirtualGroups { groups: 4 }
+        );
+    }
+
+    #[test]
+    fn cli_strategy_parsing_fails_fast() {
+        // Mirrors the `--inject-fault` style: every bad flag combination is
+        // a named error raised before any checkpoint is touched.
+        let bad = [
+            ("--strategy warp", "unknown --strategy"),
+            ("--strategy drop --reinit-fraction 1.5", "[0, 1]"),
+            ("--strategy drop --reinit-fraction -0.1", "[0, 1]"),
+            ("--strategy split", "--granularity"),
+            ("--strategy split --granularity 0 --expansion 4", ">= 1"),
+            ("--strategy split --granularity 2", ">= 1"),
+            ("--strategy multi", "--checkpoints"),
+            ("--strategy multi --checkpoints ,", "empty"),
+            ("--strategy multi --checkpoints a.supc,a.supc", "twice"),
+            ("--strategy multi --shared nope --checkpoints a.supc", "--shared"),
+            ("--strategy replicate --reinit-fraction 0.5", "only applies"),
+            ("--strategy drop --granularity 2", "only applies"),
+            ("--strategy split --expansion 4 --granularity 1 --checkpoints a", "only applies"),
+            ("--strategy multi --checkpoints a --reinit-fraction 0.1", "only applies"),
+        ];
+        for (flags, needle) in bad {
+            let err = strategy_from_args(&parse(flags), 0).unwrap_err().to_string();
+            assert!(err.contains(needle), "`{flags}` -> `{err}` should mention `{needle}`");
+        }
+        let bad_router = [
+            ("--router-init weird", "unknown --router-init"),
+            ("--router-init virtual-groups", "--router-groups"),
+            ("--router-init virtual-groups --router-groups 0", "--router-groups"),
+            ("--router-init normal --router-groups 4", "only applies"),
+        ];
+        for (flags, needle) in bad_router {
+            let err = router_init_from_args(&parse(flags)).unwrap_err().to_string();
+            assert!(err.contains(needle), "`{flags}` -> `{err}` should mention `{needle}`");
+        }
+    }
+
+    #[test]
+    fn virtual_group_router_tiles_columns() {
+        let spec = TensorSpec {
+            name: "enc/block_01/moe/router".to_string(),
+            shape: vec![3, 8],
+            dtype: crate::tensor::DType::F32,
+            init: None,
+        };
+        let opts = UpcycleOptions {
+            router_init: RouterInit::VirtualGroups { groups: 4 },
+            ..Default::default()
+        };
+        let t = init_router(&spec, &opts, &mut Rng::new(5));
+        let d = t.f32s().unwrap();
+        for r in 0..3 {
+            for g in 0..4 {
+                // Experts 2g and 2g+1 share a column; adjacent groups differ.
+                assert_eq!(d[r * 8 + 2 * g], d[r * 8 + 2 * g + 1]);
+            }
+            assert_ne!(d[r * 8], d[r * 8 + 2]);
+        }
     }
 
     #[test]

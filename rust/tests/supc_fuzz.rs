@@ -114,6 +114,120 @@ fn corrupt_bundles_never_panic_and_never_load_wrong() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Multi-checkpoint surgery failure paths: feeding `UpcycleStrategy::
+/// MultiCheckpoint` a mismatched-architecture bundle, a corrupt bundle
+/// among the paths, a source count that does not divide the expert count,
+/// or an empty/duplicate path list must yield a **named error** — never a
+/// panic, never a silently-wrong merged checkpoint.
+#[test]
+fn multi_checkpoint_surgery_failure_paths_are_named_errors() {
+    use sparse_upcycle::init::init_params;
+    use sparse_upcycle::upcycle::{upcycle_params, SharedInit, UpcycleOptions, UpcycleStrategy};
+
+    let manifest = Manifest::native();
+    let tiny = manifest.model("lm_tiny_dense").unwrap();
+    let sparse = manifest.model("lm_tiny_moe_e8_c2").unwrap();
+    let dir = std::env::temp_dir().join("supc_fuzz_multi");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dense_ck = init_params(tiny, 1).unwrap();
+    let path_of = |name: &str| dir.join(name).to_string_lossy().into_owned();
+    for (name, seed) in [("tiny_b.supc", 2u64), ("tiny_c.supc", 3), ("tiny_d.supc", 4)] {
+        init_params(tiny, seed).unwrap().save(dir.join(name)).unwrap();
+    }
+
+    let surgery = |paths: Vec<String>, shared: SharedInit| {
+        let opts = UpcycleOptions {
+            strategy: UpcycleStrategy::MultiCheckpoint { checkpoint_paths: paths, shared },
+            ..Default::default()
+        };
+        catch_unwind(AssertUnwindSafe(|| upcycle_params(&dense_ck, sparse, &opts)))
+            .expect("multi-checkpoint surgery must never panic")
+    };
+
+    // Positive control: a valid two-source merge succeeds, so the failures
+    // below are failures of the *inputs*, not of the path under test.
+    let merged = surgery(vec![path_of("tiny_b.supc")], SharedInit::Average)
+        .expect("valid two-source merge");
+    assert_eq!(merged.tensors.len(), sparse.params.len());
+
+    // (1) Mismatched architecture: a different zoo geometry as the extra
+    // source must be rejected by name under both shared-init modes.
+    let small = manifest.model("lm_small_dense").unwrap();
+    init_params(small, 5).unwrap().save(dir.join("small.supc")).unwrap();
+    for shared in [SharedInit::Primary, SharedInit::Average] {
+        let err = surgery(vec![path_of("small.supc")], shared)
+            .expect_err("mismatched architecture must be rejected");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("multi-checkpoint")
+                && (msg.contains("architecture mismatch") || msg.contains("lacks")),
+            "mismatch error must name the problem: {msg}"
+        );
+    }
+
+    // (2) A corrupt bundle among the paths: truncation and bit flips must
+    // surface the hardened loader's error, wrapped with the source path.
+    let good = std::fs::read(dir.join("tiny_d.supc")).unwrap();
+    let mut rng = Rng::new(0xc0de);
+    for i in 0..8 {
+        let mut b = good.clone();
+        if i % 2 == 0 {
+            b.truncate(rng.below(b.len()));
+        } else {
+            let at = rng.below(b.len().min(64)); // header/preamble flips
+            b[at] ^= 1 << (rng.below(8) as u8);
+        }
+        std::fs::write(dir.join("corrupt.supc"), &b).unwrap();
+        // Two healthy sources + one corrupt: 4 sources, divides 8 experts.
+        let out = surgery(
+            vec![path_of("tiny_b.supc"), path_of("tiny_c.supc"), path_of("corrupt.supc")],
+            SharedInit::Primary,
+        );
+        match out {
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("loading multi-checkpoint source #3") && msg.contains("supc"),
+                    "corrupt-source error must name the source and file: {msg}"
+                );
+            }
+            // A flip can land in cosmetic metadata; then the load is benign
+            // and the merge must still be architecturally valid.
+            Ok(ck) => assert_eq!(ck.tensors.len(), sparse.params.len()),
+        }
+    }
+
+    // (3) Expert count not divisible by source count: 2 extra sources make
+    // 3 round-robin sources for 8 experts → fail fast, before any load.
+    let err = surgery(
+        vec![path_of("tiny_b.supc"), path_of("tiny_c.supc")],
+        SharedInit::Primary,
+    )
+    .expect_err("8 experts over 3 sources must be rejected");
+    assert!(format!("{err:#}").contains("not divisible"), "{err:#}");
+
+    // (4) Degenerate path lists: empty list, empty path, duplicates.
+    let err = surgery(vec![], SharedInit::Primary).expect_err("empty source list");
+    assert!(format!("{err:#}").contains("at least one"), "{err:#}");
+    let err = surgery(vec!["  ".into()], SharedInit::Primary).expect_err("blank path");
+    assert!(format!("{err:#}").contains("empty path"), "{err:#}");
+    let err = surgery(
+        vec![path_of("tiny_b.supc"), path_of("tiny_b.supc")],
+        SharedInit::Primary,
+    )
+    .expect_err("duplicate paths");
+    assert!(format!("{err:#}").contains("twice"), "{err:#}");
+
+    // A path that simply does not exist is a named load error too.
+    let err = surgery(vec![path_of("nope.supc")], SharedInit::Primary)
+        .expect_err("missing file");
+    assert!(
+        format!("{err:#}").contains("loading multi-checkpoint source #1"),
+        "{err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Adversarial length fields: every u64/u32 length position rewritten to
 /// extreme values must error by name — never allocate absurd buffers.
 #[test]

@@ -10,6 +10,7 @@ use sparse_upcycle::init::{init_opt_state, init_params};
 use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::upcycle::{
     depth_tile_params, tile_source_block, upcycle_opt_state, upcycle_params, UpcycleOptions,
+    UpcycleStrategy,
 };
 use sparse_upcycle::util::rng::Rng;
 
@@ -191,8 +192,10 @@ fn prop_opt_state_surgery() {
         *t = sparse_upcycle::tensor::Tensor::from_f32(&shape, rng.normal_vec(n, 1.0));
     }
 
-    let loaded = upcycle_opt_state(&dense_opt, &sparse_entry, true).unwrap();
-    let zeroed = upcycle_opt_state(&dense_opt, &sparse_entry, false).unwrap();
+    let loaded =
+        upcycle_opt_state(&dense_opt, &sparse_entry, true, &UpcycleStrategy::Replicate).unwrap();
+    let zeroed =
+        upcycle_opt_state(&dense_opt, &sparse_entry, false, &UpcycleStrategy::Replicate).unwrap();
     for spec in &sparse_entry.opt_state {
         let z = zeroed.get(&spec.name).unwrap();
         assert!(z.f32s().unwrap().iter().all(|&v| v == 0.0), "{} not zeroed", spec.name);

@@ -19,7 +19,9 @@ use sparse_upcycle::init::init_params;
 use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::runtime::{tensors_from_checkpoint, Runtime};
 use sparse_upcycle::tensor::Tensor;
-use sparse_upcycle::upcycle::{upcycle_opt_state, upcycle_params, UpcycleOptions};
+use sparse_upcycle::upcycle::{
+    upcycle_opt_state, upcycle_params, SharedInit, UpcycleOptions, UpcycleStrategy,
+};
 
 /// Rewrite a sparse zoo entry's routing: force combine-weight
 /// renormalization, optionally change the router family, optionally raise
@@ -215,14 +217,14 @@ fn opt_state_upcycling_broadcast_and_zeroing_invariants() {
     }
 
     // load_optimizer = false (the language recipe): everything zeroed.
-    let zeroed = upcycle_opt_state(&dense_opt, sparse, false).unwrap();
+    let zeroed = upcycle_opt_state(&dense_opt, sparse, false, &UpcycleStrategy::Replicate).unwrap();
     for spec in &sparse.opt_state {
         let t = zeroed.get(&spec.name).unwrap();
         assert!(t.f32s().unwrap().iter().all(|&x| x == 0.0), "`{}` must be zero", spec.name);
     }
 
     // load_optimizer = true (the vision recipe): broadcast + router zeroing.
-    let carried = upcycle_opt_state(&dense_opt, sparse, true).unwrap();
+    let carried = upcycle_opt_state(&dense_opt, sparse, true, &UpcycleStrategy::Replicate).unwrap();
     for spec in &sparse.opt_state {
         let t = carried.get(&spec.name).unwrap();
         assert_eq!(t.shape, spec.shape, "`{}`", spec.name);
@@ -251,7 +253,7 @@ fn opt_state_upcycling_broadcast_and_zeroing_invariants() {
     }
 
     // Deterministic by construction: a second run is bitwise-identical.
-    let again = upcycle_opt_state(&dense_opt, sparse, true).unwrap();
+    let again = upcycle_opt_state(&dense_opt, sparse, true, &UpcycleStrategy::Replicate).unwrap();
     for spec in &sparse.opt_state {
         assert_eq!(
             carried.get(&spec.name).unwrap(),
@@ -259,5 +261,265 @@ fn opt_state_upcycling_broadcast_and_zeroing_invariants() {
             "`{}`: opt-state upcycling must be deterministic",
             spec.name
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strategy-matrix properties: the `UpcycleStrategy` seam must not move the
+// paper's surgery (Replicate bitwise-golden), the degenerate strategy
+// parameters must collapse onto Replicate bitwise, a genuinely different
+// strategy must visibly break the identity without producing garbage, and
+// every strategy must be bitwise-deterministic — across runs and threads.
+// ---------------------------------------------------------------------------
+
+/// Assert two checkpoints hold bitwise-identical tensors for `specs`.
+fn assert_bitwise_eq(
+    a: &Checkpoint,
+    b: &Checkpoint,
+    specs: &[sparse_upcycle::manifest::TensorSpec],
+    tag: &str,
+) {
+    for spec in specs {
+        let (ta, tb) = (a.get(&spec.name).unwrap(), b.get(&spec.name).unwrap());
+        assert_eq!(ta.shape, tb.shape, "{tag}: `{}` shape", spec.name);
+        let (da, db) = (ta.f32s().unwrap(), tb.f32s().unwrap());
+        for (j, (x, y)) in da.iter().zip(db).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{tag}: `{}`[{j}] differs bitwise ({x} vs {y})",
+                spec.name
+            );
+        }
+    }
+}
+
+/// `Replicate` is the paper's surgery, **bitwise-unchanged** by the
+/// strategy refactor. The golden here is an inline re-implementation of
+/// the pre-refactor loop (per-spec forked RNG stream, fresh N(0, 0.02)
+/// routers, exact expert tiling, pass-through shared params) — if the
+/// seam ever reorders RNG consumption or touches a tensor it shouldn't,
+/// this catches it at the bit level, on both the LM and ViT geometries.
+#[test]
+fn replicate_matches_pre_refactor_surgery_bitwise() {
+    use sparse_upcycle::util::rng::Rng;
+    let manifest = Manifest::native();
+    for (dense_name, sparse_name, seed) in [
+        ("lm_tiny_dense", "lm_tiny_moe_e8_c2", 7u64),
+        ("vit_tiny_dense", "vit_tiny_moe_e8_c2", 13),
+    ] {
+        let dense_entry = manifest.model(dense_name).unwrap();
+        let sparse_entry = manifest.model(sparse_name).unwrap();
+        let dense_ck = init_params(dense_entry, seed).unwrap();
+        let opts = UpcycleOptions { seed, ..Default::default() };
+        let new = upcycle_params(&dense_ck, sparse_entry, &opts).unwrap();
+
+        // The pre-refactor algorithm, verbatim.
+        let mut rng = Rng::new(seed);
+        let mut golden = Checkpoint::new(sparse_name, dense_ck.step, "golden");
+        for (i, spec) in sparse_entry.params.iter().enumerate() {
+            let mut sub = rng.fork(i as u64);
+            let n: usize = spec.shape.iter().product();
+            let t = if spec.name.contains("/moe/router") {
+                Tensor::from_f32(&spec.shape, sub.normal_vec(n, 0.02))
+            } else if spec.name.contains("/moe/wi") || spec.name.contains("/moe/wo") {
+                let src = dense_ck.get(&spec.name.replace("/moe/", "/mlp/")).unwrap();
+                let data = src.f32s().unwrap();
+                let mut out = Vec::with_capacity(spec.shape[0] * data.len());
+                for _ in 0..spec.shape[0] {
+                    out.extend_from_slice(data);
+                }
+                Tensor::from_f32(&spec.shape, out)
+            } else {
+                dense_ck.get(&spec.name).unwrap().clone()
+            };
+            golden.insert(&spec.name, t);
+        }
+        assert_bitwise_eq(&new, &golden, &sparse_entry.params, &format!("{sparse_name} golden"));
+    }
+}
+
+/// `DropUpcycle { reinit_fraction: 0 }` and `Split { granularity: 1 }` are
+/// the degenerate corners of their strategies and must collapse onto
+/// `Replicate` **bitwise** — params and optimizer state both — for any
+/// strategy seed and even with expert noise in play.
+#[test]
+fn degenerate_drop_and_split_collapse_onto_replicate_bitwise() {
+    let m = Manifest::native();
+    let dense = m.model("lm_tiny_dense").unwrap();
+    let sparse = m.model("lm_tiny_moe_e8_c2").unwrap();
+    let dense_ck = init_params(dense, 3).unwrap();
+    let mut dense_opt = Checkpoint::new("lm_tiny_dense", 0, "props");
+    for spec in &dense.opt_state {
+        let n: usize = spec.shape.iter().product();
+        dense_opt.insert(&spec.name, Tensor::from_f32(&spec.shape, vec![0.125; n]));
+    }
+    for noise in [0.0f32, 0.01] {
+        let base = UpcycleOptions { seed: 3, expert_noise: noise, ..Default::default() };
+        let replicate = upcycle_params(&dense_ck, sparse, &base).unwrap();
+        for strategy in [
+            UpcycleStrategy::DropUpcycle { reinit_fraction: 0.0, seed: 999 },
+            UpcycleStrategy::Split { granularity: 1, expansion: 8 },
+        ] {
+            let tag = format!("{} (noise {noise})", strategy.name());
+            let opts = UpcycleOptions { strategy: strategy.clone(), ..base.clone() };
+            let got = upcycle_params(&dense_ck, sparse, &opts).unwrap();
+            assert_bitwise_eq(&got, &replicate, &sparse.params, &tag);
+            let opt_rep =
+                upcycle_opt_state(&dense_opt, sparse, true, &UpcycleStrategy::Replicate).unwrap();
+            let opt_got = upcycle_opt_state(&dense_opt, sparse, true, &strategy).unwrap();
+            assert_bitwise_eq(&opt_got, &opt_rep, &sparse.opt_state, &tag);
+        }
+    }
+}
+
+/// The counterexample the property harness owes the reader: a *positive*
+/// `reinit_fraction` genuinely re-initializes expert units, so the
+/// identity-at-init property must **fail** — the upcycled loss visibly
+/// moves away from the dense parent — while every output stays finite
+/// (re-init is surgery, not corruption).
+#[test]
+fn positive_reinit_fraction_breaks_identity_but_stays_finite() {
+    let mut manifest = Manifest::native();
+    rewrite_routing(&mut manifest, "lm_tiny_moe_e8_c2_top1", None, None);
+    let runtime = Runtime::new().unwrap();
+    let dense_entry = manifest.model("lm_tiny_dense").unwrap().clone();
+    let dense_model = runtime.load_model(&manifest, "lm_tiny_dense", &["eval"]).unwrap();
+    let dense_ck = init_params(&dense_entry, 3).unwrap();
+    let dense_params = tensors_from_checkpoint(&dense_ck, &dense_entry.params).unwrap();
+    let batch = lm_batch(&dense_entry, 3);
+    let dense_loss = dense_model.eval_step(&dense_params, &batch).unwrap()["loss"];
+
+    let entry = manifest.model("lm_tiny_moe_e8_c2_top1").unwrap().clone();
+    let model = runtime.load_model(&manifest, "lm_tiny_moe_e8_c2_top1", &["eval"]).unwrap();
+    let opts = UpcycleOptions {
+        strategy: UpcycleStrategy::DropUpcycle { reinit_fraction: 0.5, seed: 17 },
+        seed: 3,
+        ..Default::default()
+    };
+    let ck = upcycle_params(&dense_ck, &entry, &opts).unwrap();
+    for spec in &entry.params {
+        assert!(
+            ck.get(&spec.name).unwrap().f32s().unwrap().iter().all(|x| x.is_finite()),
+            "`{}`: drop-upcycled params must stay finite",
+            spec.name
+        );
+    }
+    let m = model.eval_step(&tensors_from_checkpoint(&ck, &entry.params).unwrap(), &batch).unwrap();
+    assert!(m["loss"].is_finite(), "drop-upcycled loss must be finite, got {}", m["loss"]);
+    assert!(
+        (m["loss"] - dense_loss).abs() > 1e-4,
+        "reinit_fraction = 0.5 must break the identity: {} vs dense {dense_loss}",
+        m["loss"]
+    );
+}
+
+/// Every strategy is **bitwise-deterministic**: two runs in this thread
+/// and one run on each of two spawned threads all produce identical bits,
+/// for params and optimizer state. (The RNG is explicit and thread-count
+/// must be irrelevant — this is the contract `docs/UPCYCLING.md` states.)
+#[test]
+fn every_strategy_is_bitwise_deterministic_across_runs_and_threads() {
+    let m = Manifest::native();
+    let dense = m.model("lm_tiny_dense").unwrap();
+    let dense_ck = init_params(dense, 5).unwrap();
+    let mut dense_opt = Checkpoint::new("lm_tiny_dense", 0, "props");
+    for (i, spec) in dense.opt_state.iter().enumerate() {
+        let n: usize = spec.shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|j| (i + j) as f32 * 1e-4 + 0.5).collect();
+        dense_opt.insert(&spec.name, Tensor::from_f32(&spec.shape, data));
+    }
+    // MultiCheckpoint needs a second dense parent on disk.
+    let dir = std::env::temp_dir().join(format!("supc_strategy_props_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let second = dir.join("second_parent.supc");
+    init_params(dense, 21).unwrap().save(&second).unwrap();
+
+    let cases: Vec<(&str, UpcycleStrategy)> = vec![
+        ("lm_tiny_moe_e8_c2", UpcycleStrategy::Replicate),
+        ("lm_tiny_moe_e8_c2", UpcycleStrategy::DropUpcycle { reinit_fraction: 0.3, seed: 9 }),
+        ("lm_tiny_moe_split_g2e8", UpcycleStrategy::Split { granularity: 2, expansion: 4 }),
+        (
+            "lm_tiny_moe_e8_c2",
+            UpcycleStrategy::MultiCheckpoint {
+                checkpoint_paths: vec![second.to_string_lossy().into_owned()],
+                shared: SharedInit::Average,
+            },
+        ),
+    ];
+    for (target, strategy) in cases {
+        let sparse = m.model(target).unwrap().clone();
+        let opts = UpcycleOptions { strategy: strategy.clone(), seed: 5, ..Default::default() };
+        let run = {
+            let dense_ck = dense_ck.clone();
+            let dense_opt = dense_opt.clone();
+            let sparse = sparse.clone();
+            let opts = opts.clone();
+            let strategy = strategy.clone();
+            move || {
+                let p = upcycle_params(&dense_ck, &sparse, &opts).unwrap();
+                let o = upcycle_opt_state(&dense_opt, &sparse, true, &strategy).unwrap();
+                (p, o)
+            }
+        };
+        let (p0, o0) = run();
+        let tag = format!("{} -> {target}", strategy.name());
+        let (p1, o1) = run(); // same thread, second run
+        assert_bitwise_eq(&p1, &p0, &sparse.params, &format!("{tag} rerun"));
+        assert_bitwise_eq(&o1, &o0, &sparse.opt_state, &format!("{tag} rerun opt"));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let run = run.clone();
+                std::thread::spawn(run)
+            })
+            .collect();
+        for (k, h) in handles.into_iter().enumerate() {
+            let (p, o) = h.join().unwrap();
+            assert_bitwise_eq(&p, &p0, &sparse.params, &format!("{tag} thread {k}"));
+            assert_bitwise_eq(&o, &o0, &sparse.opt_state, &format!("{tag} thread {k} opt"));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `Split { granularity: 2 }` is real surgery, not replication: each
+/// expert gets a *contiguous column block* of the wide dense FFN, experts
+/// sharing a partition index are bitwise-identical, and the two partitions
+/// tile the dense matrices exactly (nothing dropped, nothing invented).
+#[test]
+fn split_g2_partitions_the_dense_ffn_exactly() {
+    let m = Manifest::native();
+    let dense = m.model("lm_tiny_dense").unwrap();
+    let sparse = m.model("lm_tiny_moe_split_g2e8").unwrap();
+    let dense_ck = init_params(dense, 5).unwrap();
+    let opts = UpcycleOptions {
+        strategy: UpcycleStrategy::Split { granularity: 2, expansion: 4 },
+        seed: 5,
+        ..Default::default()
+    };
+    let ck = upcycle_params(&dense_ck, sparse, &opts).unwrap();
+    for spec in &sparse.params {
+        if !spec.name.contains("/moe/wi") {
+            continue;
+        }
+        let wi = ck.get(&spec.name).unwrap();
+        let src = dense_ck.get(&spec.name.replace("/moe/", "/mlp/")).unwrap();
+        let (e, d, f) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+        let (wi_d, src_d) = (wi.f32s().unwrap(), src.f32s().unwrap());
+        let big_f = src.shape[1];
+        assert_eq!(big_f, 2 * f, "`{}`: split target must be half-width", spec.name);
+        for x in 0..e {
+            let p = x % 2; // partition index (granularity 2)
+            for r in 0..d {
+                for j in 0..f {
+                    assert_eq!(
+                        wi_d[x * d * f + r * f + j].to_bits(),
+                        src_d[r * big_f + p * f + j].to_bits(),
+                        "`{}` expert {x} row {r} col {j}",
+                        spec.name
+                    );
+                }
+            }
+        }
     }
 }
