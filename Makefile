@@ -5,10 +5,11 @@
 
 .PHONY: verify build test test-release docs bench-compile bench-json bench-gate bench-baseline \
         check-features fmt fmt-check clippy quickstart mesh-smoke serve-smoke chaos-smoke \
-        strategy-smoke artifacts clean
+        strategy-smoke serving-load-smoke artifacts clean
 
 verify: build test test-release fmt-check clippy docs bench-compile bench-json bench-gate \
-        check-features quickstart mesh-smoke serve-smoke chaos-smoke strategy-smoke
+        check-features quickstart mesh-smoke serve-smoke chaos-smoke strategy-smoke \
+        serving-load-smoke
 
 build:
 	cargo build --release
@@ -120,6 +121,23 @@ serve-smoke:
 	cargo run --release -- train --model lm_tiny_moe_e8_c2 --steps 10 \
 	  --save results/checkpoints/serve_smoke.supc
 	cargo run --release -- serve --load results/checkpoints/serve_smoke.supc --requests 16
+
+# Serving-load smoke: one bursty multi-tenant trace through every
+# scheduler policy under a bounded queue (docs/SERVING.md). `serve` exits
+# nonzero if any request is silently lost — completions + named sheds must
+# cover the whole trace — so every leg asserts the no-silent-drop
+# contract, not just liveness.
+serving-load-smoke:
+	cargo run --release -- train --model lm_tiny_moe_e8_c2 --steps 10 \
+	  --save results/checkpoints/serving_load_smoke.supc
+	cargo run --release -- serve --load results/checkpoints/serving_load_smoke.supc \
+	  --requests 32 --traffic bursty --tenants 4 --serve policy=fifo,queue=8
+	cargo run --release -- serve --load results/checkpoints/serving_load_smoke.supc \
+	  --requests 32 --traffic bursty --tenants 4 --serve policy=priority,queue=8,floor=10000
+	cargo run --release -- serve --load results/checkpoints/serving_load_smoke.supc \
+	  --requests 32 --traffic bursty --tenants 4 --serve policy=fair,queue=8,shed=evict
+	cargo run --release -- serve --load results/checkpoints/serving_load_smoke.supc \
+	  --requests 32 --traffic bursty --tenants 4 --serve policy=slo,queue=8,slo=20000
 
 # AOT artifacts for the PJRT backend (requires the Python toolchain; not
 # needed for the default native build). Written under rust/ because cargo

@@ -29,7 +29,11 @@
 //! * forward-only inference (`runtime::Executable::infer`): a batch-size
 //!   sweep (latency percentiles, tokens/s) and the serve engine's
 //!   continuous-batching throughput against unbatched serving on the same
-//!   fixed arrival trace (`serve::Engine`).
+//!   fixed arrival trace (`serve::Engine`),
+//! * the serving-load sweep (`serve::trafficgen`): one bursty multi-tenant
+//!   trace replayed through every scheduler policy under a bounded queue,
+//!   recording virtual p99/p999 tail latency, shed rate, and per-tenant
+//!   goodput.
 //!
 //! Run: cargo bench --bench runtime_step [-- --full] [--quick]
 //!      [--json-out PATH]   (default PATH: BENCH_runtime.json in the bench
@@ -456,13 +460,13 @@ fn inference_section(manifest: &Manifest, runtime: &Runtime, target_ms: u64) -> 
     // warmup run per config, then the measured run.
     let n_req = 16usize;
     let tpr = serve::tokens_per_request(&entry);
-    let run = |cfg: serve::EngineConfig| {
-        let engine = serve::Engine::new(&model, params, cfg).unwrap();
+    let run = |spec: serve::ServeSpec| {
+        let engine = serve::Engine::new(&model, params, spec).unwrap();
         engine.run_trace(serve::synthetic_trace(&entry, n_req, 9, 0)).unwrap();
         engine.run_trace(serve::synthetic_trace(&entry, n_req, 9, 0)).unwrap()
     };
-    let batched = run(serve::EngineConfig { max_batch_tokens: 8 * tpr, ..Default::default() });
-    let unbatched = run(serve::EngineConfig::unbatched());
+    let batched = run(serve::ServeSpec { max_batch_tokens: 8 * tpr, ..Default::default() });
+    let unbatched = run(serve::ServeSpec::unbatched());
     let speedup = batched.tokens_per_s() / unbatched.tokens_per_s().max(1e-9);
     println!(
         "  ↳ engine, {n_req}-request burst: batched {:.1} tokens/s in {} micro-batch(es) vs \
@@ -489,6 +493,102 @@ fn inference_section(manifest: &Manifest, runtime: &Runtime, target_ms: u64) -> 
         ("engine_batched", engine_json(&batched)),
         ("engine_unbatched", engine_json(&unbatched)),
         ("batched_speedup", num(speedup)),
+    ])
+}
+
+/// Heavy-traffic serving: one bursty multi-tenant trace replayed through
+/// every scheduler policy under the same bounded queue, recording virtual
+/// tail latency (p99 + interpolated p999), shed rate, and per-tenant
+/// goodput (policy semantics: docs/SERVING.md; schema: docs/BENCHMARKS.md
+/// §serving_load). Everything except `tokens_per_s` lives on the virtual
+/// clock, so these numbers are a pure function of (trace, ServeSpec).
+fn serving_load_section(manifest: &Manifest, runtime: &Runtime) -> Json {
+    println!("== serving load: scheduler policies under bursty multi-tenant traffic ==");
+    let name = "lm_tiny_moe_e8_c2";
+    let entry = manifest.model(name).unwrap().clone();
+    let model = runtime.load_model(manifest, name, &["eval"]).unwrap();
+    let state = fresh_state(&entry);
+    let params = &state.params;
+
+    let n_req = 48usize;
+    let tenants = 4usize;
+    let queue = 8usize;
+    let tpr = serve::tokens_per_request(&entry);
+    let process = serve::ArrivalProcess::Bursty { mean_gap_us: 100, burst: 8 };
+    let trace =
+        serve::generate(&entry, &serve::TrafficSpec::standard(process, tenants, n_req, 11))
+            .unwrap();
+
+    let mut policies = Vec::new();
+    for kind in [
+        serve::PolicyKind::Fifo,
+        serve::PolicyKind::Priority,
+        serve::PolicyKind::FairShare,
+        serve::PolicyKind::SloDeadline,
+    ] {
+        let spec = serve::ServeSpec {
+            policy: kind,
+            max_batch_tokens: 4 * tpr,
+            queue_capacity: queue,
+            priority_floor_us: if kind == serve::PolicyKind::Priority { 10_000 } else { 0 },
+            slo_default_us: if kind == serve::PolicyKind::SloDeadline { 20_000 } else { 0 },
+            ..Default::default()
+        };
+        let engine = serve::Engine::new(&model, params, spec).unwrap();
+        // One warmup run for stable wall-time throughput; the virtual-clock
+        // numbers are bitwise-identical between the two runs.
+        engine.run_trace(trace.clone()).unwrap();
+        let report = engine.run_trace(trace.clone()).unwrap();
+
+        // Goodput denominator: virtual makespan (last micro-batch finish).
+        let makespan_us = report.batches.iter().map(|b| b.finish_us).max().unwrap_or(0);
+        let goodput: Vec<Json> = report
+            .tenant_counts()
+            .into_iter()
+            .map(|(tenant, done, shed)| {
+                let tokens = (done * tpr) as f64;
+                let per_vs =
+                    if makespan_us > 0 { tokens * 1e6 / makespan_us as f64 } else { 0.0 };
+                obj(vec![
+                    ("tenant", num(tenant as f64)),
+                    ("completed", num(done as f64)),
+                    ("shed", num(shed as f64)),
+                    ("goodput_tokens_per_vs", num(per_vs)),
+                ])
+            })
+            .collect();
+        println!(
+            "  ↳ {}: {} completed, {} shed ({:.1}%), p99 {:.0} µs, p999 {:.0} µs",
+            kind.name(),
+            report.completions.len(),
+            report.sheds.len(),
+            report.shed_rate() * 100.0,
+            report.p99_latency_us(),
+            report.p999_latency_us()
+        );
+        policies.push(obj(vec![
+            ("policy", s(kind.name())),
+            ("completed", num(report.completions.len() as f64)),
+            ("shed", num(report.sheds.len() as f64)),
+            ("shed_rate", num(report.shed_rate())),
+            ("micro_batches", num(report.batches.len() as f64)),
+            ("p50_latency_us", num(report.p50_latency_us())),
+            ("p99_latency_us", num(report.p99_latency_us())),
+            ("p999_latency_us", num(report.p999_latency_us())),
+            ("virtual_makespan_us", num(makespan_us as f64)),
+            ("tokens_per_s", num(report.tokens_per_s())),
+            ("tenant_goodput", arr(goodput)),
+        ]));
+    }
+    println!();
+    obj(vec![
+        ("model", s(name)),
+        ("requests", num(n_req as f64)),
+        ("tenants", num(tenants as f64)),
+        ("arrival_process", s(process.name())),
+        ("queue_capacity", num(queue as f64)),
+        ("tokens_per_request", num(tpr as f64)),
+        ("policies", arr(policies)),
     ])
 }
 
@@ -534,6 +634,7 @@ fn main() {
     let expert_parallel = expert_parallel_section(&manifest, &runtime, t_eval, full);
     let overlap = overlap_section(&manifest, &runtime, t_eval);
     let inference = inference_section(&manifest, &runtime, t_eval);
+    let serving_load = serving_load_section(&manifest, &runtime);
 
     let mut model_entries = Vec::new();
     for name in variants {
@@ -679,6 +780,7 @@ fn main() {
         ("expert_parallel", expert_parallel),
         ("overlap", overlap),
         ("inference", inference),
+        ("serving_load", serving_load),
         ("models", arr(model_entries)),
     ]);
     std::fs::write(&json_out, report.to_string()).expect("writing bench JSON");

@@ -150,6 +150,51 @@ fn sim_topology_from_args(a: &Args) -> Result<MeshSpec> {
     })
 }
 
+/// Resolve the serving plan: the canonical consolidated
+/// `--serve policy=…,budget=…,max-batch=…,queue=…[,shed=…,gap=…,floor=…,slo=…]`
+/// flag ([`serve::ServeSpec::parse`]), with the deprecated
+/// `--batch-tokens`/`--max-batch`/`--unbatched`/`--gap-us` aliases
+/// desugaring onto the same spec (and printing a pointer to the
+/// replacement).
+fn serve_spec_from_args(a: &Args) -> Result<serve::ServeSpec> {
+    let aliases = ["batch-tokens", "max-batch", "unbatched", "gap-us"];
+    let has_alias = aliases.iter().any(|k| a.flags.contains_key(*k));
+    if let Some(spec) = a.flags.get("serve") {
+        if has_alias {
+            bail!(
+                "--serve replaces --batch-tokens/--max-batch/--unbatched/--gap-us; \
+                 give only --serve"
+            );
+        }
+        return serve::ServeSpec::parse(spec);
+    }
+    let mut spec = serve::ServeSpec::default();
+    if a.flags.contains_key("batch-tokens") {
+        spec.max_batch_tokens = a.usize("batch-tokens", 0)?;
+        eprintln!(
+            "warning: --batch-tokens is deprecated; use --serve budget={}",
+            spec.max_batch_tokens
+        );
+    }
+    if a.flags.contains_key("max-batch") {
+        spec.max_batch_requests = a.usize("max-batch", 0)?;
+        eprintln!(
+            "warning: --max-batch is deprecated; use --serve max-batch={}",
+            spec.max_batch_requests
+        );
+    }
+    if a.bool("unbatched") {
+        // The old precedence: --unbatched wins over --max-batch.
+        spec.max_batch_requests = 1;
+        eprintln!("warning: --unbatched is deprecated; use --serve max-batch=1");
+    }
+    if a.flags.contains_key("gap-us") {
+        spec.gap_us = a.u64("gap-us", spec.gap_us)?;
+        eprintln!("warning: --gap-us is deprecated; use --serve gap={}", spec.gap_us);
+    }
+    Ok(spec)
+}
+
 fn run() -> Result<()> {
     let a = Args::from_env()?;
     let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -485,7 +530,11 @@ fn run() -> Result<()> {
             };
             let ep = topo.expert_parallel.max(1);
             let microbatches = a.usize("microbatches", 1)?.max(1);
-            let trace = serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, 0);
+            // One batch, one arrival gap default: infer draws the same
+            // ServeSpec default as serve instead of a hardcoded burst
+            // (arrival times do not affect a single stacked batch).
+            let gap_us = serve::ServeSpec::default().gap_us;
+            let trace = serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, gap_us);
             let inputs = serve::stack_inputs(&trace)?;
             let out = serve::mesh_infer(&model, &params, &inputs, &topo, microbatches)?;
             println!(
@@ -513,21 +562,30 @@ fn run() -> Result<()> {
             let model = runtime.load_model(&manifest, &model_name, &["eval"])?;
             let (params, step) = load_serving_params(&header, &entry)?;
             let n = a.usize("requests", 32)?;
+            let seed = a.u64("seed", 17)?;
             let tpr = serve::tokens_per_request(&entry);
-            let cfg = serve::EngineConfig {
-                max_batch_tokens: a.usize("batch-tokens", 8 * tpr)?,
-                max_batch_requests: if a.bool("unbatched") { 1 } else { a.usize("max-batch", 0)? },
-                ..Default::default()
-            };
+            let spec = serve_spec_from_args(&a)?;
+            spec.validate(&entry)?;
             println!(
-                "serving {model_name} @ step {step}: {n} request(s), token budget {} \
-                 ({tpr} tokens/request){}",
-                cfg.max_batch_tokens,
-                if cfg.max_batch_requests == 1 { " [unbatched]" } else { "" }
+                "serving {model_name} @ step {step}: {n} request(s), policy {}, \
+                 token budget {} ({tpr} tokens/request){}",
+                spec.policy.name(),
+                spec.resolved_batch_tokens(&entry),
+                if spec.max_batch_requests == 1 { " [unbatched]" } else { "" }
             );
-            let trace =
-                serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, a.u64("gap-us", 300)?);
-            let engine = serve::Engine::new(&model, &params, cfg)?;
+            let trace = match a.flags.get("traffic") {
+                Some(shape) => {
+                    let process = serve::ArrivalProcess::from_name(shape, spec.gap_us)?;
+                    let tenants = a.usize("tenants", 4)?.max(1);
+                    println!("  traffic: {shape} arrivals over {tenants} tenant(s)");
+                    serve::generate(
+                        &entry,
+                        &serve::TrafficSpec::standard(process, tenants, n, seed),
+                    )?
+                }
+                None => serve::synthetic_trace(&entry, n, seed, spec.gap_us),
+            };
+            let engine = serve::Engine::new(&model, &params, spec)?;
             let report = engine.run_trace(trace)?;
             if a.bool("verbose") {
                 for b in &report.batches {
@@ -545,11 +603,36 @@ fn run() -> Result<()> {
             let nb = report.batches.len().max(1);
             println!("  {} micro-batch(es), mean {:.2} request(s)/batch", nb, n as f64 / nb as f64);
             println!(
-                "  virtual latency: p50 {:.0} µs  p99 {:.0} µs",
-                report.p50_latency_us(),
-                report.p99_latency_us()
+                "  {} completed, {} shed ({:.1}% shed rate)",
+                report.completions.len(),
+                report.sheds.len(),
+                100.0 * report.shed_rate()
             );
+            for (reason, count) in report.sheds_by_reason() {
+                println!("    shed[{reason}]: {count}");
+            }
+            println!(
+                "  virtual latency: p50 {:.0} µs  p99 {:.0} µs  p999 {:.0} µs",
+                report.p50_latency_us(),
+                report.p99_latency_us(),
+                report.p999_latency_us()
+            );
+            let tenants = report.tenant_counts();
+            if tenants.len() > 1 {
+                for (tenant, done, shed) in tenants {
+                    println!("  tenant {tenant}: {done} completed, {shed} shed");
+                }
+            }
             println!("  measured execution throughput: {:.1} tokens/s", report.tokens_per_s());
+            // Belt and braces on top of the engine's own accounting check:
+            // the smoke gate relies on a nonzero exit if anything was lost.
+            if report.completions.len() + report.sheds.len() != n {
+                bail!(
+                    "serve lost requests: {} completed + {} shed != {n}",
+                    report.completions.len(),
+                    report.sheds.len()
+                );
+            }
             Ok(())
         }
         "check-docs" => {
@@ -577,7 +660,8 @@ fn run() -> Result<()> {
             if !dead.is_empty() || !stale.is_empty() {
                 bail!(
                     "{} dead relative link(s), {} deprecated flag(s) in fenced examples \
-                     across {} doc file(s) (use --topology dp=D,ep=E[,tp=T])",
+                     across {} doc file(s) (use --topology dp=D,ep=E[,tp=T] and \
+                     --serve policy=…,budget=…)",
                     dead.len(),
                     stale.len(),
                     files.len()
@@ -795,8 +879,10 @@ USAGE:
                   [--snapshot-every N] [--snapshot-keep K]  # elastic training
                   [--inject-fault r:s:p]  # kill rank r at step s in phase p
   upcycle serve   --load <ck.supc> [--model <name>] [--requests N]
-                  [--batch-tokens T] [--max-batch N] [--unbatched]
-                  [--gap-us G] [--seed S]  # continuous-batching inference
+                  [--serve policy=fifo|priority|fair|slo,budget=T,max-batch=N,
+                           queue=Q,shed=reject|evict,gap=G,floor=F,slo=D]
+                  [--traffic uniform|bursty|diurnal|adversarial] [--tenants N]
+                  [--seed S] [--verbose]  # policy-driven continuous batching
   upcycle infer   --load <ck.supc> [--model <name>] [--requests N]
                   [--topology dp=1,ep=E] [--microbatches M]
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]

@@ -1,0 +1,299 @@
+//! Bounded-queue admission with backpressure and explicit load-shedding.
+//! The [`Admission`] queue sits between the trace producer and the batch
+//! composer: every request that enters the engine either completes or is
+//! shed with a named [`ShedReason`] — never a silent drop ([`Engine::run_trace`]
+//! errors if the accounting does not balance). With
+//! `queue_capacity = 0` (the default) the queue is unbounded and nothing
+//! is ever shed, preserving the pre-policy engine bitwise.
+//!
+//! [`Engine::run_trace`]: super::Engine::run_trace
+
+use super::policy::{QueuedRequest, SchedulerPolicy};
+use super::spec::{ServeSpec, ShedMode};
+use super::Request;
+
+/// Why a request was shed. Every variant has a stable CLI/bench name —
+/// the taxonomy table lives in `docs/SERVING.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShedReason {
+    /// The bounded admission queue was full when this request arrived and
+    /// it was the least-preferred choice (always the incoming one under
+    /// [`ShedMode::Reject`]).
+    QueueFull,
+    /// A queued request was displaced by a more-preferred arrival under
+    /// [`ShedMode::Evict`].
+    Evicted,
+    /// The request's absolute deadline lapsed before service started
+    /// (SLO policy's deadline-based eviction).
+    DeadlineExpired,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Evicted => "evicted",
+            ShedReason::DeadlineExpired => "deadline_expired",
+        }
+    }
+}
+
+/// One shed decision, recorded at the virtual instant it was made.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub tenant: u64,
+    pub priority: u8,
+    pub arrival_us: u64,
+    /// Virtual instant of the shed decision (>= `arrival_us`).
+    pub shed_us: u64,
+    pub reason: ShedReason,
+}
+
+/// The admission queue: scheduling metadata and request payloads held as
+/// parallel arrays in arrival (offer) order, plus the shed log.
+pub struct Admission {
+    capacity: usize,
+    shed_mode: ShedMode,
+    slo_default_us: u64,
+    meta: Vec<QueuedRequest>,
+    reqs: Vec<Request>,
+    sheds: Vec<ShedRecord>,
+}
+
+impl Admission {
+    pub fn new(spec: &ServeSpec) -> Admission {
+        Admission {
+            capacity: spec.queue_capacity,
+            shed_mode: spec.shed,
+            slo_default_us: spec.slo_default_us,
+            meta: Vec::new(),
+            reqs: Vec::new(),
+            sheds: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    /// The policy's view of the queue (offer order).
+    pub fn meta(&self) -> &[QueuedRequest] {
+        &self.meta
+    }
+
+    pub fn shed_count(&self) -> usize {
+        self.sheds.len()
+    }
+
+    pub fn into_sheds(self) -> Vec<ShedRecord> {
+        self.sheds
+    }
+
+    /// Offer one arrived request at virtual instant `v_now`. Expired
+    /// entries are evicted first (both modes), then the capacity check
+    /// runs: a full queue sheds either the incoming request
+    /// ([`ShedMode::Reject`], reason `queue_full`) or the least-preferred
+    /// request under the active policy ([`ShedMode::Evict`] — a queued
+    /// victim sheds as `evicted`, the incoming one as `queue_full`).
+    pub fn offer(
+        &mut self,
+        req: Request,
+        policy: &dyn SchedulerPolicy,
+        v_now: u64,
+        tokens: usize,
+    ) {
+        self.evict_expired(policy, v_now);
+        let deadline_us = if req.deadline_us > 0 {
+            req.deadline_us
+        } else if self.slo_default_us > 0 {
+            req.arrival_us + self.slo_default_us
+        } else {
+            u64::MAX
+        };
+        let meta = QueuedRequest {
+            id: req.id,
+            arrival_us: req.arrival_us,
+            tenant: req.tenant,
+            priority: req.priority,
+            deadline_us,
+            tokens,
+        };
+        if self.capacity > 0 && self.meta.len() >= self.capacity {
+            match self.shed_mode {
+                ShedMode::Reject => {
+                    self.shed(meta, v_now, ShedReason::QueueFull);
+                    return;
+                }
+                ShedMode::Evict => {
+                    // Least-preferred over pending + incoming (appended at
+                    // index len): the policy's order, read from the back.
+                    let mut view = self.meta.clone();
+                    view.push(meta);
+                    let order = policy.order(&view, v_now);
+                    let victim = *order.last().expect("queue is non-empty");
+                    if victim == self.meta.len() {
+                        self.shed(meta, v_now, ShedReason::QueueFull);
+                        return;
+                    }
+                    let victim_meta = self.meta.remove(victim);
+                    self.reqs.remove(victim);
+                    self.shed(victim_meta, v_now, ShedReason::Evicted);
+                }
+            }
+        }
+        self.meta.push(meta);
+        self.reqs.push(req);
+    }
+
+    /// Apply the policy's eviction verdicts (lapsed deadlines) at `v_now`.
+    pub fn evict_expired(&mut self, policy: &dyn SchedulerPolicy, v_now: u64) {
+        let mut victims = policy.evict(&self.meta, v_now);
+        if victims.is_empty() {
+            return;
+        }
+        // Remove back-to-front so earlier indices stay valid.
+        victims.sort_by_key(|&(i, _)| std::cmp::Reverse(i));
+        for (i, reason) in victims {
+            let meta = self.meta.remove(i);
+            self.reqs.remove(i);
+            self.shed(meta, v_now, reason);
+        }
+    }
+
+    /// Remove `picked` queue indices as one micro-batch, returned in the
+    /// given (policy-preference) order.
+    pub fn take(&mut self, picked: &[usize]) -> (Vec<Request>, Vec<QueuedRequest>) {
+        let mut old_reqs: Vec<Option<Request>> = self.reqs.drain(..).map(Some).collect();
+        let mut reqs = Vec::with_capacity(picked.len());
+        let mut metas = Vec::with_capacity(picked.len());
+        for &i in picked {
+            reqs.push(old_reqs[i].take().expect("picked indices are unique"));
+            metas.push(self.meta[i]);
+        }
+        let mut keep_meta = Vec::with_capacity(self.meta.len() - picked.len());
+        for (i, m) in self.meta.drain(..).enumerate() {
+            if old_reqs[i].is_some() {
+                keep_meta.push(m);
+            }
+        }
+        self.reqs = old_reqs.into_iter().flatten().collect();
+        self.meta = keep_meta;
+        (reqs, metas)
+    }
+
+    fn shed(&mut self, meta: QueuedRequest, v_now: u64, reason: ShedReason) {
+        self.sheds.push(ShedRecord {
+            id: meta.id,
+            tenant: meta.tenant,
+            priority: meta.priority,
+            arrival_us: meta.arrival_us,
+            shed_us: v_now,
+            reason,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy::{Fifo, SloDeadline};
+    use super::super::spec::PolicyKind;
+    use super::*;
+
+    fn request(id: u64, arrival: u64) -> Request {
+        Request::new(id, arrival, Vec::new())
+    }
+
+    fn bounded(capacity: usize, shed: ShedMode) -> Admission {
+        Admission::new(&ServeSpec { queue_capacity: capacity, shed, ..ServeSpec::default() })
+    }
+
+    #[test]
+    fn unbounded_queue_never_sheds() {
+        let mut adm = Admission::new(&ServeSpec::default());
+        for i in 0..100 {
+            adm.offer(request(i, 0), &Fifo, 0, 10);
+        }
+        assert_eq!(adm.meta().len(), 100);
+        assert_eq!(adm.shed_count(), 0);
+    }
+
+    #[test]
+    fn reject_mode_tail_drops_with_queue_full() {
+        let mut adm = bounded(2, ShedMode::Reject);
+        for i in 0..4 {
+            adm.offer(request(i, 0), &Fifo, 5, 10);
+        }
+        assert_eq!(adm.meta().len(), 2);
+        let kept: Vec<u64> = adm.meta().iter().map(|m| m.id).collect();
+        assert_eq!(kept, vec![0, 1], "FIFO keeps the earliest arrivals");
+        let sheds = adm.into_sheds();
+        assert_eq!(sheds.len(), 2);
+        assert!(sheds.iter().all(|s| s.reason == ShedReason::QueueFull && s.shed_us == 5));
+        assert_eq!(sheds.iter().map(|s| s.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn evict_mode_displaces_the_least_preferred_under_the_policy() {
+        // EDF: a tighter-deadline arrival displaces the loosest queued one.
+        let spec = ServeSpec {
+            policy: PolicyKind::SloDeadline,
+            queue_capacity: 2,
+            shed: ShedMode::Evict,
+            slo_default_us: 0,
+            ..ServeSpec::default()
+        };
+        let mut adm = Admission::new(&spec);
+        let with_deadline = |id: u64, deadline: u64| {
+            let mut r = request(id, 0);
+            r.deadline_us = deadline;
+            r
+        };
+        adm.offer(with_deadline(0, 500), &SloDeadline, 0, 10);
+        adm.offer(with_deadline(1, 900), &SloDeadline, 0, 10);
+        adm.offer(with_deadline(2, 100), &SloDeadline, 0, 10);
+        let kept: Vec<u64> = adm.meta().iter().map(|m| m.id).collect();
+        assert_eq!(kept, vec![0, 2], "the loosest deadline (id 1) was displaced");
+        // An incoming request that is itself least-preferred sheds as
+        // queue_full, not evicted.
+        adm.offer(with_deadline(3, 2000), &SloDeadline, 0, 10);
+        let sheds = adm.into_sheds();
+        assert_eq!(sheds[0].id, 1);
+        assert_eq!(sheds[0].reason, ShedReason::Evicted);
+        assert_eq!(sheds[1].id, 3);
+        assert_eq!(sheds[1].reason, ShedReason::QueueFull);
+    }
+
+    #[test]
+    fn take_removes_picked_in_preference_order() {
+        let mut adm = Admission::new(&ServeSpec::default());
+        for i in 0..5 {
+            adm.offer(request(i, i), &Fifo, 10, 10);
+        }
+        let (reqs, metas) = adm.take(&[3, 1]);
+        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 1]);
+        assert_eq!(metas.iter().map(|m| m.id).collect::<Vec<_>>(), vec![3, 1]);
+        let left: Vec<u64> = adm.meta().iter().map(|m| m.id).collect();
+        assert_eq!(left, vec![0, 2, 4], "queue order preserved for the rest");
+        assert_eq!(adm.reqs.len(), 3);
+    }
+
+    #[test]
+    fn slo_default_resolves_missing_deadlines_at_admission() {
+        let spec = ServeSpec {
+            policy: PolicyKind::SloDeadline,
+            slo_default_us: 250,
+            ..ServeSpec::default()
+        };
+        let mut adm = Admission::new(&spec);
+        adm.offer(request(0, 100), &SloDeadline, 100, 10);
+        assert_eq!(adm.meta()[0].deadline_us, 350);
+        // A lapsed deadline is evicted with the named reason.
+        adm.evict_expired(&SloDeadline, 400);
+        assert!(adm.is_empty());
+        let sheds = adm.into_sheds();
+        assert_eq!(sheds.len(), 1);
+        assert_eq!(sheds[0].reason, ShedReason::DeadlineExpired);
+        assert_eq!(sheds[0].shed_us, 400);
+    }
+}

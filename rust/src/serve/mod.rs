@@ -1,38 +1,57 @@
 //! Forward-only inference engine: a multi-threaded request scheduler with
-//! continuous (dynamic) batching over [`crate::runtime::Executable::infer`].
+//! continuous (dynamic) batching over [`crate::runtime::Executable::infer`],
+//! grown into a policy-driven serving subsystem:
+//!
+//! - [`spec`] — [`ServeSpec`], the one validated serving plan (policy,
+//!   token budget, bounded queue, shed mode, service model), parsed from
+//!   the CLI's consolidated `--serve` flag.
+//! - [`policy`] — the [`SchedulerPolicy`] seam: FIFO (the default,
+//!   bitwise-identical to the pre-policy engine), strict [`policy::Priority`]
+//!   with an anti-starvation aging floor, [`policy::FairShare`] per-tenant
+//!   deficit round-robin, and [`policy::SloDeadline`] earliest-deadline-first
+//!   with deadline-based eviction.
+//! - [`admission`] — bounded-queue backpressure with explicit load-shedding:
+//!   every request completes or is shed with a named [`ShedReason`]; the
+//!   engine errors if the accounting ever fails to balance (no silent
+//!   drops).
+//! - [`trafficgen`] — deterministic traces: the jittered-gap
+//!   [`synthetic_trace`] plus bursty/diurnal/adversarial multi-tenant
+//!   heavy-traffic generation ([`TrafficSpec`]).
 //!
 //! **The serving model.** A [`Request`] is one example (every input tensor
 //! has leading dim 1) with a virtual arrival time on a fixed trace. The
 //! [`Engine`] plays a trace through a producer thread that delivers
-//! requests into a shared queue, while the scheduler thread admits waiting
-//! requests into the *next* micro-batch — FIFO, up to a token budget
-//! ([`EngineConfig::max_batch_tokens`]) and an optional request cap —
-//! stacks them along the batch dim, and executes one forward-only
-//! `infer` call per micro-batch. Requests that arrive while a batch is in
-//! service join the queue and are eligible for the following batch:
-//! continuous batching, not fixed-size batching.
+//! requests into a shared queue, while the scheduler thread offers arrived
+//! requests to the admission queue and composes the *next* micro-batch by
+//! walking the policy's preference order up to a token budget and an
+//! optional request cap, stacks the picks along the batch dim, and
+//! executes one forward-only `infer` call per micro-batch. Requests that
+//! arrive while a batch is in service join the queue and are eligible for
+//! the following batch: continuous batching, not fixed-size batching.
 //!
 //! **Determinism contract** (spelled out in `docs/SERVING.md`): admission
 //! runs on a *virtual clock*. A micro-batch's service time is the
 //! deterministic model `service_base_us + service_per_token_us · tokens`,
-//! so batch composition, completion order and every virtual timestamp are
-//! a pure function of `(trace, EngineConfig)` — real thread scheduling
-//! affects only *when* a request crosses the queue, never *which batch* it
-//! lands in. Since the batch contents are deterministic and the backend is
-//! deterministic, the returned predictions are bitwise-reproducible run to
-//! run. Measured wall time appears only in [`BatchStat::wall_ns`] (the
-//! throughput numbers benches report), never in scheduling decisions. Note
-//! that batching itself changes MoE routing (capacity is computed over the
-//! co-batched tokens), exactly as on a real capacity-constrained server —
-//! the contract is "same trace ⇒ same outputs", not "outputs independent
-//! of co-batched traffic".
+//! and policies see only request metadata and virtual time, so batch
+//! composition, completion order, every shed decision and every virtual
+//! timestamp are a pure function of `(trace, ServeSpec)` — real thread
+//! scheduling affects only *when* a request crosses the queue, never
+//! *which batch* it lands in or whether it is shed. Since the batch
+//! contents are deterministic and the backend is deterministic, the
+//! returned predictions are bitwise-reproducible run to run. Measured wall
+//! time appears only in [`BatchStat::wall_ns`] (the throughput numbers
+//! benches report), never in scheduling decisions. Note that batching
+//! itself changes MoE routing (capacity is computed over the co-batched
+//! tokens), exactly as on a real capacity-constrained server — the
+//! contract is "same trace ⇒ same outputs", not "outputs independent of
+//! co-batched traffic".
 //!
 //! Continuous batching, end to end:
 //!
 //! ```
 //! use sparse_upcycle::manifest::Manifest;
 //! use sparse_upcycle::runtime::Runtime;
-//! use sparse_upcycle::serve::{synthetic_trace, tokens_per_request, Engine, EngineConfig};
+//! use sparse_upcycle::serve::{synthetic_trace, tokens_per_request, Engine, ServeSpec};
 //!
 //! let manifest = Manifest::native();
 //! let runtime = Runtime::new().unwrap();
@@ -46,12 +65,13 @@
 //!
 //! // Four requests arriving at once; budget of two requests per micro-batch.
 //! let trace = synthetic_trace(&entry, 4, 7, 0);
-//! let cfg = EngineConfig {
+//! let spec = ServeSpec {
 //!     max_batch_tokens: 2 * tokens_per_request(&entry),
-//!     ..EngineConfig::default()
+//!     ..ServeSpec::default()
 //! };
-//! let report = Engine::new(&model, &params, cfg).unwrap().run_trace(trace).unwrap();
+//! let report = Engine::new(&model, &params, spec).unwrap().run_trace(trace).unwrap();
 //! assert_eq!(report.completions.len(), 4);
+//! assert!(report.sheds.is_empty()); // unbounded queue: nothing sheds
 //! assert_eq!(report.batches.len(), 2); // two per micro-batch, FIFO
 //! assert!(report.batches.iter().all(|b| b.requests == 2));
 //! ```
@@ -62,7 +82,12 @@
 //! buffers crossing real all-to-all collectives — bitwise-identical to
 //! stepping the same shards serially with every expert local.
 
-use std::collections::VecDeque;
+pub mod admission;
+pub mod policy;
+pub mod spec;
+pub mod trafficgen;
+
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -74,52 +99,39 @@ use crate::parallel::collectives::{EpGroup, EP_ABORTED_MSG};
 use crate::runtime::ep::{EpPayload, EpRankExchange};
 use crate::runtime::{InferOutput, LoadedModel};
 use crate::tensor::{Data, Tensor};
-use crate::util::bench::percentile;
-use crate::util::rng::Rng;
+use crate::util::bench::{percentile, percentile_interpolated};
+
+pub use admission::{Admission, ShedReason, ShedRecord};
+pub use policy::{policy_for, QueuedRequest, SchedulerPolicy};
+pub use spec::{PolicyKind, ServeSpec, ShedMode};
+pub use trafficgen::{
+    generate, synthetic_inputs, synthetic_trace, ArrivalProcess, TenantSpec, TrafficSpec,
+};
 
 /// One inference request: a single example (leading dim 1 on every input
 /// tensor, manifest inference order — [`ModelEntry::infer_batch`]) plus its
-/// virtual arrival time on the trace.
+/// virtual arrival time on the trace and serving metadata (tenant,
+/// priority class, optional absolute deadline).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     /// Virtual arrival time, microseconds since trace start (nondecreasing
     /// across a trace).
     pub arrival_us: u64,
+    /// Traffic class for fairness accounting (default 0).
+    pub tenant: u64,
+    /// Larger = more urgent; only the `priority` policy reads it.
+    pub priority: u8,
+    /// Absolute virtual deadline (0 = none; the SLO policy's
+    /// `slo_default_us` then applies, if set).
+    pub deadline_us: u64,
     pub inputs: Vec<Tensor>,
 }
 
-/// Scheduling knobs of one [`Engine`]. All times are virtual microseconds
-/// (see the module docs for the determinism contract).
-#[derive(Debug, Clone, Copy)]
-pub struct EngineConfig {
-    /// Token budget per micro-batch. A single request whose cost exceeds
-    /// the budget is still admitted — alone — so no request can starve.
-    pub max_batch_tokens: usize,
-    /// Request cap per micro-batch (0 = unlimited; 1 = unbatched serving).
-    pub max_batch_requests: usize,
-    /// Virtual service-time model: a micro-batch of `t` tokens occupies the
-    /// engine for `service_base_us + service_per_token_us · t`.
-    pub service_base_us: u64,
-    pub service_per_token_us: u64,
-}
-
-impl Default for EngineConfig {
-    fn default() -> EngineConfig {
-        EngineConfig {
-            max_batch_tokens: 4096,
-            max_batch_requests: 0,
-            service_base_us: 200,
-            service_per_token_us: 2,
-        }
-    }
-}
-
-impl EngineConfig {
-    /// One request per micro-batch — the no-batching reference the bench
-    /// compares continuous batching against on the same trace.
-    pub fn unbatched() -> EngineConfig {
-        EngineConfig { max_batch_requests: 1, ..EngineConfig::default() }
+impl Request {
+    /// A plain single-tenant request: priority 0, no deadline.
+    pub fn new(id: u64, arrival_us: u64, inputs: Vec<Tensor>) -> Request {
+        Request { id, arrival_us, tenant: 0, priority: 0, deadline_us: 0, inputs }
     }
 }
 
@@ -127,6 +139,7 @@ impl EngineConfig {
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: u64,
+    pub tenant: u64,
     pub arrival_us: u64,
     /// Virtual start of the micro-batch that served this request.
     pub start_us: u64,
@@ -160,12 +173,15 @@ pub struct BatchStat {
     pub wall_ns: f64,
 }
 
-/// Everything one trace run produced: per-request completions (trace
-/// order) and per-micro-batch stats.
+/// Everything one trace run produced: per-request completions (service
+/// order — trace order under the FIFO default), per-micro-batch stats,
+/// and every shed decision. `completions.len() + sheds.len()` always
+/// equals the trace length — [`Engine::run_trace`] errors otherwise.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub completions: Vec<Completion>,
     pub batches: Vec<BatchStat>,
+    pub sheds: Vec<ShedRecord>,
 }
 
 impl ServeReport {
@@ -173,12 +189,55 @@ impl ServeReport {
         self.completions.iter().map(|c| c.latency_us() as f64).collect()
     }
 
+    /// Nearest-rank p50 latency; 0.0 on an empty trace.
     pub fn p50_latency_us(&self) -> f64 {
         percentile(&self.latencies_us(), 50.0)
     }
 
+    /// Nearest-rank p99 latency; 0.0 on an empty trace.
     pub fn p99_latency_us(&self) -> f64 {
         percentile(&self.latencies_us(), 99.0)
+    }
+
+    /// Interpolated p999 tail latency
+    /// ([`crate::util::bench::percentile_interpolated`]): guarded for small
+    /// traces — 0.0 when empty, the single sample when there is only one,
+    /// and a linear interpolation between the two highest order statistics
+    /// instead of nearest-rank's collapse onto the max.
+    pub fn p999_latency_us(&self) -> f64 {
+        percentile_interpolated(&self.latencies_us(), 99.9)
+    }
+
+    /// Shed requests as a fraction of the whole trace (0.0 when empty).
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.completions.len() + self.sheds.len();
+        if total == 0 {
+            0.0
+        } else {
+            self.sheds.len() as f64 / total as f64
+        }
+    }
+
+    /// Shed counts grouped by reason name, name-sorted.
+    pub fn sheds_by_reason(&self) -> Vec<(&'static str, usize)> {
+        let mut by: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for s in &self.sheds {
+            *by.entry(s.reason.name()).or_insert(0) += 1;
+        }
+        by.into_iter().collect()
+    }
+
+    /// Per-tenant `(tenant, completed, shed)` counts, tenant-sorted — the
+    /// goodput ledger the fairness bench reports.
+    pub fn tenant_counts(&self) -> Vec<(u64, usize, usize)> {
+        let mut by: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+        for c in &self.completions {
+            by.entry(c.tenant).or_insert((0, 0)).0 += 1;
+        }
+        for s in &self.sheds {
+            by.entry(s.tenant).or_insert((0, 0)).1 += 1;
+        }
+        by.into_iter().map(|(t, (done, shed))| (t, done, shed)).collect()
     }
 
     /// Tokens executed across all micro-batches.
@@ -192,7 +251,8 @@ impl ServeReport {
     }
 
     /// Measured execution throughput: tokens per second of `infer` wall
-    /// time (the batched-vs-unbatched comparison number).
+    /// time (the batched-vs-unbatched comparison number); 0.0 on an empty
+    /// trace.
     pub fn tokens_per_s(&self) -> f64 {
         let wall = self.exec_wall_ns();
         if wall > 0.0 {
@@ -278,78 +338,35 @@ fn prediction_row(t: &Tensor, row: usize) -> Result<Tensor> {
     Ok(Tensor::from_i32(&shape, t.i32s()?[row * per..(row + 1) * per].to_vec()))
 }
 
-/// A deterministic synthetic arrival trace: `n` single-example requests
-/// drawn from the model's synthetic data pipeline (seeded), arriving
-/// `gap_us` apart on average with deterministic ±50% jitter (`gap_us = 0`
-/// is a burst: everything arrives at t = 0).
-pub fn synthetic_trace(entry: &ModelEntry, n: usize, seed: u64, gap_us: u64) -> Vec<Request> {
-    let mut rng = Rng::with_stream(seed, 0x5e7e);
-    let mut arrival = 0u64;
-    let mut out = Vec::with_capacity(n);
-    let k = entry.infer_batch().len();
-    if entry.family == "lm" {
-        let mut pipe = crate::data::text::TextPipeline::new(
-            crate::data::text::HmmCorpus::new(
-                crate::data::text::HmmSpec {
-                    vocab_size: entry.config.vocab_size,
-                    ..Default::default()
-                },
-                seed,
-            ),
-            1,
-            entry.config.enc_len,
-            entry.config.dec_len,
-            seed,
-            0,
-        );
-        for id in 0..n {
-            let inputs: Vec<Tensor> = pipe.next_batch().into_iter().take(k).collect();
-            out.push(Request { id: id as u64, arrival_us: arrival, inputs });
-            if gap_us > 0 {
-                arrival += gap_us / 2 + rng.below(gap_us as usize + 1) as u64;
-            }
-        }
-    } else {
-        let spec = crate::data::vision::VisionSpec {
-            image_size: entry.config.image_size,
-            ..Default::default()
-        };
-        let mut pipe = crate::data::vision::VisionPipeline::new(spec, 1, seed, 0);
-        for id in 0..n {
-            let inputs: Vec<Tensor> = pipe.next_batch().0.into_iter().take(k).collect();
-            out.push(Request { id: id as u64, arrival_us: arrival, inputs });
-            if gap_us > 0 {
-                arrival += gap_us / 2 + rng.below(gap_us as usize + 1) as u64;
-            }
-        }
-    }
-    out
-}
-
-/// The inference engine: owns the scheduling policy, borrows the loaded
-/// model and its (trained) parameters. See the module docs for semantics.
+/// The inference engine: owns the validated serving plan, borrows the
+/// loaded model and its (trained) parameters. See the module docs for
+/// semantics.
 pub struct Engine<'m> {
     model: &'m LoadedModel,
     params: &'m [Tensor],
-    cfg: EngineConfig,
+    spec: ServeSpec,
+    /// Token budget resolved against the model entry
+    /// ([`ServeSpec::resolved_batch_tokens`]).
+    budget: usize,
 }
 
 impl<'m> Engine<'m> {
     pub fn new(
         model: &'m LoadedModel,
         params: &'m [Tensor],
-        cfg: EngineConfig,
+        spec: ServeSpec,
     ) -> Result<Engine<'m>> {
-        if cfg.max_batch_tokens == 0 {
-            bail!("max_batch_tokens must be >= 1");
-        }
-        Ok(Engine { model, params, cfg })
+        spec.validate(&model.entry)?;
+        let budget = spec.resolved_batch_tokens(&model.entry);
+        Ok(Engine { model, params, spec, budget })
     }
 
     /// Play `trace` through the engine: a producer thread delivers requests
-    /// in arrival order while this thread schedules and executes
-    /// micro-batches. Returns one completion per request (trace order).
-    /// An empty trace returns an empty report.
+    /// in arrival order while this thread offers them to admission and
+    /// schedules micro-batches under the plan's policy. Every request ends
+    /// up in exactly one completion or one shed record (an error
+    /// otherwise — shedding is never silent). An empty trace returns an
+    /// empty report.
     pub fn run_trace(&self, trace: Vec<Request>) -> Result<ServeReport> {
         if trace.windows(2).any(|w| w[0].arrival_us > w[1].arrival_us) {
             bail!("trace arrivals must be nondecreasing");
@@ -357,9 +374,14 @@ impl<'m> Engine<'m> {
         let arrivals: Vec<u64> = trace.iter().map(|r| r.arrival_us).collect();
         let n = arrivals.len();
         if n == 0 {
-            return Ok(ServeReport { completions: Vec::new(), batches: Vec::new() });
+            return Ok(ServeReport {
+                completions: Vec::new(),
+                batches: Vec::new(),
+                sheds: Vec::new(),
+            });
         }
         let tpr = tokens_per_request(&self.model.entry).max(1);
+        let mut policy = policy_for(&self.spec);
         let queue: Mutex<VecDeque<Request>> = Mutex::new(VecDeque::new());
         let delivered = Condvar::new();
 
@@ -373,17 +395,25 @@ impl<'m> Engine<'m> {
                 }
             });
 
-            // Scheduler: virtual clock + continuous admission.
-            let mut pending: VecDeque<Request> = VecDeque::new();
+            // Scheduler: virtual clock + policy-ordered continuous
+            // admission. `inbox` buffers requests pulled off the shared
+            // queue ahead of their virtual arrival; `admission` holds only
+            // requests that have virtually arrived, so policies never see
+            // the future.
+            let mut admission = Admission::new(&self.spec);
+            let mut inbox: VecDeque<Request> = VecDeque::new();
             let mut taken = 0usize; // pulled off the shared queue
-            let mut admitted = 0usize; // dispatched into micro-batches
+            let mut offered = 0usize; // handed to the admission queue
             let mut v_now = 0u64;
             let mut completions = Vec::with_capacity(n);
             let mut batches = Vec::new();
-            while admitted < n {
+            while completions.len() + admission.shed_count() < n {
                 // Idle: jump the virtual clock to the next arrival.
-                if arrivals[admitted] > v_now {
-                    v_now = arrivals[admitted];
+                if admission.is_empty() {
+                    debug_assert!(offered < n, "empty queue with the whole trace accounted");
+                    if arrivals[offered] > v_now {
+                        v_now = arrivals[offered];
+                    }
                 }
                 // Everything that has virtually arrived must be in hand
                 // before composing the batch (determinism: composition
@@ -395,42 +425,54 @@ impl<'m> Engine<'m> {
                         q = delivered.wait(q).expect("serve queue");
                     }
                     while let Some(r) = q.pop_front() {
-                        pending.push_back(r);
+                        inbox.push_back(r);
                         taken += 1;
                     }
                 }
-                // Admit FIFO up to the token budget / request cap. The
-                // first request always fits: an oversized request runs as a
-                // batch of one rather than starving.
-                let mut batch_reqs: Vec<Request> = Vec::new();
+                while offered < due {
+                    let req = inbox.pop_front().expect("offered <= taken");
+                    admission.offer(req, policy.as_ref(), v_now, tpr);
+                    offered += 1;
+                }
+                // Deadline-based eviction at this instant (a no-op for
+                // every policy but SLO).
+                admission.evict_expired(policy.as_ref(), v_now);
+                if admission.is_empty() {
+                    continue; // everything due was shed; jump to the next arrival
+                }
+                // Compose the batch: walk the policy's preference order up
+                // to the token budget / request cap. The first pick always
+                // fits: an oversized request runs as a batch of one rather
+                // than starving.
+                let order = policy.order(admission.meta(), v_now);
+                let mut picked: Vec<usize> = Vec::new();
                 let mut tokens = 0usize;
-                while let Some(front) = pending.front() {
-                    if front.arrival_us > v_now {
+                for &i in &order {
+                    let full = tokens + tpr > self.budget
+                        || (self.spec.max_batch_requests > 0
+                            && picked.len() >= self.spec.max_batch_requests);
+                    if !picked.is_empty() && full {
                         break;
                     }
-                    let full = tokens + tpr > self.cfg.max_batch_tokens
-                        || (self.cfg.max_batch_requests > 0
-                            && batch_reqs.len() >= self.cfg.max_batch_requests);
-                    if !batch_reqs.is_empty() && full {
-                        break;
-                    }
-                    batch_reqs.push(pending.pop_front().expect("front checked"));
+                    picked.push(i);
                     tokens += tpr;
                 }
-                debug_assert!(!batch_reqs.is_empty());
+                debug_assert!(!picked.is_empty());
+                let (batch_reqs, batch_meta) = admission.take(&picked);
 
                 let inputs = stack_inputs(&batch_reqs)?;
                 let t0 = Instant::now();
                 let out = self.model.infer(self.params, &inputs)?;
                 let wall_ns = t0.elapsed().as_nanos() as f64;
                 let service =
-                    self.cfg.service_base_us + self.cfg.service_per_token_us * tokens as u64;
+                    self.spec.service_base_us + self.spec.service_per_token_us * tokens as u64;
                 let (start, finish) = (v_now, v_now + service);
                 v_now = finish;
                 let index = batches.len();
                 for (row, req) in batch_reqs.iter().enumerate() {
                     completions.push(Completion {
                         id: req.id,
+                        tenant: req.tenant,
                         arrival_us: req.arrival_us,
                         start_us: start,
                         finish_us: finish,
@@ -439,6 +481,7 @@ impl<'m> Engine<'m> {
                         score: out.scores[row],
                     });
                 }
+                policy.on_served(&batch_meta);
                 batches.push(BatchStat {
                     index,
                     requests: batch_reqs.len(),
@@ -447,9 +490,16 @@ impl<'m> Engine<'m> {
                     finish_us: finish,
                     wall_ns,
                 });
-                admitted += batch_reqs.len();
             }
-            Ok(ServeReport { completions, batches })
+            let sheds = admission.into_sheds();
+            if completions.len() + sheds.len() != n {
+                bail!(
+                    "serve accounting violated: {} completion(s) + {} shed(s) != {n} request(s)",
+                    completions.len(),
+                    sheds.len()
+                );
+            }
+            Ok(ServeReport { completions, batches, sheds })
         })
     }
 }
@@ -567,6 +617,7 @@ mod tests {
     use crate::init::init_params;
     use crate::manifest::Manifest;
     use crate::runtime::{tensors_from_checkpoint, Runtime};
+    use crate::util::rng::Rng;
 
     fn setup(name: &str) -> (ModelEntry, LoadedModel, Vec<Tensor>) {
         let manifest = Manifest::native();
@@ -579,15 +630,21 @@ mod tests {
     }
 
     /// An empty trace terminates immediately with an empty report — the
-    /// scheduler must not block waiting for arrivals that never come.
+    /// scheduler must not block waiting for arrivals that never come — and
+    /// every summary statistic is 0.0 instead of a panic or NaN.
     #[test]
     fn empty_trace_completes_empty() {
         let (_entry, model, params) = setup("lm_tiny_dense");
-        let engine = Engine::new(&model, &params, EngineConfig::default()).unwrap();
+        let engine = Engine::new(&model, &params, ServeSpec::default()).unwrap();
         let report = engine.run_trace(Vec::new()).unwrap();
         assert!(report.completions.is_empty());
         assert!(report.batches.is_empty());
+        assert!(report.sheds.is_empty());
         assert_eq!(report.tokens_per_s(), 0.0);
+        assert_eq!(report.p50_latency_us(), 0.0);
+        assert_eq!(report.p99_latency_us(), 0.0);
+        assert_eq!(report.p999_latency_us(), 0.0);
+        assert_eq!(report.shed_rate(), 0.0);
     }
 
     /// A request costing more than the whole token budget still runs —
@@ -595,9 +652,9 @@ mod tests {
     #[test]
     fn oversized_request_is_admitted_alone() {
         let (entry, model, params) = setup("lm_tiny_dense");
-        let cfg = EngineConfig { max_batch_tokens: 1, ..EngineConfig::default() };
+        let spec = ServeSpec { max_batch_tokens: 1, ..ServeSpec::default() };
         assert!(tokens_per_request(&entry) > 1);
-        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let engine = Engine::new(&model, &params, spec).unwrap();
         let report = engine.run_trace(synthetic_trace(&entry, 3, 1, 0)).unwrap();
         assert_eq!(report.completions.len(), 3);
         assert_eq!(report.batches.len(), 3, "every oversized request runs as a batch of one");
@@ -610,8 +667,8 @@ mod tests {
     fn saturated_queue_drains_fifo_within_budget() {
         let (entry, model, params) = setup("lm_tiny_dense");
         let tpr = tokens_per_request(&entry);
-        let cfg = EngineConfig { max_batch_tokens: 2 * tpr, ..EngineConfig::default() };
-        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let spec = ServeSpec { max_batch_tokens: 2 * tpr, ..ServeSpec::default() };
+        let engine = Engine::new(&model, &params, spec).unwrap();
         let report = engine.run_trace(synthetic_trace(&entry, 9, 2, 0)).unwrap();
         assert_eq!(report.completions.len(), 9);
         assert_eq!(report.batches.len(), 5, "9 requests / budget 2 = 5 micro-batches");
@@ -621,6 +678,7 @@ mod tests {
         let lat: Vec<u64> = report.completions.iter().map(|c| c.latency_us()).collect();
         assert!(lat.windows(2).all(|w| w[0] <= w[1]), "{lat:?}");
         assert!(report.p99_latency_us() >= report.p50_latency_us());
+        assert!(report.p999_latency_us() >= report.p99_latency_us() - 1e-9);
     }
 
     /// Requests arriving while a batch is in service join the *next*
@@ -632,13 +690,13 @@ mod tests {
         let mut trace = synthetic_trace(&entry, 3, 3, 0);
         trace[1].arrival_us = 10;
         trace[2].arrival_us = 20;
-        let cfg = EngineConfig {
+        let spec = ServeSpec {
             max_batch_tokens: 100 * tokens_per_request(&entry),
             service_base_us: 100,
             service_per_token_us: 0,
-            ..EngineConfig::default()
+            ..ServeSpec::default()
         };
-        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let engine = Engine::new(&model, &params, spec).unwrap();
         let report = engine.run_trace(trace).unwrap();
         // t=0: only request 0 has arrived → batch [0], finishes at 100.
         // t=100: requests 1 and 2 arrived during service → batch [1, 2].
@@ -656,8 +714,8 @@ mod tests {
     fn run_is_deterministic_given_the_trace() {
         let (entry, model, params) = setup("lm_tiny_moe_e8_c2");
         let tpr = tokens_per_request(&entry);
-        let cfg = EngineConfig { max_batch_tokens: 4 * tpr, ..EngineConfig::default() };
-        let engine = Engine::new(&model, &params, cfg).unwrap();
+        let spec = ServeSpec { max_batch_tokens: 4 * tpr, ..ServeSpec::default() };
+        let engine = Engine::new(&model, &params, spec).unwrap();
         let a = engine.run_trace(synthetic_trace(&entry, 8, 11, 500)).unwrap();
         let b = engine.run_trace(synthetic_trace(&entry, 8, 11, 500)).unwrap();
         assert_eq!(a.completions.len(), b.completions.len());
@@ -674,8 +732,8 @@ mod tests {
         assert!(engine.run_trace(bad).is_err());
     }
 
-    /// Scheduler property test: for *random* arrival traces and engine
-    /// configs (not hand-picked edge cases), the admission invariants hold
+    /// Scheduler property test: for *random* arrival traces and serve
+    /// specs (not hand-picked edge cases), the admission invariants hold
     /// on every run —
     ///
     /// 1. FIFO admission order is preserved (completions in arrival order,
@@ -695,18 +753,19 @@ mod tests {
             let n = 1 + rng.below(9);
             let gap = [0u64, 40, 400, 2500][rng.below(4)];
             let budget_requests = 1 + rng.below(5);
-            let cfg = EngineConfig {
+            let spec = ServeSpec {
                 max_batch_tokens: budget_requests * tpr,
                 max_batch_requests: if rng.below(3) == 0 { 1 + rng.below(4) } else { 0 },
-                ..EngineConfig::default()
+                ..ServeSpec::default()
             };
             let trace = synthetic_trace(&entry, n, 1000 + case, gap);
-            let engine = Engine::new(&model, &params, cfg).unwrap();
+            let engine = Engine::new(&model, &params, spec).unwrap();
             let a = engine.run_trace(trace.clone()).unwrap();
 
             // (3) exactly-once: n completions, ids unique, batch sizes sum
             // to n and every completion points into a real batch.
             assert_eq!(a.completions.len(), n, "case {case}");
+            assert!(a.sheds.is_empty(), "case {case}: unbounded queue never sheds");
             let ids: Vec<u64> = a.completions.iter().map(|c| c.id).collect();
             assert_eq!(
                 ids,
@@ -723,13 +782,13 @@ mod tests {
             for b in &a.batches {
                 assert_eq!(b.tokens, b.requests * tpr, "case {case}");
                 assert!(
-                    b.tokens <= cfg.max_batch_tokens || b.requests == 1,
+                    b.tokens <= spec.max_batch_tokens || b.requests == 1,
                     "case {case}: batch {} blew the token budget with {} requests",
                     b.index,
                     b.requests
                 );
-                if cfg.max_batch_requests > 0 {
-                    assert!(b.requests <= cfg.max_batch_requests, "case {case}");
+                if spec.max_batch_requests > 0 {
+                    assert!(b.requests <= spec.max_batch_requests, "case {case}");
                 }
             }
 

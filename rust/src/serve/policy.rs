@@ -1,0 +1,259 @@
+//! The scheduler-policy seam: a [`SchedulerPolicy`] ranks the admitted
+//! queue each time the engine composes a micro-batch, and may evict
+//! entries whose deadline has lapsed. Policies see only [`QueuedRequest`]
+//! metadata (never tensors) and only virtual time, so every decision is a
+//! pure function of `(trace, ServeSpec)` — the determinism contract of
+//! `docs/SERVING.md` holds for all of them, not just FIFO.
+//!
+//! The engine's batch composition is shared across policies: it walks the
+//! policy's preference order, admitting requests until the token budget or
+//! request cap is hit (the first pick always fits, so an oversized request
+//! runs alone instead of starving). [`Fifo`]'s preference order is the
+//! queue order itself, which makes the defaulted engine bitwise-identical
+//! to the pre-policy FIFO loop — asserted against a golden
+//! reimplementation in `rust/tests/serve_props.rs`.
+
+use super::admission::ShedReason;
+use super::spec::{PolicyKind, ServeSpec};
+
+/// What a policy sees of one queued request: scheduling metadata only.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub arrival_us: u64,
+    pub tenant: u64,
+    /// Larger = more urgent (only [`PolicyKind::Priority`] reads it).
+    pub priority: u8,
+    /// Absolute virtual deadline, resolved at admission (`u64::MAX` =
+    /// none); only [`PolicyKind::SloDeadline`] reads it.
+    pub deadline_us: u64,
+    /// Token cost against the micro-batch budget.
+    pub tokens: usize,
+}
+
+/// One scheduling policy. `order` must return a permutation of
+/// `0..pending.len()` (most-preferred first); the engine serves a prefix.
+pub trait SchedulerPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Full preference order over the admitted queue at virtual instant
+    /// `v_now`, most-preferred first.
+    fn order(&self, pending: &[QueuedRequest], v_now: u64) -> Vec<usize>;
+
+    /// Requests to shed *now* (e.g. lapsed deadlines), as
+    /// `(queue index, reason)` pairs. Called before every batch
+    /// composition and before every admission offer.
+    fn evict(&self, pending: &[QueuedRequest], v_now: u64) -> Vec<(usize, ShedReason)> {
+        let _ = (pending, v_now);
+        Vec::new()
+    }
+
+    /// Notification that `served` just left the queue as one micro-batch
+    /// (in service order) — the hook stateful policies account with.
+    fn on_served(&mut self, served: &[QueuedRequest]) {
+        let _ = served;
+    }
+}
+
+/// Construct the policy a [`ServeSpec`] names. Fresh per trace run, so
+/// stateful policies (FairShare) never leak accounting across traces.
+pub fn policy_for(spec: &ServeSpec) -> Box<dyn SchedulerPolicy> {
+    match spec.policy {
+        PolicyKind::Fifo => Box::new(Fifo),
+        PolicyKind::Priority => Box::new(Priority { floor_us: spec.priority_floor_us }),
+        PolicyKind::FairShare => Box::new(FairShare { served_tokens: Vec::new() }),
+        PolicyKind::SloDeadline => Box::new(SloDeadline),
+    }
+}
+
+/// Arrival order — the default, bitwise-identical to the pre-policy engine.
+pub struct Fifo;
+
+impl SchedulerPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn order(&self, pending: &[QueuedRequest], _v_now: u64) -> Vec<usize> {
+        (0..pending.len()).collect()
+    }
+}
+
+/// Strict priority classes with an optional anti-starvation aging floor:
+/// any request that has waited at least `floor_us` is promoted ahead of
+/// all fresher traffic (overdue requests among themselves go FIFO), so a
+/// sustained high-priority flood cannot starve the low classes.
+pub struct Priority {
+    pub floor_us: u64,
+}
+
+impl Priority {
+    fn overdue(&self, r: &QueuedRequest, v_now: u64) -> bool {
+        self.floor_us > 0 && v_now.saturating_sub(r.arrival_us) >= self.floor_us
+    }
+}
+
+impl SchedulerPolicy for Priority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn order(&self, pending: &[QueuedRequest], v_now: u64) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..pending.len()).collect();
+        // Sort key: overdue first (FIFO among themselves), then priority
+        // class descending, ties broken by (arrival, id) so the order is a
+        // total, trace-determined one.
+        idx.sort_by_key(|&i| {
+            let r = &pending[i];
+            (!self.overdue(r, v_now), std::cmp::Reverse(r.priority), r.arrival_us, r.id)
+        });
+        idx
+    }
+}
+
+/// Deficit round-robin over tenants, accounted in served tokens: each pick
+/// goes to the pending tenant with the fewest tokens served so far (ties
+/// by tenant id, then arrival, then id). Within one micro-batch the
+/// accounting is tentative, so a single batch already rotates across
+/// tenants instead of draining one.
+pub struct FairShare {
+    /// `(tenant, tokens served)` — persistent across batches of one trace.
+    served_tokens: Vec<(u64, u64)>,
+}
+
+impl FairShare {
+    fn served(counts: &[(u64, u64)], tenant: u64) -> u64 {
+        counts.iter().find(|(t, _)| *t == tenant).map(|(_, n)| *n).unwrap_or(0)
+    }
+
+    fn charge(counts: &mut Vec<(u64, u64)>, tenant: u64, tokens: u64) {
+        match counts.iter_mut().find(|(t, _)| *t == tenant) {
+            Some(slot) => slot.1 += tokens,
+            None => counts.push((tenant, tokens)),
+        }
+    }
+}
+
+impl SchedulerPolicy for FairShare {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn order(&self, pending: &[QueuedRequest], _v_now: u64) -> Vec<usize> {
+        let mut tentative = self.served_tokens.clone();
+        let mut remaining: Vec<usize> = (0..pending.len()).collect();
+        let mut out = Vec::with_capacity(pending.len());
+        while !remaining.is_empty() {
+            let (pos, &best) = remaining
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &i)| {
+                    let r = &pending[i];
+                    (Self::served(&tentative, r.tenant), r.tenant, r.arrival_us, r.id)
+                })
+                .expect("remaining is non-empty");
+            let r = &pending[best];
+            Self::charge(&mut tentative, r.tenant, r.tokens as u64);
+            out.push(best);
+            remaining.remove(pos);
+        }
+        out
+    }
+
+    fn on_served(&mut self, served: &[QueuedRequest]) {
+        for r in served {
+            Self::charge(&mut self.served_tokens, r.tenant, r.tokens as u64);
+        }
+    }
+}
+
+/// Earliest-deadline-first with deadline-based eviction: batches fill in
+/// ascending deadline order, and any request whose absolute deadline has
+/// already passed is shed with reason [`ShedReason::DeadlineExpired`]
+/// rather than served late (or silently dropped). Deadline-less requests
+/// (`u64::MAX`) sort last and never expire.
+pub struct SloDeadline;
+
+impl SchedulerPolicy for SloDeadline {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn order(&self, pending: &[QueuedRequest], _v_now: u64) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..pending.len()).collect();
+        idx.sort_by_key(|&i| {
+            let r = &pending[i];
+            (r.deadline_us, r.arrival_us, r.id)
+        });
+        idx
+    }
+
+    fn evict(&self, pending: &[QueuedRequest], v_now: u64) -> Vec<(usize, ShedReason)> {
+        pending
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.deadline_us < v_now)
+            .map(|(i, _)| (i, ShedReason::DeadlineExpired))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival: u64, tenant: u64, priority: u8, deadline: u64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            arrival_us: arrival,
+            tenant,
+            priority,
+            deadline_us: deadline,
+            tokens: 10,
+        }
+    }
+
+    #[test]
+    fn fifo_order_is_identity() {
+        let q = vec![req(0, 0, 0, 0, u64::MAX), req(1, 5, 0, 9, u64::MAX)];
+        assert_eq!(Fifo.order(&q, 100), vec![0, 1]);
+    }
+
+    #[test]
+    fn priority_sorts_by_class_until_the_floor_kicks_in() {
+        let q = vec![req(0, 0, 0, 0, u64::MAX), req(1, 50, 0, 3, u64::MAX)];
+        // Pure priority (floor disabled): the class-3 request wins.
+        let pure = Priority { floor_us: 0 };
+        assert_eq!(pure.order(&q, 60), vec![1, 0]);
+        // With a 100 µs floor, request 0 is overdue at t=120 and is
+        // promoted ahead of the fresher high-priority one.
+        let aged = Priority { floor_us: 100 };
+        assert_eq!(aged.order(&q, 60), vec![1, 0], "not overdue yet");
+        assert_eq!(aged.order(&q, 120), vec![0, 1], "overdue wins");
+    }
+
+    #[test]
+    fn fair_share_rotates_tenants_and_remembers_served_tokens() {
+        let q =
+            vec![req(0, 0, 7, 0, u64::MAX), req(1, 0, 7, 0, u64::MAX), req(2, 0, 9, 0, u64::MAX)];
+        let mut fair = FairShare { served_tokens: Vec::new() };
+        // Fresh counters: tenant 7 leads on (tenant id) tie-break, then the
+        // tentative charge hands the next pick to tenant 9.
+        assert_eq!(fair.order(&q, 0), vec![0, 2, 1]);
+        // After tenant 7 is charged two requests, tenant 9 goes first.
+        fair.on_served(&[q[0], q[1]]);
+        assert_eq!(fair.order(&q, 0), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn slo_orders_by_deadline_and_evicts_lapsed_ones() {
+        let q = vec![req(0, 0, 0, 0, 500), req(1, 0, 0, 0, 100), req(2, 0, 0, 0, u64::MAX)];
+        let slo = SloDeadline;
+        assert_eq!(slo.order(&q, 0), vec![1, 0, 2]);
+        assert_eq!(slo.evict(&q, 0), vec![]);
+        let shed = slo.evict(&q, 200);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].0, 1);
+        assert_eq!(shed[0].1, ShedReason::DeadlineExpired);
+    }
+}

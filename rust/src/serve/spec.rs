@@ -1,0 +1,289 @@
+//! The validated serving plan: [`ServeSpec`], the one front door to the
+//! engine's scheduling knobs — mirroring how `parallel::MeshSpec` is the
+//! one front door to the mesh. The CLI's consolidated
+//! `--serve policy=…,budget=…,queue=…` flag parses into a `ServeSpec`
+//! ([`ServeSpec::parse`]), every construction path funnels through
+//! [`ServeSpec::validate`], and the engine takes the spec whole — there is
+//! no second bag of loose scheduling arguments.
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::ModelEntry;
+
+/// Which [`crate::serve::SchedulerPolicy`] composes micro-batches. The
+/// policy table (semantics, knobs, shed behavior) lives in
+/// `docs/SERVING.md`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Arrival order — bitwise-identical to the pre-policy engine.
+    Fifo,
+    /// Higher [`crate::serve::Request::priority`] first; an optional aging
+    /// floor ([`ServeSpec::priority_floor_us`]) promotes requests that have
+    /// waited too long so low-priority traffic cannot starve.
+    Priority,
+    /// Per-tenant deficit round-robin on served tokens: the tenant with the
+    /// fewest tokens served so far goes first.
+    FairShare,
+    /// Earliest-deadline-first with deadline-based eviction: requests whose
+    /// deadline has already passed are shed (never served late silently).
+    SloDeadline,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "fifo" => Ok(PolicyKind::Fifo),
+            "priority" => Ok(PolicyKind::Priority),
+            "fair" => Ok(PolicyKind::FairShare),
+            "slo" => Ok(PolicyKind::SloDeadline),
+            other => bail!("unknown serve policy `{other}` (expected fifo|priority|fair|slo)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Priority => "priority",
+            PolicyKind::FairShare => "fair",
+            PolicyKind::SloDeadline => "slo",
+        }
+    }
+}
+
+/// What happens when an offer hits a full bounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedMode {
+    /// Tail-drop the incoming request (shed reason `queue_full`).
+    Reject,
+    /// Shed the *least-preferred* request under the active policy — the
+    /// incoming one if the policy ranks it last (`queue_full`), otherwise a
+    /// queued victim (`evicted`).
+    Evict,
+}
+
+impl ShedMode {
+    pub fn parse(s: &str) -> Result<ShedMode> {
+        match s {
+            "reject" => Ok(ShedMode::Reject),
+            "evict" => Ok(ShedMode::Evict),
+            other => bail!("unknown shed mode `{other}` (expected reject|evict)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedMode::Reject => "reject",
+            ShedMode::Evict => "evict",
+        }
+    }
+}
+
+/// The complete, validated serving plan. All times are virtual
+/// microseconds; every field participates in the determinism contract —
+/// scheduling is a pure function of `(trace, ServeSpec)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeSpec {
+    pub policy: PolicyKind,
+    /// Token budget per micro-batch (0 = auto: 8 requests' worth,
+    /// resolved against the model entry — [`ServeSpec::resolved_batch_tokens`]).
+    /// A single request whose cost exceeds the budget is still admitted —
+    /// alone — so no request can starve on size.
+    pub max_batch_tokens: usize,
+    /// Request cap per micro-batch (0 = unlimited; 1 = unbatched serving).
+    pub max_batch_requests: usize,
+    /// Admission-queue capacity (0 = unbounded: no backpressure, nothing is
+    /// ever shed — the bitwise-FIFO-preserving default).
+    pub queue_capacity: usize,
+    /// Full-queue behavior; only meaningful with `queue_capacity > 0`.
+    pub shed: ShedMode,
+    /// Mean virtual inter-arrival gap of the default synthetic trace
+    /// (0 = burst). The single default both `serve` and `infer` draw from.
+    pub gap_us: u64,
+    /// Virtual service-time model: a micro-batch of `t` tokens occupies the
+    /// engine for `service_base_us + service_per_token_us · t`.
+    pub service_base_us: u64,
+    pub service_per_token_us: u64,
+    /// `Priority` only: waiting this long promotes a request ahead of all
+    /// fresher traffic regardless of priority class (0 = pure priority).
+    pub priority_floor_us: u64,
+    /// `SloDeadline` only: default relative deadline applied to requests
+    /// that carry none (0 = deadline-less requests never expire).
+    pub slo_default_us: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> ServeSpec {
+        ServeSpec {
+            policy: PolicyKind::Fifo,
+            max_batch_tokens: 0,
+            max_batch_requests: 0,
+            queue_capacity: 0,
+            shed: ShedMode::Reject,
+            gap_us: 300,
+            service_base_us: 200,
+            service_per_token_us: 2,
+            priority_floor_us: 0,
+            slo_default_us: 0,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// One request per micro-batch — the no-batching reference the bench
+    /// compares continuous batching against on the same trace.
+    pub fn unbatched() -> ServeSpec {
+        ServeSpec { max_batch_requests: 1, ..ServeSpec::default() }
+    }
+
+    /// Parse the consolidated CLI spelling: `policy=fifo|priority|fair|slo,
+    /// budget=T,max-batch=N,queue=Q,shed=reject|evict,gap=G,floor=F,slo=D`
+    /// (every key optional, any order, each at most once). Syntax only —
+    /// cross-field rules live in [`ServeSpec::validate`].
+    pub fn parse(s: &str) -> Result<ServeSpec> {
+        let mut spec = ServeSpec::default();
+        let mut seen: Vec<&str> = Vec::new();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("serve spec `{s}`: expected `key=value`, got `{part}`"))?;
+            if seen.contains(&key) {
+                bail!("serve spec `{s}`: key `{key}` given twice");
+            }
+            seen.push(key);
+            let num = |v: &str| -> Result<usize> {
+                v.parse::<usize>()
+                    .with_context(|| format!("serve spec `{s}`: `{key}={v}` is not a number"))
+            };
+            match key {
+                "policy" => spec.policy = PolicyKind::parse(value)?,
+                "budget" => spec.max_batch_tokens = num(value)?,
+                "max-batch" => spec.max_batch_requests = num(value)?,
+                "queue" => spec.queue_capacity = num(value)?,
+                "shed" => spec.shed = ShedMode::parse(value)?,
+                "gap" => spec.gap_us = num(value)? as u64,
+                "floor" => spec.priority_floor_us = num(value)? as u64,
+                "slo" => spec.slo_default_us = num(value)? as u64,
+                other => bail!(
+                    "serve spec `{s}`: unknown key `{other}` (expected \
+                     policy|budget|max-batch|queue|shed|gap|floor|slo)"
+                ),
+            }
+        }
+        // Policy-foreign knobs are rejected at parse time so a typo'd plan
+        // fails loudly instead of being silently ignored.
+        if spec.priority_floor_us > 0 && spec.policy != PolicyKind::Priority {
+            bail!("serve spec `{s}`: `floor` only applies to policy=priority");
+        }
+        if spec.slo_default_us > 0 && spec.policy != PolicyKind::SloDeadline {
+            bail!("serve spec `{s}`: `slo` only applies to policy=slo");
+        }
+        if seen.contains(&"shed") && spec.queue_capacity == 0 {
+            bail!("serve spec `{s}`: `shed` needs a bounded queue (`queue=Q` with Q >= 1)");
+        }
+        Ok(spec)
+    }
+
+    /// The one semantic entry point, mirroring `MeshSpec::validate`: every
+    /// engine construction funnels through here.
+    pub fn validate(&self, entry: &ModelEntry) -> Result<()> {
+        if self.resolved_batch_tokens(entry) == 0 {
+            bail!("serve spec: resolved token budget must be >= 1");
+        }
+        if self.shed == ShedMode::Evict && self.queue_capacity == 0 {
+            bail!("serve spec: shed=evict needs a bounded queue (queue=Q with Q >= 1)");
+        }
+        if self.priority_floor_us > 0 && self.policy != PolicyKind::Priority {
+            bail!("serve spec: priority_floor_us only applies to policy=priority");
+        }
+        if self.slo_default_us > 0 && self.policy != PolicyKind::SloDeadline {
+            bail!("serve spec: slo_default_us only applies to policy=slo");
+        }
+        Ok(())
+    }
+
+    /// The effective per-micro-batch token budget: `max_batch_tokens`, or —
+    /// when 0 (auto) — eight requests' worth for this model.
+    pub fn resolved_batch_tokens(&self, entry: &ModelEntry) -> usize {
+        if self.max_batch_tokens > 0 {
+            self.max_batch_tokens
+        } else {
+            8 * super::tokens_per_request(entry).max(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    fn entry() -> ModelEntry {
+        Manifest::native().model("lm_tiny_dense").unwrap().clone()
+    }
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let spec =
+            ServeSpec::parse("policy=slo,budget=96,max-batch=4,queue=8,shed=evict,gap=0,slo=5000")
+                .unwrap();
+        assert_eq!(spec.policy, PolicyKind::SloDeadline);
+        assert_eq!(spec.max_batch_tokens, 96);
+        assert_eq!(spec.max_batch_requests, 4);
+        assert_eq!(spec.queue_capacity, 8);
+        assert_eq!(spec.shed, ShedMode::Evict);
+        assert_eq!(spec.gap_us, 0);
+        assert_eq!(spec.slo_default_us, 5000);
+        spec.validate(&entry()).unwrap();
+        // An empty spec is the default plan.
+        let dflt = ServeSpec::parse("").unwrap();
+        assert_eq!(dflt.policy, PolicyKind::Fifo);
+        assert_eq!(dflt.gap_us, 300);
+        dflt.validate(&entry()).unwrap();
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_loudly() {
+        for (spec, needle) in [
+            ("policy", "expected `key=value`"),
+            ("policy=lifo", "unknown serve policy"),
+            ("budget=ten", "is not a number"),
+            ("budget=8,budget=9", "given twice"),
+            ("tenant=3", "unknown key"),
+            ("shed=banana,queue=4", "unknown shed mode"),
+            ("floor=100", "only applies to policy=priority"),
+            ("slo=100", "only applies to policy=slo"),
+            ("shed=evict", "needs a bounded queue"),
+        ] {
+            let err = ServeSpec::parse(spec).unwrap_err();
+            assert!(format!("{err:#}").contains(needle), "{spec}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn validate_is_the_single_semantic_gate() {
+        let e = entry();
+        let bad = ServeSpec { shed: ShedMode::Evict, ..ServeSpec::default() };
+        assert!(bad.validate(&e).is_err(), "evict without a bounded queue");
+        let bad = ServeSpec { priority_floor_us: 5, ..ServeSpec::default() };
+        assert!(bad.validate(&e).is_err(), "floor outside policy=priority");
+        let bad = ServeSpec { slo_default_us: 5, ..ServeSpec::default() };
+        assert!(bad.validate(&e).is_err(), "slo outside policy=slo");
+        let ok = ServeSpec {
+            policy: PolicyKind::SloDeadline,
+            queue_capacity: 4,
+            shed: ShedMode::Evict,
+            slo_default_us: 100,
+            ..ServeSpec::default()
+        };
+        ok.validate(&e).unwrap();
+    }
+
+    #[test]
+    fn auto_budget_resolves_to_eight_requests() {
+        let e = entry();
+        let tpr = crate::serve::tokens_per_request(&e);
+        assert_eq!(ServeSpec::default().resolved_batch_tokens(&e), 8 * tpr);
+        let explicit = ServeSpec { max_batch_tokens: 5, ..ServeSpec::default() };
+        assert_eq!(explicit.resolved_batch_tokens(&e), 5);
+    }
+}

@@ -1,0 +1,335 @@
+//! Deterministic traffic generation: the simple jittered-gap
+//! [`synthetic_trace`] the CLI defaults to, plus the heavy-traffic
+//! generator ([`TrafficSpec`] / [`generate`]) — bursty, diurnal and
+//! adversarial arrival processes over multiple tenants with per-tenant
+//! weights, priority classes and relative deadlines. Every trace is a pure
+//! function of `(entry, spec)`: request payloads come from the model's
+//! seeded synthetic data pipeline and arrivals from a dedicated RNG
+//! stream, so the serving benches and property tests replay identical
+//! traffic on every run.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::ModelEntry;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::Request;
+
+/// Deterministic per-request input tensors (leading dim 1 each, manifest
+/// inference order) for `n` requests, drawn from the model's synthetic
+/// data pipeline seeded with `seed`.
+pub fn synthetic_inputs(entry: &ModelEntry, n: usize, seed: u64) -> Vec<Vec<Tensor>> {
+    let k = entry.infer_batch().len();
+    let mut out = Vec::with_capacity(n);
+    if entry.family == "lm" {
+        let mut pipe = crate::data::text::TextPipeline::new(
+            crate::data::text::HmmCorpus::new(
+                crate::data::text::HmmSpec {
+                    vocab_size: entry.config.vocab_size,
+                    ..Default::default()
+                },
+                seed,
+            ),
+            1,
+            entry.config.enc_len,
+            entry.config.dec_len,
+            seed,
+            0,
+        );
+        for _ in 0..n {
+            out.push(pipe.next_batch().into_iter().take(k).collect());
+        }
+    } else {
+        let spec = crate::data::vision::VisionSpec {
+            image_size: entry.config.image_size,
+            ..Default::default()
+        };
+        let mut pipe = crate::data::vision::VisionPipeline::new(spec, 1, seed, 0);
+        for _ in 0..n {
+            out.push(pipe.next_batch().0.into_iter().take(k).collect());
+        }
+    }
+    out
+}
+
+/// A deterministic synthetic arrival trace: `n` single-example requests
+/// drawn from the model's synthetic data pipeline (seeded), arriving
+/// `gap_us` apart on average with deterministic ±50% jitter (`gap_us = 0`
+/// is a burst: everything arrives at t = 0). Single-tenant, priority 0, no
+/// deadlines — the multi-tenant shapes live in [`generate`].
+pub fn synthetic_trace(entry: &ModelEntry, n: usize, seed: u64, gap_us: u64) -> Vec<Request> {
+    let mut rng = Rng::with_stream(seed, 0x5e7e);
+    let mut arrival = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for (id, inputs) in synthetic_inputs(entry, n, seed).into_iter().enumerate() {
+        out.push(Request::new(id as u64, arrival, inputs));
+        if gap_us > 0 {
+            arrival += gap_us / 2 + rng.below(gap_us as usize + 1) as u64;
+        }
+    }
+    out
+}
+
+/// How virtual inter-arrival gaps evolve along a generated trace. All
+/// nonzero gaps get the same deterministic ±50% jitter as
+/// [`synthetic_trace`].
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Constant mean gap (the `synthetic_trace` shape).
+    Uniform { gap_us: u64 },
+    /// `burst` back-to-back arrivals, then one quiet gap sized so the
+    /// long-run mean stays `mean_gap_us` per request.
+    Bursty { mean_gap_us: u64, burst: usize },
+    /// Triangle-wave load swing: the mean gap sweeps from `max_gap_us`
+    /// (trough traffic) down to `min_gap_us` (peak traffic) and back over
+    /// `period` requests.
+    Diurnal { min_gap_us: u64, max_gap_us: u64, period: usize },
+    /// Background trickle at `gap_us`, punctuated every `flood_every`
+    /// requests by a flood of `flood` simultaneous arrivals — all from
+    /// tenant 0, the noisy neighbor fairness policies must contain.
+    Adversarial { gap_us: u64, flood_every: usize, flood: usize },
+}
+
+impl ArrivalProcess {
+    /// The named CLI shapes (`--traffic uniform|bursty|diurnal|adversarial`),
+    /// scaled off one mean gap.
+    pub fn from_name(name: &str, gap_us: u64) -> Result<ArrivalProcess> {
+        match name {
+            "uniform" => Ok(ArrivalProcess::Uniform { gap_us }),
+            "bursty" => Ok(ArrivalProcess::Bursty { mean_gap_us: gap_us, burst: 8 }),
+            "diurnal" => Ok(ArrivalProcess::Diurnal {
+                min_gap_us: gap_us / 4,
+                max_gap_us: gap_us * 2,
+                period: 16,
+            }),
+            "adversarial" => {
+                Ok(ArrivalProcess::Adversarial { gap_us, flood_every: 8, flood: 4 })
+            }
+            other => bail!(
+                "unknown traffic shape `{other}` (expected uniform|bursty|diurnal|adversarial)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Uniform { .. } => "uniform",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+            ArrivalProcess::Adversarial { .. } => "adversarial",
+        }
+    }
+
+    /// The gap preceding request `id` (request 0 always arrives at t = 0).
+    fn gap(&self, id: usize, rng: &mut Rng) -> u64 {
+        let jitter = |g: u64, rng: &mut Rng| {
+            if g == 0 {
+                0
+            } else {
+                g / 2 + rng.below(g as usize + 1) as u64
+            }
+        };
+        match *self {
+            ArrivalProcess::Uniform { gap_us } => jitter(gap_us, rng),
+            ArrivalProcess::Bursty { mean_gap_us, burst } => {
+                if id % burst.max(1) == 0 {
+                    jitter(mean_gap_us * burst.max(1) as u64, rng)
+                } else {
+                    0
+                }
+            }
+            ArrivalProcess::Diurnal { min_gap_us, max_gap_us, period } => {
+                let period = period.max(1);
+                let t = (id % period) as f64 / period as f64;
+                let wave = (2.0 * t - 1.0).abs(); // 1 at the edges, 0 mid-period
+                let span = max_gap_us.saturating_sub(min_gap_us);
+                jitter(min_gap_us + (span as f64 * wave) as u64, rng)
+            }
+            ArrivalProcess::Adversarial { gap_us, flood_every, flood } => {
+                let phase = id % flood_every.max(1);
+                if phase != 0 && phase < flood {
+                    0
+                } else {
+                    jitter(gap_us, rng)
+                }
+            }
+        }
+    }
+
+    /// Whether request `id` belongs to an adversarial flood (forced onto
+    /// tenant 0).
+    fn flood_member(&self, id: usize) -> bool {
+        match *self {
+            ArrivalProcess::Adversarial { flood_every, flood, .. } => {
+                id % flood_every.max(1) < flood
+            }
+            _ => false,
+        }
+    }
+}
+
+/// One traffic class: arrival weight, priority and (relative) SLO of a
+/// tenant's requests.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    pub tenant: u64,
+    /// Relative arrival rate (categorical weight across tenants).
+    pub weight: f32,
+    pub priority: u8,
+    /// Relative deadline stamped on this tenant's requests (0 = none; the
+    /// SLO policy's `slo_default_us` then applies, if set).
+    pub deadline_us: u64,
+}
+
+/// A complete heavy-traffic scenario: arrival process, tenant mix, trace
+/// length and seed. [`generate`] turns it into a concrete trace.
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    pub process: ArrivalProcess,
+    pub tenants: Vec<TenantSpec>,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl TrafficSpec {
+    /// An equal-weight tenant mix with rotating priority classes
+    /// (`tenant % 3`) and no per-tenant deadlines — the shape the serving
+    /// bench and smoke drive.
+    pub fn standard(
+        process: ArrivalProcess,
+        tenants: usize,
+        requests: usize,
+        seed: u64,
+    ) -> TrafficSpec {
+        let tenants = (0..tenants.max(1) as u64)
+            .map(|t| TenantSpec {
+                tenant: t,
+                weight: 1.0,
+                priority: (t % 3) as u8,
+                deadline_us: 0,
+            })
+            .collect();
+        TrafficSpec { process, tenants, requests, seed }
+    }
+}
+
+/// Generate the deterministic multi-tenant trace a [`TrafficSpec`]
+/// describes: arrivals follow the process, each request is assigned a
+/// tenant by categorical draw over the tenant weights (floods force tenant
+/// 0), and priority / absolute deadline come from the tenant spec.
+/// Arrivals are nondecreasing by construction.
+pub fn generate(entry: &ModelEntry, spec: &TrafficSpec) -> Result<Vec<Request>> {
+    if spec.tenants.is_empty() {
+        bail!("traffic spec needs at least one tenant");
+    }
+    let weights: Vec<f32> = spec.tenants.iter().map(|t| t.weight).collect();
+    if weights.iter().any(|w| !w.is_finite() || *w < 0.0) || weights.iter().sum::<f32>() <= 0.0 {
+        bail!("tenant weights must be nonnegative with a positive sum");
+    }
+    let mut rng = Rng::with_stream(spec.seed, 0x7af1c);
+    let mut arrival = 0u64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for (id, inputs) in synthetic_inputs(entry, spec.requests, spec.seed).into_iter().enumerate() {
+        if id > 0 {
+            arrival += spec.process.gap(id, &mut rng);
+        }
+        let slot =
+            if spec.process.flood_member(id) { 0 } else { rng.categorical(&weights) };
+        let tenant = &spec.tenants[slot];
+        let mut req = Request::new(id as u64, arrival, inputs);
+        req.tenant = tenant.tenant;
+        req.priority = tenant.priority;
+        if tenant.deadline_us > 0 {
+            req.deadline_us = arrival + tenant.deadline_us;
+        }
+        out.push(req);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    fn entry() -> ModelEntry {
+        Manifest::native().model("lm_tiny_dense").unwrap().clone()
+    }
+
+    fn key(r: &Request) -> (u64, u64, u64, u8, u64) {
+        (r.id, r.arrival_us, r.tenant, r.priority, r.deadline_us)
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_nondecreasing() {
+        let e = entry();
+        for name in ["uniform", "bursty", "diurnal", "adversarial"] {
+            let spec =
+                TrafficSpec::standard(ArrivalProcess::from_name(name, 300).unwrap(), 4, 24, 9);
+            let a = generate(&e, &spec).unwrap();
+            let b = generate(&e, &spec).unwrap();
+            assert_eq!(a.len(), 24, "{name}");
+            assert!(
+                a.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+                "{name}: arrivals must be nondecreasing"
+            );
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(key(x), key(y), "{name}: trace must be a pure function of the spec");
+                assert_eq!(x.inputs, y.inputs, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_come_in_back_to_back_groups() {
+        let e = entry();
+        let spec = TrafficSpec::standard(
+            ArrivalProcess::Bursty { mean_gap_us: 200, burst: 4 },
+            2,
+            16,
+            3,
+        );
+        let trace = generate(&e, &spec).unwrap();
+        for group in trace.chunks(4) {
+            assert!(
+                group.iter().all(|r| r.arrival_us == group[0].arrival_us),
+                "burst members arrive simultaneously"
+            );
+        }
+        assert!(trace[0].arrival_us < trace[4].arrival_us, "quiet gap between bursts");
+    }
+
+    #[test]
+    fn adversarial_floods_come_from_tenant_zero() {
+        let e = entry();
+        let spec = TrafficSpec::standard(
+            ArrivalProcess::Adversarial { gap_us: 500, flood_every: 8, flood: 4 },
+            4,
+            32,
+            5,
+        );
+        let trace = generate(&e, &spec).unwrap();
+        for r in &trace {
+            if (r.id as usize) % 8 < 4 {
+                assert_eq!(r.tenant, 0, "flood request {} must be the noisy neighbor", r.id);
+            }
+        }
+        // Tenant priorities/deadlines follow the tenant table.
+        for r in &trace {
+            assert_eq!(r.priority, (r.tenant % 3) as u8);
+            assert_eq!(r.deadline_us, 0);
+        }
+    }
+
+    #[test]
+    fn generate_rejects_degenerate_tenant_mixes() {
+        let e = entry();
+        let mut spec = TrafficSpec::standard(ArrivalProcess::Uniform { gap_us: 0 }, 2, 4, 1);
+        spec.tenants.clear();
+        assert!(generate(&e, &spec).is_err());
+        let mut spec = TrafficSpec::standard(ArrivalProcess::Uniform { gap_us: 0 }, 2, 4, 1);
+        spec.tenants[0].weight = -1.0;
+        assert!(generate(&e, &spec).is_err());
+    }
+}

@@ -70,6 +70,28 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     sorted[rank.min(sorted.len() - 1)]
 }
 
+/// Linearly-interpolated percentile (0..=100) of `samples` on a sorted
+/// copy. Unlike [`percentile`]'s nearest-rank estimate this interpolates
+/// between the two adjacent order statistics, which matters for extreme
+/// tails (p999) over small sample sets where nearest-rank collapses onto
+/// the max. Returns 0.0 for an empty slice and the single sample for a
+/// one-element slice.
+pub fn percentile_interpolated(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let pos = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        return sorted[lo];
+    }
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
 /// Run `f` with automatic iteration count targeting ~`target_ms` of total
 /// measurement time (min 3 iters), after 1 warmup call.
 pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
@@ -199,6 +221,21 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolated_edges_and_midpoints() {
+        assert_eq!(percentile_interpolated(&[], 99.9), 0.0);
+        assert_eq!(percentile_interpolated(&[7.0], 99.9), 7.0);
+        // Two samples: p50 lands exactly between them.
+        assert_eq!(percentile_interpolated(&[0.0, 10.0], 50.0), 5.0);
+        // p999 over 1..=100 interpolates just below the max instead of
+        // collapsing onto it like nearest-rank does.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p999 = percentile_interpolated(&xs, 99.9);
+        assert!(p999 > 99.0 && p999 < 100.0, "{p999}");
+        assert_eq!(percentile_interpolated(&xs, 100.0), 100.0);
+        assert_eq!(percentile_interpolated(&xs, 0.0), 1.0);
     }
 
     #[test]

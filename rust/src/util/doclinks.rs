@@ -11,10 +11,11 @@
 //!   checked for its file part only. Fenced code blocks are ignored so
 //!   `arr[i](x)`-shaped code in examples cannot false-positive.
 //! * **Deprecated CLI flags** — flags retired by the unified `--topology`
-//!   plan ([`DEPRECATED_FLAGS`]) must not appear inside fenced code
-//!   blocks: examples are what readers copy, so a doc example carrying
-//!   `--replicas`/`--mesh` would keep teaching the dead API. Prose (the
-//!   deprecation table in `docs/CLI.md`) mentions them freely.
+//!   and `--serve` plans ([`DEPRECATED_FLAGS`]) must not appear inside
+//!   fenced code blocks: examples are what readers copy, so a doc example
+//!   carrying `--replicas`/`--mesh` or `--batch-tokens`/`--unbatched`
+//!   would keep teaching the dead API. Prose (the deprecation tables in
+//!   `docs/CLI.md`) mentions them freely.
 
 use std::path::{Path, PathBuf};
 
@@ -93,10 +94,21 @@ pub fn check_files(files: &[PathBuf]) -> Result<Vec<DeadLink>> {
     Ok(dead)
 }
 
-/// CLI flags retired by the unified `--topology dp=D,ep=E[,tp=T]` plan
-/// (see docs/CLI.md's deprecation table). They still parse — with a
-/// printed warning — but doc examples must show the replacement.
-pub const DEPRECATED_FLAGS: &[&str] = &["--replicas", "--mesh", "--ep", "--dp", "--mp"];
+/// CLI flags retired by the unified `--topology dp=D,ep=E[,tp=T]` and
+/// `--serve policy=…,budget=…` plans (see docs/CLI.md's deprecation
+/// tables). They still parse — with a printed warning — but doc examples
+/// must show the replacement.
+pub const DEPRECATED_FLAGS: &[&str] = &[
+    "--replicas",
+    "--mesh",
+    "--ep",
+    "--dp",
+    "--mp",
+    "--batch-tokens",
+    "--max-batch",
+    "--unbatched",
+    "--gap-us",
+];
 
 /// One deprecated flag sighting inside a fenced code block.
 #[derive(Debug)]
@@ -219,8 +231,18 @@ Use `--topology dp=2,ep=2`; the old `--mesh 2x2` spelling is deprecated.\n\
         assert_eq!((hits[0].0, hits[0].1), (2, "--mesh"));
         assert_eq!((hits[1].0, hits[1].1), (3, "--replicas"));
 
+        // The retired serve flags are gated too; `--serve` itself is fine.
+        let serve = "\
+```sh\nupcycle serve --load ck.supc --batch-tokens 256 --unbatched\n\
+upcycle serve --load ck.supc --serve policy=fifo,budget=256\n```\n";
+        let hits = deprecated_flag_hits(serve);
+        assert_eq!(hits.len(), 2, "{hits:?}");
+        assert_eq!((hits[0].0, hits[0].1), (2, "--batch-tokens"));
+        assert_eq!((hits[1].0, hits[1].1), (2, "--unbatched"));
+
         // Boundary check: flag-shaped prefixes of longer flags don't trip.
-        let near_miss = "```sh\nupcycle train --epochs 3 --mesh-style x --dperf 1\n```\n";
+        let near_miss =
+            "```sh\nupcycle train --epochs 3 --mesh-style x --dperf 1 --max-batch-rows 2\n```\n";
         assert!(deprecated_flag_hits(near_miss).is_empty());
     }
 

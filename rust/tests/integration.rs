@@ -262,7 +262,7 @@ fn native_vision_stack() {
 #[test]
 fn native_train_save_serve_stack() {
     use sparse_upcycle::serve::{
-        stack_inputs, synthetic_trace, tokens_per_request, Engine, EngineConfig,
+        stack_inputs, synthetic_trace, tokens_per_request, Engine, ServeSpec,
     };
     let manifest = Manifest::native();
     let runtime = Runtime::new().unwrap();
@@ -304,11 +304,11 @@ fn native_train_save_serve_stack() {
     assert_eq!(live, warm, "reloaded checkpoint must serve bitwise-identical outputs");
 
     // And the engine serves a trace off the reloaded state end to end.
-    let cfg = EngineConfig {
+    let spec = ServeSpec {
         max_batch_tokens: 2 * tokens_per_request(&entry),
-        ..EngineConfig::default()
+        ..ServeSpec::default()
     };
-    let engine = Engine::new(&model, &loaded.params, cfg).unwrap();
+    let engine = Engine::new(&model, &loaded.params, spec).unwrap();
     let report = engine.run_trace(synthetic_trace(&entry, 6, 5, 200)).unwrap();
     assert_eq!(report.completions.len(), 6);
     assert!(report.tokens_per_s() > 0.0);

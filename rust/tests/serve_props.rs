@@ -1,0 +1,389 @@
+//! Property tests for the policy-driven serving subsystem (`serve::`):
+//!
+//! * the FIFO default under the [`SchedulerPolicy`] seam is **bitwise
+//!   identical** to the pre-refactor engine, checked against a golden
+//!   re-implementation of the old scheduling loop on random traces;
+//! * every policy's saturation behavior is a pure function of
+//!   (trace, [`ServeSpec`]) — bitwise-reproducible across reruns and
+//!   across compute thread counts (`util::serial_compute`);
+//! * conservation: every request in a multi-tenant trace ends in exactly
+//!   one completion or one named shed record, and the token budget holds;
+//! * `Priority` with an aging floor never starves the low class;
+//! * `FairShare` keeps per-tenant served tokens within one request of each
+//!   other while every tenant still has pending work;
+//! * `SloDeadline` only sheds genuinely lapsed deadlines and never serves
+//!   a request after its deadline has passed.
+//!
+//! [`SchedulerPolicy`]: sparse_upcycle::serve::SchedulerPolicy
+//! [`ServeSpec`]: sparse_upcycle::serve::ServeSpec
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use sparse_upcycle::init::init_params;
+use sparse_upcycle::manifest::{Manifest, ModelEntry};
+use sparse_upcycle::runtime::{tensors_from_checkpoint, LoadedModel, Runtime};
+use sparse_upcycle::serve::{
+    generate, synthetic_trace, tokens_per_request, ArrivalProcess, Engine, PolicyKind,
+    ServeReport, ServeSpec, ShedMode, ShedReason, TrafficSpec,
+};
+use sparse_upcycle::tensor::Tensor;
+use sparse_upcycle::util::rng::Rng;
+use sparse_upcycle::util::serial_compute;
+
+fn setup(name: &str) -> (ModelEntry, LoadedModel, Vec<Tensor>) {
+    let manifest = Manifest::native();
+    let runtime = Runtime::new().unwrap();
+    let entry = manifest.model(name).unwrap().clone();
+    let model = runtime.load_model(&manifest, name, &["eval"]).unwrap();
+    let params = tensors_from_checkpoint(&init_params(&entry, 5).unwrap(), &entry.params).unwrap();
+    (entry, model, params)
+}
+
+/// The virtual timeline of one completion — everything the scheduler
+/// decides (model outputs are covered by the engine's own bitwise tests).
+fn timeline(r: &ServeReport) -> Vec<(u64, u64, u64, usize)> {
+    r.completions.iter().map(|c| (c.id, c.start_us, c.finish_us, c.batch_index)).collect()
+}
+
+/// Golden re-implementation of the **pre-refactor** FIFO engine loop: jump
+/// the virtual clock to the next arrival when idle, admit everything due,
+/// compose front-of-queue micro-batches up to the token budget / request
+/// cap (first pick always fits), advance the clock by the service model.
+/// Returns `(id, start_us, finish_us, batch_index)` per request in service
+/// order — what the old engine's completions carried.
+fn golden_fifo(
+    arrivals: &[u64],
+    tpr: usize,
+    budget: usize,
+    max_requests: usize,
+    base_us: u64,
+    per_token_us: u64,
+) -> Vec<(u64, u64, u64, usize)> {
+    let n = arrivals.len();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut admitted = 0usize;
+    let mut v_now = 0u64;
+    let mut out = Vec::with_capacity(n);
+    let mut batch_index = 0usize;
+    while out.len() < n {
+        if queue.is_empty() && arrivals[admitted] > v_now {
+            v_now = arrivals[admitted];
+        }
+        while admitted < n && arrivals[admitted] <= v_now {
+            queue.push_back(admitted);
+            admitted += 1;
+        }
+        let mut picked = Vec::new();
+        let mut tokens = 0usize;
+        while let Some(&i) = queue.front() {
+            let full =
+                tokens + tpr > budget || (max_requests > 0 && picked.len() >= max_requests);
+            if !picked.is_empty() && full {
+                break;
+            }
+            picked.push(i);
+            tokens += tpr;
+            queue.pop_front();
+        }
+        let service = base_us + per_token_us * tokens as u64;
+        let (start, finish) = (v_now, v_now + service);
+        v_now = finish;
+        for id in picked {
+            out.push((id as u64, start, finish, batch_index));
+        }
+        batch_index += 1;
+    }
+    out
+}
+
+/// The refactor's central contract: the default FIFO plan, now routed
+/// through `policy_for` + `Admission`, produces the exact virtual timeline
+/// of the pre-refactor engine on random traces — same clock jumps, same
+/// batch composition, same service arithmetic.
+#[test]
+fn fifo_seam_matches_the_pre_refactor_golden_timeline() {
+    let (entry, model, params) = setup("lm_tiny_dense");
+    let tpr = tokens_per_request(&entry);
+    let mut rng = Rng::new(0xb00b1e5);
+    for case in 0..12u64 {
+        let n = 1 + rng.below(9);
+        let gap = [0u64, 40, 400, 2500][rng.below(4)];
+        let budget_requests = 1 + rng.below(5);
+        let spec = ServeSpec {
+            max_batch_tokens: budget_requests * tpr,
+            max_batch_requests: if rng.below(3) == 0 { 1 + rng.below(4) } else { 0 },
+            ..ServeSpec::default()
+        };
+        let trace = synthetic_trace(&entry, n, 1000 + case, gap);
+        let arrivals: Vec<u64> = trace.iter().map(|r| r.arrival_us).collect();
+        let engine = Engine::new(&model, &params, spec).unwrap();
+        let report = engine.run_trace(trace).unwrap();
+        let golden = golden_fifo(
+            &arrivals,
+            tpr,
+            spec.max_batch_tokens,
+            spec.max_batch_requests,
+            spec.service_base_us,
+            spec.service_per_token_us,
+        );
+        assert!(report.sheds.is_empty(), "case {case}: the unbounded default never sheds");
+        assert_eq!(timeline(&report), golden, "case {case}: FIFO timeline must be bitwise");
+        let batches = golden.iter().map(|t| t.3).max().map(|b| b + 1).unwrap_or(0);
+        assert_eq!(report.batches.len(), batches, "case {case}");
+    }
+}
+
+/// Saturation behavior of **every** policy is a pure function of
+/// (trace, spec): two runs and a `serial_compute` run (different compute
+/// thread count) agree bitwise on the virtual timeline, predictions, and
+/// the shed log.
+#[test]
+fn every_policy_is_a_pure_function_of_trace_and_spec() {
+    let (entry, model, params) = setup("lm_tiny_dense");
+    let tpr = tokens_per_request(&entry);
+    for kind in
+        [PolicyKind::Fifo, PolicyKind::Priority, PolicyKind::FairShare, PolicyKind::SloDeadline]
+    {
+        let spec = ServeSpec {
+            policy: kind,
+            max_batch_tokens: 2 * tpr,
+            queue_capacity: 4,
+            priority_floor_us: if kind == PolicyKind::Priority { 5_000 } else { 0 },
+            slo_default_us: if kind == PolicyKind::SloDeadline { 20_000 } else { 0 },
+            ..ServeSpec::default()
+        };
+        let process = ArrivalProcess::Bursty { mean_gap_us: 50, burst: 6 };
+        let trace = generate(&entry, &TrafficSpec::standard(process, 3, 18, 7)).unwrap();
+        let engine = Engine::new(&model, &params, spec).unwrap();
+        let a = engine.run_trace(trace.clone()).unwrap();
+        let b = engine.run_trace(trace.clone()).unwrap();
+        let c = serial_compute(|| engine.run_trace(trace.clone()).unwrap());
+        for (label, other) in [("rerun", &b), ("serial threads", &c)] {
+            assert_eq!(
+                timeline(&a),
+                timeline(other),
+                "{}: {label} changed the virtual timeline",
+                kind.name()
+            );
+            assert_eq!(a.sheds, other.sheds, "{}: {label} changed the shed log", kind.name());
+            for (x, y) in a.completions.iter().zip(&other.completions) {
+                assert_eq!(x.predictions, y.predictions, "{}: {label}", kind.name());
+                assert_eq!(x.score.to_bits(), y.score.to_bits(), "{}: {label}", kind.name());
+            }
+        }
+    }
+}
+
+/// Conservation under load shedding, for every policy × arrival process:
+/// every request id in the trace appears in exactly one completion or one
+/// shed record (never both, never neither), every shed carries a named
+/// reason at a plausible instant, and the token budget holds per batch.
+#[test]
+fn every_request_completes_or_sheds_exactly_once() {
+    let (entry, model, params) = setup("lm_tiny_dense");
+    let tpr = tokens_per_request(&entry);
+    let processes = [
+        ArrivalProcess::Uniform { gap_us: 120 },
+        ArrivalProcess::Bursty { mean_gap_us: 80, burst: 8 },
+        ArrivalProcess::Diurnal { min_gap_us: 20, max_gap_us: 400, period: 10 },
+        ArrivalProcess::Adversarial { gap_us: 200, flood_every: 6, flood: 3 },
+    ];
+    for (p, process) in processes.into_iter().enumerate() {
+        for kind in [
+            PolicyKind::Fifo,
+            PolicyKind::Priority,
+            PolicyKind::FairShare,
+            PolicyKind::SloDeadline,
+        ] {
+            let shed =
+                if kind == PolicyKind::SloDeadline { ShedMode::Evict } else { ShedMode::Reject };
+            let spec = ServeSpec {
+                policy: kind,
+                max_batch_tokens: 2 * tpr,
+                queue_capacity: 3,
+                shed,
+                slo_default_us: if kind == PolicyKind::SloDeadline { 5_000 } else { 0 },
+                ..ServeSpec::default()
+            };
+            let n = 20usize;
+            let traffic = TrafficSpec::standard(process, 3, n, 40 + p as u64);
+            let trace = generate(&entry, &traffic).unwrap();
+            let engine = Engine::new(&model, &params, spec).unwrap();
+            let report = engine.run_trace(trace).unwrap();
+            let label = format!("{} over {}", kind.name(), process.name());
+
+            assert_eq!(report.completions.len() + report.sheds.len(), n, "{label}");
+            let mut seen = BTreeSet::new();
+            for c in &report.completions {
+                assert!(seen.insert(c.id), "{label}: id {} completed twice", c.id);
+            }
+            for s in &report.sheds {
+                assert!(seen.insert(s.id), "{label}: id {} both completed and shed", s.id);
+                assert!(s.shed_us >= s.arrival_us, "{label}: shed before arrival");
+                assert!(
+                    ["queue_full", "evicted", "deadline_expired"].contains(&s.reason.name()),
+                    "{label}: unknown shed reason"
+                );
+            }
+            assert_eq!(seen.len(), n, "{label}: ids must partition the trace");
+            for b in &report.batches {
+                assert_eq!(b.tokens, b.requests * tpr, "{label}");
+                assert!(
+                    b.tokens <= spec.max_batch_tokens || b.requests == 1,
+                    "{label}: batch {} blew the token budget",
+                    b.index
+                );
+            }
+        }
+    }
+}
+
+/// Priority with an aging floor never starves the low class: in a burst
+/// where one low-priority request competes with a deep high-priority
+/// backlog, pure priority (floor 0) serves it dead last, while a floor of
+/// 2 service times promotes it within `floor + 2·service`.
+#[test]
+fn priority_floor_prevents_starvation_of_the_low_class() {
+    let (entry, model, params) = setup("lm_tiny_dense");
+    let service = 100u64; // base only: per-token 0 keeps arithmetic exact
+    let mk_trace = || {
+        let mut trace = synthetic_trace(&entry, 9, 21, 0); // all arrive at t = 0
+        for r in trace.iter_mut() {
+            r.priority = if r.id == 0 { 0 } else { 2 };
+        }
+        trace
+    };
+    let run = |floor_us: u64| {
+        let spec = ServeSpec {
+            policy: PolicyKind::Priority,
+            max_batch_requests: 1,
+            service_base_us: service,
+            service_per_token_us: 0,
+            priority_floor_us: floor_us,
+            ..ServeSpec::default()
+        };
+        Engine::new(&model, &params, spec).unwrap().run_trace(mk_trace()).unwrap()
+    };
+
+    let starved = run(0);
+    assert_eq!(starved.completions.len(), 9);
+    assert_eq!(
+        starved.completions.last().unwrap().id,
+        0,
+        "pure priority serves the low class dead last"
+    );
+    assert_eq!(starved.completions.last().unwrap().finish_us, 9 * service);
+
+    let floored = run(2 * service);
+    assert_eq!(floored.completions.len(), 9);
+    let low = floored.completions.iter().find(|c| c.id == 0).unwrap();
+    assert!(
+        low.finish_us <= 2 * service + 2 * service,
+        "floor must bound the low-class latency: finished at {}",
+        low.finish_us
+    );
+    // The aging floor is itself deterministic FIFO among overdue requests:
+    // once two requests are both past the floor, the earlier (arrival, id)
+    // is never scheduled after the later one.
+    for a in &floored.completions {
+        for b in &floored.completions {
+            let both_overdue = a.start_us >= a.arrival_us + 2 * service
+                && b.start_us >= b.arrival_us + 2 * service;
+            if both_overdue && (a.arrival_us, a.id) < (b.arrival_us, b.id) {
+                assert!(
+                    a.start_us <= b.start_us,
+                    "overdue requests must drain FIFO: {} after {}",
+                    a.id,
+                    b.id
+                );
+            }
+        }
+    }
+}
+
+/// FairShare keeps served tokens balanced: replaying a 3-tenant burst one
+/// request at a time, after every pick the per-tenant served-token spread
+/// stays within one request's cost among tenants that still have pending
+/// work — and every tenant finishes with its full share.
+#[test]
+fn fair_share_bounds_the_per_tenant_token_spread() {
+    let (entry, model, params) = setup("lm_tiny_dense");
+    let tpr = tokens_per_request(&entry) as i64;
+    let mut trace = synthetic_trace(&entry, 12, 33, 0); // all arrive at t = 0
+    for r in trace.iter_mut() {
+        r.tenant = r.id % 3;
+    }
+    let spec = ServeSpec {
+        policy: PolicyKind::FairShare,
+        max_batch_requests: 1,
+        ..ServeSpec::default()
+    };
+    let report = Engine::new(&model, &params, spec).unwrap().run_trace(trace).unwrap();
+    assert_eq!(report.completions.len(), 12);
+
+    let mut served: BTreeMap<u64, i64> = BTreeMap::new();
+    let mut remaining: BTreeMap<u64, i64> = BTreeMap::new();
+    for t in 0..3u64 {
+        served.insert(t, 0);
+        remaining.insert(t, 4);
+    }
+    for c in &report.completions {
+        *served.get_mut(&c.tenant).unwrap() += tpr;
+        *remaining.get_mut(&c.tenant).unwrap() -= 1;
+        let active: Vec<i64> =
+            served.iter().filter(|(t, _)| remaining[t] > 0).map(|(_, s)| *s).collect();
+        if active.len() > 1 {
+            let spread = active.iter().max().unwrap() - active.iter().min().unwrap();
+            assert!(
+                spread <= tpr,
+                "after serving id {} the active-tenant spread hit {spread} (> {tpr})",
+                c.id
+            );
+        }
+    }
+    assert!(served.values().all(|&s| s == 4 * tpr), "every tenant gets its full share");
+}
+
+/// SloDeadline sheds exactly the lapsed deadlines: every shed record's
+/// deadline had truly passed at the shed instant, every served request
+/// started at or before its deadline, and the earliest-deadline-first
+/// order drains a uniform burst FIFO.
+#[test]
+fn slo_policy_sheds_only_lapsed_deadlines() {
+    let (entry, model, params) = setup("lm_tiny_dense");
+    let service = 100u64;
+    let slo = 350u64;
+    let spec = ServeSpec {
+        policy: PolicyKind::SloDeadline,
+        max_batch_requests: 1,
+        service_base_us: service,
+        service_per_token_us: 0,
+        slo_default_us: slo,
+        ..ServeSpec::default()
+    };
+    let trace = synthetic_trace(&entry, 10, 55, 0); // burst of 10 at t = 0
+    let report = Engine::new(&model, &params, spec).unwrap().run_trace(trace).unwrap();
+
+    // One request per 100 µs against a 350 µs deadline: ids 0–3 make it
+    // (the last starts at 300), the rest lapse at t = 400.
+    assert_eq!(report.completions.len(), 4, "{:?}", timeline(&report));
+    assert_eq!(report.sheds.len(), 6);
+    for c in &report.completions {
+        assert!(c.start_us <= c.arrival_us + slo, "id {} served past its deadline", c.id);
+    }
+    let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3], "equal deadlines tie-break FIFO");
+    for s in &report.sheds {
+        assert_eq!(s.reason, ShedReason::DeadlineExpired);
+        assert!(s.shed_us > s.arrival_us + slo, "id {} shed before its deadline lapsed", s.id);
+    }
+
+    // An explicit per-request deadline (not the slo default) is honored
+    // as-is at admission: the tighter deadline jumps the EDF order.
+    let mut trace = synthetic_trace(&entry, 2, 56, 0);
+    trace[1].deadline_us = 50;
+    let report = Engine::new(&model, &params, spec).unwrap().run_trace(trace).unwrap();
+    let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    assert_eq!(ids, vec![1, 0], "the explicit 50 µs deadline outranks the 350 µs default");
+    assert!(report.sheds.is_empty(), "both still start before their deadlines lapse");
+}
