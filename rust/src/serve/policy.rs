@@ -100,12 +100,16 @@ impl SchedulerPolicy for Priority {
 
     fn order(&self, pending: &[QueuedRequest], v_now: u64) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..pending.len()).collect();
-        // Sort key: overdue first (FIFO among themselves), then priority
-        // class descending, ties broken by (arrival, id) so the order is a
-        // total, trace-determined one.
+        // Sort key: overdue first and FIFO among themselves — their class
+        // is neutralized so a backlog that is entirely past the floor
+        // drains by (arrival, id) instead of collapsing back to pure
+        // priority. Fresh traffic follows, class descending, with the same
+        // (arrival, id) tie-break so the order is total and trace-determined.
         idx.sort_by_key(|&i| {
             let r = &pending[i];
-            (!self.overdue(r, v_now), std::cmp::Reverse(r.priority), r.arrival_us, r.id)
+            let overdue = self.overdue(r, v_now);
+            let class = if overdue { u8::MAX } else { r.priority };
+            (!overdue, std::cmp::Reverse(class), r.arrival_us, r.id)
         });
         idx
     }
@@ -170,8 +174,11 @@ impl SchedulerPolicy for FairShare {
 /// Earliest-deadline-first with deadline-based eviction: batches fill in
 /// ascending deadline order, and any request whose absolute deadline has
 /// already passed is shed with reason [`ShedReason::DeadlineExpired`]
-/// rather than served late (or silently dropped). Deadline-less requests
-/// (`u64::MAX`) sort last and never expire.
+/// (never silently dropped). The SLO contract is deadline-by-service-
+/// start: eviction runs before each batch is composed, so every served
+/// request *starts* at or before its deadline, but one picked just inside
+/// it may still finish after (`finish = start + service`). Deadline-less
+/// requests (`u64::MAX`) sort last and never expire.
 pub struct SloDeadline;
 
 impl SchedulerPolicy for SloDeadline {
