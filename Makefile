@@ -4,12 +4,12 @@
 # here, CI is green.
 
 .PHONY: verify build test test-release docs bench-compile bench-json bench-gate bench-baseline \
-        check-features fmt fmt-check clippy quickstart mesh-smoke serve-smoke chaos-smoke \
-        strategy-smoke serving-load-smoke artifacts clean
+        check-features kernel-props fmt fmt-check clippy quickstart mesh-smoke serve-smoke \
+        chaos-smoke strategy-smoke serving-load-smoke artifacts clean
 
 verify: build test test-release fmt-check clippy docs bench-compile bench-json bench-gate \
-        check-features quickstart mesh-smoke serve-smoke chaos-smoke strategy-smoke \
-        serving-load-smoke
+        check-features kernel-props quickstart mesh-smoke serve-smoke chaos-smoke \
+        strategy-smoke serving-load-smoke
 
 build:
 	cargo build --release
@@ -41,11 +41,25 @@ bench-baseline: bench-json
 	cargo run --release -- bench-gate --baseline BENCH_baseline.json \
 	  --current rust/BENCH_runtime.json --update-baseline
 
-# Feature matrix: the off-by-default PJRT stub and the no-default build
-# must keep compiling even though neither is exercised by default tests.
+# Feature matrix: the off-by-default PJRT stub, the no-default build and
+# the AVX2+FMA simd feature must keep compiling even though none of them
+# is exercised by default tests.
 check-features:
 	cargo check -p sparse-upcycle --all-targets --features pjrt
 	cargo check -p sparse-upcycle --all-targets --no-default-features
+	cargo check -p sparse-upcycle --all-targets --features simd
+
+# Kernel oracle suite (tests/kernel_props.rs): every fast GEMM tier —
+# blocked, SIMD, and the fused bf16/int8 kernels — held to
+# gemm::reference over the randomized shape grid, plus the e2e
+# quantized-inference agreement floors. Release profile (the grid is
+# heavy in debug), run with the simd feature off *and* on so both
+# resolved implementations of the SIMD tier gate (they differ in FMA
+# rounding; each must hold the oracle bound and its own bitwise
+# determinism contracts).
+kernel-props:
+	cargo test -p sparse-upcycle --release -q --test kernel_props
+	cargo test -p sparse-upcycle --release -q --test kernel_props --features simd
 
 fmt:
 	cargo fmt --all

@@ -26,10 +26,15 @@
 //!   recording the *exposed* `ep_alltoall` window (blocking
 //!   `finish_exchange` legs only) as the split-phase pipeline hides more
 //!   of the exchange behind expert compute,
+//! * the SIMD inference tier (`linalg::simd`) against the blocked kernels
+//!   on the same zoo-shaped GEMMs — the speedup floor the bench gate pins,
 //! * forward-only inference (`runtime::Executable::infer`): a batch-size
 //!   sweep (latency percentiles, tokens/s) and the serve engine's
 //!   continuous-batching throughput against unbatched serving on the same
 //!   fixed arrival trace (`serve::Engine`),
+//! * quantized inference (`--precision bf16|int8`): tokens/s on the SIMD
+//!   runtime plus argmax agreement and mean score delta against f32 — the
+//!   measured accuracy-vs-throughput trade (`checkpoint::quant`),
 //! * the serving-load sweep (`serve::trafficgen`): one bursty multi-tenant
 //!   trace replayed through every scheduler policy under a bounded queue,
 //!   recording virtual p99/p999 tail latency, shed rate, and per-tenant
@@ -39,11 +44,12 @@
 //!      [--json-out PATH]   (default PATH: BENCH_runtime.json in the bench
 //!      CWD, i.e. `rust/`)
 
+use sparse_upcycle::checkpoint::quant::{quantize_params, Precision};
 use sparse_upcycle::coordinator::{
     dp_train_step, mesh_train_step, BatchSource, DpConfig, MeshConfig, TrainState,
 };
 use sparse_upcycle::init::{init_opt_state, init_params};
-use sparse_upcycle::linalg::gemm;
+use sparse_upcycle::linalg::{gemm, simd};
 use sparse_upcycle::manifest::{Manifest, ModelEntry};
 use sparse_upcycle::parallel::collectives::Interconnect;
 use sparse_upcycle::runtime::native::NativeBackend;
@@ -182,6 +188,122 @@ fn kernel_section(target_ms: u64) -> Json {
         ]));
     }
     obj(vec![("shapes", arr(shapes))])
+}
+
+/// Vectorized-tier comparison: the SIMD inference kernels vs the blocked
+/// training kernels on the same zoo-shaped GEMMs as `kernel_section`. The
+/// large logits shape (256×64×1024) is where register blocking pays; the
+/// gate floor in BENCH_baseline.json is pinned on that shape's `mm_nn`.
+fn simd_section(target_ms: u64) -> Json {
+    println!("== kernels: simd inference tier vs blocked ==");
+    let mut rng = sparse_upcycle::util::rng::Rng::new(43);
+    let mut shapes = Vec::new();
+    for &(n, k, m) in &[(256usize, 32usize, 64usize), (128, 32, 256), (256, 64, 1024)] {
+        let a: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+        let mut out = vec![0f32; n * m];
+        let rs = bench(&format!("mm_nn simd    {n}x{k}x{m}"), target_ms, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            simd::mm_nn(&a, &b, n, k, m, &mut out);
+        });
+        let rb = bench(&format!("mm_nn blocked {n}x{k}x{m}"), target_ms, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            gemm::mm_nn(&a, &b, n, k, m, &mut out);
+        });
+        let bt: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut out_nt = vec![0f32; n * m];
+        let nts = bench(&format!("mm_nt simd    {n}x{k}x{m}"), target_ms, || {
+            out_nt.iter_mut().for_each(|v| *v = 0.0);
+            simd::mm_nt(&a, &bt, n, k, m, &mut out_nt);
+        });
+        let ntb = bench(&format!("mm_nt blocked {n}x{k}x{m}"), target_ms, || {
+            out_nt.iter_mut().for_each(|v| *v = 0.0);
+            gemm::mm_nt(&a, &bt, n, k, m, &mut out_nt);
+        });
+        println!(
+            "  ↳ {n}x{k}x{m}: mm_nn simd speedup {:.2}x, mm_nt simd speedup {:.2}x\n",
+            rb.mean_ns / rs.mean_ns,
+            ntb.mean_ns / nts.mean_ns
+        );
+        shapes.push(obj(vec![
+            ("n", num(n as f64)),
+            ("k", num(k as f64)),
+            ("m", num(m as f64)),
+            ("mm_nn_simd_ns", num(rs.mean_ns)),
+            ("mm_nn_blocked_ns", num(rb.mean_ns)),
+            ("mm_nn_speedup_vs_blocked", num(rb.mean_ns / rs.mean_ns)),
+            ("mm_nt_simd_ns", num(nts.mean_ns)),
+            ("mm_nt_blocked_ns", num(ntb.mean_ns)),
+            ("mm_nt_speedup_vs_blocked", num(ntb.mean_ns / nts.mean_ns)),
+        ]));
+    }
+    let avx2 = cfg!(all(feature = "simd", target_arch = "x86_64"));
+    obj(vec![("avx2_feature_compiled", Json::Bool(avx2)), ("shapes", arr(shapes))])
+}
+
+/// Quantized inference: the accuracy-vs-throughput trade of `--precision`,
+/// measured on the SIMD-kernel runtime the CLI actually serves quantized
+/// weights with. Weights are quantized once outside the timed region
+/// (matching the serve path), and each precision reports tokens/s plus its
+/// argmax agreement and mean |score delta| against the f32 run on the same
+/// fixed batch.
+fn quantized_inference_section(manifest: &Manifest, target_ms: u64) -> Json {
+    println!("== inference: quantized weights (--precision) ==");
+    let name = "lm_tiny_moe_e8_c2";
+    let entry = manifest.model(name).unwrap().clone();
+    let runtime = Runtime::native_simd().unwrap();
+    let model = runtime.load_model(manifest, name, &["eval"]).unwrap();
+    let state = fresh_state(&entry);
+    let params = &state.params;
+
+    let b = 8usize.min(entry.config.batch_size);
+    let trace = serve::synthetic_trace(&entry, b, 5, 0);
+    let inputs = serve::stack_inputs(&trace).unwrap();
+    let tokens = (entry.config.enc_len + entry.config.dec_len) as f64 * b as f64;
+
+    let full = model.infer(params, &inputs).unwrap();
+    let full_preds = full.predictions.i32s().unwrap().to_vec();
+    let mut precisions = Vec::new();
+    for p in [Precision::F32, Precision::Bf16, Precision::Int8PerChannel] {
+        let q = quantize_params(&entry, params, p).unwrap();
+        let out = model.infer(&q, &inputs).unwrap();
+        let preds = out.predictions.i32s().unwrap();
+        let agree = full_preds.iter().zip(preds).filter(|(x, y)| x == y).count() as f64
+            / full_preds.len().max(1) as f64;
+        let mean_delta = full
+            .scores
+            .iter()
+            .zip(&out.scores)
+            .map(|(x, y)| (x - y).abs() as f64)
+            .sum::<f64>()
+            / full.scores.len().max(1) as f64;
+        let r = bench(&format!("infer {name} b{b} {}", p.as_str()), target_ms, || {
+            std::hint::black_box(model.infer(&q, &inputs).unwrap());
+        });
+        println!(
+            "  ↳ {}: {:.1} tokens/s, argmax agreement {:.3}, mean |score Δ| {:.4}",
+            p.as_str(),
+            tokens * 1e9 / r.mean_ns,
+            agree,
+            mean_delta
+        );
+        precisions.push(obj(vec![
+            ("precision", s(p.as_str())),
+            ("mean_ns", num(r.mean_ns)),
+            ("p50_ns", num(r.p50_ns)),
+            ("tokens_per_s", num(tokens * 1e9 / r.mean_ns)),
+            ("argmax_agreement_vs_f32", num(agree)),
+            ("mean_score_delta_vs_f32", num(mean_delta)),
+        ]));
+    }
+    println!();
+    obj(vec![
+        ("model", s(name)),
+        ("platform", s(&runtime.platform())),
+        ("batch", num(b as f64)),
+        ("tokens_per_batch", num(tokens)),
+        ("precisions", arr(precisions)),
+    ])
 }
 
 /// Analytic all-to-all payload of one mesh step (Expert Choice): per MoE
@@ -631,9 +753,11 @@ fn main() {
     };
 
     let kernels = kernel_section(t_kern);
+    let simd_kernels = simd_section(t_kern);
     let expert_parallel = expert_parallel_section(&manifest, &runtime, t_eval, full);
     let overlap = overlap_section(&manifest, &runtime, t_eval);
     let inference = inference_section(&manifest, &runtime, t_eval);
+    let quantized_inference = quantized_inference_section(&manifest, t_eval);
     let serving_load = serving_load_section(&manifest, &runtime);
 
     let mut model_entries = Vec::new();
@@ -777,9 +901,11 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("full", Json::Bool(full)),
         ("kernels", kernels),
+        ("simd", simd_kernels),
         ("expert_parallel", expert_parallel),
         ("overlap", overlap),
         ("inference", inference),
+        ("quantized_inference", quantized_inference),
         ("serving_load", serving_load),
         ("models", arr(model_entries)),
     ]);

@@ -22,6 +22,10 @@
 //! `upcycle infer --load` consume. Loading rejects wrong magic, unsupported
 //! versions, truncated payloads and signature mismatches with named errors.
 //!
+//! The [`quant`] submodule applies **inference-only weight quantization**
+//! (bf16 / per-channel int8) to a loaded parameter vector — a pure
+//! post-load map; the bundle bytes and the SUPC dtype set never change.
+//!
 //! Round trip:
 //!
 //! ```
@@ -38,6 +42,8 @@
 //! assert_eq!(back.get("w").unwrap(), ck.get("w").unwrap());
 //! # std::fs::remove_file(&path).ok();
 //! ```
+
+pub mod quant;
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};

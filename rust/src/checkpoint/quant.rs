@@ -1,0 +1,197 @@
+//! Load-time weight quantization: the `Precision` seam of the serving
+//! path.
+//!
+//! Quantization happens **after** a SUPC checkpoint is loaded and bound to
+//! the manifest signature — the bundle on disk and the in-memory
+//! `Checkpoint` are never mutated, and the `Tensor`/SUPC dtype set stays
+//! f32/i32. [`quantize_params`] maps a full parameter vector through the
+//! storage codecs in [`crate::linalg::lowp`] (encode then decode, i.e. the
+//! exact values a fused low-precision GEMM computes with) and returns a new
+//! f32 vector the unchanged `Executable::infer` path consumes. This is the
+//! inference-only contract: `train` never sees a `Precision` other than
+//! implicit f32, so every training bitwise invariant (resume, mesh≡serial,
+//! fault recovery) is untouched.
+//!
+//! What gets quantized: every f32 parameter with ≥ 2 dims — expert and
+//! dense FFN weights (`moe/wi|wo`, `mlp/wi|wo`, with the trailing
+//! `[rows, cols]` matrix of an `[E, rows, cols]` expert stack quantized
+//! per expert), embeddings and projection heads. What stays full
+//! precision: **router weights** (name contains `router`; routing
+//! decisions are too sensitive to weight noise, and the per-channel cost
+//! is negligible), 1-D tensors (biases/norms), and i32 tensors.
+//!
+//! Determinism: both codecs are element-wise deterministic maps, so
+//! `quantize_params` is a pure function of `(params, precision)` —
+//! quantized serving inherits the bitwise rerun and thread-count
+//! determinism contracts of the f32 path. Accuracy is the traded
+//! quantity; `tests/kernel_props.rs` pins per-model agreement floors and
+//! the bench's `quantized_inference` section measures the tokens/s side.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::lowp::{Bf16Mat, Int8Mat};
+use crate::manifest::ModelEntry;
+use crate::tensor::Tensor;
+
+/// Inference weight precision, selected by `--precision` on
+/// `upcycle infer` / `upcycle serve`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full precision — the unchanged serving path.
+    #[default]
+    F32,
+    /// bf16 weight storage (round-to-nearest-even), f32 accumulation.
+    Bf16,
+    /// Per-output-channel symmetric int8 weight storage, f32 accumulation.
+    Int8PerChannel,
+}
+
+impl Precision {
+    /// Parse the CLI spelling; unknown values fail by name.
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            "int8" => Ok(Precision::Int8PerChannel),
+            other => bail!("unknown precision `{other}` (expected f32|bf16|int8)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8PerChannel => "int8",
+        }
+    }
+}
+
+/// Whether a parameter is quantized under a non-f32 precision: f32, at
+/// least 2-D, and not a router weight.
+fn quantizes(spec_name: &str, t: &Tensor) -> bool {
+    t.dtype() == crate::tensor::DType::F32 && t.shape.len() >= 2 && !spec_name.contains("router")
+}
+
+/// Quantize a parameter vector for inference at `precision`: returns new
+/// f32 tensors holding the encode→decode round trip of every eligible
+/// weight (see the module docs for the eligibility rules), leaving `params`
+/// and the checkpoint they came from untouched. `Precision::F32` is the
+/// identity (a plain clone).
+pub fn quantize_params(
+    entry: &ModelEntry,
+    params: &[Tensor],
+    precision: Precision,
+) -> Result<Vec<Tensor>> {
+    if params.len() != entry.params.len() {
+        bail!(
+            "quantize_params on `{}`: got {} tensors for a {}-tensor signature",
+            entry.name,
+            params.len(),
+            entry.params.len()
+        );
+    }
+    if precision == Precision::F32 {
+        return Ok(params.to_vec());
+    }
+    let mut out = Vec::with_capacity(params.len());
+    for (spec, t) in entry.params.iter().zip(params) {
+        if !quantizes(&spec.name, t) {
+            out.push(t.clone());
+            continue;
+        }
+        let nd = t.shape.len();
+        let (rows, cols) = (t.shape[nd - 2], t.shape[nd - 1]);
+        let reps = t.shape[..nd - 2].iter().product::<usize>().max(1);
+        let src = t.f32s()?;
+        let mut data = Vec::with_capacity(src.len());
+        // Each trailing [rows, cols] matrix (e.g. one expert of an
+        // [E, d, ff] stack) is quantized independently, with per-`cols`
+        // channel scales for int8.
+        for r in 0..reps {
+            let w = &src[r * rows * cols..(r + 1) * rows * cols];
+            match precision {
+                Precision::F32 => unreachable!("handled above"),
+                Precision::Bf16 => data.extend(Bf16Mat::encode(w, rows, cols).decode()),
+                Precision::Int8PerChannel => data.extend(Int8Mat::encode(w, rows, cols).decode()),
+            }
+        }
+        out.push(Tensor::from_f32(&t.shape, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::init::init_params;
+    use crate::linalg::lowp::bf16_roundtrip;
+    use crate::manifest::Manifest;
+    use crate::runtime::tensors_from_checkpoint;
+
+    fn setup(name: &str) -> (ModelEntry, Vec<Tensor>) {
+        let manifest = Manifest::native();
+        let entry = manifest.model(name).unwrap().clone();
+        let params =
+            tensors_from_checkpoint(&init_params(&entry, 7).unwrap(), &entry.params).unwrap();
+        (entry, params)
+    }
+
+    #[test]
+    fn precision_parse_matrix() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8PerChannel);
+        for bad in ["fp16", "int4", "", "BF16"] {
+            let err = Precision::parse(bad).unwrap_err();
+            assert!(format!("{err:#}").contains("unknown precision"), "{bad}: {err:#}");
+        }
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::Int8PerChannel.as_str(), "int8");
+    }
+
+    #[test]
+    fn f32_precision_is_the_identity() {
+        let (entry, params) = setup("lm_tiny_moe_e8_c1");
+        let q = quantize_params(&entry, &params, Precision::F32).unwrap();
+        assert_eq!(params, q);
+    }
+
+    #[test]
+    fn bf16_round_trips_weights_and_skips_routers() {
+        let (entry, params) = setup("lm_tiny_moe_e8_c1");
+        let q = quantize_params(&entry, &params, Precision::Bf16).unwrap();
+        let mut saw_router = false;
+        let mut saw_changed = false;
+        for ((spec, orig), quant) in entry.params.iter().zip(&params).zip(&q) {
+            if spec.name.contains("router") {
+                saw_router = true;
+                assert_eq!(orig, quant, "{}: routers stay full precision", spec.name);
+            } else if orig.shape.len() >= 2 {
+                let (o, g) = (orig.f32s().unwrap(), quant.f32s().unwrap());
+                for (x, y) in o.iter().zip(g) {
+                    assert_eq!(y.to_bits(), bf16_roundtrip(*x).to_bits(), "{}", spec.name);
+                }
+                saw_changed |= o.iter().zip(g).any(|(x, y)| x.to_bits() != y.to_bits());
+            }
+        }
+        assert!(saw_router, "fixture must contain router weights");
+        assert!(saw_changed, "random init weights cannot all be bf16-representable");
+    }
+
+    #[test]
+    fn quantization_is_deterministic() {
+        let (entry, params) = setup("lm_tiny_dense");
+        for p in [Precision::Bf16, Precision::Int8PerChannel] {
+            let a = quantize_params(&entry, &params, p).unwrap();
+            let b = quantize_params(&entry, &params, p).unwrap();
+            assert_eq!(a, b, "{}", p.as_str());
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_fails_by_name() {
+        let (entry, params) = setup("lm_tiny_dense");
+        let err = quantize_params(&entry, &params[1..], Precision::Bf16).unwrap_err();
+        assert!(format!("{err:#}").contains("quantize_params"), "{err:#}");
+    }
+}

@@ -33,6 +33,10 @@
 //! `BENCH_runtime.json` (see `docs/BENCHMARKS.md`), and the unit tests
 //! check the blocked kernels against them on odd/prime shapes.
 //!
+//! A third, inference-only tier lives in [`crate::linalg::simd`]
+//! (selected via [`GemmKernels::Simd`]); `tests/kernel_props.rs` holds
+//! every fast tier to the `reference` oracle over a randomized shape grid.
+//!
 //! ```
 //! // 2×2 GEMM: out += a·b, row-major, accumulating into `out`.
 //! let a = [1.0f32, 2.0, 3.0, 4.0];
@@ -73,7 +77,7 @@ fn dot(x: &[f32], y: &[f32]) -> f32 {
 }
 
 /// Scratch transpose: returns `bᵀ` (shape `[m,k]`) of row-major `b[k,m]`.
-fn transpose(b: &[f32], k: usize, m: usize) -> Vec<f32> {
+pub(crate) fn transpose(b: &[f32], k: usize, m: usize) -> Vec<f32> {
     debug_assert_eq!(b.len(), k * m);
     let mut bt = vec![0f32; k * m];
     for i in 0..k {
@@ -88,7 +92,7 @@ fn transpose(b: &[f32], k: usize, m: usize) -> Vec<f32> {
 /// Dot-product core over a row range: `out[i,j] += dot(a_row(row0+i), bt_row(j))`
 /// for `i in 0..rows`, `j in 0..cols`, with `inner` the shared length.
 /// `out` is the chunk holding exactly rows `row0..row0+rows`.
-fn dot_block(
+pub(crate) fn dot_block(
     a: &[f32],
     bt: &[f32],
     inner: usize,
@@ -149,7 +153,7 @@ fn tn_block(
 /// Shard `out` into contiguous row chunks over scoped threads. Each row is
 /// produced by exactly one thread with shape-determined arithmetic, so the
 /// result is bitwise-independent of the thread count.
-fn par_rows<F: Fn(usize, usize, &mut [f32]) + Sync>(
+pub(crate) fn par_rows<F: Fn(usize, usize, &mut [f32]) + Sync>(
     rows: usize,
     row_len: usize,
     out: &mut [f32],
@@ -251,14 +255,19 @@ pub fn mm_nt_par(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [
 
 /// Kernel family selector: the native backend is built with [`Blocked`]
 /// kernels; [`Reference`] preserves the PR 1 scalar path so the bench can
-/// measure the end-to-end step speedup on every run.
+/// measure the end-to-end step speedup on every run; [`Simd`] is the
+/// explicitly vectorized inference tier (`crate::linalg::simd`), opted
+/// into by the serving path only — the trainers never construct it, so
+/// every training bitwise contract is untouched.
 ///
 /// [`Blocked`]: GemmKernels::Blocked
 /// [`Reference`]: GemmKernels::Reference
+/// [`Simd`]: GemmKernels::Simd
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GemmKernels {
     Blocked,
     Reference,
+    Simd,
 }
 
 impl GemmKernels {
@@ -267,6 +276,7 @@ impl GemmKernels {
         match self {
             GemmKernels::Blocked => mm_nn(a, b, n, k, m, out),
             GemmKernels::Reference => reference::mm_nn(a, b, n, k, m, out),
+            GemmKernels::Simd => crate::linalg::simd::mm_nn(a, b, n, k, m, out),
         }
     }
 
@@ -275,6 +285,7 @@ impl GemmKernels {
         match self {
             GemmKernels::Blocked => mm_tn(a, b, n, k, m, out),
             GemmKernels::Reference => reference::mm_tn(a, b, n, k, m, out),
+            GemmKernels::Simd => crate::linalg::simd::mm_tn(a, b, n, k, m, out),
         }
     }
 
@@ -283,6 +294,7 @@ impl GemmKernels {
         match self {
             GemmKernels::Blocked => mm_nt(a, b, n, m, k, out),
             GemmKernels::Reference => reference::mm_nt(a, b, n, m, k, out),
+            GemmKernels::Simd => crate::linalg::simd::mm_nt(a, b, n, m, k, out),
         }
     }
 
@@ -292,6 +304,7 @@ impl GemmKernels {
         match self {
             GemmKernels::Blocked => mm_nn_par(a, b, n, k, m, out),
             GemmKernels::Reference => reference::mm_nn(a, b, n, k, m, out),
+            GemmKernels::Simd => crate::linalg::simd::mm_nn_par(a, b, n, k, m, out),
         }
     }
 
@@ -300,6 +313,7 @@ impl GemmKernels {
         match self {
             GemmKernels::Blocked => mm_tn_par(a, b, n, k, m, out),
             GemmKernels::Reference => reference::mm_tn(a, b, n, k, m, out),
+            GemmKernels::Simd => crate::linalg::simd::mm_tn_par(a, b, n, k, m, out),
         }
     }
 
@@ -308,6 +322,7 @@ impl GemmKernels {
         match self {
             GemmKernels::Blocked => mm_nt_par(a, b, n, m, k, out),
             GemmKernels::Reference => reference::mm_nt(a, b, n, m, k, out),
+            GemmKernels::Simd => crate::linalg::simd::mm_nt_par(a, b, n, m, k, out),
         }
     }
 }

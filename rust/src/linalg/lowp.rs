@@ -1,0 +1,263 @@
+//! Low-precision weight storage for the quantized inference path: bf16 and
+//! per-output-channel symmetric int8, both with **f32 accumulation**.
+//!
+//! Storage-only quantization: a weight matrix is encoded once (at SUPC
+//! load time, by `checkpoint::quant` — the bundle on disk is never
+//! mutated), and every GEMM decodes the stored values back to f32 and runs
+//! the full-precision kernels. The fused entry points ([`mm_nn_bf16`] /
+//! [`mm_nn_i8`]) decode into a transposed f32 panel and reuse
+//! `gemm::dot_block`, which makes them **bitwise-identical by
+//! construction** to decoding the whole matrix first and calling
+//! `gemm::mm_nn` — the property `tests/kernel_props.rs` pins. Activations
+//! stay f32 throughout; only weights lose precision.
+//!
+//! Numerics:
+//! * **bf16** — the top 16 bits of an f32, rounded to nearest-even.
+//!   Relative error ≤ 2⁻⁸ per weight; any value whose mantissa already
+//!   fits in 7 bits round-trips exactly.
+//! * **int8 per-channel** — each output channel (last-axis column `j`)
+//!   gets a symmetric scale `s_j = max|w[:,j]| / 127` and stores
+//!   `round(w/s_j)` clamped to `[-127, 127]` (no zero point). An all-zero
+//!   channel gets `s_j = 0` and decodes to exact zeros; a single-value
+//!   channel decodes to its value up to one rounding of `127·(|v|/127)`.
+//!
+//! Both encodings are deterministic element-wise maps, so every decoded
+//! matrix — and therefore every quantized inference result — is bitwise
+//! run-to-run reproducible.
+
+use crate::linalg::gemm::dot_block;
+
+/// Round an f32 to bf16 (top 16 bits, round-to-nearest-even).
+pub fn bf16_of_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Quiet the NaN and keep it a NaN after truncation.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// Widen a bf16 back to f32 (exact: low mantissa bits are zero).
+pub fn f32_of_bf16(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// `f32 → bf16 → f32` round trip (the storage error of one weight).
+pub fn bf16_roundtrip(x: f32) -> f32 {
+    f32_of_bf16(bf16_of_f32(x))
+}
+
+/// A row-major `[rows, cols]` matrix stored as bf16.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bf16Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u16>,
+}
+
+impl Bf16Mat {
+    /// Encode a row-major f32 matrix (round-to-nearest-even per element).
+    pub fn encode(w: &[f32], rows: usize, cols: usize) -> Bf16Mat {
+        debug_assert_eq!(w.len(), rows * cols);
+        Bf16Mat { rows, cols, data: w.iter().map(|&x| bf16_of_f32(x)).collect() }
+    }
+
+    /// Decode back to a row-major f32 matrix.
+    pub fn decode(&self) -> Vec<f32> {
+        self.data.iter().map(|&h| f32_of_bf16(h)).collect()
+    }
+
+    /// Decode directly into the transposed `[cols, rows]` panel the
+    /// dot-product kernels consume. Element-for-element the same values as
+    /// `transpose(decode())`.
+    pub fn decode_transposed(&self) -> Vec<f32> {
+        let (k, m) = (self.rows, self.cols);
+        let mut wt = vec![0f32; k * m];
+        for i in 0..k {
+            for j in 0..m {
+                wt[j * k + i] = f32_of_bf16(self.data[i * m + j]);
+            }
+        }
+        wt
+    }
+}
+
+/// A row-major `[rows, cols]` matrix stored as int8 with one symmetric
+/// scale per output channel (column).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int8Mat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Quantized values, row-major, in `[-127, 127]`.
+    pub data: Vec<i8>,
+    /// Per-column dequantization scale; `0.0` marks an all-zero channel.
+    pub scales: Vec<f32>,
+}
+
+impl Int8Mat {
+    /// Encode with per-column symmetric scales `max|w[:,j]| / 127`.
+    pub fn encode(w: &[f32], rows: usize, cols: usize) -> Int8Mat {
+        debug_assert_eq!(w.len(), rows * cols);
+        let mut scales = vec![0f32; cols];
+        for j in 0..cols {
+            let mut mx = 0f32;
+            for i in 0..rows {
+                mx = mx.max(w[i * cols + j].abs());
+            }
+            scales[j] = mx / 127.0;
+        }
+        let mut data = vec![0i8; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                let s = scales[j];
+                if s > 0.0 {
+                    let q = (w[i * cols + j] / s).round().clamp(-127.0, 127.0);
+                    data[i * cols + j] = q as i8;
+                }
+            }
+        }
+        Int8Mat { rows, cols, data, scales }
+    }
+
+    /// Decode back to a row-major f32 matrix (`q · s_j`, one rounding).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut w = vec![0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                w[i * self.cols + j] = self.data[i * self.cols + j] as f32 * self.scales[j];
+            }
+        }
+        w
+    }
+
+    /// Decode into the transposed `[cols, rows]` panel; same values as
+    /// `transpose(decode())`.
+    pub fn decode_transposed(&self) -> Vec<f32> {
+        let (k, m) = (self.rows, self.cols);
+        let mut wt = vec![0f32; k * m];
+        for i in 0..k {
+            for j in 0..m {
+                wt[j * k + i] = self.data[i * m + j] as f32 * self.scales[j];
+            }
+        }
+        wt
+    }
+}
+
+/// `out[n, w.cols] += a[n, w.rows] · decode(w)` — bf16-stored weights,
+/// f32 accumulation (identical arithmetic to `gemm::mm_nn` on the decoded
+/// matrix).
+pub fn mm_nn_bf16(a: &[f32], w: &Bf16Mat, n: usize, out: &mut [f32]) {
+    let (k, m) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(out.len(), n * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    let wt = w.decode_transposed();
+    dot_block(a, &wt, k, m, 0, n, out);
+}
+
+/// `out[n, w.cols] += a[n, w.rows] · decode(w)` — int8-stored weights with
+/// per-channel scales, f32 accumulation.
+pub fn mm_nn_i8(a: &[f32], w: &Int8Mat, n: usize, out: &mut [f32]) {
+    let (k, m) = (w.rows, w.cols);
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(out.len(), n * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    let wt = w.decode_transposed();
+    dot_block(a, &wt, k, m, 0, n, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_representable_values_round_trip_exactly() {
+        // 7-bit mantissas, powers of two, zero, and signs survive exactly.
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 96.0, -0.15625, 3.140625] {
+            assert_eq!(bf16_roundtrip(v).to_bits(), v.to_bits(), "{v}");
+        }
+        assert_eq!(bf16_roundtrip(f32::INFINITY), f32::INFINITY);
+        assert!(bf16_roundtrip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // Exactly halfway between two bf16 values: ties go to the even one.
+        let down = f32::from_bits(0x3F80_8000); // between 0x3F80 and 0x3F81
+        assert_eq!(bf16_of_f32(down), 0x3F80);
+        let up = f32::from_bits(0x3F81_8000); // between 0x3F81 and 0x3F82
+        assert_eq!(bf16_of_f32(up), 0x3F82);
+        // Relative error of a non-representable value stays under 2^-8.
+        let x = 1.0f32 / 3.0;
+        assert!((bf16_roundtrip(x) - x).abs() / x <= 1.0 / 256.0);
+    }
+
+    #[test]
+    fn int8_all_zero_channel_decodes_to_exact_zeros() {
+        // Column 1 is all zeros: scale 0.0, decoded values exactly 0.0.
+        let w = vec![1.0f32, 0.0, -2.0, 0.0, 0.5, 0.0];
+        let q = Int8Mat::encode(&w, 3, 2);
+        assert_eq!(q.scales[1], 0.0);
+        let d = q.decode();
+        for i in 0..3 {
+            assert_eq!(d[i * 2 + 1].to_bits(), 0.0f32.to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_single_value_channel_is_near_exact() {
+        // One distinct magnitude per channel quantizes to ±127 and decodes
+        // back within one rounding of 127·(|v|/127).
+        let w = vec![0.37f32, -4.25, 0.37, -4.25];
+        let q = Int8Mat::encode(&w, 2, 2);
+        assert_eq!(q.data, vec![127, -127, 127, -127]);
+        let d = q.decode();
+        for (got, want) in d.iter().zip(&w) {
+            assert!((got - want).abs() <= 2.0 * f32::EPSILON * want.abs(), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn int8_values_clamp_to_symmetric_range() {
+        let mut rng = Rng::new(41);
+        let w: Vec<f32> = (0..7 * 5).map(|_| rng.normal()).collect();
+        let q = Int8Mat::encode(&w, 7, 5);
+        assert!(q.data.iter().all(|&v| (-127..=127).contains(&v)));
+        // Per-channel max decodes to the channel scale times ±127.
+        let d = q.decode();
+        for j in 0..5 {
+            let mx = (0..7).map(|i| d[i * 5 + j].abs()).fold(0f32, f32::max);
+            assert!((mx - q.scales[j] * 127.0).abs() <= f32::EPSILON * 127.0 * q.scales[j]);
+        }
+    }
+
+    #[test]
+    fn fused_gemm_is_bitwise_decode_then_f32_gemm() {
+        let mut rng = Rng::new(43);
+        let (n, k, m) = (9, 13, 6);
+        let a: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * m).map(|_| rng.normal()).collect();
+
+        let qb = Bf16Mat::encode(&w, k, m);
+        let mut fused = vec![0f32; n * m];
+        mm_nn_bf16(&a, &qb, n, &mut fused);
+        let mut two_step = vec![0f32; n * m];
+        gemm::mm_nn(&a, &qb.decode(), n, k, m, &mut two_step);
+        assert_eq!(fused, two_step, "bf16 fused GEMM must equal decode-then-GEMM bitwise");
+
+        let qi = Int8Mat::encode(&w, k, m);
+        let mut fused = vec![0f32; n * m];
+        mm_nn_i8(&a, &qi, n, &mut fused);
+        let mut two_step = vec![0f32; n * m];
+        gemm::mm_nn(&a, &qi.decode(), n, k, m, &mut two_step);
+        assert_eq!(fused, two_step, "int8 fused GEMM must equal decode-then-GEMM bitwise");
+    }
+}

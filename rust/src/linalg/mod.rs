@@ -1,7 +1,7 @@
-//! Dense linear algebra: the native backend's blocked GEMM kernels plus the
+//! Dense linear algebra: the native backend's GEMM kernel tiers plus the
 //! Cholesky/ridge solvers behind the few-shot probe.
 //!
-//! Two tiers live here, with different performance contracts:
+//! Several tiers live here, with different performance contracts:
 //!
 //! * [`gemm`] — cache-blocked, transposed-B f32 matmul kernels shared by the
 //!   forward and backward passes of `runtime::native` (the training hot
@@ -9,7 +9,22 @@
 //!   shape-determined floating-point reduction order, and their `*_par`
 //!   variants are bitwise-identical to the serial forms for any thread
 //!   count — the data-parallel trainer's determinism guarantee
-//!   (`coordinator::trainer`) depends on this.
+//!   (`coordinator::trainer`) depends on this. The selector
+//!   [`gemm::GemmKernels`] also carries the scalar `reference` oracle and
+//!   the vectorized tier below.
+//! * [`simd`] — explicitly vectorized f32 kernels (multi-column register
+//!   blocking; an AVX2+FMA path behind the `simd` cargo feature with a
+//!   portable fallback). Inference-only tier: selected by
+//!   `GemmKernels::Simd`, never by the trainers. Same accumulate +
+//!   thread-count-determinism contract as [`gemm`], but its reduction
+//!   order differs from the blocked tier's, so it is held to the
+//!   `gemm::reference` oracle by `tests/kernel_props.rs` instead of
+//!   bitwise equality.
+//! * [`lowp`] — low-precision weight storage (bf16, per-channel symmetric
+//!   int8) with f32-accumulate GEMMs for the quantized inference path
+//!   (`checkpoint::quant`). Decoding a stored matrix and running the f32
+//!   kernels is bitwise-identical to the fused decode-and-multiply forms
+//!   by construction.
 //! * [`Mat`] / [`cholesky`] / [`ridge`] — f64 solvers for the paper's
 //!   few-shot linear evaluation (§A.2.2): a least-squares regressor from
 //!   frozen image representations to one-hot labels with fixed L2
@@ -18,6 +33,8 @@
 //!   probe, not per step, and stay in readable scalar form.
 
 pub mod gemm;
+pub mod lowp;
+pub mod simd;
 
 use anyhow::{bail, Result};
 

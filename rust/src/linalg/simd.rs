@@ -1,0 +1,426 @@
+//! Explicitly vectorized f32 GEMM kernels: the inference compute tier
+//! behind [`crate::linalg::gemm::GemmKernels::Simd`].
+//!
+//! The blocked tier in [`crate::linalg::gemm`] computes one output column
+//! per dot product; this tier register-blocks **four output columns** per
+//! pass over a row of `a`, so each element of `a` loaded from L1 feeds four
+//! multiply-accumulates instead of one, and the four independent 8-lane
+//! accumulators give the CPU enough instruction-level parallelism to keep
+//! its FMA pipes full. Two implementations sit behind one seam:
+//!
+//! * **portable** (always compiled): safe Rust whose fixed-width lane
+//!   arrays auto-vectorize on every target;
+//! * **AVX2+FMA** (cargo feature `simd`, `x86_64` only): the same
+//!   4-column micro-kernel written with `std::arch` intrinsics, selected
+//!   at runtime via `is_x86_feature_detected!` and falling back to the
+//!   portable path on machines without AVX2/FMA.
+//!
+//! Determinism contract (same shape as the blocked tier's): every output
+//! element uses a reduction order fixed by the operand shapes and the
+//! resolved implementation — never by the thread count — and the `*_par`
+//! forms shard disjoint output rows over [`crate::linalg::gemm::par_rows`],
+//! so they are bitwise-identical to their serial counterparts. Across
+//! implementations the tier is *not* bitwise-stable: FMA fuses the
+//! round-off of multiply and add, so the AVX2 path differs from the
+//! portable path (and both differ from the blocked tier) by rounding
+//! noise. That is why this tier is **inference-only**: the trainers keep
+//! the blocked kernels, and `tests/kernel_props.rs` holds every simd
+//! kernel to the `gemm::reference` oracle with an error bound derived
+//! from the f32 epsilon and the reduction length.
+
+use crate::linalg::gemm::{par_rows, transpose, COL_TILE, PAR_MIN_MACS, ROW_TILE};
+
+/// Lane width of the portable accumulators (matches one AVX2 register).
+const LANES: usize = 8;
+/// Output columns computed per micro-kernel invocation.
+const COLS: usize = 4;
+
+/// Portable 4-column dot product: `[dot(ai,b0), dot(ai,b1), dot(ai,b2),
+/// dot(ai,b3)]` with four independent 8-lane accumulators.
+#[inline]
+fn dot4_portable(ai: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; COLS] {
+    let len = ai.len();
+    let chunks = len / LANES;
+    let mut a0 = [0.0f32; LANES];
+    let mut a1 = [0.0f32; LANES];
+    let mut a2 = [0.0f32; LANES];
+    let mut a3 = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        let x = &ai[o..o + LANES];
+        let y0 = &b0[o..o + LANES];
+        let y1 = &b1[o..o + LANES];
+        let y2 = &b2[o..o + LANES];
+        let y3 = &b3[o..o + LANES];
+        for l in 0..LANES {
+            a0[l] += x[l] * y0[l];
+            a1[l] += x[l] * y1[l];
+            a2[l] += x[l] * y2[l];
+            a3[l] += x[l] * y3[l];
+        }
+    }
+    let mut s = [
+        a0.iter().sum::<f32>(),
+        a1.iter().sum::<f32>(),
+        a2.iter().sum::<f32>(),
+        a3.iter().sum::<f32>(),
+    ];
+    for j in chunks * LANES..len {
+        s[0] += ai[j] * b0[j];
+        s[1] += ai[j] * b1[j];
+        s[2] += ai[j] * b2[j];
+        s[3] += ai[j] * b3[j];
+    }
+    s
+}
+
+/// Single-column dot product for the `cols % 4` remainder lanes (8-lane
+/// unrolled, same reduction order as the blocked tier's `dot`).
+#[inline]
+fn dot1(x: &[f32], y: &[f32]) -> f32 {
+    let chunks = x.len() / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let xs = &x[c * LANES..(c + 1) * LANES];
+        let ys = &y[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for j in chunks * LANES..x.len() {
+        s += x[j] * y[j];
+    }
+    s
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! AVX2+FMA micro-kernel; only reachable after runtime detection.
+    use std::arch::x86_64::*;
+
+    /// Whether AVX2 and FMA are both present (detected once, cached).
+    pub fn available() -> bool {
+        use std::sync::OnceLock;
+        static AVAIL: OnceLock<bool> = OnceLock::new();
+        *AVAIL.get_or_init(|| {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        })
+    }
+
+    /// Horizontal sum with a fixed lane order (store + left fold), so the
+    /// reduction order is shape-determined like the portable path's.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        lanes.iter().sum()
+    }
+
+    /// 4-column FMA dot product over equal-length slices.
+    ///
+    /// # Safety
+    /// Callers must have verified [`available`] (AVX2 + FMA present).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot4(ai: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+        let len = ai.len();
+        let chunks = len / 8;
+        let mut v0 = _mm256_setzero_ps();
+        let mut v1 = _mm256_setzero_ps();
+        let mut v2 = _mm256_setzero_ps();
+        let mut v3 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let o = c * 8;
+            let x = _mm256_loadu_ps(ai.as_ptr().add(o));
+            v0 = _mm256_fmadd_ps(x, _mm256_loadu_ps(b0.as_ptr().add(o)), v0);
+            v1 = _mm256_fmadd_ps(x, _mm256_loadu_ps(b1.as_ptr().add(o)), v1);
+            v2 = _mm256_fmadd_ps(x, _mm256_loadu_ps(b2.as_ptr().add(o)), v2);
+            v3 = _mm256_fmadd_ps(x, _mm256_loadu_ps(b3.as_ptr().add(o)), v3);
+        }
+        let mut s = [hsum(v0), hsum(v1), hsum(v2), hsum(v3)];
+        for j in chunks * 8..len {
+            s[0] += ai[j] * b0[j];
+            s[1] += ai[j] * b1[j];
+            s[2] += ai[j] * b2[j];
+            s[3] += ai[j] * b3[j];
+        }
+        s
+    }
+}
+
+/// Resolve the active 4-column micro-kernel: AVX2+FMA when the feature is
+/// compiled in and the CPU has it, portable lanes otherwise.
+#[inline]
+fn dot4(ai: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; COLS] {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::available() {
+            // SAFETY: gated on runtime AVX2+FMA detection above.
+            return unsafe { x86::dot4(ai, b0, b1, b2, b3) };
+        }
+    }
+    dot4_portable(ai, b0, b1, b2, b3)
+}
+
+/// 4-column dot-product core over a row range of the output: the simd
+/// counterpart of `gemm::dot_block`, walking [`ROW_TILE`] row blocks and
+/// [`COLS`]-wide column groups (remainder columns via [`dot1`]).
+fn dot_block4(
+    a: &[f32],
+    bt: &[f32],
+    inner: usize,
+    cols: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + ROW_TILE).min(rows);
+        let mut j0 = 0;
+        while j0 + COLS <= cols {
+            let b0 = &bt[j0 * inner..(j0 + 1) * inner];
+            let b1 = &bt[(j0 + 1) * inner..(j0 + 2) * inner];
+            let b2 = &bt[(j0 + 2) * inner..(j0 + 3) * inner];
+            let b3 = &bt[(j0 + 3) * inner..(j0 + 4) * inner];
+            for i in i0..i1 {
+                let ai = &a[(row0 + i) * inner..(row0 + i + 1) * inner];
+                let s = dot4(ai, b0, b1, b2, b3);
+                let o = i * cols + j0;
+                out[o] += s[0];
+                out[o + 1] += s[1];
+                out[o + 2] += s[2];
+                out[o + 3] += s[3];
+            }
+            j0 += COLS;
+        }
+        for j in j0..cols {
+            let bj = &bt[j * inner..(j + 1) * inner];
+            for i in i0..i1 {
+                let ai = &a[(row0 + i) * inner..(row0 + i + 1) * inner];
+                out[i * cols + j] += dot1(ai, bj);
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// Saxpy core of [`mm_tn`] over output rows `l0..l1`, unrolling the sweep
+/// over `n` four rows of `b` at a time so the inner loop carries four
+/// independent multiply-adds per output element.
+fn tn_block4(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    l0: usize,
+    l1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (l1 - l0) * m);
+    let mut t0 = l0;
+    while t0 < l1 {
+        let t1 = (t0 + COL_TILE).min(l1);
+        let mut i0 = 0;
+        while i0 + 4 <= n {
+            let b0 = &b[i0 * m..(i0 + 1) * m];
+            let b1 = &b[(i0 + 1) * m..(i0 + 2) * m];
+            let b2 = &b[(i0 + 2) * m..(i0 + 3) * m];
+            let b3 = &b[(i0 + 3) * m..(i0 + 4) * m];
+            for l in t0..t1 {
+                let av0 = a[i0 * k + l];
+                let av1 = a[(i0 + 1) * k + l];
+                let av2 = a[(i0 + 2) * k + l];
+                let av3 = a[(i0 + 3) * k + l];
+                if av0 == 0.0 && av1 == 0.0 && av2 == 0.0 && av3 == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(l - l0) * m..(l - l0 + 1) * m];
+                for j in 0..m {
+                    orow[j] += av0 * b0[j] + av1 * b1[j] + av2 * b2[j] + av3 * b3[j];
+                }
+            }
+            i0 += 4;
+        }
+        for i in i0..n {
+            let brow = &b[i * m..(i + 1) * m];
+            for l in t0..t1 {
+                let av = a[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(l - l0) * m..(l - l0 + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        t0 = t1;
+    }
+}
+
+/// `out[n,m] += a[n,k] · b[k,m]` (vectorized, transposed-B).
+pub fn mm_nn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    let bt = transpose(b, k, m);
+    dot_block4(a, &bt, k, m, 0, n, out);
+}
+
+/// `out[k,m] += aᵀ · b` with `a[n,k]`, `b[n,m]` (vectorized saxpy).
+pub fn mm_tn(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * m);
+    debug_assert_eq!(out.len(), k * m);
+    if n == 0 || k == 0 || m == 0 {
+        return;
+    }
+    tn_block4(a, b, n, k, m, 0, k, out);
+}
+
+/// `out[n,k] += a · bᵀ` with `a[n,m]`, `b[k,m]` (vectorized dot products).
+pub fn mm_nt(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * k);
+    if n == 0 || m == 0 || k == 0 {
+        return;
+    }
+    dot_block4(a, b, m, k, 0, n, out);
+}
+
+/// [`mm_nn`], sharding output rows across threads for large products.
+/// Bitwise-identical to the serial kernel for any thread count.
+pub fn mm_nn_par(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    if n * k * m < PAR_MIN_MACS {
+        mm_nn(a, b, n, k, m, out);
+        return;
+    }
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * m);
+    let bt = transpose(b, k, m);
+    par_rows(n, m, out, |row0, rows, chunk| dot_block4(a, &bt, k, m, row0, rows, chunk));
+}
+
+/// [`mm_tn`], sharding output rows (columns of `a`) across threads.
+/// Bitwise-identical to the serial kernel for any thread count.
+pub fn mm_tn_par(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    if n * k * m < PAR_MIN_MACS {
+        mm_tn(a, b, n, k, m, out);
+        return;
+    }
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), n * m);
+    debug_assert_eq!(out.len(), k * m);
+    par_rows(k, m, out, |l0, rows, chunk| tn_block4(a, b, n, k, m, l0, l0 + rows, chunk));
+}
+
+/// [`mm_nt`], sharding output rows across threads for large products.
+/// Bitwise-identical to the serial kernel for any thread count.
+pub fn mm_nt_par(a: &[f32], b: &[f32], n: usize, m: usize, k: usize, out: &mut [f32]) {
+    if n * m * k < PAR_MIN_MACS {
+        mm_nt(a, b, n, m, k, out);
+        return;
+    }
+    debug_assert_eq!(a.len(), n * m);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * k);
+    par_rows(n, k, out, |row0, rows, chunk| dot_block4(a, b, m, k, row0, rows, chunk));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{reference, GemmKernels};
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Absolute error bound for one output element: `2·ε·len·Σ|aᵢ·bᵢ|`
+    /// covers both reduction orders' worst-case accumulated rounding.
+    fn bound(ai: &[f32], bj: &[f32]) -> f64 {
+        let abs_sum: f64 = ai.iter().zip(bj).map(|(x, y)| (x * y).abs() as f64).sum();
+        2.0 * f32::EPSILON as f64 * (ai.len().max(1) as f64) * abs_sum + 1e-7
+    }
+
+    /// Odd/prime shapes plus lane (8) and column-group (4) boundaries ±1.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 8, 4),
+        (5, 9, 3),
+        (17, 13, 11),
+        (23, 1, 19),
+        (7, 16, 9),
+        (67, 8, 64),
+        (63, 65, 31),
+    ];
+
+    #[test]
+    fn simd_matches_reference_on_boundary_shapes() {
+        let mut rng = Rng::new(29);
+        for &(n, k, m) in SHAPES {
+            let a = randv(&mut rng, n * k);
+            let b = randv(&mut rng, k * m);
+            let seed = randv(&mut rng, n * m);
+            let mut got = seed.clone();
+            let mut want = seed.clone();
+            mm_nn(&a, &b, n, k, m, &mut got);
+            reference::mm_nn(&a, &b, n, k, m, &mut want);
+            let bt = crate::linalg::gemm::transpose(&b, k, m);
+            for i in 0..n {
+                for j in 0..m {
+                    let e = (got[i * m + j] as f64 - want[i * m + j] as f64).abs();
+                    let tol = bound(&a[i * k..(i + 1) * k], &bt[j * k..(j + 1) * k]);
+                    assert!(e <= tol, "mm_nn {n}x{k}x{m} [{i},{j}]: err {e} > {tol}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_par_is_bitwise_identical_to_serial() {
+        let mut rng = Rng::new(31);
+        let (n, k, m) = (257, 129, 67);
+        let a = randv(&mut rng, n * k);
+        let b = randv(&mut rng, k * m);
+        let mut serial = vec![0f32; n * m];
+        let mut par = vec![0f32; n * m];
+        mm_nn(&a, &b, n, k, m, &mut serial);
+        mm_nn_par(&a, &b, n, k, m, &mut par);
+        assert_eq!(serial, par, "simd mm_nn_par must be bitwise-deterministic");
+    }
+
+    #[test]
+    fn selector_dispatches_the_simd_tier() {
+        let mut rng = Rng::new(37);
+        let (n, k, m) = (6, 12, 8);
+        let a = randv(&mut rng, n * k);
+        let b = randv(&mut rng, k * m);
+        let mut via_selector = vec![0f32; n * m];
+        let mut direct = vec![0f32; n * m];
+        GemmKernels::Simd.mm_nn(&a, &b, n, k, m, &mut via_selector);
+        mm_nn(&a, &b, n, k, m, &mut direct);
+        assert_eq!(via_selector, direct);
+    }
+
+    #[test]
+    fn zero_dims_are_noops() {
+        let mut out = vec![3.0f32; 6];
+        mm_nn(&[], &[], 2, 0, 3, &mut out);
+        mm_nt(&[], &[], 2, 0, 3, &mut out);
+        assert_eq!(out, vec![3.0; 6]);
+        let mut empty: Vec<f32> = Vec::new();
+        mm_tn(&[], &[], 0, 0, 0, &mut empty);
+    }
+}

@@ -12,10 +12,12 @@
 //!                                   --inject-fault run the elastic
 //!                                   fault-tolerant loop, docs/RESILIENCE.md)
 //!   serve      --load CK          — continuous-batching inference engine
-//!                                   over a trained checkpoint
+//!                                   over a trained checkpoint (--precision
+//!                                   bf16|int8 serves quantized weights on
+//!                                   the SIMD kernel tier)
 //!   infer      --load CK          — one forward-only inference pass
 //!                                   (--topology dp=1,ep=E shards experts
-//!                                   over rank threads)
+//!                                   over rank threads, --precision as serve)
 //!   bench-gate --baseline B --current C — CI bench regression gate
 //!   check-docs                    — markdown relative-link check (CI docs job)
 //!   upcycle    --dense CK --model M — run checkpoint surgery, save sparse CK
@@ -29,6 +31,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use sparse_upcycle::checkpoint::quant::{quantize_params, Precision};
 use sparse_upcycle::checkpoint::Checkpoint;
 use sparse_upcycle::coordinator::fewshot::{fewshot_accuracy, FewShotConfig};
 use sparse_upcycle::coordinator::{train, DpConfig, MeshConfig, TrainState};
@@ -195,6 +198,34 @@ fn serve_spec_from_args(a: &Args) -> Result<serve::ServeSpec> {
     Ok(spec)
 }
 
+/// Resolve `--precision f32|bf16|int8` for the forward-only commands.
+/// Quantization is inference-only by contract (docs/SERVING.md): `train`
+/// rejects the flag by name instead of silently ignoring it, and unknown
+/// values fail with the expected spellings.
+fn precision_from_args(a: &Args, cmd: &str) -> Result<Precision> {
+    match a.flags.get("precision") {
+        None => Ok(Precision::F32),
+        Some(_) if cmd == "train" => bail!(
+            "--precision is inference-only (quantized weights would break the training \
+             bitwise contracts); drop it from `upcycle train` and pass it to \
+             `upcycle infer` / `upcycle serve` instead"
+        ),
+        Some(s) => Precision::parse(s),
+    }
+}
+
+/// Runtime for the forward-only commands: full precision keeps the
+/// manifest-selected backend; a quantized precision opts into the SIMD
+/// kernel tier (the low-precision path is native-only and benefits most
+/// from the vectorized GEMMs).
+fn serving_runtime(manifest: &Manifest, precision: Precision) -> Result<Runtime> {
+    if precision == Precision::F32 {
+        Runtime::for_manifest(manifest)
+    } else {
+        Runtime::native_simd()
+    }
+}
+
 fn run() -> Result<()> {
     let a = Args::from_env()?;
     let cmd = a.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -334,6 +365,8 @@ fn run() -> Result<()> {
             Ok(())
         }
         "train" => {
+            // Fails fast if --precision was given: inference-only flag.
+            precision_from_args(&a, cmd)?;
             let model_name = a.req("model")?;
             let steps = a.u64("steps", 400)?;
             // One parallel plan for every engine: `--topology` (or a
@@ -505,11 +538,12 @@ fn run() -> Result<()> {
         }
         "infer" => {
             let load = a.req("load")?.to_string();
+            let precision = precision_from_args(&a, cmd)?;
             let manifest = Manifest::load_or_native(&artifacts)?;
             let header = Checkpoint::load(&load)?;
             let model_name = a.str("model", &header.model);
             let entry = manifest.model(&model_name)?.clone();
-            let runtime = Runtime::for_manifest(&manifest)?;
+            let runtime = serving_runtime(&manifest, precision)?;
             let model = runtime.load_model(&manifest, &model_name, &["eval"])?;
             let (params, step) = load_serving_params(&header, &entry)?;
             let n = a.usize("requests", 4)?.max(1);
@@ -536,11 +570,16 @@ fn run() -> Result<()> {
             let gap_us = serve::ServeSpec::default().gap_us;
             let trace = serve::synthetic_trace(&entry, n, a.u64("seed", 17)?, gap_us);
             let inputs = serve::stack_inputs(&trace)?;
-            let out = serve::mesh_infer(&model, &params, &inputs, &topo, microbatches)?;
+            let out = serve::mesh_infer(&model, &params, &inputs, &topo, microbatches, precision)?;
             println!(
-                "{model_name} @ step {step}: {n} example(s){}",
+                "{model_name} @ step {step}: {n} example(s){}{}",
                 if ep > 1 {
                     format!(", experts sharded over {ep} expert-parallel rank(s)")
+                } else {
+                    String::new()
+                },
+                if precision != Precision::F32 {
+                    format!(", {} weights (f32 accumulate)", precision.as_str())
                 } else {
                     String::new()
                 }
@@ -554,13 +593,17 @@ fn run() -> Result<()> {
         }
         "serve" => {
             let load = a.req("load")?.to_string();
+            let precision = precision_from_args(&a, cmd)?;
             let manifest = Manifest::load_or_native(&artifacts)?;
             let header = Checkpoint::load(&load)?;
             let model_name = a.str("model", &header.model);
             let entry = manifest.model(&model_name)?.clone();
-            let runtime = Runtime::for_manifest(&manifest)?;
+            let runtime = serving_runtime(&manifest, precision)?;
             let model = runtime.load_model(&manifest, &model_name, &["eval"])?;
             let (params, step) = load_serving_params(&header, &entry)?;
+            // Quantize once at load: every engine batch binds the same
+            // quantized snapshot (the Engine itself stays precision-blind).
+            let params = quantize_params(&entry, &params, precision)?;
             let n = a.usize("requests", 32)?;
             let seed = a.u64("seed", 17)?;
             let tpr = serve::tokens_per_request(&entry);
@@ -568,10 +611,15 @@ fn run() -> Result<()> {
             spec.validate(&entry)?;
             println!(
                 "serving {model_name} @ step {step}: {n} request(s), policy {}, \
-                 token budget {} ({tpr} tokens/request){}",
+                 token budget {} ({tpr} tokens/request){}{}",
                 spec.policy.name(),
                 spec.resolved_batch_tokens(&entry),
-                if spec.max_batch_requests == 1 { " [unbatched]" } else { "" }
+                if spec.max_batch_requests == 1 { " [unbatched]" } else { "" },
+                if precision != Precision::F32 {
+                    format!(", {} weights (f32 accumulate)", precision.as_str())
+                } else {
+                    String::new()
+                }
             );
             let trace = match a.flags.get("traffic") {
                 Some(shape) => {
@@ -881,10 +929,12 @@ USAGE:
   upcycle serve   --load <ck.supc> [--model <name>] [--requests N]
                   [--serve policy=fifo|priority|fair|slo,budget=T,max-batch=N,
                            queue=Q,shed=reject|evict,gap=G,floor=F,slo=D]
+                  [--precision f32|bf16|int8]  # quantized weights, SIMD kernels
                   [--traffic uniform|bursty|diurnal|adversarial] [--tenants N]
                   [--seed S] [--verbose]  # policy-driven continuous batching
   upcycle infer   --load <ck.supc> [--model <name>] [--requests N]
                   [--topology dp=1,ep=E] [--microbatches M]
+                  [--precision f32|bf16|int8]  # quantized weights, SIMD kernels
   upcycle upcycle --dense <ck.supc> --model <sparse-name> [--random-experts]
                   [--strategy replicate|drop-upcycle|split|multi-checkpoint]
                   [--reinit-fraction F] [--strategy-seed S]  # drop-upcycle
@@ -913,4 +963,52 @@ use sparse_upcycle::coordinator::Evaluator as _EvaluatorDoc;
 #[allow(unused)]
 fn _doc_anchor() {
     let _ = train;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    /// `--precision` parse matrix: accepted spellings on the forward-only
+    /// commands, rejected by name on `train` and on unknown values.
+    #[test]
+    fn precision_flag_parse_matrix() {
+        for cmd in ["infer", "serve"] {
+            let a = parse(&format!("{cmd} --load ck.supc"));
+            assert_eq!(precision_from_args(&a, cmd).unwrap(), Precision::F32);
+            for (spelling, want) in [
+                ("f32", Precision::F32),
+                ("bf16", Precision::Bf16),
+                ("int8", Precision::Int8PerChannel),
+            ] {
+                let a = parse(&format!("{cmd} --load ck.supc --precision {spelling}"));
+                assert_eq!(precision_from_args(&a, cmd).unwrap(), want, "{cmd} {spelling}");
+            }
+            for bad in ["fp16", "int4", "F32"] {
+                let a = parse(&format!("{cmd} --load ck.supc --precision {bad}"));
+                let err = precision_from_args(&a, cmd).unwrap_err();
+                assert!(
+                    format!("{err:#}").contains("unknown precision"),
+                    "{cmd} {bad}: {err:#}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_rejects_precision_by_name() {
+        // Without the flag, train resolves to implicit f32 like everyone.
+        let a = parse("train --model lm_tiny_dense");
+        assert_eq!(precision_from_args(&a, "train").unwrap(), Precision::F32);
+        // With it — even spelled validly — train fails loudly.
+        for spelling in ["f32", "bf16", "int8"] {
+            let a = parse(&format!("train --model lm_tiny_dense --precision {spelling}"));
+            let err = precision_from_args(&a, "train").unwrap_err();
+            assert!(format!("{err:#}").contains("inference-only"), "{spelling}: {err:#}");
+        }
+    }
 }

@@ -27,6 +27,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::checkpoint::quant::Precision;
 use crate::linalg::gemm::GemmKernels;
 use crate::manifest::{Manifest, ModelEntry, MoeSpec, TensorSpec};
 use crate::tensor::Tensor;
@@ -548,6 +549,41 @@ impl LoadedModel {
         self.check_infer_inputs(inputs)?;
         self.exec.infer_ep(params, inputs, exchange)
     }
+
+    /// [`LoadedModel::infer`] at a serving [`Precision`]: non-f32
+    /// precisions run on load-time-quantized weights
+    /// (`checkpoint::quant::quantize_params`, applied per call — batch
+    /// serving paths that reuse weights quantize once up front instead).
+    /// `Precision::F32` is exactly [`LoadedModel::infer`].
+    pub fn infer_prec(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        precision: Precision,
+    ) -> Result<InferOutput> {
+        if precision == Precision::F32 {
+            return self.infer(params, inputs);
+        }
+        let q = crate::checkpoint::quant::quantize_params(&self.entry, params, precision)?;
+        self.infer(&q, inputs)
+    }
+
+    /// [`LoadedModel::infer_ep`] at a serving [`Precision`]; see
+    /// [`LoadedModel::infer_prec`]. `serve::mesh_infer` quantizes once
+    /// before its rank fan-out rather than through this per-call wrapper.
+    pub fn infer_ep_prec(
+        &self,
+        params: &[Tensor],
+        inputs: &[Tensor],
+        exchange: &mut dyn ExpertExchange,
+        precision: Precision,
+    ) -> Result<InferOutput> {
+        if precision == Precision::F32 {
+            return self.infer_ep(params, inputs, exchange);
+        }
+        let q = crate::checkpoint::quant::quantize_params(&self.entry, params, precision)?;
+        self.infer_ep(&q, inputs, exchange)
+    }
 }
 
 /// Backend selector + the façade the rest of the crate uses.
@@ -559,6 +595,14 @@ impl Runtime {
     /// Default runtime: the native pure-Rust CPU backend.
     pub fn new() -> Result<Runtime> {
         Ok(Runtime { backend: Box::new(native::NativeBackend::new()) })
+    }
+
+    /// Native backend on the vectorized inference kernels
+    /// (`GemmKernels::Simd`): what `infer`/`serve --precision` load so the
+    /// quantized path also runs the fast tier. Inference-only by
+    /// convention — the trainers always construct [`Runtime::new`].
+    pub fn native_simd() -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(native::NativeBackend::simd_kernels()) })
     }
 
     /// PJRT runtime over AOT HLO artifacts (requires the `pjrt` feature and

@@ -92,6 +92,14 @@ impl NativeBackend {
     pub fn reference_kernels() -> NativeBackend {
         NativeBackend { gemm: GemmKernels::Reference }
     }
+
+    /// Vectorized-kernel backend (`linalg::simd`): the inference tier the
+    /// serving CLI loads for `--precision`. The kernel family propagates
+    /// through `ExpertExchange::bind`, so EP-sharded expert compute runs
+    /// on the same tier as local compute.
+    pub fn simd_kernels() -> NativeBackend {
+        NativeBackend { gemm: GemmKernels::Simd }
+    }
 }
 
 impl Backend for NativeBackend {
@@ -99,6 +107,7 @@ impl Backend for NativeBackend {
         match self.gemm {
             GemmKernels::Blocked => "native-cpu".to_string(),
             GemmKernels::Reference => "native-cpu-reference".to_string(),
+            GemmKernels::Simd => "native-cpu-simd".to_string(),
         }
     }
 

@@ -80,7 +80,11 @@
 //! ranks: the batch shards over `ep` rank threads, each holding only its
 //! round-robin expert-weight shard (`runtime::ep::EpRankExchange`), token
 //! buffers crossing real all-to-all collectives — bitwise-identical to
-//! stepping the same shards serially with every expert local.
+//! stepping the same shards serially with every expert local. It takes a
+//! [`Precision`] and quantizes the weights **once** before the rank
+//! fan-out (`checkpoint::quant`), so every rank serves the same quantized
+//! snapshot; the engine's quantized path works the same way — the CLI
+//! quantizes once at load and hands the engine the quantized vector.
 
 pub mod admission;
 pub mod policy;
@@ -93,6 +97,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::checkpoint::quant::{quantize_params, Precision};
 use crate::coordinator::shard_batch;
 use crate::manifest::ModelEntry;
 use crate::parallel::collectives::{EpGroup, EP_ABORTED_MSG};
@@ -529,6 +534,7 @@ pub fn mesh_infer(
     inputs: &[Tensor],
     topo: &crate::parallel::MeshSpec,
     microbatches: usize,
+    precision: Precision,
 ) -> Result<InferOutput> {
     topo.validate(&model.entry, crate::parallel::MeshMode::Sim)?;
     if topo.data_parallel.max(1) != 1 {
@@ -538,6 +544,16 @@ pub fn mesh_infer(
             topo.data_parallel
         );
     }
+    // Quantize once, before the rank fan-out: every rank shard binds the
+    // same quantized weight snapshot, so EP-sharded quantized serving is
+    // bitwise-identical to the serial quantized path.
+    let quantized;
+    let params: &[Tensor] = if precision == Precision::F32 {
+        params
+    } else {
+        quantized = quantize_params(&model.entry, params, precision)?;
+        &quantized
+    };
     let ep = topo.expert_parallel.max(1);
     let microbatches = microbatches.max(1);
     if ep == 1 {
@@ -836,7 +852,7 @@ mod tests {
         }
         let topo = crate::parallel::MeshSpec::new(1, 2);
         for m in [1usize, 2, 4] {
-            let ep_out = mesh_infer(&model, &params, &inputs, &topo, m).unwrap();
+            let ep_out = mesh_infer(&model, &params, &inputs, &topo, m, Precision::F32).unwrap();
             assert_eq!(ep_out.predictions.i32s().unwrap(), &preds[..], "microbatches {m}");
             assert_eq!(ep_out.scores, scores, "microbatches {m}");
             assert_eq!(ep_out.predictions.shape[0], 4);
@@ -844,8 +860,44 @@ mod tests {
 
         // The unified plan is validated: a dp axis on a single serve call
         // is rejected up front.
-        let err = mesh_infer(&model, &params, &inputs, &crate::parallel::MeshSpec::new(2, 2), 1)
-            .unwrap_err();
+        let err = mesh_infer(
+            &model,
+            &params,
+            &inputs,
+            &crate::parallel::MeshSpec::new(2, 2),
+            1,
+            Precision::F32,
+        )
+        .unwrap_err();
         assert!(format!("{err:#}").contains("dp=2"), "{err:#}");
+    }
+
+    /// Quantized EP-sharded serving keeps the mesh contract: for each
+    /// non-f32 precision, `mesh_infer` over 2 ranks is bitwise-identical
+    /// to running the same shards serially on the once-quantized weights.
+    #[test]
+    fn quantized_mesh_infer_matches_serial_quantized_shards() {
+        let (entry, model, params) = setup("lm_tiny_moe_e8_c2");
+        let trace = synthetic_trace(&entry, 4, 19, 0);
+        let inputs = stack_inputs(&trace).unwrap();
+        let topo = crate::parallel::MeshSpec::new(1, 2);
+        for precision in [Precision::Bf16, Precision::Int8PerChannel] {
+            let q = crate::checkpoint::quant::quantize_params(&entry, &params, precision).unwrap();
+            let mut preds = Vec::new();
+            let mut scores = Vec::new();
+            for shard in &shard_batch(&inputs, 2).unwrap() {
+                let o = model.infer(&q, shard).unwrap();
+                preds.extend_from_slice(o.predictions.i32s().unwrap());
+                scores.extend_from_slice(&o.scores);
+            }
+            let ep_out = mesh_infer(&model, &params, &inputs, &topo, 2, precision).unwrap();
+            assert_eq!(
+                ep_out.predictions.i32s().unwrap(),
+                &preds[..],
+                "{} mesh predictions must match serial quantized shards",
+                precision.as_str()
+            );
+            assert_eq!(ep_out.scores, scores, "{}", precision.as_str());
+        }
     }
 }
