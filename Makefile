@@ -5,11 +5,11 @@
 
 .PHONY: verify build test test-release docs bench-compile bench-json bench-gate bench-baseline \
         check-features kernel-props fmt fmt-check clippy quickstart mesh-smoke serve-smoke \
-        chaos-smoke strategy-smoke serving-load-smoke artifacts clean
+        chaos-smoke strategy-smoke serving-load-smoke sweep-smoke artifacts clean
 
 verify: build test test-release fmt-check clippy docs bench-compile bench-json bench-gate \
         check-features kernel-props quickstart mesh-smoke serve-smoke chaos-smoke \
-        strategy-smoke serving-load-smoke
+        strategy-smoke serving-load-smoke sweep-smoke
 
 build:
 	cargo build --release
@@ -152,6 +152,17 @@ serving-load-smoke:
 	  --requests 32 --traffic bursty --tenants 4 --serve policy=fair,queue=8,shed=evict
 	cargo run --release -- serve --load results/checkpoints/serving_load_smoke.supc \
 	  --requests 32 --traffic bursty --tenants 4 --serve policy=slo,queue=8,slo=20000
+
+# Scaling-law sweep smoke: a tiny 2x2 grid (experts x budget) through the
+# concurrent scheduler on 2 cores, then `sweep fit` over the results store
+# (docs/SWEEPS.md). `sweep` exits nonzero on any missing/failed leg and
+# `sweep fit` re-checks completeness and refuses non-finite fits, so both
+# legs are real assertions, not liveness checks.
+sweep-smoke:
+	cargo run --release -- sweep \
+	  --sweep sunk=10,experts=2+8,budget=4+8,eval=4 --cores 2 \
+	  --results results/SWEEP_smoke.json
+	cargo run --release -- sweep fit --results results/SWEEP_smoke.json
 
 # AOT artifacts for the PJRT backend (requires the Python toolchain; not
 # needed for the default native build). Written under rust/ because cargo

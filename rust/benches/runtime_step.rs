@@ -55,6 +55,7 @@ use sparse_upcycle::parallel::collectives::Interconnect;
 use sparse_upcycle::runtime::native::NativeBackend;
 use sparse_upcycle::runtime::{Backend, LoadedModel, Runtime};
 use sparse_upcycle::serve;
+use sparse_upcycle::sweep;
 use sparse_upcycle::util::bench::{
     bench, phases_enable, phases_reset, phases_snapshot, BenchResult,
 };
@@ -714,6 +715,60 @@ fn serving_load_section(manifest: &Manifest, runtime: &Runtime) -> Json {
     ])
 }
 
+/// The sweep lab's *planning* path (spec parse → leg enumeration → cost
+/// pricing → LPT packing) and the power-law fitter — the pure-CPU overhead
+/// the scheduler wraps around training (docs/SWEEPS.md). No legs train
+/// here; the point is that planning a 24-leg grid is microseconds, so the
+/// sweep harness adds nothing measurable to a run.
+fn sweep_section(manifest: &Manifest, target_ms: u64) -> Json {
+    println!("== sweep lab: plan + fit overhead ==");
+    let text = "sunk=30+60,experts=2+8+16,capacity=2,strategy=replicate+drop,\
+                reinit=0.25,budget=20+40";
+    let cores = 4usize;
+    let spec = sweep::SweepSpec::parse(text).unwrap();
+    let legs = spec.legs(manifest, 17).unwrap();
+    let r_plan = bench("sweep plan (parse+legs+price+pack)", target_ms, || {
+        let spec = sweep::SweepSpec::parse(text).unwrap();
+        let legs = spec.legs(manifest, 17).unwrap();
+        let priced = sweep::price_legs(manifest, &legs).unwrap();
+        std::hint::black_box(sweep::pack(&priced, cores));
+    });
+    println!("  ↳ {:.1} µs per {}-leg plan", r_plan.mean_ns / 1e3, legs.len());
+
+    let priced = sweep::price_legs(manifest, &legs).unwrap();
+    let packing = sweep::pack(&priced, cores);
+    // LPT balance: heaviest bin over the perfectly-even share (1.0 = ideal).
+    let balance = packing.makespan_flops / (packing.total_flops / cores as f64);
+    println!("  ↳ packed onto {cores} cores, makespan/ideal = {balance:.3}");
+
+    // Fitter on a synthetic exact power law over this grid's priced axes.
+    let points: Vec<sweep::fit::FitPoint> = legs
+        .iter()
+        .zip(&priced)
+        .map(|(leg, p)| sweep::fit::FitPoint {
+            label: leg.label(),
+            loss: 3.0
+                * p.sunk.flops.powf(-0.1)
+                * (leg.experts as f64).powf(-0.05)
+                * p.extra.flops.powf(-0.2),
+            regressors: [p.sunk.flops, leg.experts as f64, p.extra.flops],
+        })
+        .collect();
+    let r_fit = bench("sweep power-law fit", target_ms, || {
+        std::hint::black_box(sweep::fit::power_law_fit(&points).unwrap());
+    });
+    println!("  ↳ {:.1} µs per {}-point fit\n", r_fit.mean_ns / 1e3, points.len());
+
+    obj(vec![
+        ("spec", s(text)),
+        ("grid_legs", num(legs.len() as f64)),
+        ("cores", num(cores as f64)),
+        ("makespan_over_ideal", num(balance)),
+        ("plan", result_json(&r_plan, legs.len() as f64, 0.0)),
+        ("fit", result_json(&r_fit, points.len() as f64, 0.0)),
+    ])
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let full = args.iter().any(|a| a == "--full");
@@ -759,6 +814,7 @@ fn main() {
     let inference = inference_section(&manifest, &runtime, t_eval);
     let quantized_inference = quantized_inference_section(&manifest, t_eval);
     let serving_load = serving_load_section(&manifest, &runtime);
+    let sweep_lab = sweep_section(&manifest, t_kern);
 
     let mut model_entries = Vec::new();
     for name in variants {
@@ -907,6 +963,7 @@ fn main() {
         ("inference", inference),
         ("quantized_inference", quantized_inference),
         ("serving_load", serving_load),
+        ("sweep", sweep_lab),
         ("models", arr(model_entries)),
     ]);
     std::fs::write(&json_out, report.to_string()).expect("writing bench JSON");

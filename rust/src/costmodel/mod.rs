@@ -45,10 +45,13 @@ impl Cost {
     }
 
     /// Cost relative to a reference (the dense checkpoint's sunk cost), in
-    /// percent — the paper's "Relative Extra" columns.
+    /// percent — the paper's "Relative Extra" columns. A zero-cost
+    /// reference has no meaningful ratio, so it yields `NaN` (which every
+    /// downstream writer renders visibly) rather than a misleading "0% of
+    /// sunk cost" when there is no sunk cost at all.
     pub fn relative_pct(&self, reference: &Cost) -> f64 {
         if reference.flops == 0.0 {
-            return 0.0;
+            return f64::NAN;
         }
         100.0 * self.flops / reference.flops
     }
@@ -136,7 +139,9 @@ mod tests {
         assert!((a.exaflops() - 2.0).abs() < 1e-12);
         assert!((a.relative_pct(&b) - 200.0).abs() < 1e-9);
         assert!(a.core_days() > 0.0);
-        assert_eq!(Cost::zero().relative_pct(&Cost::zero()), 0.0);
+        // A zero-cost reference is meaningless, never "0%".
+        assert!(Cost::zero().relative_pct(&Cost::zero()).is_nan());
+        assert!(a.relative_pct(&Cost::zero()).is_nan());
     }
 
     #[test]

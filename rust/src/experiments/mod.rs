@@ -83,8 +83,10 @@ pub struct Ctx {
     pub verbose: bool,
     /// In-process executable cache: XLA compilation of one train-step module
     /// takes ~30s on this CPU (see EXPERIMENTS.md §Perf), and the ablation
-    /// suite revisits the same models repeatedly.
-    cache: std::cell::RefCell<BTreeMap<String, std::rc::Rc<LoadedModel>>>,
+    /// suite revisits the same models repeatedly. `Mutex` + `Arc` (not
+    /// `RefCell` + `Rc`) so cached handles can cross threads — the sweep
+    /// scheduler's workers hand `LoadedModel`s to scoped worker threads.
+    cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<LoadedModel>>>,
 }
 
 impl Ctx {
@@ -98,33 +100,37 @@ impl Ctx {
             ck_dir: PathBuf::from(out_dir).join("checkpoints"),
             p,
             verbose,
-            cache: std::cell::RefCell::new(BTreeMap::new()),
+            cache: std::sync::Mutex::new(BTreeMap::new()),
         })
     }
 
     /// Compile-once model loading. On a cache hit that lacks a requested
     /// executable kind, the model is recompiled with the union of kinds.
-    pub fn load(&self, name: &str, kinds: &[&str]) -> Result<std::rc::Rc<LoadedModel>> {
-        if let Some(m) = self.cache.borrow().get(name) {
+    pub fn load(&self, name: &str, kinds: &[&str]) -> Result<std::sync::Arc<LoadedModel>> {
+        // Union with whatever an earlier caller compiled so nothing is lost
+        // on recompile — derived from the cached model's *actual* kinds,
+        // not a hardcoded list (a compiled kind outside train/eval/features
+        // used to be silently dropped here). The lock is never held across
+        // the compile itself.
+        let mut union: Vec<String> = kinds.iter().map(|k| k.to_string()).collect();
+        if let Some(m) = self.cache.lock().unwrap().get(name) {
             if kinds.iter().all(|k| m.has(k) || !m.entry.artifacts.contains_key(*k)) {
                 return Ok(m.clone());
             }
-        }
-        // Union with whatever an earlier caller compiled so nothing is lost.
-        let mut union: Vec<&str> = kinds.to_vec();
-        if let Some(m) = self.cache.borrow().get(name) {
-            for k in ["train", "eval", "features"] {
-                if m.has(k) && !union.contains(&k) {
-                    union.push(k);
+            for k in m.entry.artifacts.keys() {
+                if m.has(k) && !union.iter().any(|u| u == k) {
+                    union.push(k.clone());
                 }
             }
         }
+        let union: Vec<&str> = union.iter().map(|k| k.as_str()).collect();
         let t0 = std::time::Instant::now();
-        let model = std::rc::Rc::new(self.runtime.load_model(&self.manifest, name, &union)?);
+        let model =
+            std::sync::Arc::new(self.runtime.load_model(&self.manifest, name, &union)?);
         if self.verbose {
             println!("  compiled {name} {union:?} in {:.1}s", t0.elapsed().as_secs_f64());
         }
-        self.cache.borrow_mut().insert(name.to_string(), model.clone());
+        self.cache.lock().unwrap().insert(name.to_string(), model.clone());
         Ok(model)
     }
 
@@ -269,7 +275,7 @@ impl Ctx {
         &self,
         parent: &(Checkpoint, Checkpoint),
         name: &str,
-    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+    ) -> Result<(std::sync::Arc<LoadedModel>, TrainState)> {
         let entry = self.entry(name)?.clone();
         let model = self.load(name, &["train", "eval"])?;
         let state = TrainState::from_checkpoints(&entry, &parent.0, &parent.1)?;
@@ -283,7 +289,7 @@ impl Ctx {
         sparse_name: &str,
         opts: &UpcycleOptions,
         load_optimizer: bool,
-    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+    ) -> Result<(std::sync::Arc<LoadedModel>, TrainState)> {
         self.branch_upcycle_kinds(parent, sparse_name, opts, load_optimizer, &["train", "eval"])
     }
 
@@ -297,7 +303,7 @@ impl Ctx {
         opts: &UpcycleOptions,
         load_optimizer: bool,
         kinds: &[&str],
-    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+    ) -> Result<(std::sync::Arc<LoadedModel>, TrainState)> {
         let entry = self.entry(sparse_name)?.clone();
         let model = self.load(sparse_name, kinds)?;
         let params = upcycle_params(&parent.0, &entry, opts)
@@ -312,7 +318,7 @@ impl Ctx {
         &self,
         name: &str,
         seed: u64,
-    ) -> Result<(std::rc::Rc<LoadedModel>, TrainState)> {
+    ) -> Result<(std::sync::Arc<LoadedModel>, TrainState)> {
         let entry = self.entry(name)?.clone();
         let model = self.load(name, &["train", "eval"])?;
         let state = TrainState::from_checkpoints(
@@ -519,4 +525,107 @@ pub fn run_by_id(ctx: &Ctx, id: &str) -> Result<Report> {
         }
     }
     bail!("unknown experiment `{id}`; use `list` to see ids")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, Executable, Metrics, StepOutput};
+    use crate::tensor::Tensor;
+    use std::sync::{Arc, Mutex};
+
+    /// Executable that only "has" the kinds it was compiled with — unlike
+    /// the native backend, whose compilation is free and which therefore
+    /// builds every kind regardless of the request (making cache recompile
+    /// behavior unobservable through it).
+    struct KindExec {
+        kinds: Vec<String>,
+    }
+
+    impl Executable for KindExec {
+        fn has(&self, kind: &str) -> bool {
+            self.kinds.iter().any(|k| k == kind)
+        }
+        fn train_step(
+            &self,
+            _params: Vec<Tensor>,
+            _opt_state: Vec<Tensor>,
+            _batch: &[Tensor],
+            _lr: f64,
+            _wd: f64,
+            _step: u64,
+        ) -> Result<StepOutput> {
+            bail!("stub executable")
+        }
+        fn eval_step(&self, _params: &[Tensor], _batch: &[Tensor]) -> Result<Metrics> {
+            bail!("stub executable")
+        }
+        fn features(&self, _params: &[Tensor], _images: &Tensor) -> Result<Tensor> {
+            bail!("stub executable")
+        }
+    }
+
+    /// Kind-respecting backend: compiles exactly the requested kinds and
+    /// logs each compile so the test can count them.
+    struct KindBackend {
+        log: Arc<Mutex<Vec<Vec<String>>>>,
+    }
+
+    impl Backend for KindBackend {
+        fn platform(&self) -> String {
+            "stub".to_string()
+        }
+        fn load_model(
+            &self,
+            manifest: &Manifest,
+            name: &str,
+            kinds: &[&str],
+        ) -> Result<LoadedModel> {
+            let kinds: Vec<String> = kinds.iter().map(|k| k.to_string()).collect();
+            self.log.lock().unwrap().push(kinds.clone());
+            Ok(LoadedModel::new(manifest.model(name)?.clone(), Box::new(KindExec { kinds })))
+        }
+    }
+
+    #[test]
+    fn recompile_unions_every_cached_kind_not_a_hardcoded_list() {
+        let mut manifest = Manifest::native();
+        // A kind outside the old hardcoded ["train","eval","features"]
+        // union list: the regression this test pins down is that a cached
+        // executable for such a kind was silently dropped on recompile.
+        let entry = manifest.models.get_mut("lm_tiny_dense").unwrap();
+        entry.artifacts.insert("probe".to_string(), "probe.hlo".to_string());
+
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let dir = std::env::temp_dir().join("supc_ctx_union_test");
+        let ctx = Ctx {
+            runtime: Runtime::from_backend(Box::new(KindBackend { log: log.clone() })),
+            manifest,
+            out_dir: dir.clone(),
+            ck_dir: dir.join("checkpoints"),
+            p: ExpParams::tiny(),
+            verbose: false,
+            cache: std::sync::Mutex::new(BTreeMap::new()),
+        };
+
+        // First load compiles only the probe kind.
+        let m1 = ctx.load("lm_tiny_dense", &["probe"]).unwrap();
+        assert!(m1.has("probe") && !m1.has("train"));
+
+        // Asking for train/eval forces a recompile; the cached probe
+        // executable must survive the union.
+        let m2 = ctx.load("lm_tiny_dense", &["train", "eval"]).unwrap();
+        assert!(m2.has("train") && m2.has("eval"));
+        assert!(m2.has("probe"), "recompile dropped the cached `probe` kind");
+
+        // Everything is now cached — no third compile.
+        let m3 = ctx.load("lm_tiny_dense", &["probe", "train"]).unwrap();
+        assert!(Arc::ptr_eq(&m2, &m3));
+
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), 2, "expected exactly 2 compiles, got {log:?}");
+        assert_eq!(log[0], vec!["probe".to_string()]);
+        assert!(log[1].contains(&"train".to_string()));
+        assert!(log[1].contains(&"probe".to_string()));
+    }
 }

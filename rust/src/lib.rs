@@ -39,6 +39,7 @@ pub mod parallel;
 pub mod resilience;
 pub mod runtime;
 pub mod serve;
+pub mod sweep;
 pub mod tensor;
 pub mod upcycle;
 pub mod util;

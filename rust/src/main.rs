@@ -24,6 +24,11 @@
 //!   eval       --model M --params CK — evaluate a checkpoint
 //!   fewshot    --model M --params CK — 10-shot linear probe (vision)
 //!   experiment <id>|all           — regenerate a paper figure/table
+//!   sweep      [--sweep SPEC]     — scaling-law sweep lab: price, pack onto
+//!                                   --cores worker threads, record every leg
+//!                                   to SWEEP_results.json (docs/SWEEPS.md)
+//!   sweep fit                     — power-law fit of final loss vs (sunk
+//!                                   cost, E, continuation budget)
 //!   mesh       --model M          — expert-parallel placement report (§A.4)
 //!
 //! Everything runs on the native CPU backend out of the box; `make
@@ -40,6 +45,7 @@ use sparse_upcycle::manifest::Manifest;
 use sparse_upcycle::parallel::{place, MeshSpec};
 use sparse_upcycle::runtime::Runtime;
 use sparse_upcycle::serve;
+use sparse_upcycle::sweep;
 use sparse_upcycle::upcycle::{
     router_init_from_args, strategy_from_args, upcycle_opt_state, upcycle_params, UpcycleOptions,
 };
@@ -871,6 +877,60 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
+        "sweep" => {
+            let results_default = std::path::Path::new(&out_dir)
+                .join("SWEEP_results.json")
+                .to_string_lossy()
+                .into_owned();
+            let results_path = a.str("results", &results_default);
+            match a.positional.get(1).map(|s| s.as_str()) {
+                None => {
+                    let spec = sweep::SweepSpec::parse(&a.str("sweep", ""))?;
+                    let mut cfg = sweep::SweepConfig::new(&artifacts, &out_dir);
+                    cfg.cores = a.usize("cores", 1)?;
+                    cfg.seed = a.u64("seed", cfg.seed)?;
+                    cfg.eval_batches = a.usize("eval-batches", cfg.eval_batches)?;
+                    cfg.results_path = std::path::PathBuf::from(&results_path);
+                    cfg.verbose = a.bool("verbose");
+                    let run = sweep::run_sweep(&spec, &cfg)?;
+                    if run.grid >= 2 {
+                        println!("  next: `upcycle sweep fit --results {results_path}`");
+                    }
+                    Ok(())
+                }
+                Some("fit") => {
+                    let store = sweep::store::ResultsStore::load(&results_path)?;
+                    let run = match a.flags.get("run") {
+                        Some(_) => {
+                            let i = a.usize("run", 0)?;
+                            store.runs.get(i).with_context(|| {
+                                format!(
+                                    "--run {i} out of range: store has {} run(s)",
+                                    store.runs.len()
+                                )
+                            })?
+                        }
+                        None => store.latest()?,
+                    };
+                    // Gate before fitting: a missing leg or a NaN loss is a
+                    // named failure (the CI sweep-smoke relies on the
+                    // nonzero exit), never a silently thinner fit.
+                    run.check_complete()?;
+                    println!(
+                        "fitting run over `{}` (seed {}, {} leg(s)):",
+                        run.spec,
+                        run.seed,
+                        run.legs.len()
+                    );
+                    let fit = sweep::fit::power_law_fit(&run.fit_points())?;
+                    fit.print();
+                    Ok(())
+                }
+                Some(other) => {
+                    bail!("unknown sweep subcommand `{other}` (expected `sweep` or `sweep fit`)")
+                }
+            }
+        }
         "comms" => {
             let model_name = a.req("model")?;
             let manifest = Manifest::load_or_native(&artifacts)?;
@@ -943,6 +1003,12 @@ USAGE:
                   [--router-init normal|virtual-groups] [--router-groups N]
                   [--diversity]       # print per-layer inter-expert diversity
                   [--expert-noise σ] [--dense-opt <ck>] [--load-optimizer]
+  upcycle sweep   [--sweep sunk=30+60,experts=2+8,capacity=2,router=ec,
+                           strategy=replicate+drop,reinit=0.25,budget=20+40,
+                           eval=10,parent=lm_tiny_dense]
+                  [--cores N]         # worker-thread budget (default 1)
+                  [--results <json>] [--seed S]  # scaling-law sweep lab
+  upcycle sweep fit [--results <json>] [--run I]  # power-law fit + residuals
   upcycle eval    --model <name> --params <ck.supc>
   upcycle fewshot --model <vit-name> --params <ck.supc> [--shots K]
   upcycle mesh    --model <name> [--topology dp=D,ep=E[,tp=T]]

@@ -23,7 +23,7 @@ pub struct Point {
 }
 
 /// A named training/eval curve (one line in one figure panel).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Series {
     pub name: String,
     pub points: Vec<Point>,
@@ -113,27 +113,7 @@ impl Report {
         let dir = dir.as_ref();
         std::fs::create_dir_all(dir)?;
         let path = dir.join(format!("{}.json", self.id));
-        let series = self
-            .series
-            .iter()
-            .map(|srs| {
-                let pts = srs
-                    .points
-                    .iter()
-                    .map(|p| {
-                        let mut fields = vec![
-                            ("step".to_string(), num(p.step as f64)),
-                            ("extra_flops".to_string(), num(p.extra_flops)),
-                        ];
-                        for (k, v) in &p.values {
-                            fields.push((k.clone(), num(*v)));
-                        }
-                        Json::Obj(fields.into_iter().collect())
-                    })
-                    .collect();
-                obj(vec![("name", s(&srs.name)), ("points", arr(pts))])
-            })
-            .collect();
+        let series = self.series.iter().map(series_json).collect();
         let root = obj(vec![
             ("id", s(&self.id)),
             ("title", s(&self.title)),
@@ -174,6 +154,45 @@ pub fn map(kv: &[(&str, f64)]) -> BTreeMap<String, f64> {
     kv.iter().map(|(k, v)| (k.to_string(), *v)).collect()
 }
 
+/// One [`Point`] as a JSON object — shared by [`Report::write_json`] and
+/// the sweep results store (`sweep::store`) so a trajectory serializes
+/// identically wherever it lands.
+pub fn point_json(p: &Point) -> Json {
+    let mut fields = vec![
+        ("step".to_string(), num(p.step as f64)),
+        ("extra_flops".to_string(), num(p.extra_flops)),
+    ];
+    for (k, v) in &p.values {
+        fields.push((k.clone(), num(*v)));
+    }
+    Json::Obj(fields.into_iter().collect())
+}
+
+/// One [`Series`] as a JSON object (`{"name": …, "points": […]}`).
+pub fn series_json(srs: &Series) -> Json {
+    obj(vec![("name", s(&srs.name)), ("points", arr(srs.points.iter().map(point_json).collect()))])
+}
+
+/// Inverse of [`series_json`]: every non-`step`/`extra_flops` numeric key
+/// of a point becomes a metric value.
+pub fn series_from_json(v: &Json) -> Result<Series> {
+    let mut srs = Series::new(v.get("name")?.as_str()?);
+    for p in v.get("points")?.as_arr()? {
+        let step = p.get("step")?.as_f64()? as u64;
+        let extra_flops = p.get("extra_flops")?.as_f64()?;
+        let mut values = BTreeMap::new();
+        if let Json::Obj(m) = p {
+            for (k, val) in m {
+                if k != "step" && k != "extra_flops" {
+                    values.insert(k.clone(), val.as_f64()?);
+                }
+            }
+        }
+        srs.points.push(Point { step, extra_flops, values });
+    }
+    Ok(srs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +215,18 @@ mod tests {
         assert_eq!(v.get("id").unwrap().as_str().unwrap(), "test_fig");
         assert_eq!(v.get("series").unwrap().as_arr().unwrap().len(), 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn series_json_round_trips() {
+        let mut srs = Series::new("upcycled");
+        srs.push(5, 1.5e11, map(&[("loss", 3.25), ("accuracy", 0.125)]));
+        srs.push(10, 3e11, map(&[("loss", 2.75)]));
+        let back = series_from_json(&series_json(&srs)).unwrap();
+        assert_eq!(back.name, srs.name);
+        assert_eq!(back.points, srs.points);
+        // Byte-stable: the same series always serializes identically
+        // (the sweep store's bitwise-determinism contract leans on this).
+        assert_eq!(series_json(&srs).to_string(), series_json(&back).to_string());
     }
 }

@@ -605,6 +605,14 @@ impl Runtime {
         Ok(Runtime { backend: Box::new(native::NativeBackend::simd_kernels()) })
     }
 
+    /// Wrap an arbitrary backend. Tests use this to inject kind-respecting
+    /// stubs (the native backend builds every kind for free, so cache
+    /// recompile behavior is unobservable through it); production code
+    /// uses the named constructors.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend }
+    }
+
     /// PJRT runtime over AOT HLO artifacts (requires the `pjrt` feature and
     /// a real xla crate in place of the vendored stub).
     #[cfg(feature = "pjrt")]

@@ -1,0 +1,284 @@
+//! Log-log least-squares power-law fits of final loss against the sweep's
+//! cost axes — the "Scaling Laws for Upcycling MoE" curve shape
+//! (PAPERS.md): `loss ≈ a · sunk^α · E^β · budget^γ`.
+//!
+//! Taking logs turns the model into ordinary multilinear least squares,
+//! `ln loss = ln a + α ln sunk + β ln E + γ ln budget`, solved exactly via
+//! the normal equations (≤ 4 unknowns — Gaussian elimination with partial
+//! pivoting, no iterative solver). Axes that do not vary across the sweep
+//! are excluded from the design matrix and reported as *not fitted* rather
+//! than producing a singular system; every degenerate input (too few legs,
+//! non-positive losses, collinear axes) is a named error, never a NaN fit.
+
+use anyhow::{bail, Result};
+
+/// Names of the fit's regressors, in [`FitPoint::regressors`] order.
+pub const REGRESSOR_NAMES: [&str; 3] = ["sunk_cost", "experts", "continuation_budget"];
+
+/// One leg's contribution to the fit.
+#[derive(Debug, Clone)]
+pub struct FitPoint {
+    /// Leg label carried into the per-point residual report.
+    pub label: String,
+    /// Final held-out loss (must be finite and > 0 — it is logged).
+    pub loss: f64,
+    /// `[sunk_flops, experts, budget_flops]` (each finite and > 0).
+    pub regressors: [f64; 3],
+}
+
+/// A fitted power law with per-point residuals.
+#[derive(Debug, Clone)]
+pub struct PowerLawFit {
+    /// Multiplicative coefficient `a` (e^intercept).
+    pub coefficient: f64,
+    /// Fitted exponent per regressor, [`REGRESSOR_NAMES`] order; `None`
+    /// when that axis was constant across the sweep (not fittable).
+    pub exponents: [Option<f64>; 3],
+    /// Per-leg log-space residual `ln(loss) − ln(prediction)`.
+    pub residuals: Vec<(String, f64)>,
+    /// Root-mean-square of the log-space residuals.
+    pub rmse: f64,
+    /// Number of legs the fit used.
+    pub points: usize,
+}
+
+impl PowerLawFit {
+    /// Model prediction at a grid point (unfitted axes contribute 1).
+    pub fn predict(&self, regressors: &[f64; 3]) -> f64 {
+        let mut y = self.coefficient;
+        for (x, e) in regressors.iter().zip(&self.exponents) {
+            if let Some(e) = e {
+                y *= x.powf(*e);
+            }
+        }
+        y
+    }
+
+    pub fn print(&self) {
+        let mut terms = format!("{:.6}", self.coefficient);
+        for (name, e) in REGRESSOR_NAMES.iter().zip(&self.exponents) {
+            match e {
+                Some(e) => terms.push_str(&format!(" · {name}^{e:+.4}")),
+                None => terms.push_str(&format!(" [{name}: constant, not fitted]")),
+            }
+        }
+        println!("  loss ≈ {terms}");
+        println!("  {} leg(s), log-space RMSE {:.6}", self.points, self.rmse);
+        for (label, r) in &self.residuals {
+            println!("    residual {label:<32} {r:+.6}");
+        }
+    }
+}
+
+/// Solve `A x = b` (A square, small) by Gaussian elimination with partial
+/// pivoting. A pivot collapsing to ~0 means the design matrix is rank
+/// deficient — collinear sweep axes — and is a named error.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Result<Vec<f64>> {
+    let n = b.len();
+    // Rank deficiency shows up as a pivot collapsing to rounding noise.
+    // Noise is relative to the matrix's own magnitude (XᵀX entries grow
+    // with n·ln²x ≈ 10³ here), so the threshold must be scale-free: an
+    // absolute cutoff would sit right at the cancellation residue.
+    let scale = a.iter().flatten().fold(1.0f64, |m, v| m.max(v.abs()));
+    for col in 0..n {
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .expect("non-empty system");
+        if a[pivot][col].abs() < 1e-9 * scale {
+            bail!("singular normal equations: the sweep's cost axes are collinear");
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for k in col + 1..n {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Ok(x)
+}
+
+/// Fit `loss = a · Π regressor^exponent` over `points` by exact log-log
+/// least squares. Named errors (never NaN): fewer than 2 legs, fewer legs
+/// than unknowns, non-finite/non-positive inputs, collinear axes.
+pub fn power_law_fit(points: &[FitPoint]) -> Result<PowerLawFit> {
+    if points.len() < 2 {
+        bail!(
+            "power-law fit needs at least 2 legs, got {} — run a sweep with a grid \
+             (e.g. two budgets) first",
+            points.len()
+        );
+    }
+    for p in points {
+        if !(p.loss.is_finite() && p.loss > 0.0) {
+            bail!("leg `{}` has unloggable final loss {} (need finite > 0)", p.label, p.loss);
+        }
+        for (name, x) in REGRESSOR_NAMES.iter().zip(&p.regressors) {
+            if !(x.is_finite() && *x > 0.0) {
+                bail!("leg `{}` has unloggable {name} {x} (need finite > 0)", p.label);
+            }
+        }
+    }
+    // Only axes that actually vary enter the design matrix; a constant
+    // column would make the normal equations singular against the
+    // intercept, and its exponent is unidentifiable anyway.
+    let active: Vec<usize> = (0..3)
+        .filter(|&j| {
+            let x0 = points[0].regressors[j].ln();
+            points.iter().any(|p| (p.regressors[j].ln() - x0).abs() > 1e-12)
+        })
+        .collect();
+    let unknowns = 1 + active.len();
+    if points.len() < unknowns {
+        bail!(
+            "power-law fit over {} varying axis(es) needs at least {unknowns} legs, got {}",
+            active.len(),
+            points.len()
+        );
+    }
+    // Design rows [1, ln x_j ...] and targets ln loss.
+    let rows: Vec<Vec<f64>> = points
+        .iter()
+        .map(|p| {
+            let mut row = vec![1.0];
+            row.extend(active.iter().map(|&j| p.regressors[j].ln()));
+            row
+        })
+        .collect();
+    let y: Vec<f64> = points.iter().map(|p| p.loss.ln()).collect();
+    // Normal equations XᵀX θ = Xᵀy.
+    let mut xtx = vec![vec![0.0; unknowns]; unknowns];
+    let mut xty = vec![0.0; unknowns];
+    for (row, yi) in rows.iter().zip(&y) {
+        for i in 0..unknowns {
+            for j in 0..unknowns {
+                xtx[i][j] += row[i] * row[j];
+            }
+            xty[i] += row[i] * yi;
+        }
+    }
+    let theta = solve(xtx, xty)?;
+    if theta.iter().any(|t| !t.is_finite()) {
+        bail!("power-law fit produced non-finite coefficients {theta:?}");
+    }
+    let mut exponents = [None; 3];
+    for (slot, &j) in active.iter().enumerate() {
+        exponents[j] = Some(theta[slot + 1]);
+    }
+    let mut residuals = Vec::with_capacity(points.len());
+    let mut sq = 0.0;
+    for (row, (p, yi)) in rows.iter().zip(points.iter().zip(&y)) {
+        let pred: f64 = row.iter().zip(&theta).map(|(x, t)| x * t).sum();
+        let r = yi - pred;
+        sq += r * r;
+        residuals.push((p.label.clone(), r));
+    }
+    Ok(PowerLawFit {
+        coefficient: theta[0].exp(),
+        exponents,
+        residuals,
+        rmse: (sq / points.len() as f64).sqrt(),
+        points: points.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(a: f64, alpha: f64, beta: f64, gamma: f64) -> Vec<FitPoint> {
+        let mut pts = Vec::new();
+        for (i, &sunk) in [1e15, 2e15, 4e15].iter().enumerate() {
+            for (j, &e) in [2.0, 8.0].iter().enumerate() {
+                for (k, &budget) in [5e14, 1e15].iter().enumerate() {
+                    pts.push(FitPoint {
+                        label: format!("p{i}{j}{k}"),
+                        loss: a * sunk.powf(alpha) * e.powf(beta) * budget.powf(gamma),
+                        regressors: [sunk, e, budget],
+                    });
+                }
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_synthetic_power_law_exactly() {
+        let fit = power_law_fit(&synth(3.0, -0.12, -0.05, -0.3)).unwrap();
+        // Exact data; tolerances cover the normal equations' conditioning
+        // (ln-regressors ≈ 35 correlate with the intercept).
+        assert!((fit.coefficient - 3.0).abs() < 1e-6, "a = {}", fit.coefficient);
+        assert!((fit.exponents[0].unwrap() + 0.12).abs() < 1e-6);
+        assert!((fit.exponents[1].unwrap() + 0.05).abs() < 1e-6);
+        assert!((fit.exponents[2].unwrap() + 0.3).abs() < 1e-6);
+        assert!(fit.rmse < 1e-8, "rmse {}", fit.rmse);
+        assert!(fit.residuals.iter().all(|(_, r)| r.abs() < 1e-7));
+    }
+
+    #[test]
+    fn constant_axes_are_reported_not_fitted() {
+        // Only the budget axis varies: E and sunk must come back None,
+        // and the fit stays exact.
+        let pts: Vec<FitPoint> = [5e14, 1e15, 2e15]
+            .iter()
+            .map(|&b| FitPoint {
+                label: format!("b{b}"),
+                loss: 2.0 * b.powf(-0.25),
+                regressors: [1e15, 8.0, b],
+            })
+            .collect();
+        let fit = power_law_fit(&pts).unwrap();
+        assert!(fit.exponents[0].is_none());
+        assert!(fit.exponents[1].is_none());
+        assert!((fit.exponents[2].unwrap() + 0.25).abs() < 1e-6);
+        assert!((fit.predict(&[9e99, 9e99, 1e15]) - 2.0 * 1e15f64.powf(-0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_named_errors_never_nan() {
+        // < 2 points.
+        let one = vec![FitPoint { label: "x".into(), loss: 1.0, regressors: [1.0, 2.0, 3.0] }];
+        let err = power_law_fit(&one).unwrap_err();
+        assert!(format!("{err:#}").contains("at least 2 legs"), "{err:#}");
+        assert!(power_law_fit(&[]).is_err());
+        // Non-positive loss.
+        let mut bad = synth(3.0, -0.1, -0.1, -0.1);
+        bad[0].loss = 0.0;
+        assert!(format!("{:#}", power_law_fit(&bad).unwrap_err()).contains("unloggable"));
+        let mut nan = synth(3.0, -0.1, -0.1, -0.1);
+        nan[0].loss = f64::NAN;
+        assert!(format!("{:#}", power_law_fit(&nan).unwrap_err()).contains("unloggable"));
+        // Fewer legs than unknowns: 2 points but 3 varying axes + intercept.
+        let thin = vec![
+            FitPoint { label: "a".into(), loss: 1.0, regressors: [1.0, 2.0, 3.0] },
+            FitPoint { label: "b".into(), loss: 2.0, regressors: [2.0, 4.0, 6.0] },
+        ];
+        let err = power_law_fit(&thin).unwrap_err();
+        assert!(format!("{err:#}").contains("needs at least"), "{err:#}");
+    }
+
+    #[test]
+    fn collinear_axes_are_a_named_error() {
+        // sunk and budget move in lockstep over 4+ points: rank deficient.
+        let pts: Vec<FitPoint> = [1e15, 2e15, 4e15, 8e15]
+            .iter()
+            .map(|&x| FitPoint {
+                label: format!("x{x}"),
+                loss: 2.0 * x.powf(-0.2),
+                regressors: [x, 8.0, x],
+            })
+            .collect();
+        let err = power_law_fit(&pts).unwrap_err();
+        assert!(format!("{err:#}").contains("collinear"), "{err:#}");
+    }
+}

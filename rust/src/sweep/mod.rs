@@ -1,0 +1,415 @@
+//! Scaling-law sweep lab (docs/SWEEPS.md): grid specs over the upcycling
+//! knobs, a cost-budgeted concurrent scheduler, an append-only results
+//! store, and power-law curve fitting.
+//!
+//! "Scaling Laws for Upcycling MoE" (PAPERS.md) fits upcycling outcomes as
+//! a function of dense sunk cost, expert count and continuation budget.
+//! This module turns the repo's one-off paper-figure runners into that
+//! lab: one validated [`SweepSpec`] enumerates the grid, every leg is
+//! **priced up front** via `costmodel` ([`price_legs`]), legs are packed
+//! onto `--cores` worker threads by deterministic LPT ([`pack`]), each
+//! worker runs its legs through the standard experiment harness
+//! ([`experiments::Ctx`](crate::experiments::Ctx), one context per
+//! worker — the execution [`Backend`](crate::runtime::Backend) is not
+//! `Send`), and results land in `SWEEP_results.json` ([`store`]).
+//!
+//! **Determinism contract:** the results store is a pure function of
+//! `(SweepSpec, seed)`. Worker count changes wall-clock only — legs are
+//! keyed and written in grid order, every leg trains under
+//! [`util::serial_compute`](crate::util::serial_compute) (so nested kernel
+//! parallelism can neither oversubscribe the `--cores` budget nor vary
+//! with it), and dense parents are pre-warmed serially before workers
+//! start so no two legs ever race to pretrain the same checkpoint.
+
+pub mod fit;
+pub mod spec;
+pub mod store;
+
+pub use spec::{Leg, RouterFamily, StrategyKind, SweepSpec};
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::costmodel::{surgery_cost, Cost, SurgeryCost};
+use crate::experiments::{Ctx, ExpParams};
+use crate::manifest::Manifest;
+use crate::metrics::{map, Report, Series};
+use crate::upcycle::diversity::expert_diversity;
+use crate::upcycle::{upcycle_opt_state, upcycle_params, UpcycleOptions};
+use store::{LegRecord, PricedCost, ResultsStore, SweepRun};
+
+/// Data shards 0..~1000 belong to the figure runners (1000 is the held-out
+/// eval shard); sweep legs draw from `SWEEP_SHARD_BASE + leg.index` so no
+/// leg ever shares a training stream with another leg or experiment.
+const SWEEP_SHARD_BASE: u64 = 2000;
+
+/// One leg with its up-front `costmodel` price attached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PricedLeg {
+    pub index: usize,
+    /// Dense-parent pretraining cost (shared across legs at the same sunk
+    /// point — the parent checkpoint is cached, not retrained per leg).
+    pub sunk: Cost,
+    /// Continuation cost: `budget_steps` on the MoE target.
+    pub extra: Cost,
+    pub surgery: SurgeryCost,
+}
+
+impl PricedLeg {
+    fn to_priced_cost(&self) -> PricedCost {
+        PricedCost {
+            sunk_flops: self.sunk.flops,
+            extra_flops: self.extra.flops,
+            relative_extra_pct: self.extra.relative_pct(&self.sunk),
+            surgery: self.surgery,
+        }
+    }
+}
+
+/// Price every leg of the grid from the manifest alone — no training, no
+/// tensors. This is what the scheduler packs against.
+pub fn price_legs(manifest: &Manifest, legs: &[Leg]) -> Result<Vec<PricedLeg>> {
+    legs.iter()
+        .map(|leg| {
+            let parent = manifest.model(&leg.parent)?;
+            let target = manifest.model(&leg.model)?;
+            Ok(PricedLeg {
+                index: leg.index,
+                sunk: Cost::of_steps(parent, leg.sunk_steps),
+                extra: Cost::of_steps(target, leg.budget_steps),
+                surgery: surgery_cost(target, &leg.strategy),
+            })
+        })
+        .collect()
+}
+
+/// A deterministic assignment of legs onto worker bins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packing {
+    /// `bins[w]` = leg indices worker `w` runs, in grid order.
+    pub bins: Vec<Vec<usize>>,
+    /// Priced FLOPs of the heaviest bin (the predicted critical path).
+    pub makespan_flops: f64,
+    /// Priced continuation FLOPs over all legs.
+    pub total_flops: f64,
+}
+
+/// Longest-processing-time bin packing of legs onto `cores` bins, weighted
+/// by priced continuation FLOPs. Fully deterministic: legs are considered
+/// heaviest-first (ties broken by grid index), each goes to the currently
+/// lightest bin (ties broken by lowest bin index), and each bin's legs are
+/// then sorted back into grid order. The packing only decides *where* a
+/// leg runs — never what it computes — so results are independent of it
+/// by construction; determinism here just keeps schedules reproducible.
+pub fn pack(priced: &[PricedLeg], cores: usize) -> Packing {
+    let bins_n = cores.min(priced.len()).max(1);
+    let mut order: Vec<usize> = (0..priced.len()).collect();
+    order.sort_by(|&a, &b| {
+        priced[b].extra.flops.total_cmp(&priced[a].extra.flops).then(a.cmp(&b))
+    });
+    let mut bins = vec![Vec::new(); bins_n];
+    let mut loads = vec![0.0f64; bins_n];
+    for i in order {
+        let lightest = (0..bins_n)
+            .min_by(|&a, &b| loads[a].total_cmp(&loads[b]).then(a.cmp(&b)))
+            .expect("at least one bin");
+        bins[lightest].push(i);
+        loads[lightest] += priced[i].extra.flops;
+    }
+    for bin in &mut bins {
+        bin.sort_unstable();
+    }
+    Packing {
+        bins,
+        makespan_flops: loads.iter().cloned().fold(0.0, f64::max),
+        total_flops: priced.iter().map(|p| p.extra.flops).sum(),
+    }
+}
+
+/// Everything about a sweep invocation that is *not* part of the results'
+/// identity: worker budget, file locations, eval sampling.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Worker-thread budget (`--cores`). The scheduler spawns at most this
+    /// many workers and each computes strictly serially.
+    pub cores: usize,
+    /// The sweep seed — with the spec, the results store's full identity.
+    pub seed: u64,
+    /// Eval batches per evaluation point.
+    pub eval_batches: usize,
+    pub artifacts: String,
+    pub out_dir: String,
+    /// The append-only results store (`SWEEP_results.json`).
+    pub results_path: PathBuf,
+    pub verbose: bool,
+}
+
+impl SweepConfig {
+    pub fn new(artifacts: &str, out_dir: &str) -> SweepConfig {
+        SweepConfig {
+            cores: 1,
+            seed: ExpParams::tiny().seed,
+            eval_batches: ExpParams::tiny().eval_batches,
+            artifacts: artifacts.to_string(),
+            out_dir: out_dir.to_string(),
+            results_path: PathBuf::from(out_dir).join("SWEEP_results.json"),
+            verbose: false,
+        }
+    }
+
+    fn exp_params(&self, spec: &SweepSpec) -> ExpParams {
+        ExpParams {
+            eval_every: spec.eval_every,
+            eval_batches: self.eval_batches,
+            seed: self.seed,
+            ..ExpParams::tiny()
+        }
+    }
+}
+
+/// Run one leg end to end inside `ctx`: load the cached dense parent,
+/// perform the surgery, measure init quality + expert diversity, continue
+/// training for the leg's budget, and fold everything into a [`LegRecord`]
+/// with the up-front price recorded next to the accounted cost. The body
+/// mirrors the strategy-zoo runner so sweep legs and figure runs measure
+/// the same quantities the same way.
+fn run_leg(ctx: &Ctx, leg: &Leg, priced: &PricedLeg) -> Result<LegRecord> {
+    let parent = ctx.dense_parent(&leg.parent, leg.sunk_steps)?;
+    let entry = ctx.entry(&leg.model)?.clone();
+    let opts = UpcycleOptions { strategy: leg.strategy.clone(), seed: ctx.p.seed, ..Default::default() };
+    let params = upcycle_params(&parent.0, &entry, &opts)
+        .with_context(|| format!("sweep leg `{}`: surgery", leg.label()))?;
+    let diversity = expert_diversity(&params, &entry)?;
+    let opt = upcycle_opt_state(&parent.1, &entry, false, &leg.strategy)?;
+    let model = ctx.load(&leg.model, &["train", "eval"])?;
+    let mut state = crate::coordinator::TrainState::from_checkpoints(&entry, &params, &opt)?;
+    let init = ctx.evaluator(&entry).eval(&model, &state)?;
+    let label = leg.label();
+    let trajectory = ctx.run_branch(
+        &model,
+        &mut state,
+        SWEEP_SHARD_BASE + leg.index as u64,
+        leg.budget_steps,
+        &label,
+    )?;
+    let last = trajectory
+        .last()
+        .ok_or_else(|| anyhow!("sweep leg `{label}` produced an empty trajectory"))?;
+    Ok(LegRecord {
+        index: leg.index,
+        label,
+        model: leg.model.clone(),
+        parent: leg.parent.clone(),
+        sunk_steps: leg.sunk_steps,
+        budget_steps: leg.budget_steps,
+        experts: leg.experts,
+        capacity: leg.capacity,
+        router: leg.router.name().to_string(),
+        strategy: leg.strategy_kind_name().to_string(),
+        priced: priced.to_priced_cost(),
+        accounted_extra_flops: last.extra_flops,
+        init_loss: init.get("loss").copied().unwrap_or(f64::NAN),
+        final_loss: last.values.get("loss").copied().unwrap_or(f64::NAN),
+        mean_cosine_diversity: diversity.mean_cosine_distance(),
+        trajectory,
+    })
+}
+
+/// Execute the whole sweep: price → pack → pre-warm parents → run legs on
+/// worker threads → append the run to the results store and mirror it as
+/// a `metrics::Report` (CSV + JSON) under `out_dir`. Returns the recorded
+/// run. Any leg failure fails the sweep (lowest leg index first) — legs
+/// are never silently dropped.
+pub fn run_sweep(spec: &SweepSpec, cfg: &SweepConfig) -> Result<SweepRun> {
+    if cfg.cores == 0 {
+        bail!("--cores must be >= 1");
+    }
+    let manifest = Manifest::load_or_native(&cfg.artifacts)?;
+    let legs = spec.legs(&manifest, cfg.seed)?;
+    let priced = price_legs(&manifest, &legs)?;
+    let packing = pack(&priced, cfg.cores);
+    println!(
+        "sweep: {} leg(s) over `{}`, seed {}",
+        legs.len(),
+        spec.canonical(),
+        cfg.seed
+    );
+    println!(
+        "  priced: {:.4} core-days continuation total, critical path {:.4} \
+         core-days on {} worker(s)",
+        Cost { flops: packing.total_flops }.core_days(),
+        Cost { flops: packing.makespan_flops }.core_days(),
+        packing.bins.len()
+    );
+
+    // Pre-warm every distinct dense parent serially: legs sharing a sunk
+    // point must share one checkpoint bitwise, so the pretrain never races.
+    let mut parents: Vec<(String, u64)> = Vec::new();
+    for leg in &legs {
+        let key = (leg.parent.clone(), leg.sunk_steps);
+        if !parents.contains(&key) {
+            parents.push(key);
+        }
+    }
+    {
+        let ctx = Ctx::new(&cfg.artifacts, &cfg.out_dir, cfg.exp_params(spec), cfg.verbose)?;
+        for (parent, sunk) in &parents {
+            crate::util::serial_compute(|| ctx.dense_parent(parent, *sunk))
+                .with_context(|| format!("pre-warming dense parent `{parent}` at {sunk} steps"))?;
+        }
+    }
+
+    // One worker thread per non-empty bin, one `Ctx` per worker (the
+    // backend is not Send). Each worker computes strictly serially, so at
+    // most `cores` threads ever compute at once.
+    let results: Mutex<Vec<(usize, Result<LegRecord>)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for bin in packing.bins.iter().filter(|b| !b.is_empty()) {
+            let (results, legs, priced) = (&results, &legs, &priced);
+            scope.spawn(move || {
+                let ctx = match Ctx::new(
+                    &cfg.artifacts,
+                    &cfg.out_dir,
+                    cfg.exp_params(spec),
+                    cfg.verbose,
+                ) {
+                    Ok(ctx) => ctx,
+                    Err(e) => {
+                        let mut out = results.lock().unwrap();
+                        for &i in bin {
+                            out.push((i, Err(anyhow!("sweep worker context: {e:#}"))));
+                        }
+                        return;
+                    }
+                };
+                for &i in bin {
+                    let r = crate::util::serial_compute(|| run_leg(&ctx, &legs[i], &priced[i]));
+                    results.lock().unwrap().push((i, r));
+                }
+            });
+        }
+    });
+
+    // Reassemble in grid order — the store must be independent of which
+    // worker finished when.
+    let mut results = results.into_inner().unwrap();
+    results.sort_by_key(|(i, _)| *i);
+    let mut records = Vec::with_capacity(legs.len());
+    for (i, r) in results {
+        let rec = r.with_context(|| format!("sweep leg `{}`", legs[i].label()))?;
+        println!(
+            "  [{}] init loss {:.4} → final loss {:.4} (+{:.4} priced core-days)",
+            rec.label,
+            rec.init_loss,
+            rec.final_loss,
+            Cost { flops: rec.priced.extra_flops }.core_days()
+        );
+        records.push(rec);
+    }
+    let run = SweepRun {
+        spec: spec.canonical(),
+        seed: cfg.seed,
+        grid: spec.grid_size(),
+        legs: records,
+    };
+    run.check_complete()?;
+
+    let mut store = ResultsStore::load_or_empty(&cfg.results_path)?;
+    store.append_run(run.clone());
+    store.save(&cfg.results_path)?;
+    println!("  results store: {} ({} run(s))", cfg.results_path.display(), store.runs.len());
+
+    // Mirror the run as a standard experiment report so the sweep plots
+    // with the same tooling as the paper figures.
+    let mut report = Report::new("sweep", "scaling-law sweep");
+    report.note(format!("spec: {}", run.spec));
+    report.note(format!("seed: {}", run.seed));
+    let mut summary = Series::new("sweep_summary");
+    for rec in &run.legs {
+        summary.push(
+            rec.index as u64,
+            rec.priced.extra_flops,
+            map(&[
+                ("init_loss", rec.init_loss),
+                ("final_loss", rec.final_loss),
+                ("mean_cosine_diversity", rec.mean_cosine_diversity),
+                ("priced_sunk_flops", rec.priced.sunk_flops),
+                ("accounted_extra_flops", rec.accounted_extra_flops),
+            ]),
+        );
+        report.add(rec.trajectory.clone());
+    }
+    report.add(summary);
+    report.write_csv(&cfg.out_dir)?;
+    report.write_json(&cfg.out_dir)?;
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn priced_with_flops(flops: &[f64]) -> Vec<PricedLeg> {
+        flops
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| PricedLeg {
+                index: i,
+                sunk: Cost { flops: 1e12 },
+                extra: Cost { flops: f },
+                surgery: SurgeryCost::default(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pricing_scales_with_budget_and_capacity() {
+        let m = Manifest::native();
+        let spec = SweepSpec::parse("capacity=1+2,budget=10+20").unwrap();
+        let legs = spec.legs(&m, 7).unwrap();
+        let priced = price_legs(&m, &legs).unwrap();
+        assert_eq!(priced.len(), 4);
+        // budget varies fastest: doubling it doubles the priced extra.
+        assert!((priced[1].extra.flops - 2.0 * priced[0].extra.flops).abs() < 1e-3);
+        // capacity=2 costs more per step than capacity=1.
+        assert!(priced[2].extra.flops > priced[0].extra.flops);
+        // Sunk cost is the parent's, identical across legs.
+        assert_eq!(priced[0].sunk, priced[3].sunk);
+        // Every leg's surgery is priced.
+        assert!(priced.iter().all(|p| p.surgery.bytes_copied > 0));
+    }
+
+    #[test]
+    fn pack_is_deterministic_and_respects_cores() {
+        let priced = priced_with_flops(&[5.0, 3.0, 8.0, 1.0, 4.0]);
+        for cores in [1, 2, 4, 8] {
+            let p = pack(&priced, cores);
+            assert_eq!(p, pack(&priced, cores), "cores={cores} not deterministic");
+            assert!(p.bins.len() <= cores, "cores={cores} exceeded");
+            // Every leg appears exactly once, each bin in grid order.
+            let mut seen: Vec<usize> = p.bins.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+            for bin in &p.bins {
+                assert!(bin.windows(2).all(|w| w[0] < w[1]));
+            }
+            assert!((p.total_flops - 21.0).abs() < 1e-12);
+            assert!(p.makespan_flops <= p.total_flops + 1e-12);
+        }
+        // LPT on 2 bins: 8+3 vs 5+4+1 → makespan 11 (better than naive 13).
+        let two = pack(&priced, 2);
+        assert!((two.makespan_flops - 11.0).abs() < 1e-12);
+        // One bin degenerates to the serial schedule.
+        assert_eq!(pack(&priced, 1).bins, vec![vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn pack_ties_break_by_index() {
+        // All-equal weights: round-robin by grid index, lowest bin first.
+        let priced = priced_with_flops(&[2.0, 2.0, 2.0, 2.0]);
+        let p = pack(&priced, 2);
+        assert_eq!(p.bins, vec![vec![0, 2], vec![1, 3]]);
+    }
+}

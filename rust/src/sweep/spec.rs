@@ -1,0 +1,479 @@
+//! The validated sweep plan: [`SweepSpec`], the one front door to the
+//! scaling-law lab's grid knobs — mirroring how `parallel::MeshSpec` is the
+//! one front door to the mesh and `serve::ServeSpec` to the scheduler. The
+//! CLI's consolidated `--sweep experts=…,budget=…` flag parses into a
+//! `SweepSpec` ([`SweepSpec::parse`]), every construction path funnels
+//! through [`SweepSpec::legs`] (which validates each leg against the model
+//! zoo), and the scheduler takes the spec whole.
+//!
+//! Grid axes (`+`-separated value lists, every key optional):
+//!
+//! ```text
+//! --sweep sunk=30+60,experts=2+8,capacity=2,router=ec,\
+//!         strategy=replicate+drop,reinit=0.25,budget=20+40,eval=10
+//! ```
+//!
+//! Leg order — and therefore the results store — is a pure function of the
+//! spec: the cartesian product is enumerated sunk → experts → capacity →
+//! router → strategy → budget, each axis in the user's spelling order.
+//! The full grammar lives in `docs/SWEEPS.md`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::upcycle::UpcycleStrategy;
+
+/// Which routing family a leg's MoE target uses. Families map onto zoo
+/// model-name suffixes (`lm_tiny_moe_e8_c2_top1`, …); the suffix-less
+/// default family is Expert Choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterFamily {
+    /// Expert Choice routing (the zoo's suffix-less default).
+    ExpertChoice,
+    Top1,
+    Top2,
+    /// Top-2 with batch-priority routing.
+    Top2Bpr,
+}
+
+impl RouterFamily {
+    pub fn parse(s: &str) -> Result<RouterFamily> {
+        match s {
+            "ec" => Ok(RouterFamily::ExpertChoice),
+            "top1" => Ok(RouterFamily::Top1),
+            "top2" => Ok(RouterFamily::Top2),
+            "top2bpr" => Ok(RouterFamily::Top2Bpr),
+            other => bail!("unknown router family `{other}` (expected ec|top1|top2|top2bpr)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterFamily::ExpertChoice => "ec",
+            RouterFamily::Top1 => "top1",
+            RouterFamily::Top2 => "top2",
+            RouterFamily::Top2Bpr => "top2bpr",
+        }
+    }
+
+    /// The zoo model-name suffix this family selects ("" for the default).
+    fn model_suffix(&self) -> &'static str {
+        match self {
+            RouterFamily::ExpertChoice => "",
+            RouterFamily::Top1 => "_top1",
+            RouterFamily::Top2 => "_top2",
+            RouterFamily::Top2Bpr => "_top2bpr",
+        }
+    }
+}
+
+/// Which [`UpcycleStrategy`] family a leg's surgery uses. The sweep grid
+/// carries the *kind*; [`SweepSpec::legs`] resolves it to a concrete
+/// strategy (Drop-Upcycling picks up the spec's `reinit` fraction and the
+/// sweep seed). Split / multi-checkpoint surgeries need per-leg target
+/// models and extra source bundles, so they stay one-off CLI runs
+/// (`upcycle upcycle --strategy …`) rather than sweep axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Replicate,
+    DropUpcycle,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Result<StrategyKind> {
+        match s {
+            "replicate" => Ok(StrategyKind::Replicate),
+            "drop" => Ok(StrategyKind::DropUpcycle),
+            other => bail!("unknown sweep strategy `{other}` (expected replicate|drop)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Replicate => "replicate",
+            StrategyKind::DropUpcycle => "drop",
+        }
+    }
+}
+
+/// The complete, validated sweep plan. Every field participates in the
+/// determinism contract: a sweep's leg list and results store are a pure
+/// function of `(SweepSpec, seed)` — worker count never changes them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    /// Dense-parent pretraining budgets in steps — the paper's *sunk cost*
+    /// axis. Parents are cached on disk per (parent, steps, seed), so every
+    /// leg sharing a sunk point shares the same checkpoint bitwise.
+    pub sunk: Vec<u64>,
+    /// Expert counts `E`.
+    pub experts: Vec<usize>,
+    /// Capacity factors `C` (integer, matching the zoo's `_c{C}` targets).
+    pub capacity: Vec<usize>,
+    /// Router families.
+    pub routers: Vec<RouterFamily>,
+    /// Upcycle strategy kinds.
+    pub strategies: Vec<StrategyKind>,
+    /// Drop-Upcycling re-init fraction (only meaningful when `strategies`
+    /// contains [`StrategyKind::DropUpcycle`]).
+    pub reinit_fraction: f32,
+    /// Continuation budgets in steps — how long each upcycled branch trains.
+    pub budgets: Vec<u64>,
+    /// Eval cadence inside each leg (0 = only the final point). Controls the
+    /// loss-trajectory density in the results store.
+    pub eval_every: u64,
+    /// Dense parent model (must end in `_dense`; the MoE target names are
+    /// derived from its prefix).
+    pub parent: String,
+}
+
+impl Default for SweepSpec {
+    fn default() -> SweepSpec {
+        SweepSpec {
+            sunk: vec![60],
+            experts: vec![8],
+            capacity: vec![2],
+            routers: vec![RouterFamily::ExpertChoice],
+            strategies: vec![StrategyKind::Replicate],
+            reinit_fraction: 0.25,
+            budgets: vec![40],
+            eval_every: 20,
+            parent: "lm_tiny_dense".to_string(),
+        }
+    }
+}
+
+/// One fully-resolved grid point: the sweep's unit of work. `index` is the
+/// leg's position in the spec's cartesian enumeration and keys the results
+/// store, the per-leg data shard and the scheduler's tie-breaking — all
+/// independent of how legs are packed onto cores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Leg {
+    pub index: usize,
+    pub sunk_steps: u64,
+    pub experts: usize,
+    pub capacity: usize,
+    pub router: RouterFamily,
+    pub strategy: UpcycleStrategy,
+    pub budget_steps: u64,
+    /// Resolved MoE target (validated against the manifest).
+    pub model: String,
+    pub parent: String,
+}
+
+impl Leg {
+    /// Short human/series label, stable across runs.
+    pub fn label(&self) -> String {
+        format!(
+            "leg{}_s{}_e{}_c{}_{}_{}_b{}",
+            self.index,
+            self.sunk_steps,
+            self.experts,
+            self.capacity,
+            self.router.name(),
+            self.strategy_kind_name(),
+            self.budget_steps
+        )
+    }
+
+    /// The grid-axis strategy spelling (`replicate` / `drop`), as opposed
+    /// to [`UpcycleStrategy::name`]'s canonical surgery name.
+    pub fn strategy_kind_name(&self) -> &'static str {
+        match self.strategy {
+            UpcycleStrategy::Replicate => "replicate",
+            UpcycleStrategy::DropUpcycle { .. } => "drop",
+            _ => "other",
+        }
+    }
+}
+
+fn parse_list<T>(
+    spec: &str,
+    key: &str,
+    value: &str,
+    mut one: impl FnMut(&str) -> Result<T>,
+) -> Result<Vec<T>>
+where
+    T: PartialEq,
+{
+    let mut out = Vec::new();
+    for part in value.split('+') {
+        if part.is_empty() {
+            bail!("sweep spec `{spec}`: `{key}={value}` has an empty list entry");
+        }
+        let v = one(part).with_context(|| format!("sweep spec `{spec}`: key `{key}`"))?;
+        if out.contains(&v) {
+            bail!("sweep spec `{spec}`: `{key}={value}` lists `{part}` twice");
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+impl SweepSpec {
+    /// Parse the consolidated CLI spelling: comma-separated `key=value`
+    /// pairs, `+`-separated value lists, every key optional, each at most
+    /// once. Syntax plus policy-foreign-knob rejection only — per-leg model
+    /// resolution lives in [`SweepSpec::legs`].
+    pub fn parse(s: &str) -> Result<SweepSpec> {
+        let mut spec = SweepSpec::default();
+        let mut seen: Vec<&str> = Vec::new();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("sweep spec `{s}`: expected `key=value`, got `{part}`"))?;
+            if seen.contains(&key) {
+                bail!("sweep spec `{s}`: key `{key}` given twice");
+            }
+            seen.push(key);
+            let usize_one = |v: &str| -> Result<usize> {
+                let n = v
+                    .parse::<usize>()
+                    .with_context(|| format!("`{key}={v}` is not a number"))?;
+                if n == 0 {
+                    bail!("`{key}` values must be >= 1");
+                }
+                Ok(n)
+            };
+            let u64_one = |v: &str| -> Result<u64> { usize_one(v).map(|n| n as u64) };
+            match key {
+                "sunk" => spec.sunk = parse_list(s, key, value, u64_one)?,
+                "experts" => spec.experts = parse_list(s, key, value, usize_one)?,
+                "capacity" => spec.capacity = parse_list(s, key, value, usize_one)?,
+                "router" => {
+                    spec.routers = parse_list(s, key, value, |v| RouterFamily::parse(v))?
+                }
+                "strategy" => {
+                    spec.strategies = parse_list(s, key, value, |v| StrategyKind::parse(v))?
+                }
+                "reinit" => {
+                    spec.reinit_fraction = value
+                        .parse::<f32>()
+                        .with_context(|| format!("sweep spec `{s}`: `reinit={value}`"))?;
+                    if !(spec.reinit_fraction > 0.0 && spec.reinit_fraction <= 1.0) {
+                        bail!(
+                            "sweep spec `{s}`: `reinit={value}` must be in (0, 1] \
+                             (reinit=0 is spelled strategy=replicate)"
+                        );
+                    }
+                }
+                "budget" => spec.budgets = parse_list(s, key, value, u64_one)?,
+                "eval" => {
+                    spec.eval_every = value
+                        .parse::<u64>()
+                        .with_context(|| format!("sweep spec `{s}`: `eval={value}`"))?
+                }
+                "parent" => spec.parent = value.to_string(),
+                other => bail!(
+                    "sweep spec `{s}`: unknown key `{other}` (expected \
+                     sunk|experts|capacity|router|strategy|reinit|budget|eval|parent)"
+                ),
+            }
+        }
+        // Strategy-foreign knobs are rejected at parse time so a typo'd
+        // plan fails loudly instead of being silently ignored (the same
+        // contract as ServeSpec's `floor`/`slo`).
+        if seen.contains(&"reinit") && !spec.strategies.contains(&StrategyKind::DropUpcycle) {
+            bail!("sweep spec `{s}`: `reinit` only applies when strategy includes drop");
+        }
+        if !spec.parent.ends_with("_dense") {
+            bail!(
+                "sweep spec `{s}`: parent `{}` must be a dense model (name ending `_dense`) \
+                 so MoE targets can be derived from its prefix",
+                spec.parent
+            );
+        }
+        Ok(spec)
+    }
+
+    /// The canonical normalized spelling — what the results store records
+    /// as the run's identity. `parse(canonical()) == self`.
+    pub fn canonical(&self) -> String {
+        let join_u64 = |v: &[u64]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("+")
+        };
+        let join_usize = |v: &[usize]| {
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("+")
+        };
+        let mut out = format!(
+            "sunk={},experts={},capacity={},router={},strategy={}",
+            join_u64(&self.sunk),
+            join_usize(&self.experts),
+            join_usize(&self.capacity),
+            self.routers.iter().map(|r| r.name()).collect::<Vec<_>>().join("+"),
+            self.strategies.iter().map(|k| k.name()).collect::<Vec<_>>().join("+"),
+        );
+        if self.strategies.contains(&StrategyKind::DropUpcycle) {
+            out.push_str(&format!(",reinit={}", self.reinit_fraction));
+        }
+        out.push_str(&format!(
+            ",budget={},eval={},parent={}",
+            join_u64(&self.budgets),
+            self.eval_every,
+            self.parent
+        ));
+        out
+    }
+
+    /// Number of legs in the grid.
+    pub fn grid_size(&self) -> usize {
+        self.sunk.len()
+            * self.experts.len()
+            * self.capacity.len()
+            * self.routers.len()
+            * self.strategies.len()
+            * self.budgets.len()
+    }
+
+    /// The MoE target a grid point resolves to, derived from the parent's
+    /// prefix: `lm_tiny_dense` → `lm_tiny_moe_e{E}_c{C}[{router suffix}]`.
+    pub fn model_name(&self, experts: usize, capacity: usize, router: RouterFamily) -> String {
+        let prefix = self.parent.trim_end_matches("_dense");
+        format!("{prefix}_moe_e{experts}_c{capacity}{}", router.model_suffix())
+    }
+
+    /// Enumerate and validate every leg of the grid, in the canonical order
+    /// (sunk → experts → capacity → router → strategy → budget). A grid
+    /// point whose model is absent from the zoo is a named error — legs are
+    /// never silently dropped. Drop-Upcycling legs carry `(reinit, seed)`
+    /// so their surgery is a pure function of `(spec, seed)` too.
+    pub fn legs(&self, manifest: &Manifest, seed: u64) -> Result<Vec<Leg>> {
+        manifest
+            .model(&self.parent)
+            .with_context(|| format!("sweep parent `{}`", self.parent))?;
+        let mut legs = Vec::with_capacity(self.grid_size());
+        for &sunk_steps in &self.sunk {
+            for &experts in &self.experts {
+                for &capacity in &self.capacity {
+                    for &router in &self.routers {
+                        for &kind in &self.strategies {
+                            for &budget_steps in &self.budgets {
+                                let model = self.model_name(experts, capacity, router);
+                                manifest.model(&model).with_context(|| {
+                                    format!(
+                                        "sweep leg #{} (E={experts}, C={capacity}, \
+                                         router={}): no zoo model `{model}`",
+                                        legs.len(),
+                                        router.name()
+                                    )
+                                })?;
+                                let strategy = match kind {
+                                    StrategyKind::Replicate => UpcycleStrategy::Replicate,
+                                    StrategyKind::DropUpcycle => UpcycleStrategy::DropUpcycle {
+                                        reinit_fraction: self.reinit_fraction,
+                                        seed,
+                                    },
+                                };
+                                legs.push(Leg {
+                                    index: legs.len(),
+                                    sunk_steps,
+                                    experts,
+                                    capacity,
+                                    router,
+                                    strategy,
+                                    budget_steps,
+                                    model,
+                                    parent: self.parent.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(legs)
+    }
+
+    /// Validate the whole grid against the zoo without keeping the legs.
+    pub fn validate(&self, manifest: &Manifest) -> Result<()> {
+        self.legs(manifest, 0).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let text = "sunk=30+60,experts=2+8,capacity=2,router=ec+top1,\
+                    strategy=replicate+drop,reinit=0.5,budget=20+40,eval=10,\
+                    parent=lm_tiny_dense";
+        let spec = SweepSpec::parse(text).unwrap();
+        assert_eq!(spec.sunk, vec![30, 60]);
+        assert_eq!(spec.experts, vec![2, 8]);
+        assert_eq!(spec.capacity, vec![2]);
+        assert_eq!(spec.routers, vec![RouterFamily::ExpertChoice, RouterFamily::Top1]);
+        assert_eq!(spec.strategies, vec![StrategyKind::Replicate, StrategyKind::DropUpcycle]);
+        assert_eq!(spec.reinit_fraction, 0.5);
+        assert_eq!(spec.budgets, vec![20, 40]);
+        assert_eq!(spec.eval_every, 10);
+        assert_eq!(spec.grid_size(), 2 * 2 * 1 * 2 * 2 * 2);
+        // The canonical spelling parses back to the same spec.
+        assert_eq!(SweepSpec::parse(&spec.canonical()).unwrap(), spec);
+        // An empty spec is the default plan.
+        let dflt = SweepSpec::parse("").unwrap();
+        assert_eq!(dflt, SweepSpec::default());
+        assert_eq!(dflt.grid_size(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_loudly() {
+        for (spec, needle) in [
+            ("experts", "expected `key=value`"),
+            ("experts=two", "is not a number"),
+            ("experts=0", "must be >= 1"),
+            ("experts=2+2", "lists `2` twice"),
+            ("experts=2,experts=4", "given twice"),
+            ("experts=2+", "empty list entry"),
+            ("capacity=banana", "is not a number"),
+            ("router=topk", "unknown router family"),
+            ("strategy=split", "unknown sweep strategy"),
+            ("reinit=0.25", "only applies when strategy includes drop"),
+            ("strategy=drop,reinit=0", "must be in (0, 1]"),
+            ("strategy=drop,reinit=1.5", "must be in (0, 1]"),
+            ("parent=lm_tiny_moe_e8_c2", "must be a dense model"),
+            ("tenant=3", "unknown key"),
+        ] {
+            let err = SweepSpec::parse(spec).unwrap_err();
+            assert!(format!("{err:#}").contains(needle), "{spec}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn legs_enumerate_the_grid_in_canonical_order() {
+        let m = Manifest::native();
+        let spec = SweepSpec::parse("sunk=10,experts=2+8,capacity=2,strategy=replicate+drop,\
+                                     reinit=0.25,budget=4+8")
+            .unwrap();
+        let legs = spec.legs(&m, 17).unwrap();
+        assert_eq!(legs.len(), spec.grid_size());
+        assert_eq!(legs.len(), 8);
+        // budget varies fastest, then strategy, then experts.
+        assert_eq!(legs[0].model, "lm_tiny_moe_e2_c2");
+        assert_eq!(legs[0].budget_steps, 4);
+        assert_eq!(legs[1].budget_steps, 8);
+        assert_eq!(legs[1].strategy, UpcycleStrategy::Replicate);
+        assert!(matches!(legs[2].strategy, UpcycleStrategy::DropUpcycle { seed: 17, .. }));
+        assert_eq!(legs[4].model, "lm_tiny_moe_e8_c2");
+        for (i, leg) in legs.iter().enumerate() {
+            assert_eq!(leg.index, i);
+        }
+        // Same (spec, seed) → identical legs (purity).
+        assert_eq!(spec.legs(&m, 17).unwrap(), legs);
+    }
+
+    #[test]
+    fn legs_name_unresolvable_grid_points() {
+        let m = Manifest::native();
+        // top1 targets only exist at E=8, C=2: E=4 must fail by name.
+        let spec = SweepSpec::parse("experts=4,router=top1").unwrap();
+        let err = spec.legs(&m, 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("lm_tiny_moe_e4_c2_top1"), "{msg}");
+        assert!(msg.contains("sweep leg #0"), "{msg}");
+        // And the same through validate().
+        assert!(spec.validate(&m).is_err());
+        // A resolvable router-family grid point validates.
+        SweepSpec::parse("experts=8,router=top1+top2bpr").unwrap().validate(&m).unwrap();
+    }
+}

@@ -1,0 +1,408 @@
+//! The sweep lab's machine-readable results store: `SWEEP_results.json`.
+//!
+//! Append-only and schema-versioned — every `sweep` invocation appends one
+//! [`SweepRun`] (its canonical spec, seed, and one [`LegRecord`] per grid
+//! point) and never rewrites earlier runs. Serialization rides on
+//! `metrics` ([`crate::metrics::series_json`]) and `util::json`, whose
+//! `BTreeMap`-backed objects and stable number formatting make the bytes a
+//! pure function of the recorded values: the determinism contract
+//! (docs/SWEEPS.md) is checked against this file's literal bytes.
+//!
+//! Each leg record carries the **priced** cost (what `costmodel` predicted
+//! up front from the spec alone) next to the **accounted** cost (what the
+//! training loop actually metered), so scheduler pricing can be audited
+//! after the fact.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::costmodel::SurgeryCost;
+use crate::metrics::{series_from_json, series_json, Series};
+use crate::sweep::fit::FitPoint;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Bump on any breaking change to the record layout.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Up-front `costmodel` pricing for one leg — computed from the spec
+/// before any training runs, and recorded verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PricedCost {
+    /// Dense parent pretraining FLOPs (the paper's sunk cost).
+    pub sunk_flops: f64,
+    /// Continuation FLOPs for this leg's budget on its MoE target.
+    pub extra_flops: f64,
+    /// `extra / sunk` in percent (the paper's "Relative Extra" column).
+    pub relative_extra_pct: f64,
+    /// One-shot checkpoint-surgery cost.
+    pub surgery: SurgeryCost,
+}
+
+/// One grid point's results: identity, priced + accounted cost, quality.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LegRecord {
+    pub index: usize,
+    pub label: String,
+    pub model: String,
+    pub parent: String,
+    pub sunk_steps: u64,
+    pub budget_steps: u64,
+    pub experts: usize,
+    pub capacity: usize,
+    pub router: String,
+    pub strategy: String,
+    pub priced: PricedCost,
+    /// Extra FLOPs the training loop actually metered (final point of the
+    /// trajectory) — recorded next to `priced.extra_flops` by contract.
+    pub accounted_extra_flops: f64,
+    /// Held-out loss right after surgery, before any continued training.
+    pub init_loss: f64,
+    /// Held-out loss at the end of the continuation budget.
+    pub final_loss: f64,
+    /// Mean pairwise cosine distance between experts at init.
+    pub mean_cosine_diversity: f64,
+    /// The leg's loss trajectory (eval cadence = the spec's `eval`).
+    pub trajectory: Series,
+}
+
+impl LegRecord {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("index", num(self.index as f64)),
+            ("label", s(&self.label)),
+            ("model", s(&self.model)),
+            ("parent", s(&self.parent)),
+            ("sunk_steps", num(self.sunk_steps as f64)),
+            ("budget_steps", num(self.budget_steps as f64)),
+            ("experts", num(self.experts as f64)),
+            ("capacity", num(self.capacity as f64)),
+            ("router", s(&self.router)),
+            ("strategy", s(&self.strategy)),
+            (
+                "priced",
+                obj(vec![
+                    ("sunk_flops", num(self.priced.sunk_flops)),
+                    ("extra_flops", num(self.priced.extra_flops)),
+                    ("relative_extra_pct", num(self.priced.relative_extra_pct)),
+                    (
+                        "surgery",
+                        obj(vec![
+                            ("bytes_copied", num(self.priced.surgery.bytes_copied as f64)),
+                            (
+                                "values_reinitialized",
+                                num(self.priced.surgery.values_reinitialized as f64),
+                            ),
+                            ("sources_loaded", num(self.priced.surgery.sources_loaded as f64)),
+                            ("reduce_flops", num(self.priced.surgery.reduce_flops as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+            ("accounted_extra_flops", num(self.accounted_extra_flops)),
+            ("init_loss", num(self.init_loss)),
+            ("final_loss", num(self.final_loss)),
+            ("mean_cosine_diversity", num(self.mean_cosine_diversity)),
+            ("trajectory", series_json(&self.trajectory)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<LegRecord> {
+        let priced = v.get("priced")?;
+        let surgery = priced.get("surgery")?;
+        Ok(LegRecord {
+            index: v.get("index")?.as_usize()?,
+            label: v.get("label")?.as_str()?.to_string(),
+            model: v.get("model")?.as_str()?.to_string(),
+            parent: v.get("parent")?.as_str()?.to_string(),
+            sunk_steps: v.get("sunk_steps")?.as_f64()? as u64,
+            budget_steps: v.get("budget_steps")?.as_f64()? as u64,
+            experts: v.get("experts")?.as_usize()?,
+            capacity: v.get("capacity")?.as_usize()?,
+            router: v.get("router")?.as_str()?.to_string(),
+            strategy: v.get("strategy")?.as_str()?.to_string(),
+            priced: PricedCost {
+                sunk_flops: priced.get("sunk_flops")?.as_f64()?,
+                extra_flops: priced.get("extra_flops")?.as_f64()?,
+                relative_extra_pct: priced.get("relative_extra_pct")?.as_f64()?,
+                surgery: SurgeryCost {
+                    bytes_copied: surgery.get("bytes_copied")?.as_f64()? as u64,
+                    values_reinitialized: surgery.get("values_reinitialized")?.as_f64()? as u64,
+                    sources_loaded: surgery.get("sources_loaded")?.as_f64()? as u64,
+                    reduce_flops: surgery.get("reduce_flops")?.as_f64()? as u64,
+                },
+            },
+            accounted_extra_flops: v.get("accounted_extra_flops")?.as_f64()?,
+            init_loss: v.get("init_loss")?.as_f64()?,
+            final_loss: v.get("final_loss")?.as_f64()?,
+            mean_cosine_diversity: v.get("mean_cosine_diversity")?.as_f64()?,
+            trajectory: series_from_json(v.get("trajectory")?)?,
+        })
+    }
+}
+
+/// One completed sweep invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRun {
+    /// The spec's canonical spelling ([`crate::sweep::SweepSpec::canonical`]).
+    pub spec: String,
+    pub seed: u64,
+    /// Grid size the spec enumerated — `legs.len()` must match or the run
+    /// is incomplete ([`SweepRun::check_complete`]).
+    pub grid: usize,
+    pub legs: Vec<LegRecord>,
+}
+
+impl SweepRun {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("spec", s(&self.spec)),
+            ("seed", num(self.seed as f64)),
+            ("grid", num(self.grid as f64)),
+            ("legs", arr(self.legs.iter().map(|l| l.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SweepRun> {
+        Ok(SweepRun {
+            spec: v.get("spec")?.as_str()?.to_string(),
+            seed: v.get("seed")?.as_f64()? as u64,
+            grid: v.get("grid")?.as_usize()?,
+            legs: v
+                .get("legs")?
+                .as_arr()?
+                .iter()
+                .map(LegRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Every grid point present exactly once, in order, with finite losses
+    /// — the gate `sweep fit` applies before fitting anything.
+    pub fn check_complete(&self) -> Result<()> {
+        if self.legs.len() != self.grid {
+            bail!(
+                "sweep run `{}` is missing legs: grid has {} point(s) but only {} recorded",
+                self.spec,
+                self.grid,
+                self.legs.len()
+            );
+        }
+        for (i, leg) in self.legs.iter().enumerate() {
+            if leg.index != i {
+                bail!(
+                    "sweep run `{}` has leg index {} at position {i} — store out of order",
+                    self.spec,
+                    leg.index
+                );
+            }
+            if !leg.init_loss.is_finite() || !leg.final_loss.is_finite() {
+                bail!(
+                    "sweep run `{}` leg `{}` has non-finite losses (init {}, final {})",
+                    self.spec,
+                    leg.label,
+                    leg.init_loss,
+                    leg.final_loss
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The run's legs as fit inputs: final loss vs (sunk cost, E,
+    /// continuation budget), all on the priced-FLOPs axes.
+    pub fn fit_points(&self) -> Vec<FitPoint> {
+        self.legs
+            .iter()
+            .map(|l| FitPoint {
+                label: l.label.clone(),
+                loss: l.final_loss,
+                regressors: [l.priced.sunk_flops, l.experts as f64, l.priced.extra_flops],
+            })
+            .collect()
+    }
+}
+
+/// The whole `SWEEP_results.json` file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResultsStore {
+    pub runs: Vec<SweepRun>,
+}
+
+impl ResultsStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<ResultsStore> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep results store {path:?}"))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let version = v.get("schema_version")?.as_f64()? as u64;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "sweep results store {path:?} has schema_version {version}, \
+                 this binary expects {SCHEMA_VERSION}"
+            );
+        }
+        Ok(ResultsStore {
+            runs: v
+                .get("runs")?
+                .as_arr()?
+                .iter()
+                .map(SweepRun::from_json)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("decoding {path:?}"))?,
+        })
+    }
+
+    /// Load, or start an empty store when the file doesn't exist yet.
+    pub fn load_or_empty(path: impl AsRef<Path>) -> Result<ResultsStore> {
+        if path.as_ref().exists() {
+            ResultsStore::load(path)
+        } else {
+            Ok(ResultsStore::default())
+        }
+    }
+
+    /// Append-only: earlier runs are never touched.
+    pub fn append_run(&mut self, run: SweepRun) {
+        self.runs.push(run);
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema_version", num(SCHEMA_VERSION as f64)),
+            ("runs", arr(self.runs.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing sweep results store {path:?}"))
+    }
+
+    /// The most recent run (what `sweep fit` fits by default).
+    pub fn latest(&self) -> Result<&SweepRun> {
+        self.runs.last().ok_or_else(|| {
+            anyhow::anyhow!("sweep results store has no runs yet — run `sweep` first")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::map;
+
+    fn record(index: usize) -> LegRecord {
+        let mut trajectory = Series::new(format!("leg{index}").as_str());
+        trajectory.push(2, 1e10, map(&[("loss", 3.5 - index as f64 * 0.25)]));
+        trajectory.push(4, 2e10, map(&[("loss", 3.0 - index as f64 * 0.25)]));
+        LegRecord {
+            index,
+            label: format!("leg{index}_s10_e8_c2_ec_replicate_b4"),
+            model: "lm_tiny_moe_e8_c2".into(),
+            parent: "lm_tiny_dense".into(),
+            sunk_steps: 10,
+            budget_steps: 4,
+            experts: 8,
+            capacity: 2,
+            router: "ec".into(),
+            strategy: "replicate".into(),
+            priced: PricedCost {
+                sunk_flops: 5e10,
+                extra_flops: 2e10,
+                relative_extra_pct: 40.0,
+                surgery: SurgeryCost {
+                    bytes_copied: 1024,
+                    values_reinitialized: 64,
+                    sources_loaded: 1,
+                    reduce_flops: 0,
+                },
+            },
+            accounted_extra_flops: 2e10,
+            init_loss: 3.5,
+            final_loss: 3.0 - index as f64 * 0.25,
+            mean_cosine_diversity: 0.0,
+            trajectory,
+        }
+    }
+
+    fn run(legs: usize) -> SweepRun {
+        SweepRun {
+            spec: "budget=4,eval=2".into(),
+            seed: 17,
+            grid: legs,
+            legs: (0..legs).map(record).collect(),
+        }
+    }
+
+    #[test]
+    fn store_round_trips_bitwise_and_appends() {
+        let dir = std::env::temp_dir().join("supc_sweep_store_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("SWEEP_results.json");
+        let mut store = ResultsStore::load_or_empty(&path).unwrap();
+        assert!(store.runs.is_empty());
+        store.append_run(run(2));
+        store.save(&path).unwrap();
+        let bytes1 = std::fs::read(&path).unwrap();
+        // Load → save is byte-identical (the determinism contract's
+        // serialization half).
+        let loaded = ResultsStore::load(&path).unwrap();
+        assert_eq!(loaded, store);
+        loaded.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes1);
+        // Appending a second run preserves the first verbatim.
+        let mut store2 = ResultsStore::load(&path).unwrap();
+        store2.append_run(run(2));
+        store2.save(&path).unwrap();
+        let reread = ResultsStore::load(&path).unwrap();
+        assert_eq!(reread.runs.len(), 2);
+        assert_eq!(reread.runs[0], store.runs[0]);
+        assert_eq!(reread.latest().unwrap(), &reread.runs[1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn check_complete_names_missing_and_broken_legs() {
+        run(2).check_complete().unwrap();
+        // Missing leg.
+        let mut missing = run(2);
+        missing.legs.pop();
+        let err = missing.check_complete().unwrap_err();
+        assert!(format!("{err:#}").contains("missing legs"), "{err:#}");
+        // Out-of-order indices.
+        let mut disorder = run(2);
+        disorder.legs.swap(0, 1);
+        assert!(format!("{:#}", disorder.check_complete().unwrap_err()).contains("out of order"));
+        // Non-finite loss.
+        let mut nan = run(2);
+        nan.legs[1].final_loss = f64::NAN;
+        assert!(format!("{:#}", nan.check_complete().unwrap_err()).contains("non-finite"));
+        // Empty store has no latest.
+        assert!(ResultsStore::default().latest().is_err());
+    }
+
+    #[test]
+    fn fit_points_carry_the_priced_axes() {
+        let pts = run(3).fit_points();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].regressors, [5e10, 8.0, 2e10]);
+        assert_eq!(pts[1].loss, 2.75);
+        assert!(pts.iter().all(|p| p.label.starts_with("leg")));
+    }
+
+    #[test]
+    fn version_skew_is_a_named_error() {
+        let dir = std::env::temp_dir().join("supc_sweep_store_ver_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SWEEP_results.json");
+        std::fs::write(&path, r#"{"schema_version":999,"runs":[]}"#).unwrap();
+        let err = ResultsStore::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("schema_version 999"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

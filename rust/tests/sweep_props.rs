@@ -1,0 +1,71 @@
+//! Sweep-lab property tests (docs/SWEEPS.md §Determinism): the results
+//! store is a **pure function of (SweepSpec, seed)** — the `--cores`
+//! worker budget changes wall-clock only, never a byte of the store.
+
+use sparse_upcycle::sweep::fit::power_law_fit;
+use sparse_upcycle::sweep::{run_sweep, SweepConfig, SweepSpec};
+
+/// Run the same tiny grid on 1, 2 and 4 workers into three separate store
+/// files and require the files to be bitwise identical; then fit the run
+/// end to end the way `sweep fit` does. One test (not three) so the dense
+/// parent pretrains once and the disk cache serves the reruns.
+#[test]
+fn results_store_is_bitwise_identical_across_worker_counts() {
+    let dir = std::env::temp_dir().join(format!("supc_sweep_props_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let out = dir.to_string_lossy().into_owned();
+    // 4 legs: experts × budget. Budgets vary 2× so the fit has a real
+    // continuation axis; sunk stays constant (reported as not fitted).
+    let spec = SweepSpec::parse("sunk=6,experts=2+8,budget=3+6,eval=3").unwrap();
+
+    let mut stores: Vec<Vec<u8>> = Vec::new();
+    let mut last_run = None;
+    for cores in [1usize, 2, 4] {
+        let mut cfg = SweepConfig::new("artifacts", &out);
+        cfg.cores = cores;
+        cfg.seed = 11;
+        cfg.eval_batches = 2;
+        cfg.results_path = dir.join(format!("SWEEP_results_c{cores}.json"));
+        let run = run_sweep(&spec, &cfg).unwrap();
+        assert_eq!(run.legs.len(), 4, "cores={cores}");
+        run.check_complete().unwrap();
+        for leg in &run.legs {
+            // Priced-vs-accounted audit: the continuation is priced as
+            // step_flops × budget up front and metered identically by the
+            // training loop — the two columns must agree exactly.
+            assert_eq!(
+                leg.priced.extra_flops, leg.accounted_extra_flops,
+                "leg `{}`: priced vs accounted extra FLOPs",
+                leg.label
+            );
+            assert!(leg.final_loss.is_finite() && leg.final_loss > 0.0);
+        }
+        stores.push(std::fs::read(&cfg.results_path).unwrap());
+        last_run = Some(run);
+    }
+    assert_eq!(stores[0], stores[1], "store bytes differ between 1 and 2 workers");
+    assert_eq!(stores[0], stores[2], "store bytes differ between 1 and 4 workers");
+
+    // `sweep fit` end to end: experts and continuation budget vary, sunk
+    // is constant — so the fit must report exponents for the former and
+    // None for the latter, with finite everything.
+    let fit = power_law_fit(&last_run.unwrap().fit_points()).unwrap();
+    assert!(fit.exponents[0].is_none(), "constant sunk axis must not be fitted");
+    assert!(fit.exponents[1].is_some() && fit.exponents[2].is_some());
+    assert!(fit.coefficient.is_finite() && fit.rmse.is_finite());
+    assert_eq!(fit.residuals.len(), 4);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A zero worker budget is a named error, not a hang or a silent serial
+/// fallback.
+#[test]
+fn zero_cores_is_a_named_error() {
+    let dir = std::env::temp_dir().join(format!("supc_sweep_props_c0_{}", std::process::id()));
+    let mut cfg = SweepConfig::new("artifacts", &dir.to_string_lossy());
+    cfg.cores = 0;
+    let err = run_sweep(&SweepSpec::default(), &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("--cores"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
